@@ -1,0 +1,92 @@
+//! Domain example: explore the WSC design space for GPT-175B training with
+//! MFMOBO (paper Algo. 1) and compare the searched Pareto set against the
+//! H100 / WSE2-like / Dojo-like baselines (paper §IX-F).
+//!
+//!     cargo run --release --example dse_gpt175b -- --iters 20 --n1 20
+//!
+//! Scale knobs: --iters (high-fidelity evals), --n1 (low-fidelity trials),
+//! --seed, --no-gnn.
+
+use theseus::coordinator::{ref_power_for, run, DseRun, Explorer};
+use theseus::explorer::BoConfig;
+use theseus::util::cli::Args;
+use theseus::util::table::Table;
+use theseus::workload::models;
+
+fn main() {
+    let args = Args::from_env();
+    let spec = models::find("175b").unwrap();
+    let cfg = BoConfig {
+        iters: args.usize("iters", 16),
+        init: 6,
+        pool: args.usize("pool", 48),
+        mc_samples: 32,
+        ref_power: ref_power_for(&spec),
+        seed: args.u64("seed", 0),
+        sample_tries: 4000,
+    };
+    let dse = DseRun {
+        spec: spec.clone(),
+        explorer: Explorer::Mfmobo,
+        cfg,
+        n1: args.usize("n1", 16),
+        k: 4,
+        use_gnn: !args.bool("no-gnn", false),
+    };
+
+    println!("exploring WSC designs for {} training (MFMOBO)...", spec.name);
+    let t0 = std::time::Instant::now();
+    let trace = run(&dse);
+    println!(
+        "{} evaluations in {:.1}s, hypervolume {:.3e}",
+        trace.points.len(),
+        t0.elapsed().as_secs_f64(),
+        trace.final_hv()
+    );
+
+    let mut table = Table::new(
+        "searched Pareto set vs baselines (GPT-175B training)",
+        &["entry", "tokens/s", "power (kW)", "config"],
+    );
+    let mut front = trace.pareto();
+    front.sort_by(|a, b| {
+        b.objective
+            .throughput
+            .partial_cmp(&a.objective.throughput)
+            .unwrap()
+    });
+    for p in front.iter().take(6) {
+        table.row(&[
+            "pareto".into(),
+            format!("{:.0}", p.objective.throughput),
+            format!("{:.0}", p.objective.power_w / 1e3),
+            p.point.wsc.summary(),
+        ]);
+    }
+
+    // Baselines under equal area (§IX-F).
+    if let Some(g) = theseus::baselines::h100_train_eval(&spec, spec.gpu_num) {
+        table.row(&[
+            "H100 cluster".into(),
+            format!("{:.0}", g.tokens_per_sec),
+            format!("{:.0}", g.power_w / 1e3),
+            format!("{} x H100 (Megatron 3D parallel)", spec.gpu_num),
+        ]);
+    }
+    for (name, p) in [
+        ("WSE2-like", theseus::baselines::wse2_like()),
+        ("Dojo-like", theseus::baselines::dojo_like()),
+    ] {
+        let v = theseus::baselines::force_validate(&p);
+        let sys = theseus::eval::SystemConfig::area_matched(v, spec.gpu_num);
+        if let Some(r) = theseus::eval::eval_training(&spec, &sys, &theseus::eval::Analytical) {
+            table.row(&[
+                name.into(),
+                format!("{:.0}", r.tokens_per_sec),
+                format!("{:.0}", r.power_w / 1e3),
+                format!("{} wafers", sys.n_wafers),
+            ]);
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,75 @@
+//! Quickstart: validate a WSC design point, evaluate LLM training and
+//! inference on it, and print the numbers.
+//!
+//!     cargo run --release --example quickstart
+
+use theseus::design_space::{reference_point, validate};
+use theseus::eval::{eval_inference, eval_training, Analytical, SystemConfig};
+use theseus::workload::models;
+
+fn main() {
+    // 1. A design point: the paper's Fig. 13 best-performing shape
+    //    (1 TFLOPS cores, 128 KB SRAM, 12x12 cores/reticle, stacked DRAM,
+    //    InFO-SoW).
+    let point = reference_point();
+    println!("design point: {}", point.wsc.summary());
+
+    // 2. Validate against the §V-E constraints (area, power, yield with
+    //    redundancy, SRAM feasibility, TSV stress).
+    let v = validate(&point).expect("reference point satisfies all constraints");
+    println!(
+        "validated: {:.1} PFLOPS peak, {:.0} mm2 silicon, wafer yield {:.3}, \
+         redundancy {} spare core(s)/row, peak power {:.1} kW",
+        v.phys.peak_flops / 1e15,
+        v.phys.area_mm2,
+        v.phys.wafer_yield,
+        v.phys.reticle.red_per_row,
+        v.phys.peak_power_w / 1e3,
+    );
+
+    // 3. Evaluate GPT-1.7B training on one wafer.
+    let spec = models::find("1.7").unwrap();
+    let sys = SystemConfig {
+        validated: v.clone(),
+        n_wafers: 1,
+    };
+    let train = eval_training(&spec, &sys, &Analytical).expect("feasible strategy");
+    println!(
+        "\n{} training on 1 wafer:\n  {:.0} tokens/s  (step {:.3}s, strategy tp{} pp{} dp{} mb{})\n  \
+         avg power {:.2} kW, {:.2} mJ/token",
+        spec.name,
+        train.tokens_per_sec,
+        train.step_time_s,
+        train.strategy.tp,
+        train.strategy.pp,
+        train.strategy.dp,
+        train.strategy.microbatch,
+        train.power_w / 1e3,
+        train.energy_per_token_j * 1e3,
+    );
+
+    // 4. Inference at batch 32 (paper §VIII-A setup).
+    let infer = eval_inference(&spec, &sys, 32, false, &Analytical).expect("fits");
+    println!(
+        "\n{} inference (batch 32):\n  prefill {:.1} ms, decode {:.3} ms/token, {:.0} tokens/s \
+         [weights+KV in {}]",
+        spec.name,
+        infer.prefill_s * 1e3,
+        infer.decode_step_s * 1e3,
+        infer.tokens_per_sec,
+        infer.residency,
+    );
+
+    // 5. If `make artifacts` has been run, the GNN congestion model is
+    //    available as the high-fidelity NoC estimator.
+    match theseus::runtime::GnnModel::load_default() {
+        Ok(gnn) => {
+            let t = eval_training(&spec, &sys, &gnn).expect("feasible");
+            println!(
+                "\nwith GNN NoC estimation: {:.0} tokens/s (analytical said {:.0})",
+                t.tokens_per_sec, train.tokens_per_sec
+            );
+        }
+        Err(e) => println!("\n(GNN fidelity unavailable: {e})"),
+    }
+}

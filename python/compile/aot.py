@@ -1,0 +1,80 @@
+"""AOT export: freeze the trained GNN (L2 + L1 Pallas kernels) into HLO
+text for the Rust PJRT runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md and
+DESIGN.md §1).
+
+Usage (invoked by `make artifacts`):
+    python -m compile.aot --params ../artifacts/gnn_params.npz \
+                          --out    ../artifacts/gnn_noc.hlo.txt
+"""
+
+import argparse
+import json
+
+import numpy as np
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import features, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(params, use_pallas=True):
+    """Lower forward(params frozen, padded inputs) to HLO text."""
+    frozen = {k: np.asarray(v) for k, v in params.items()}
+
+    def fn(node_feat, edge_feat, src_idx, dst_idx, edge_mask):
+        return (
+            model.forward(
+                frozen, node_feat, edge_feat, src_idx, dst_idx, edge_mask,
+                use_pallas=use_pallas,
+            ),
+        )
+
+    lowered = jax.jit(fn).lower(*model.input_shapes())
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params", required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path instead of the "
+                         "Pallas kernels (debug only)")
+    args = ap.parse_args()
+
+    params = dict(np.load(args.params))
+    text = lower_model(params, use_pallas=not args.no_pallas)
+    with open(args.out, "w") as f:
+        f.write(text)
+
+    # Sidecar metadata so the Rust runtime can verify schema compatibility.
+    meta = {
+        "n_max": features.N_MAX,
+        "e_max": features.E_MAX,
+        "f_n": features.F_N,
+        "f_e": features.F_E,
+        "hidden": model.HIDDEN,
+        "rounds": model.T_ROUNDS,
+        "inputs": ["node_feat", "edge_feat", "src_idx", "dst_idx", "edge_mask"],
+        "pallas": not args.no_pallas,
+    }
+    with open(args.out.replace(".hlo.txt", ".meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {len(text)} chars of HLO to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

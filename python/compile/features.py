@@ -1,0 +1,115 @@
+"""Shared GNN feature/padding schema (L2 build path).
+
+This module is the single source of truth for how a NoC sample (mesh h x w,
+per-link byte loads, per-node injected bytes, zero-load cycle estimate T0)
+becomes the padded tensors the GNN consumes. The Rust runtime
+(rust/src/runtime/features.rs) mirrors this EXACTLY — any change here must
+be reflected there (guarded by the golden test in
+python/tests/test_features.py and rust's runtime::features tests).
+
+Padded shapes (static for AOT):
+    node_feat  f32[N_MAX, F_N]
+    edge_feat  f32[E_MAX, F_E]
+    src_idx    i32[E_MAX]
+    dst_idx    i32[E_MAX]
+    edge_mask  f32[E_MAX]
+Edge enumeration order: for node in row-major order, for dir in
+(E, W, S, N) — i.e. dense ``link_index`` order with invalid (out-of-mesh)
+links skipped.
+"""
+
+import numpy as np
+
+N_MAX = 256  # 16 x 16 mesh
+E_MAX = 1024  # >= 2*2*16*15 = 960 directed links
+F_N = 5
+F_E = 4
+NUM_DIRS = 4
+# (drow, dcol) for E, W, S, N — matches rust compiler::routing::Dir.
+DIR_OFFSETS = ((0, 1), (0, -1), (1, 0), (-1, 0))
+
+
+def mesh_edges(h, w):
+    """Valid directed links in link_index order: [(src_node, dst_node, dense_idx)]."""
+    edges = []
+    for r in range(h):
+        for c in range(w):
+            node = r * w + c
+            for d, (dr, dc) in enumerate(DIR_OFFSETS):
+                rr, cc = r + dr, c + dc
+                if 0 <= rr < h and 0 <= cc < w:
+                    edges.append((node, rr * w + cc, node * NUM_DIRS + d))
+    return edges
+
+
+def build_features(h, w, noc_bw_bits, node_bytes, link_bytes, t0_cycles):
+    """Build padded GNN inputs from one sample.
+
+    node_bytes: [h*w] bytes injected per node.
+    link_bytes: [h*w*4] bytes per dense link index.
+    Returns dict of padded numpy arrays.
+    """
+    n = h * w
+    assert n <= N_MAX, f"mesh {h}x{w} exceeds N_MAX"
+    flit_bytes = max(noc_bw_bits / 8.0, 1.0)
+    t0 = max(float(t0_cycles), 1.0)
+
+    node_feat = np.zeros((N_MAX, F_N), dtype=np.float32)
+    for r in range(h):
+        for c in range(w):
+            i = r * w + c
+            inject = node_bytes[i] / flit_bytes / t0
+            node_feat[i] = (
+                inject,
+                1.0,  # active
+                r / max(h - 1, 1),
+                c / max(w - 1, 1),
+                1.0,  # bias
+            )
+
+    edges = mesh_edges(h, w)
+    assert len(edges) <= E_MAX
+    edge_feat = np.zeros((E_MAX, F_E), dtype=np.float32)
+    src_idx = np.zeros(E_MAX, dtype=np.int32)
+    dst_idx = np.zeros(E_MAX, dtype=np.int32)
+    edge_mask = np.zeros(E_MAX, dtype=np.float32)
+    bw_norm = np.log2(max(noc_bw_bits, 32) / 32.0) / 7.0
+    for e, (s, d, dense) in enumerate(edges):
+        rho = link_bytes[dense] / flit_bytes / t0  # demand utilization
+        edge_feat[e] = (rho, bw_norm, 1.0, 1.0)
+        src_idx[e] = s
+        dst_idx[e] = d
+        edge_mask[e] = 1.0
+    return {
+        "node_feat": node_feat,
+        "edge_feat": edge_feat,
+        "src_idx": src_idx,
+        "dst_idx": dst_idx,
+        "edge_mask": edge_mask,
+        "edges": edges,
+    }
+
+
+def build_labels(h, w, link_wait):
+    """Padded per-edge regression targets (mean waiting cycles per flit)."""
+    edges = mesh_edges(h, w)
+    y = np.zeros(E_MAX, dtype=np.float32)
+    for e, (_, _, dense) in enumerate(edges):
+        y[e] = link_wait[dense]
+    return y
+
+
+def sample_from_json(obj):
+    """Decode one dataset sample (dict parsed from noc_dataset.json)."""
+    h = int(obj["height"])
+    w = int(obj["width"])
+    feats = build_features(
+        h,
+        w,
+        int(obj["noc_bw_bits"]),
+        obj["node_bytes"],
+        obj["link_bytes"],
+        obj["t0_cycles"],
+    )
+    y = build_labels(h, w, obj["link_wait"])
+    return feats, y

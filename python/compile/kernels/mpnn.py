@@ -1,0 +1,108 @@
+"""L1: Pallas kernels for the GNN NoC-congestion estimator.
+
+Two kernels cover the model's hot spots:
+
+* :func:`mlp_layer` — tiled ``x @ w + b`` with optional ReLU, the workhorse
+  behind every MLP in the network (feature generators, message/update
+  functions, congestion head).
+* :func:`scatter_add` — segment-sum of edge messages into node slots,
+  expressed as one-hot-tile x message matmuls so the reduction runs on the
+  MXU instead of a scalar scatter (DESIGN.md §Hardware-Adaptation).
+
+Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes. Correctness oracles live in :mod:`compile.kernels.ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes tuned for VMEM tiling (DESIGN.md §8): edge-dimension tiles of
+# 128 keep every operand block under ~128 KB.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _mlp_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def mlp_layer(x, w, b, relu=True):
+    """``relu(x @ w + b)`` (or affine when ``relu=False``).
+
+    x: f32[M, K]; w: f32[K, N]; b: f32[N]. M must be a multiple of BLOCK_M
+    or small enough to be one block; K, N are kept whole per block (the
+    model's K, N <= 80 fit VMEM trivially).
+    """
+    m, _k = x.shape
+    _k2, n = w.shape
+    block_m = BLOCK_M if m % BLOCK_M == 0 else m
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        functools.partial(_mlp_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, x.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((w.shape[0], n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _scatter_kernel(msg_ref, idx_ref, o_ref, *, num_nodes):
+    e_block = msg_ref.shape[0]
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    msg = msg_ref[...]  # [E_blk, H]
+    idx = idx_ref[...]  # [E_blk]
+    # One-hot tile [N, E_blk]: onehot[v, e] = (idx[e] == v). The reduction
+    # onehot @ msg runs as a dense matmul (MXU-shaped on real hardware).
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (num_nodes, e_block), 0)
+    onehot = (node_ids == idx[None, :]).astype(jnp.float32)
+    o_ref[...] += jnp.dot(onehot, msg, preferred_element_type=jnp.float32)
+
+
+def scatter_add(messages, idx, num_nodes):
+    """Segment-sum: ``out[idx[e]] += messages[e]``.
+
+    messages: f32[E, H]; idx: i32[E]; returns f32[num_nodes, H]. Padded
+    edges must carry zero messages (mask applied by the caller) — they then
+    contribute zeros wherever their index points.
+    """
+    e, h = messages.shape
+    block_e = BLOCK_M if e % BLOCK_M == 0 else e
+    grid = (e // block_e,)
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, num_nodes=num_nodes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, h), lambda i: (i, 0)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+        ],
+        # Every grid step accumulates into the same output block.
+        out_specs=pl.BlockSpec((num_nodes, h), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_nodes, h), jnp.float32),
+        interpret=True,
+    )(messages, idx)
+
+
+def gather(nodes, idx):
+    """``nodes[idx]`` — plain jnp take (cheap, memory-bound; the MXU work
+    lives in mlp_layer/scatter_add)."""
+    return jnp.take(nodes, idx, axis=0)

@@ -1,0 +1,20 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (pytest compares
+kernel outputs against these — the core L1 correctness signal)."""
+
+import jax.numpy as jnp
+
+
+def mlp_layer_ref(x, w, b, relu=True):
+    y = jnp.dot(x, w) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def scatter_add_ref(messages, idx, num_nodes):
+    out = jnp.zeros((num_nodes, messages.shape[1]), dtype=messages.dtype)
+    return out.at[idx].add(messages)
+
+
+def gather_ref(nodes, idx):
+    return nodes[idx]

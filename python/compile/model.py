@@ -1,0 +1,140 @@
+"""L2: the GNN NoC-congestion estimator (paper §VI-C, Fig. 6).
+
+Architecture, as in the paper:
+  * Feature generator — MLPs projecting node features x_v and edge
+    features x_e to initial hidden states h_v^0, h_e^0.
+  * Graph convolution — T rounds of message passing on the topology graph
+    G *and its reverse* (upstream contention + downstream backpressure,
+    following Noception [30]).
+  * Congestion predictor — MLP over Concat(h_u^T, h_v^T, h_e^0)
+    predicting the mean channel waiting time y_e (Eq. 5).
+
+All dense compute routes through the L1 Pallas kernels
+(:mod:`compile.kernels.mpnn`); set ``use_pallas=False`` to run the pure-jnp
+reference path (used to cross-check the kernels end-to-end).
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .features import E_MAX, F_E, F_N, N_MAX
+from .kernels import mpnn, ref
+
+HIDDEN = 32
+T_ROUNDS = 3
+
+
+def _glorot(rng, shape):
+    fan_in, fan_out = shape
+    scale = np.sqrt(2.0 / (fan_in + fan_out))
+    return rng.normal(0.0, scale, size=shape).astype(np.float32)
+
+
+def init_params(seed=0):
+    """Initialize all weights (numpy dict, later frozen into the AOT HLO)."""
+    rng = np.random.default_rng(seed)
+    h = HIDDEN
+    p = {
+        # Feature generators.
+        "node_w": _glorot(rng, (F_N, h)),
+        "node_b": np.zeros(h, np.float32),
+        "edge_w": _glorot(rng, (F_E, h)),
+        "edge_b": np.zeros(h, np.float32),
+    }
+    # Per-round message and update MLPs (weights shared across rounds is
+    # also common; per-round matches Noception and trains better here).
+    for t in range(T_ROUNDS):
+        p[f"msg_w{t}"] = _glorot(rng, (2 * h, h))
+        p[f"msg_b{t}"] = np.zeros(h, np.float32)
+        p[f"upd_w{t}"] = _glorot(rng, (3 * h, h))
+        p[f"upd_b{t}"] = np.zeros(h, np.float32)
+    # Congestion predictor: Concat(h_u, h_v, h_e0) -> hidden -> 1.
+    p["head_w1"] = _glorot(rng, (3 * h, h))
+    p["head_b1"] = np.zeros(h, np.float32)
+    p["head_w2"] = _glorot(rng, (h, 1))
+    p["head_b2"] = np.zeros(1, np.float32)
+    return p
+
+
+def forward(params, node_feat, edge_feat, src_idx, dst_idx, edge_mask, use_pallas=True):
+    """Predict per-edge mean waiting time ŷ (Eq. 5). Shapes are the padded
+    statics from :mod:`compile.features`; returns f32[E_MAX]."""
+    if use_pallas:
+        mlp, scatter, gather = mpnn.mlp_layer, mpnn.scatter_add, mpnn.gather
+    else:
+        mlp, scatter, gather = ref.mlp_layer_ref, ref.scatter_add_ref, ref.gather_ref
+
+    mask = edge_mask[:, None]
+    h_v = mlp(node_feat, params["node_w"], params["node_b"])  # [N, H]
+    h_e0 = mlp(edge_feat, params["edge_w"], params["edge_b"]) * mask  # [E, H]
+
+    for t in range(T_ROUNDS):
+        h_src = gather(h_v, src_idx)  # [E, H]
+        h_dst = gather(h_v, dst_idx)
+        # Forward messages (upstream contention): m_e = f(h_u, h_e).
+        m_fwd = mlp(
+            jnp.concatenate([h_src, h_e0], axis=1),
+            params[f"msg_w{t}"],
+            params[f"msg_b{t}"],
+        ) * mask
+        agg_fwd = scatter(m_fwd, dst_idx, N_MAX)
+        # Reverse messages (downstream backpressure): same weights applied
+        # on the reversed graph, as in the paper ("message passing is
+        # conducted on both the original graph G and its reversed graph").
+        m_rev = mlp(
+            jnp.concatenate([h_dst, h_e0], axis=1),
+            params[f"msg_w{t}"],
+            params[f"msg_b{t}"],
+        ) * mask
+        agg_rev = scatter(m_rev, src_idx, N_MAX)
+        h_v = mlp(
+            jnp.concatenate([h_v, agg_fwd, agg_rev], axis=1),
+            params[f"upd_w{t}"],
+            params[f"upd_b{t}"],
+        )
+
+    h_u = gather(h_v, src_idx)
+    h_w = gather(h_v, dst_idx)
+    z = jnp.concatenate([h_u, h_w, h_e0], axis=1)  # [E, 3H]
+    z = mlp(z, params["head_w1"], params["head_b1"])
+    y = mlp(z, params["head_w2"], params["head_b2"], relu=False)[:, 0]
+    # Waiting times are non-negative; softplus keeps gradients alive.
+    y = jax.nn.softplus(y)
+    return y * edge_mask
+
+
+def loss_fn(params, batch, use_pallas=False):
+    """Masked Huber loss on log1p(wait) — robust to the heavy congestion
+    tail. batch = dict of stacked padded arrays + 'y'."""
+
+    def one(nf, ef, si, di, em, y):
+        pred = forward(params, nf, ef, si, di, em, use_pallas=use_pallas)
+        t = jnp.log1p(y)
+        p = jnp.log1p(pred)
+        d = p - t
+        huber = jnp.where(jnp.abs(d) < 1.0, 0.5 * d * d, jnp.abs(d) - 0.5)
+        return jnp.sum(huber * em) / jnp.maximum(jnp.sum(em), 1.0)
+
+    losses = jax.vmap(one)(
+        batch["node_feat"],
+        batch["edge_feat"],
+        batch["src_idx"],
+        batch["dst_idx"],
+        batch["edge_mask"],
+        batch["y"],
+    )
+    return jnp.mean(losses)
+
+
+def input_shapes():
+    """AOT export signature (order matters — the Rust runtime feeds
+    arguments positionally)."""
+    return [
+        jax.ShapeDtypeStruct((N_MAX, F_N), jnp.float32),  # node_feat
+        jax.ShapeDtypeStruct((E_MAX, F_E), jnp.float32),  # edge_feat
+        jax.ShapeDtypeStruct((E_MAX,), jnp.int32),  # src_idx
+        jax.ShapeDtypeStruct((E_MAX,), jnp.int32),  # dst_idx
+        jax.ShapeDtypeStruct((E_MAX,), jnp.float32),  # edge_mask
+    ]

@@ -1,0 +1,158 @@
+"""L2 training: fit the GNN congestion model on the CA-simulator dataset
+(paper §VIII-A "GNN Training Setup").
+
+Usage (invoked by `make artifacts`):
+    python -m compile.train --data ../artifacts/noc_dataset.json \
+                            --out  ../artifacts/gnn_params.npz
+
+Hand-rolled Adam (no optax dependency); training uses the pure-jnp path
+for speed, and the saved parameters are frozen into the Pallas-kernel AOT
+graph by compile.aot (kernel-vs-ref equivalence is covered by pytest).
+"""
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import features, model
+
+
+def load_dataset(path):
+    with open(path) as f:
+        doc = json.load(f)
+    feats, labels = [], []
+    for obj in doc["samples"]:
+        fe, y = features.sample_from_json(obj)
+        feats.append(fe)
+        labels.append(y)
+    batch = {
+        "node_feat": np.stack([f["node_feat"] for f in feats]),
+        "edge_feat": np.stack([f["edge_feat"] for f in feats]),
+        "src_idx": np.stack([f["src_idx"] for f in feats]),
+        "dst_idx": np.stack([f["dst_idx"] for f in feats]),
+        "edge_mask": np.stack([f["edge_mask"] for f in feats]),
+        "y": np.stack(labels),
+    }
+    return batch
+
+
+def split(batch, frac=0.85, seed=0):
+    n = batch["y"].shape[0]
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    cut = max(int(n * frac), 1)
+    tr = {k: v[idx[:cut]] for k, v in batch.items()}
+    va = {k: v[idx[cut:]] for k, v in batch.items()} if cut < n else tr
+    return tr, va
+
+
+def adam_init(params):
+    return {
+        "m": {k: np.zeros_like(v) for k, v in params.items()},
+        "v": {k: np.zeros_like(v) for k, v in params.items()},
+        "t": 0,
+    }
+
+
+def make_train_step(lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, b: model.loss_fn(p, b)))
+
+    def step(params, opt, batch):
+        loss, grads = grad_fn(params, batch)
+        opt["t"] += 1
+        t = opt["t"]
+        new_params = {}
+        for k in params:
+            g = np.asarray(grads[k])
+            opt["m"][k] = b1 * opt["m"][k] + (1 - b1) * g
+            opt["v"][k] = b2 * opt["v"][k] + (1 - b2) * g * g
+            mhat = opt["m"][k] / (1 - b1**t)
+            vhat = opt["v"][k] / (1 - b2**t)
+            new_params[k] = np.asarray(params[k]) - lr * mhat / (np.sqrt(vhat) + eps)
+        return new_params, opt, float(loss)
+
+    return step
+
+
+def minibatches(batch, bs, rng):
+    n = batch["y"].shape[0]
+    idx = rng.permutation(n)
+    for i in range(0, n, bs):
+        sel = idx[i : i + bs]
+        yield {k: jnp.asarray(v[sel]) for k, v in batch.items()}
+
+
+def eval_metrics(params, batch):
+    """Masked MAE (cycles) and MAPE on loaded links."""
+    fwd = jax.jit(lambda nf, ef, si, di, em: model.forward(params, nf, ef, si, di, em, use_pallas=False))
+    abs_err, denom, ape, ape_n = 0.0, 0.0, 0.0, 0
+    for i in range(batch["y"].shape[0]):
+        pred = np.asarray(
+            fwd(
+                batch["node_feat"][i],
+                batch["edge_feat"][i],
+                batch["src_idx"][i],
+                batch["dst_idx"][i],
+                batch["edge_mask"][i],
+            )
+        )
+        y = batch["y"][i]
+        m = batch["edge_mask"][i] > 0
+        abs_err += np.abs(pred[m] - y[m]).sum()
+        denom += m.sum()
+        loaded = m & (y > 0.5)
+        if loaded.any():
+            ape += (np.abs(pred[loaded] - y[loaded]) / y[loaded]).sum()
+            ape_n += loaded.sum()
+    mae = abs_err / max(denom, 1)
+    mape = ape / max(ape_n, 1)
+    return float(mae), float(mape)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--epochs", type=int, default=int(__import__("os").environ.get("THESEUS_GNN_EPOCHS", 60)))
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    batch = load_dataset(args.data)
+    n = batch["y"].shape[0]
+    print(f"loaded {n} samples from {args.data}")
+    train, val = split(batch)
+
+    params = init = model.init_params(args.seed)
+    opt = adam_init(init)
+    step = make_train_step()
+    rng = np.random.default_rng(args.seed)
+
+    best = None
+    for epoch in range(args.epochs):
+        losses = []
+        for mb in minibatches(train, args.batch_size, rng):
+            params, opt, loss = step(params, opt, mb)
+            losses.append(loss)
+        if epoch % 10 == 0 or epoch == args.epochs - 1:
+            mae, mape = eval_metrics(params, val)
+            print(
+                f"epoch {epoch:3d} loss {np.mean(losses):.4f} "
+                f"val MAE {mae:.3f} cyc, MAPE(loaded) {mape*100:.1f}%"
+            )
+            if best is None or mae < best[0]:
+                best = (mae, {k: np.asarray(v) for k, v in params.items()})
+
+    mae, params = best
+    np.savez(args.out, **params)
+    print(f"saved {args.out} (val MAE {mae:.3f} cycles) in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Feature-schema tests, including the golden values pinned on the Rust
+side (rust/src/runtime/features.rs) — the two implementations must stay in
+lockstep or the GNN sees garbage at DSE time."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import features
+
+
+def test_golden_mesh_edges_2x2():
+    # Must match rust runtime::features::tests::golden_matches_python_schema.
+    assert features.mesh_edges(2, 2) == [
+        (0, 1, 0),
+        (0, 2, 2),
+        (1, 0, 5),
+        (1, 3, 6),
+        (2, 3, 8),
+        (2, 0, 11),
+        (3, 2, 13),
+        (3, 1, 15),
+    ]
+
+
+def test_mesh_edge_count_formula():
+    for h, w in [(3, 3), (4, 7), (16, 16), (1, 5)]:
+        assert len(features.mesh_edges(h, w)) == 2 * (2 * h * w - h - w)
+
+
+def test_padding_invariants():
+    n = 3 * 4
+    f = features.build_features(
+        3, 4, 512, np.arange(n) * 1e3, np.arange(n * 4) * 10.0, t0_cycles=1e4
+    )
+    # Inactive node rows are all zero.
+    assert np.all(f["node_feat"][n:] == 0.0)
+    # Masked edges contribute index 0 (safe scatter target).
+    pad = f["edge_mask"] == 0
+    assert np.all(f["src_idx"][pad] == 0)
+    # Active edges all have the bias feature set.
+    act = f["edge_mask"] == 1
+    assert np.all(f["edge_feat"][act][:, 3] == 1.0)
+
+
+def test_feature_normalization_uses_t0():
+    nb = np.full(4, 64_000.0)
+    lb = np.zeros(16)
+    a = features.build_features(2, 2, 512, nb, lb, t0_cycles=1_000.0)
+    b = features.build_features(2, 2, 512, nb, lb, t0_cycles=2_000.0)
+    # inject = bytes / flit_bytes / t0 -> halving t0 doubles the feature.
+    assert a["node_feat"][0, 0] == pytest.approx(2 * b["node_feat"][0, 0])
+    # 64 KB over 64 B flits over 1000 cycles = 1 flit/cycle.
+    assert a["node_feat"][0, 0] == pytest.approx(1.0)
+
+
+def test_dataset_sample_roundtrip_if_built():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "noc_dataset.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts/noc_dataset.json not built")
+    with open(path) as f:
+        doc = json.load(f)
+    assert len(doc["samples"]) > 0
+    feats, y = features.sample_from_json(doc["samples"][0])
+    assert feats["node_feat"].shape == (features.N_MAX, features.F_N)
+    assert y.shape == (features.E_MAX,)
+    # Labels only on real edges.
+    assert np.all(y[feats["edge_mask"] == 0] == 0.0)

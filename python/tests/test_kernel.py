@@ -1,0 +1,105 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (the core signal),
+with hypothesis sweeping shapes and value distributions."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import mpnn, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape):
+    return rng.normal(0, 1, size=shape).astype(np.float32)
+
+
+# --- mlp_layer ---------------------------------------------------------
+
+@given(
+    m=st.sampled_from([1, 7, 128, 256, 384]),
+    k=st.sampled_from([4, 5, 32, 72, 96]),
+    n=st.sampled_from([1, 8, 32, 64]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_layer_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = mpnn.mlp_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu=relu)
+    want = ref.mlp_layer_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_layer_large_values():
+    rng = np.random.default_rng(0)
+    x = (rng.normal(0, 100, size=(128, 16))).astype(np.float32)
+    w = rand(rng, 16, 8)
+    b = rand(rng, 8)
+    got = mpnn.mlp_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    want = ref.mlp_layer_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+# --- scatter_add -------------------------------------------------------
+
+@given(
+    e=st.sampled_from([8, 128, 256, 1024]),
+    h=st.sampled_from([1, 8, 32]),
+    n=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scatter_add_matches_ref(e, h, n, seed):
+    rng = np.random.default_rng(seed)
+    msg = rand(rng, e, h)
+    idx = rng.integers(0, n, size=e).astype(np.int32)
+    got = mpnn.scatter_add(jnp.asarray(msg), jnp.asarray(idx), n)
+    want = ref.scatter_add_ref(jnp.asarray(msg), jnp.asarray(idx), n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_scatter_add_collisions():
+    # All edges hit node 3: output[3] = column sums.
+    msg = np.arange(64 * 4, dtype=np.float32).reshape(64, 4)
+    idx = np.full(64, 3, dtype=np.int32)
+    got = np.asarray(mpnn.scatter_add(jnp.asarray(msg), jnp.asarray(idx), 8))
+    np.testing.assert_allclose(got[3], msg.sum(axis=0), rtol=1e-6)
+    assert np.all(got[[0, 1, 2, 4, 5, 6, 7]] == 0.0)
+
+
+def test_scatter_add_zero_messages_are_neutral():
+    # Padded edges (zero messages) must not perturb the result wherever
+    # their index points.
+    rng = np.random.default_rng(1)
+    msg = rand(rng, 128, 8)
+    msg[100:] = 0.0
+    idx = rng.integers(0, 32, size=128).astype(np.int32)
+    idx2 = idx.copy()
+    idx2[100:] = 0  # repoint padding at node 0
+    a = np.asarray(mpnn.scatter_add(jnp.asarray(msg), jnp.asarray(idx), 32))
+    b = np.asarray(mpnn.scatter_add(jnp.asarray(msg), jnp.asarray(idx2), 32))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+# --- gather ------------------------------------------------------------
+
+def test_gather_matches_ref():
+    rng = np.random.default_rng(2)
+    nodes = rand(rng, 64, 16)
+    idx = rng.integers(0, 64, size=256).astype(np.int32)
+    got = np.asarray(mpnn.gather(jnp.asarray(nodes), jnp.asarray(idx)))
+    want = np.asarray(ref.gather_ref(jnp.asarray(nodes), jnp.asarray(idx)))
+    np.testing.assert_allclose(got, want)
+
+
+def test_dtype_is_f32():
+    rng = np.random.default_rng(3)
+    out = mpnn.mlp_layer(
+        jnp.asarray(rand(rng, 128, 8)),
+        jnp.asarray(rand(rng, 8, 4)),
+        jnp.asarray(rand(rng, 4)),
+    )
+    assert out.dtype == jnp.float32

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 10 — training throughput vs reticle granularity
+//! for GPT-3, with the reticle-area fraction of the optima (paper: best
+//! designs occupy 50-60% of the reticle limit).
+use theseus::bench;
+
+fn main() {
+    let (table, rows) = theseus::figures::fig10_reticle_granularity(7, 42);
+    table.print();
+    if let Some(best) = rows
+        .iter()
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+    {
+        println!(
+            "best reticle: {:.0} TFLOPS at {:.0}% of the reticle area limit \
+             (paper: 144 TFLOPS at 50-60%)",
+            best.reticle_tflops,
+            best.area_fraction * 100.0
+        );
+    }
+    bench::save_json("fig10_reticle_granularity", &table.to_json());
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig. 11 — inference speedup over H100 at equal area:
+//! (a) SRAM-resident GPT-1.7B vs SRAM bandwidth, (b) GPT-175B vs stacked
+//! DRAM bandwidth, both with/without MQA.
+use theseus::bench;
+
+fn main() {
+    for part_b in [false, true] {
+        let (table, rows) = theseus::figures::fig11_inference_speedup(part_b, 42);
+        table.print();
+        let best = rows
+            .iter()
+            .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap());
+        if let Some(b) = best {
+            println!(
+                "max speedup {}: {:.1}x (paper: up to {} without MQA)",
+                if part_b { "fig11b" } else { "fig11a" },
+                b.speedup,
+                if part_b { "9.8x" } else { "16.9x" }
+            );
+        }
+        bench::save_json(
+            if part_b { "fig11b_inference" } else { "fig11a_inference" },
+            &table.to_json(),
+        );
+    }
+}

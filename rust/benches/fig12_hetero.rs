@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 12 — GPT-175B inference speedup across
+//! heterogeneity granularities (takeaway 5: reticle-level wins).
+use theseus::bench;
+
+fn main() {
+    let (table, rows) = theseus::figures::fig12_hetero_speedup(42);
+    table.print();
+    if let Some(best) = rows
+        .iter()
+        .max_by(|a, b| a.tokens_per_sec.partial_cmp(&b.tokens_per_sec).unwrap())
+    {
+        println!(
+            "best heterogeneity level: {} (paper expects reticle)",
+            best.granularity.name()
+        );
+    }
+    bench::save_json("fig12_hetero", &table.to_json());
+}

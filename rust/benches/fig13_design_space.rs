@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 13 — the GPT-175B training design space with
+//! Pareto frontiers (stacked vs off-chip DRAM) and §IX-F baseline
+//! comparisons. THESEUS_BENCH_SCALE scales the sample count.
+use theseus::bench;
+
+fn main() {
+    let samples = 40 * bench::scale();
+    let (table, result) = theseus::figures::fig13_design_space(7, samples, 42);
+    table.print();
+    for (name, gain, saving) in &result.comparisons {
+        println!(
+            "vs {name}: best perf gain {:+.1}% at <= power; best power saving {:+.1}% at >= perf",
+            gain * 100.0,
+            saving * 100.0
+        );
+    }
+    bench::save_json("fig13_design_space", &table.to_json());
+}

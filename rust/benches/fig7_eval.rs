@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 7 — evaluation speedup (a) and accuracy (b) of
+//! CA simulation vs the analytical model vs the GNN.
+//! Scale: THESEUS_BENCH_SCALE multiplies benchmarks/configs covered.
+use theseus::bench;
+
+fn main() {
+    let scale = bench::scale();
+    let gnn = theseus::runtime::GnnModel::load_default().ok();
+    let gnn_ref: Option<&dyn theseus::eval::NocEstimator> =
+        gnn.as_ref().map(|g| g as &dyn theseus::eval::NocEstimator);
+    if gnn_ref.is_none() {
+        eprintln!("note: GNN artifact missing; run `make artifacts` for full Fig. 7");
+    }
+    let (table, _rows) =
+        theseus::figures::fig7_eval_comparison(3 * scale.min(2) + 1, 4 * scale, gnn_ref, 42);
+    table.print();
+    bench::save_json("fig7_eval", &table.to_json());
+}

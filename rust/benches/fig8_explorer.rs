@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 8 — random vs MOBO vs MFMOBO hypervolume curves
+//! (GPT-1.7B / 175B / 530B), with the convergence-speedup summary.
+//! Scale knobs: THESEUS_BENCH_SCALE, THESEUS_BO_ITERS, THESEUS_BO_REPEATS.
+use theseus::bench;
+use theseus::util::cli::env_usize;
+
+fn main() {
+    let iters = env_usize("THESEUS_BO_ITERS", 16 * bench::scale());
+    let repeats = env_usize("THESEUS_BO_REPEATS", 2 * bench::scale());
+    // Benchmarks 0/7/9 = GPT-1.7B / GPT-175B / GPT-529.6B (Fig. 8's trio).
+    let (table, results) =
+        theseus::figures::fig8_explorer_comparison(&[0, 7, 9], iters, repeats, true);
+    table.print();
+    let speedups: Vec<f64> = results.iter().map(|r| r.convergence_speedup).collect();
+    println!(
+        "mean MFMOBO convergence speedup: {:.2}x (paper reports 2.1x)",
+        theseus::util::stats::mean(&speedups)
+    );
+    bench::save_json("fig8_explorer", &table.to_json());
+}

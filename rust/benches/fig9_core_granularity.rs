@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 9 — training throughput and EDP vs core compute
+//! granularity, split by integration style (die stitching vs InFO-SoW).
+use theseus::bench;
+
+fn main() {
+    let per_grid = 6 * bench::scale();
+    for bi in [0usize, 7] {
+        let (table, rows) = theseus::figures::fig9_core_granularity(bi, per_grid, 42);
+        table.print();
+        // Takeaway-1 summary: where does the optimum land?
+        let best = rows
+            .iter()
+            .max_by(|a, b| a.best_throughput.partial_cmp(&b.best_throughput).unwrap())
+            .unwrap();
+        println!(
+            "optimal core granularity: {:.0} GFLOPS ({}) — paper finds 512G-1T FLOPS",
+            best.core_gflops,
+            best.style.name()
+        );
+        bench::save_json(&format!("fig9_core_granularity_b{bi}"), &table.to_json());
+    }
+}

@@ -1,0 +1,89 @@
+//! Bench: hot-path microbenchmarks for the §Perf optimization pass —
+//! op-level evaluation throughput, CA-sim cycle rate, GP fit/predict,
+//! validator throughput and (if built) GNN inference latency.
+use theseus::arch::{CoreConfig, Dataflow};
+use theseus::bench;
+use theseus::compiler::compile_chunk;
+use theseus::eval::op_level::{chunk_latency, NocModel};
+use theseus::util::rng::Rng;
+use theseus::util::table::Table;
+use theseus::workload::models::benchmarks;
+use theseus::workload::{OpGraph, Phase};
+
+fn main() {
+    let mut t = Table::new(
+        "perf hot paths",
+        &["path", "median", "unit"],
+    );
+
+    // 1. Op-level analytical evaluation (the DSE inner loop).
+    let mut spec = benchmarks()[0].clone();
+    spec.seq_len = 256;
+    let core = CoreConfig {
+        dataflow: Dataflow::WS,
+        mac_num: 512,
+        buffer_kb: 128,
+        buffer_bw_bits: 256,
+        noc_bw_bits: 512,
+    };
+    let g = OpGraph::transformer_chunk(&spec, 2, 1, 8, Phase::Training, false);
+    let chunk = compile_chunk(&g, 12, 12, &core);
+    let tm = bench::time("op_level_analytical", 2, 20, || {
+        std::hint::black_box(chunk_latency(&chunk, &core, 1.0, NocModel::Analytical));
+    });
+    t.row(&["op-level analytical (12x12, 2-layer bwd)".into(), format!("{:.3} ms", tm.median_s * 1e3), "per chunk".into()]);
+
+    // 2. Full training evaluation of one design point.
+    let v = theseus::design_space::validate(&theseus::design_space::reference_point()).unwrap();
+    let full_spec = benchmarks()[0].clone();
+    let tm = bench::time("eval_training", 1, 5, || {
+        let sys = theseus::eval::SystemConfig { validated: v.clone(), n_wafers: 1 };
+        std::hint::black_box(theseus::eval::eval_training(&full_spec, &sys, &theseus::eval::Analytical));
+    });
+    t.row(&["eval_training (strategy search)".into(), format!("{:.1} ms", tm.median_s * 1e3), "per design point".into()]);
+
+    // 3. Design point validation (yield + floorplan + power).
+    let mut rng = Rng::new(1);
+    let pts: Vec<_> = (0..64).map(|_| theseus::design_space::sample_raw(&mut rng)).collect();
+    let tm = bench::time("validate", 1, 10, || {
+        for p in &pts {
+            std::hint::black_box(theseus::design_space::validate(p).ok());
+        }
+    });
+    t.row(&["validator".into(), format!("{:.1} us", tm.median_s / 64.0 * 1e6), "per raw point".into()]);
+
+    // 4. CA simulator cycle rate.
+    let mut small = benchmarks()[0].clone();
+    small.seq_len = 64;
+    let g = OpGraph::transformer_chunk(&small, 1, 1, 8, Phase::Prefill, false);
+    let ch = compile_chunk(&g, 6, 6, &core);
+    let (stats, wall) = bench::time_once(|| {
+        theseus::noc_sim::simulate_chunk(
+            &ch, 512,
+            &|op| theseus::noc_sim::naive_compute_cycles(ch.assignments[op].flops_per_core, 512),
+            500_000_000,
+        )
+    });
+    t.row(&["CA simulator".into(), format!("{:.2} Mcyc/s", stats.cycles as f64 / wall / 1e6), "6x6 mesh".into()]);
+
+    // 5. GP fit + predict at n=100.
+    let mut rng = Rng::new(2);
+    let xs: Vec<Vec<f64>> = (0..100).map(|_| (0..12).map(|_| rng.f64()).collect()).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x.iter().sum()).collect();
+    let tm = bench::time("gp_fit", 1, 5, || {
+        std::hint::black_box(theseus::explorer::gp::Gp::fit(&xs, &ys));
+    });
+    t.row(&["GP fit (n=100, d=12)".into(), format!("{:.1} ms", tm.median_s * 1e3), "per refit".into()]);
+
+    // 6. GNN inference via PJRT (if artifacts exist).
+    if let Ok(gnn) = theseus::runtime::GnnModel::load_default() {
+        let inp = theseus::runtime::features::build(&ch, &core).unwrap();
+        let tm = bench::time("gnn_predict", 2, 10, || {
+            std::hint::black_box(gnn.predict_padded(&inp).unwrap());
+        });
+        t.row(&["GNN inference (PJRT, padded 256/1024)".into(), format!("{:.2} ms", tm.median_s * 1e3), "per chunk".into()]);
+    }
+
+    t.print();
+    bench::save_json("perf_hotpath", &t.to_json());
+}

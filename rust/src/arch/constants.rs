@@ -1,0 +1,138 @@
+//! Physical and technology constants, all at the paper's 14 nm reference
+//! node (§VIII-A: "All the area and power data are scaled to 14nm according
+//! to the scaling factors in [68]"). Where the paper states a number we use
+//! it verbatim; remaining per-action energies are drawn from the sources the
+//! paper cites (Aladdin, Orion 3.0, GRS, CACTI-class SRAM models) and only
+//! their *relative* magnitudes matter for DSE ordering.
+
+/// Core clock (paper §VIII-A).
+pub const CLOCK_HZ: f64 = 1.0e9;
+
+/// Reticle (lithography field) limit: 26 mm × 33 mm = 858 mm² (paper §I).
+pub const RETICLE_W_MM: f64 = 26.0;
+pub const RETICLE_H_MM: f64 = 33.0;
+pub const RETICLE_AREA_MM2: f64 = RETICLE_W_MM * RETICLE_H_MM;
+
+/// Usable square on a 12-inch wafer: 215 mm × 215 mm (paper §VIII-A).
+pub const WAFER_EDGE_MM: f64 = 215.0;
+pub const WAFER_AREA_MM2: f64 = WAFER_EDGE_MM * WAFER_EDGE_MM;
+
+/// Wafer power ceiling: 15 kW (paper §VIII-A, citing [49]).
+pub const WAFER_POWER_LIMIT_W: f64 = 15_000.0;
+
+/// Yield target and Murphy-model defect density (paper §VIII-A).
+pub const YIELD_TARGET: f64 = 0.9;
+pub const DEFECT_DENSITY_PER_CM2: f64 = 0.1;
+
+/// Screw-hole stress model (paper §V-C / §VIII-A): linear yield loss, 10 %
+/// at the hole center, fading to zero at 1 mm.
+pub const STRESS_LOSS: f64 = 0.1;
+pub const STRESS_MAX_DIST_MM: f64 = 1.0;
+
+/// TSV stress parameters mirror the screw-hole model (paper §V-C).
+pub const TSV_LOSS: f64 = 0.1;
+pub const TSV_MAX_DIST_MM: f64 = 1.0;
+
+/// TSV geometry (paper §VIII-A, citing [57]): 5 µm via, 15 µm pitch,
+/// 1 Gbps of stacked-DRAM bandwidth per TSV. The §V-E stress cap applies
+/// to the *hole* (via) area; the pitch-sized cell is the floorplan
+/// footprint that displaces compute.
+pub const TSV_VIA_UM: f64 = 5.0;
+pub const TSV_PITCH_UM: f64 = 15.0;
+pub const TSV_BW_BITS_PER_SEC: f64 = 1.0e9;
+
+/// Stress constraint: TSV hole field ≤ 1.5 % of reticle area (paper §V-E).
+pub const TSV_AREA_RATIO_MAX: f64 = 0.015;
+
+/// Inter-reticle PHY area overhead (paper §VIII-A):
+/// RDL/SerDes (InFO-SoW): 3900 µm²/Gbps; offset exposure: 1300 µm²/Gbps.
+pub const PHY_AREA_UM2_PER_GBPS_RDL: f64 = 3900.0;
+pub const PHY_AREA_UM2_PER_GBPS_STITCH: f64 = 1300.0;
+
+/// Inter-reticle signalling energy (pJ/bit). Offset exposure is nearly
+/// on-die wiring (Cerebras quotes ~0.1 pJ/bit-class fabric); RDL SerDes is
+/// GRS-class (~1 pJ/bit, Turner et al. [67]).
+pub const PHY_ENERGY_PJ_PER_BIT_STITCH: f64 = 0.15;
+pub const PHY_ENERGY_PJ_PER_BIT_RDL: f64 = 1.0;
+
+/// Wafer-edge interfaces (Table I).
+pub const INTER_WAFER_BW_PER_NIC: f64 = 100.0e9; // bytes/s per network interface
+pub const OFF_CHIP_BW_PER_CTRL: f64 = 160.0e9; // bytes/s per memory controller
+
+/// DRAM access energy (pJ/bit): stacked TSV DRAM ≈ HBM-class, off-chip
+/// DDR/edge access pricier (CACTI-3DD-class numbers).
+pub const DRAM_ENERGY_PJ_PER_BIT_STACKED: f64 = 4.0;
+pub const DRAM_ENERGY_PJ_PER_BIT_OFFCHIP: f64 = 15.0;
+
+/// MAC datapath at 14 nm, bf16 multiply-accumulate.
+/// Energy ≈ 0.5 pJ/op (Aladdin/Horowitz-class), area ≈ 600 µm² incl. local
+/// pipeline registers and control amortization.
+pub const MAC_ENERGY_PJ: f64 = 0.5;
+pub const MAC_AREA_UM2: f64 = 600.0;
+
+/// SRAM at 14 nm (ssg, 0.9 V — paper §VIII-A): effective macro density
+/// ≈ 1.2 mm²/MB including peripheral overhead; dynamic ≈ 0.015 pJ/bit
+/// access; leakage ≈ 1.5 mW/MB.
+pub const SRAM_MM2_PER_MB: f64 = 1.2;
+pub const SRAM_ENERGY_PJ_PER_BIT: f64 = 0.015;
+pub const SRAM_LEAK_W_PER_MB: f64 = 1.5e-3;
+
+/// NoC router (Orion 3.0-class, 14 nm, 1 V, 8 VCs × 4 buffers — §VIII-A):
+/// per-flit-bit energy through a router ≈ 0.04 pJ plus 0.02 pJ/bit/mm of
+/// link traversal; router area scales with flit width × VC buffering.
+pub const NOC_ROUTER_ENERGY_PJ_PER_BIT: f64 = 0.04;
+pub const NOC_LINK_ENERGY_PJ_PER_BIT_MM: f64 = 0.02;
+pub const NOC_VCS: usize = 8;
+pub const NOC_BUFS_PER_VC: usize = 4;
+/// Router buffer+crossbar area per bit of flit width per VC-buffer entry.
+pub const NOC_AREA_UM2_PER_BIT_ENTRY: f64 = 1.1;
+
+/// RISC-V control core + misc per-core overhead (Chisel/Purlin-class
+/// scalar core at 14 nm): area and static power floor of every core.
+pub const CTRL_AREA_UM2: f64 = 0.05e6; // 0.05 mm²
+pub const CTRL_STATIC_W: f64 = 5e-3;
+
+/// Static (leakage) power as a fraction of peak dynamic for logic blocks.
+pub const LOGIC_LEAK_FRAC: f64 = 0.08;
+
+/// Stacked-DRAM background power per GB (refresh + periphery).
+pub const DRAM_STATIC_W_PER_GB: f64 = 0.125;
+
+/// Bytes per element for activations/weights (bf16 everywhere, matching
+/// Megatron-LM mixed-precision training the paper benchmarks against).
+pub const BYTES_PER_ELEM: f64 = 2.0;
+
+/// FLOPs per MAC.
+pub const FLOPS_PER_MAC: f64 = 2.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_stated_values() {
+        // Constants the paper states explicitly must not drift.
+        assert_eq!(RETICLE_AREA_MM2, 858.0);
+        assert_eq!(WAFER_EDGE_MM, 215.0);
+        assert_eq!(WAFER_POWER_LIMIT_W, 15_000.0);
+        assert_eq!(DEFECT_DENSITY_PER_CM2, 0.1);
+        assert_eq!(STRESS_LOSS, 0.1);
+        assert_eq!(STRESS_MAX_DIST_MM, 1.0);
+        assert_eq!(TSV_PITCH_UM, 15.0);
+        assert_eq!(PHY_AREA_UM2_PER_GBPS_RDL, 3900.0);
+        assert_eq!(PHY_AREA_UM2_PER_GBPS_STITCH, 1300.0);
+        assert_eq!(TSV_AREA_RATIO_MAX, 0.015);
+        assert_eq!(INTER_WAFER_BW_PER_NIC, 100.0e9);
+        assert_eq!(OFF_CHIP_BW_PER_CTRL, 160.0e9);
+    }
+
+    #[test]
+    fn sane_orderings() {
+        // Relative magnitudes that the DSE conclusions depend on.
+        assert!(PHY_AREA_UM2_PER_GBPS_RDL > PHY_AREA_UM2_PER_GBPS_STITCH);
+        assert!(PHY_ENERGY_PJ_PER_BIT_RDL > PHY_ENERGY_PJ_PER_BIT_STITCH);
+        assert!(DRAM_ENERGY_PJ_PER_BIT_OFFCHIP > DRAM_ENERGY_PJ_PER_BIT_STACKED);
+        assert!(DRAM_ENERGY_PJ_PER_BIT_STACKED > SRAM_ENERGY_PJ_PER_BIT);
+        assert!(NOC_ROUTER_ENERGY_PJ_PER_BIT < PHY_ENERGY_PJ_PER_BIT_RDL);
+    }
+}

@@ -1,0 +1,259 @@
+//! Heterogeneous WSC modeling for LLM inference (paper §V-B, Fig. 4).
+//!
+//! Two knobs characterize heterogeneity:
+//! * **prefill ratio** — fraction of compute resources allocated to the
+//!   prefill stage (the rest serves decode);
+//! * **granularity** — the architecture level at which the two stages'
+//!   resources diverge (core / reticle / wafer), which determines where the
+//!   KV-cache handoff traffic travels and how much scheduling overhead the
+//!   split incurs.
+
+use super::{MemoryKind, WscConfig};
+
+/// Level of the architecture hierarchy at which prefill/decode resources
+/// are differentiated (Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HeteroGranularity {
+    /// Homogeneous design: both stages run on identical resources.
+    None,
+    /// Software scheduling inside a reticle: prefill/decode cores share the
+    /// reticle, stacked-memory bandwidth is partitioned by scheduling.
+    Core,
+    /// Heterogeneous reticles (different stacking bandwidth) on one wafer.
+    Reticle,
+    /// Separate wafers for prefill and decode; KV cache crosses the
+    /// inter-wafer network.
+    Wafer,
+}
+
+impl HeteroGranularity {
+    pub const ALL: [HeteroGranularity; 4] = [
+        HeteroGranularity::None,
+        HeteroGranularity::Core,
+        HeteroGranularity::Reticle,
+        HeteroGranularity::Wafer,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HeteroGranularity::None => "none",
+            HeteroGranularity::Core => "core",
+            HeteroGranularity::Reticle => "reticle",
+            HeteroGranularity::Wafer => "wafer",
+        }
+    }
+}
+
+/// Heterogeneity configuration attached to a [`WscConfig`] for inference
+/// exploration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HeteroConfig {
+    pub granularity: HeteroGranularity,
+    /// Fraction of compute resources assigned to the prefill stage, (0, 1).
+    pub prefill_ratio: f64,
+    /// Stacked-DRAM bandwidth override for decode-stage resources
+    /// (TB/s/100 mm²); prefill-stage resources keep the base config's
+    /// bandwidth. Ignored for `None` granularity.
+    pub decode_stack_bw: f64,
+}
+
+impl HeteroConfig {
+    pub fn homogeneous() -> HeteroConfig {
+        HeteroConfig {
+            granularity: HeteroGranularity::None,
+            prefill_ratio: 0.5,
+            decode_stack_bw: 0.0,
+        }
+    }
+
+    /// Split a wafer config into (prefill, decode) resource views.
+    ///
+    /// Returns per-stage reticle counts and the effective stacking
+    /// bandwidth for each stage. At core granularity the *bandwidth* is
+    /// partitioned by scheduling rather than the reticle count; we model
+    /// that as both stages seeing all reticles but sharing each reticle's
+    /// bandwidth in proportion to the ratio, with a utilization bonus for
+    /// flexible scheduling and a transmission-overhead penalty (paper
+    /// §IX-E discussion).
+    pub fn split(&self, wsc: &WscConfig) -> HeteroSplit {
+        let total = wsc.num_reticles();
+        match self.granularity {
+            HeteroGranularity::None => HeteroSplit {
+                prefill_reticles: total,
+                decode_reticles: total,
+                shared: true,
+                prefill_stack_bw: stack_bw(wsc),
+                decode_stack_bw: stack_bw(wsc),
+                // Homogeneous: stages time-share the full machine.
+                kv_transfer_bw: f64::INFINITY,
+                sched_overhead: 1.0,
+            },
+            HeteroGranularity::Core => HeteroSplit {
+                prefill_reticles: total,
+                decode_reticles: total,
+                shared: true,
+                prefill_stack_bw: stack_bw(wsc) * self.prefill_ratio,
+                decode_stack_bw: self.decode_stack_bw.max(stack_bw(wsc)) * (1.0 - self.prefill_ratio),
+                // KV moves over each reticle's own NoC: the aggregate
+                // handoff bandwidth scales with the reticle count.
+                kv_transfer_bw: wsc.reticle.bisection_bytes_per_sec()
+                    * wsc.num_reticles() as f64,
+                // Compilation/control overhead of fine-grain sharing
+                // (paper: "overhead in compilation and control").
+                sched_overhead: 1.06,
+            },
+            HeteroGranularity::Reticle => {
+                let prefill = ((total as f64) * self.prefill_ratio).round().max(1.0) as usize;
+                let prefill = prefill.min(total - 1);
+                HeteroSplit {
+                    prefill_reticles: prefill,
+                    decode_reticles: total - prefill,
+                    shared: false,
+                    prefill_stack_bw: stack_bw(wsc),
+                    decode_stack_bw: self.decode_stack_bw,
+                    // KV crosses inter-reticle links along the stage border.
+                    kv_transfer_bw: wsc.reticle.inter_reticle_bytes_per_sec()
+                        * wsc.reticle_h.min(wsc.reticle_w) as f64,
+                    sched_overhead: 1.0,
+                }
+            }
+            HeteroGranularity::Wafer => {
+                // Whole wafers per stage: the ratio picks how many wafers
+                // of the pod serve prefill; KV rides the inter-wafer NICs.
+                let prefill = ((total as f64) * self.prefill_ratio).round().max(1.0) as usize;
+                let prefill = prefill.min(total - 1).max(1);
+                HeteroSplit {
+                    prefill_reticles: prefill,
+                    decode_reticles: total - prefill,
+                    shared: false,
+                    prefill_stack_bw: stack_bw(wsc),
+                    decode_stack_bw: self.decode_stack_bw,
+                    kv_transfer_bw: wsc.inter_wafer_bytes_per_sec(),
+                    sched_overhead: 1.0,
+                }
+            }
+        }
+    }
+}
+
+fn stack_bw(wsc: &WscConfig) -> f64 {
+    match wsc.reticle.memory {
+        MemoryKind::OffChip => 0.0,
+        MemoryKind::Stacking {
+            bw_tbps_per_100mm2, ..
+        } => bw_tbps_per_100mm2,
+    }
+}
+
+/// Resource view of one prefill/decode partition.
+#[derive(Debug, Clone, Copy)]
+pub struct HeteroSplit {
+    pub prefill_reticles: usize,
+    pub decode_reticles: usize,
+    /// True if both stages time-share the same physical resources.
+    pub shared: bool,
+    /// Effective stacking bandwidth (TB/s/100 mm²) seen by each stage.
+    pub prefill_stack_bw: f64,
+    pub decode_stack_bw: f64,
+    /// Bandwidth available for the prefill→decode KV-cache handoff (bytes/s).
+    pub kv_transfer_bw: f64,
+    /// Multiplicative latency overhead from scheduling/control complexity.
+    pub sched_overhead: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{CoreConfig, Dataflow, IntegrationStyle, ReticleConfig};
+
+    fn wsc() -> WscConfig {
+        WscConfig {
+            reticle: ReticleConfig {
+                core: CoreConfig {
+                    dataflow: Dataflow::WS,
+                    mac_num: 256,
+                    buffer_kb: 64,
+                    buffer_bw_bits: 512,
+                    noc_bw_bits: 512,
+                },
+                array_h: 9,
+                array_w: 9,
+                inter_reticle_bw_ratio: 0.6,
+                memory: MemoryKind::Stacking {
+                    bw_tbps_per_100mm2: 1.0,
+                    capacity_gb: 16.0,
+                },
+            },
+            reticle_h: 10,
+            reticle_w: 7,
+            integration: IntegrationStyle::InfoSoW,
+            mem_ctrl_count: 8,
+            nic_count: 8,
+        }
+    }
+
+    #[test]
+    fn reticle_split_partitions() {
+        let h = HeteroConfig {
+            granularity: HeteroGranularity::Reticle,
+            prefill_ratio: 0.6,
+            decode_stack_bw: 4.0,
+        };
+        let s = h.split(&wsc());
+        assert_eq!(s.prefill_reticles + s.decode_reticles, 70);
+        assert_eq!(s.prefill_reticles, 42);
+        assert!(!s.shared);
+        assert_eq!(s.decode_stack_bw, 4.0);
+        assert!(s.kv_transfer_bw > 0.0);
+    }
+
+    #[test]
+    fn reticle_split_never_empty() {
+        for ratio in [0.01, 0.5, 0.99] {
+            let h = HeteroConfig {
+                granularity: HeteroGranularity::Reticle,
+                prefill_ratio: ratio,
+                decode_stack_bw: 2.0,
+            };
+            let s = h.split(&wsc());
+            assert!(s.prefill_reticles >= 1);
+            assert!(s.decode_reticles >= 1);
+        }
+    }
+
+    #[test]
+    fn wafer_split_uses_nic_bandwidth() {
+        let h = HeteroConfig {
+            granularity: HeteroGranularity::Wafer,
+            prefill_ratio: 0.5,
+            decode_stack_bw: 2.0,
+        };
+        let s = h.split(&wsc());
+        assert_eq!(s.kv_transfer_bw, 8.0 * 100e9);
+    }
+
+    #[test]
+    fn core_split_has_sched_overhead_and_cheap_kv() {
+        let h = HeteroConfig {
+            granularity: HeteroGranularity::Core,
+            prefill_ratio: 0.5,
+            decode_stack_bw: 2.0,
+        };
+        let s = h.split(&wsc());
+        assert!(s.sched_overhead > 1.0);
+        let hw = HeteroConfig {
+            granularity: HeteroGranularity::Wafer,
+            prefill_ratio: 0.5,
+            decode_stack_bw: 2.0,
+        };
+        assert!(s.kv_transfer_bw > hw.split(&wsc()).kv_transfer_bw);
+    }
+
+    #[test]
+    fn homogeneous_is_neutral() {
+        let s = HeteroConfig::homogeneous().split(&wsc());
+        assert!(s.shared);
+        assert_eq!(s.sched_overhead, 1.0);
+        assert!(s.kv_transfer_bw.is_infinite());
+    }
+}

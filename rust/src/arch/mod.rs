@@ -1,0 +1,354 @@
+//! WSC architecture description (paper §V-A, Fig. 3, Table I).
+//!
+//! Pure *description* types — deriving area/power/yield from them is the
+//! job of [`crate::components`] and [`crate::yield_model`]. A design point
+//! in the DSE space is a [`WscConfig`] (plus heterogeneity options in
+//! [`hetero`]).
+
+pub mod constants;
+pub mod hetero;
+
+pub use hetero::{HeteroConfig, HeteroGranularity};
+
+/// Intra-core dataflow of the fixed-datapath MAC array (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Weight-stationary.
+    WS,
+    /// Input-stationary.
+    IS,
+    /// Output-stationary.
+    OS,
+}
+
+impl Dataflow {
+    pub const ALL: [Dataflow; 3] = [Dataflow::WS, Dataflow::IS, Dataflow::OS];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataflow::WS => "WS",
+            Dataflow::IS => "IS",
+            Dataflow::OS => "OS",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        match s {
+            "WS" => Some(Dataflow::WS),
+            "IS" => Some(Dataflow::IS),
+            "OS" => Some(Dataflow::OS),
+            _ => None,
+        }
+    }
+}
+
+/// Wafer-level integration technology (paper §II-B, §V-D, Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IntegrationStyle {
+    /// Cerebras-style offset exposure / die stitching: cheap on-wafer links,
+    /// but no known-good-die screening — wafer yield multiplies reticle
+    /// yields.
+    DieStitching,
+    /// Tesla Dojo-style InFO-SoW with RDL interconnect: pricier links, but
+    /// KGD screening means wafer yield equals (tested) reticle yield.
+    InfoSoW,
+}
+
+impl IntegrationStyle {
+    pub const ALL: [IntegrationStyle; 2] =
+        [IntegrationStyle::DieStitching, IntegrationStyle::InfoSoW];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IntegrationStyle::DieStitching => "DieStitching",
+            IntegrationStyle::InfoSoW => "InfoSoW",
+        }
+    }
+
+    pub fn supports_kgd(&self) -> bool {
+        matches!(self, IntegrationStyle::InfoSoW)
+    }
+}
+
+/// Reticle memory system: traditional off-chip DRAM at the wafer edge, or
+/// 3D-stacked DRAM over TSVs on each reticle (paper §V-A, Fig. 13).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemoryKind {
+    /// Off-chip DRAM through wafer-edge memory controllers.
+    OffChip,
+    /// Stacked DRAM: `bw_tbps_per_100mm2` ∈ 0.25–4 TB/s per 100 mm² of
+    /// reticle area, `capacity_gb` ∈ 8–40 GB per reticle. Capacity and
+    /// bandwidth trade off (linear fit over existing parts, §VIII-A).
+    Stacking {
+        bw_tbps_per_100mm2: f64,
+        capacity_gb: f64,
+    },
+}
+
+impl MemoryKind {
+    pub fn is_stacking(&self) -> bool {
+        matches!(self, MemoryKind::Stacking { .. })
+    }
+}
+
+/// Core-level parameters (Table I, "Core" column).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreConfig {
+    pub dataflow: Dataflow,
+    /// Number of MAC units, 8–4096.
+    pub mac_num: usize,
+    /// On-core SRAM capacity in KB, 32–2048.
+    pub buffer_kb: usize,
+    /// SRAM bandwidth in bits/cycle, 32–4096.
+    pub buffer_bw_bits: usize,
+    /// NoC link bandwidth in bits/cycle, 32–4096.
+    pub noc_bw_bits: usize,
+}
+
+impl CoreConfig {
+    /// Peak tensor throughput in FLOP/s at [`constants::CLOCK_HZ`]
+    /// (2 FLOPs per MAC per cycle).
+    pub fn peak_flops(&self) -> f64 {
+        2.0 * self.mac_num as f64 * constants::CLOCK_HZ
+    }
+
+    /// MAC array edge lengths used by the dataflow model: the array is
+    /// organized as rows×cols with rows ≈ cols (square-ish systolic array).
+    pub fn array_dims(&self) -> (usize, usize) {
+        let mut rows = (self.mac_num as f64).sqrt() as usize;
+        while rows > 1 && self.mac_num % rows != 0 {
+            rows -= 1;
+        }
+        (rows.max(1), self.mac_num / rows.max(1))
+    }
+
+    /// NoC link bandwidth in bytes/s.
+    pub fn noc_bytes_per_sec(&self) -> f64 {
+        self.noc_bw_bits as f64 / 8.0 * constants::CLOCK_HZ
+    }
+
+    /// SRAM bandwidth in bytes/s.
+    pub fn sram_bytes_per_sec(&self) -> f64 {
+        self.buffer_bw_bits as f64 / 8.0 * constants::CLOCK_HZ
+    }
+}
+
+/// Reticle-level parameters (Table I, "Reticle" column).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReticleConfig {
+    pub core: CoreConfig,
+    /// Core array height (rows of cores).
+    pub array_h: usize,
+    /// Core array width (cols of cores).
+    pub array_w: usize,
+    /// Inter-reticle bandwidth as a multiple of the reticle's NoC bisection
+    /// bandwidth, 0.2–2.0 (Table I).
+    pub inter_reticle_bw_ratio: f64,
+    pub memory: MemoryKind,
+}
+
+impl ReticleConfig {
+    pub fn num_cores(&self) -> usize {
+        self.array_h * self.array_w
+    }
+
+    /// Peak FLOP/s of all (operational) cores in the reticle.
+    pub fn peak_flops(&self) -> f64 {
+        self.num_cores() as f64 * self.core.peak_flops()
+    }
+
+    /// NoC bisection bandwidth (bytes/s): cutting the core mesh down the
+    /// middle crosses `array_h` links (for a vertical cut of a h×w mesh).
+    pub fn bisection_bytes_per_sec(&self) -> f64 {
+        self.array_h.min(self.array_w) as f64 * self.core.noc_bytes_per_sec()
+    }
+
+    /// Total inter-reticle bandwidth per edge of the reticle (bytes/s).
+    /// The paper expresses it as a ratio of bisection bandwidth; we treat
+    /// the resulting number as the bandwidth available across each reticle
+    /// boundary (N/S/E/W all symmetric).
+    pub fn inter_reticle_bytes_per_sec(&self) -> f64 {
+        self.inter_reticle_bw_ratio * self.bisection_bytes_per_sec()
+    }
+
+    /// Stacked-DRAM bandwidth for this reticle in bytes/s (0 if off-chip),
+    /// proportional to reticle *area*; needs the reticle area in mm² from
+    /// the component estimator.
+    pub fn stacking_bytes_per_sec(&self, reticle_area_mm2: f64) -> f64 {
+        match self.memory {
+            MemoryKind::OffChip => 0.0,
+            MemoryKind::Stacking {
+                bw_tbps_per_100mm2, ..
+            } => bw_tbps_per_100mm2 * 1e12 * (reticle_area_mm2 / 100.0),
+        }
+    }
+
+    pub fn stacking_capacity_bytes(&self) -> f64 {
+        match self.memory {
+            MemoryKind::OffChip => 0.0,
+            MemoryKind::Stacking { capacity_gb, .. } => capacity_gb * 1e9,
+        }
+    }
+}
+
+/// Wafer-level parameters (Table I, "Wafer" column).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WscConfig {
+    pub reticle: ReticleConfig,
+    /// Reticle array height on the wafer.
+    pub reticle_h: usize,
+    /// Reticle array width on the wafer.
+    pub reticle_w: usize,
+    pub integration: IntegrationStyle,
+    /// Memory controllers around the wafer edge (off-chip DRAM access),
+    /// each providing [`constants::OFF_CHIP_BW_PER_CTRL`].
+    pub mem_ctrl_count: usize,
+    /// Network interfaces for WSC-to-WSC scale-out, each providing
+    /// [`constants::INTER_WAFER_BW_PER_NIC`].
+    pub nic_count: usize,
+}
+
+impl WscConfig {
+    pub fn num_reticles(&self) -> usize {
+        self.reticle_h * self.reticle_w
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.num_reticles() * self.reticle.num_cores()
+    }
+
+    /// Peak FLOP/s of the whole wafer (before redundancy derating).
+    pub fn peak_flops(&self) -> f64 {
+        self.num_reticles() as f64 * self.reticle.peak_flops()
+    }
+
+    /// Total on-wafer SRAM in bytes.
+    pub fn total_sram_bytes(&self) -> f64 {
+        self.num_cores() as f64 * self.reticle.core.buffer_kb as f64 * 1024.0
+    }
+
+    /// Total stacked DRAM capacity (bytes), 0 for off-chip designs.
+    pub fn total_stacking_bytes(&self) -> f64 {
+        self.num_reticles() as f64 * self.reticle.stacking_capacity_bytes()
+    }
+
+    /// Aggregate off-chip DRAM bandwidth (bytes/s).
+    pub fn off_chip_bytes_per_sec(&self) -> f64 {
+        self.mem_ctrl_count as f64 * constants::OFF_CHIP_BW_PER_CTRL
+    }
+
+    /// Aggregate inter-wafer bandwidth (bytes/s).
+    pub fn inter_wafer_bytes_per_sec(&self) -> f64 {
+        self.nic_count as f64 * constants::INTER_WAFER_BW_PER_NIC
+    }
+
+    /// One-line human summary, used by the CLI and bench output.
+    pub fn summary(&self) -> String {
+        let mem = match self.reticle.memory {
+            MemoryKind::OffChip => "offchip".to_string(),
+            MemoryKind::Stacking {
+                bw_tbps_per_100mm2,
+                capacity_gb,
+            } => format!("stack({bw_tbps_per_100mm2:.2}TB/s/100mm2,{capacity_gb:.0}GB)"),
+        };
+        format!(
+            "{}x{} reticles of {}x{} cores [{} mac={} sram={}KB sbw={} nbw={}] irbw={:.2}xBi {} {}",
+            self.reticle_h,
+            self.reticle_w,
+            self.reticle.array_h,
+            self.reticle.array_w,
+            self.reticle.core.dataflow.name(),
+            self.reticle.core.mac_num,
+            self.reticle.core.buffer_kb,
+            self.reticle.core.buffer_bw_bits,
+            self.reticle.core.noc_bw_bits,
+            self.reticle.inter_reticle_bw_ratio,
+            mem,
+            self.integration.name(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn test_core() -> CoreConfig {
+        CoreConfig {
+            dataflow: Dataflow::WS,
+            mac_num: 512,
+            buffer_kb: 128,
+            buffer_bw_bits: 1024,
+            noc_bw_bits: 512,
+        }
+    }
+
+    #[test]
+    fn peak_flops_core() {
+        let c = test_core();
+        // 512 MACs * 2 flops * 1 GHz = 1.024 TFLOPS
+        assert!((c.peak_flops() - 1.024e12).abs() < 1.0);
+    }
+
+    #[test]
+    fn array_dims_factor() {
+        for mac in [8usize, 16, 64, 512, 1000, 4096] {
+            let c = CoreConfig { mac_num: mac, ..test_core() };
+            let (r, k) = c.array_dims();
+            assert_eq!(r * k, mac, "mac={mac}");
+            assert!(r <= k);
+        }
+    }
+
+    #[test]
+    fn reticle_aggregates() {
+        let r = ReticleConfig {
+            core: test_core(),
+            array_h: 12,
+            array_w: 12,
+            inter_reticle_bw_ratio: 1.0,
+            memory: MemoryKind::Stacking {
+                bw_tbps_per_100mm2: 1.0,
+                capacity_gb: 16.0,
+            },
+        };
+        assert_eq!(r.num_cores(), 144);
+        assert!((r.peak_flops() - 144.0 * 1.024e12).abs() < 1e6);
+        // bisection: 12 links * 512 bits / 8 * 1e9
+        assert!((r.bisection_bytes_per_sec() - 12.0 * 64.0 * 1e9).abs() < 1.0);
+        assert!((r.stacking_bytes_per_sec(200.0) - 2e12).abs() < 1.0);
+        assert_eq!(r.stacking_capacity_bytes(), 16e9);
+    }
+
+    #[test]
+    fn wafer_aggregates() {
+        let w = WscConfig {
+            reticle: ReticleConfig {
+                core: test_core(),
+                array_h: 10,
+                array_w: 10,
+                inter_reticle_bw_ratio: 0.5,
+                memory: MemoryKind::OffChip,
+            },
+            reticle_h: 8,
+            reticle_w: 7,
+            integration: IntegrationStyle::DieStitching,
+            mem_ctrl_count: 16,
+            nic_count: 8,
+        };
+        assert_eq!(w.num_reticles(), 56);
+        assert_eq!(w.num_cores(), 5600);
+        assert_eq!(w.total_stacking_bytes(), 0.0);
+        assert!((w.off_chip_bytes_per_sec() - 16.0 * 160e9).abs() < 1.0);
+        assert!((w.inter_wafer_bytes_per_sec() - 8.0 * 100e9).abs() < 1.0);
+        assert!(w.summary().contains("8x7 reticles"));
+    }
+
+    #[test]
+    fn dataflow_roundtrip() {
+        for d in Dataflow::ALL {
+            assert_eq!(Dataflow::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dataflow::parse("XX"), None);
+    }
+}

@@ -1,0 +1,203 @@
+//! GPU-cluster baseline (paper Fig. 11/13: "H100 baseline with the same
+//! area"). A roofline + collectives model in the same output terms as the
+//! WSC evaluator, with datasheet parameters scaled to the paper's 14 nm
+//! reference where that matters (area, power ordering).
+
+use crate::arch::constants as k;
+use crate::eval::chunk::{Breakdown, InferEval, TrainEval};
+use crate::workload::parallel::{enumerate_strategies, SystemMemory};
+use crate::workload::{LlmSpec, ParallelStrategy};
+
+/// GPU device parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak dense bf16, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_cap: f64,
+    /// NVLink bandwidth per GPU (aggregate, one direction), bytes/s.
+    pub nvlink_bw: f64,
+    /// Inter-node network bandwidth per GPU (InfiniBand NDR class),
+    /// bytes/s — PP/DP collectives beyond the 8-GPU NVLink island pay this.
+    pub internode_bw: f64,
+    /// Board power, W.
+    pub tdp_w: f64,
+    /// Die area, mm².
+    pub die_mm2: f64,
+    /// Achievable MFU for dense training at scale (Megatron-class).
+    pub train_mfu: f64,
+}
+
+/// NVIDIA H100 SXM (DGX), per §IX-F's baseline, **scaled to the paper's
+/// 14 nm reference node** (§VIII-A/§IX-F: "both area and power values for
+/// existing designs scaled to 14nm"): the 4 nm die's compute is derated by
+/// the ~4x logic-density gap (two node generations, Villa et al. scaling)
+/// so the equal-area comparison is apples-to-apples. HBM (external DRAM)
+/// keeps its datasheet bandwidth; the paper's 0.2 TB/s/100 mm² density
+/// note already reflects the die area.
+pub fn h100() -> GpuSpec {
+    GpuSpec {
+        name: "H100",
+        peak_flops: 989e12 / 4.0,
+        hbm_bw: 3.35e12,
+        hbm_cap: 80e9,
+        nvlink_bw: 450e9,
+        internode_bw: 50e9,
+        tdp_w: 700.0,
+        die_mm2: super::H100_DIE_MM2,
+        train_mfu: 0.45,
+    }
+}
+
+/// Training throughput of an `n_gpus` cluster (Megatron-style 3-D
+/// parallelism, same strategy space as the WSC evaluator).
+pub fn h100_train_eval(spec: &LlmSpec, n_gpus: usize) -> Option<TrainEval> {
+    let g = h100();
+    let mem = SystemMemory {
+        sram_bytes: 0.0,
+        stacking_bytes: n_gpus as f64 * g.hbm_cap, // weights live in HBM
+        offchip_bytes: 0.0,
+        total_cores: n_gpus,
+    };
+    let strategies = enumerate_strategies(spec, &mem);
+    let best = strategies
+        .into_iter()
+        .filter(|s| s.num_chunks() <= n_gpus)
+        .filter_map(|s| step_time(spec, &g, n_gpus, s))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+    let (s, step) = best;
+    let tokens = (spec.batch_size * spec.seq_len) as f64;
+    // Energy: flops at e_mac-equivalent (GPU 14nm-scaled ≈ 0.8 pJ/flop
+    // effective incl. datapath overheads) + HBM traffic + static fraction.
+    let flops_step = spec.train_flops_per_token() * tokens;
+    let hbm_bytes = flops_step / g.peak_flops * g.hbm_bw * 0.5 * n_gpus as f64 / n_gpus as f64;
+    let e_dyn = flops_step * 0.4e-12 + hbm_bytes * 8.0 * 7.0e-12;
+    let e_static = 0.35 * g.tdp_w * n_gpus as f64 * step;
+    let energy = e_dyn + e_static;
+    Some(TrainEval {
+        strategy: s,
+        step_time_s: step,
+        tokens_per_sec: tokens / step,
+        power_w: energy / step,
+        energy_per_token_j: energy / tokens,
+        edp: energy * step,
+        breakdown: Breakdown::default(),
+    })
+}
+
+fn step_time(
+    spec: &LlmSpec,
+    g: &GpuSpec,
+    n_gpus: usize,
+    s: ParallelStrategy,
+) -> Option<(ParallelStrategy, f64)> {
+    let tokens_mb = (s.microbatch * spec.seq_len) as f64;
+    let flops_mb_stage =
+        spec.train_flops_per_token() * tokens_mb / (s.pp as f64 * s.tp as f64);
+    let gpus_per_chunk = (n_gpus as f64 / s.num_chunks() as f64).max(1.0);
+    let t_compute = flops_mb_stage / (g.peak_flops * g.train_mfu * gpus_per_chunk);
+
+    let bpe = k::BYTES_PER_ELEM;
+    let msh = tokens_mb * spec.hidden as f64 * bpe;
+    // TP all-reduce over NVLink: 4/layer.
+    let t_tp = if s.tp == 1 {
+        0.0
+    } else {
+        4.0 * s.layers_per_stage(spec) as f64
+            * (2.0 * (s.tp as f64 - 1.0) / s.tp as f64 * msh)
+            / g.nvlink_bw
+    };
+    // PP boundaries and DP rings cross NVLink islands (8 GPUs) at scale.
+    let cross_node = s.num_chunks() > 8;
+    let net_bw = if cross_node { g.internode_bw } else { g.nvlink_bw };
+    let t_pp = if s.pp == 1 { 0.0 } else { 2.0 * msh / s.tp as f64 / net_bw };
+    // HBM weight streaming per microbatch (weights don't fit in SRAM).
+    let stage_weights = spec.param_bytes() / (s.tp * s.pp) as f64;
+    let t_hbm = stage_weights / (g.hbm_bw * gpus_per_chunk);
+    let t_mb = t_compute.max(t_hbm) + t_tp + t_pp;
+
+    let mb = s.microbatches_per_step(spec) as f64;
+    let grad_bytes = 2.0 * (s.dp as f64 - 1.0) / s.dp as f64 * stage_weights;
+    let t_dp = if s.dp == 1 { 0.0 } else { grad_bytes / (net_bw * 0.5) };
+    let step = (mb + s.pp as f64 - 1.0) * t_mb + t_dp;
+    if step.is_finite() && step > 0.0 {
+        Some((s, step))
+    } else {
+        None
+    }
+}
+
+/// Inference on the GPU cluster: prefill compute-bound at high MFU, decode
+/// HBM-bound streaming weights + KV per token (the §IX-D observation that
+/// decode under small batch under-utilizes GPU compute).
+pub fn h100_infer_eval(spec: &LlmSpec, n_gpus: usize, batch: usize, mqa: bool) -> Option<InferEval> {
+    let g = h100();
+    let weights = spec.param_bytes();
+    let kv = spec.kv_cache_bytes_per_seq(mqa) * batch as f64;
+    if weights + kv > n_gpus as f64 * g.hbm_cap {
+        return None;
+    }
+    let prefill_flops = spec.fwd_flops_per_token() * (batch * spec.seq_len) as f64;
+    let prefill_s = prefill_flops / (g.peak_flops * 0.55 * n_gpus as f64);
+
+    let decode_bytes = weights + kv;
+    let decode_mem_s = decode_bytes / (g.hbm_bw * n_gpus as f64);
+    let decode_flops = spec.fwd_flops_per_token() * batch as f64;
+    // Batched GEMV achieves moderate utilization; decode stays HBM-bound
+    // (the §IX-D premise).
+    let decode_compute_s = decode_flops / (g.peak_flops * 0.3 * n_gpus as f64);
+    let decode_step_s = decode_mem_s.max(decode_compute_s);
+
+    let out_tokens = spec.seq_len as f64;
+    let total_s = prefill_s + out_tokens * decode_step_s;
+    let energy = 0.5 * g.tdp_w * n_gpus as f64 * total_s; // ~50 % of TDP at decode
+    Some(InferEval {
+        prefill_s,
+        decode_step_s,
+        tokens_per_sec: batch as f64 * out_tokens / total_s,
+        power_w: energy / total_s,
+        residency: "hbm",
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::benchmarks;
+
+    #[test]
+    fn h100_cluster_trains_gpt3() {
+        let spec = &benchmarks()[7];
+        let r = h100_train_eval(spec, 1000).expect("gpt3 on 1000 H100s");
+        // Sane MFU-bounded throughput: tokens/s under cluster roofline.
+        let roofline = 1000.0 * 989e12 / spec.train_flops_per_token();
+        assert!(r.tokens_per_sec < roofline);
+        assert!(r.tokens_per_sec > roofline * 0.03);
+    }
+
+    #[test]
+    fn decode_is_memory_bound() {
+        let spec = &benchmarks()[7];
+        let r = h100_infer_eval(spec, 16, 32, false).unwrap();
+        let mem_s = (spec.param_bytes() + spec.kv_cache_bytes_per_seq(false) * 32.0)
+            / (3.35e12 * 16.0);
+        assert!((r.decode_step_s - mem_s).abs() / mem_s < 0.5);
+    }
+
+    #[test]
+    fn infer_requires_capacity() {
+        let spec = &benchmarks()[9]; // 530B needs > 8 H100s even for weights
+        assert!(h100_infer_eval(spec, 8, 32, false).is_none());
+    }
+
+    #[test]
+    fn mqa_helps_gpu_decode_too() {
+        let spec = &benchmarks()[7];
+        let a = h100_infer_eval(spec, 16, 32, false).unwrap();
+        let b = h100_infer_eval(spec, 16, 32, true).unwrap();
+        assert!(b.decode_step_s < a.decode_step_s);
+    }
+}

@@ -1,0 +1,101 @@
+//! Bench harness substrate (no `criterion` offline): warmup + repeated
+//! timing with median/p10/p90 reporting, plus JSON row output under
+//! `artifacts/bench/` so EXPERIMENTS.md numbers are reproducible.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        if self.median_s > 0.0 {
+            1.0 / self.median_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs and `iters` measured runs.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        median_s: stats::median(&samples),
+        p10_s: stats::percentile(&samples, 10.0),
+        p90_s: stats::percentile(&samples, 90.0),
+        iters,
+    }
+}
+
+/// Time a single long-running invocation (no repeats).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Persist a bench table under artifacts/bench/<name>.json (best effort —
+/// benches must run even in a read-only checkout).
+pub fn save_json(name: &str, doc: &Json) {
+    let dir = std::path::Path::new("artifacts/bench");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(format!("{name}.json"));
+        if let Err(e) = std::fs::write(&path, doc.to_pretty()) {
+            eprintln!("note: could not save {}: {e}", path.display());
+        } else {
+            eprintln!("saved {}", path.display());
+        }
+    }
+}
+
+/// Scale knob shared by all figure benches: `THESEUS_BENCH_SCALE=2` doubles
+/// sweep sizes / repeats (default 1 keeps `cargo bench` minutes-scale on
+/// one core).
+pub fn scale() -> usize {
+    crate::util::cli::env_usize("THESEUS_BENCH_SCALE", 1).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let t = time("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(t.median_s > 0.0);
+        assert!(t.p10_s <= t.median_s && t.median_s <= t.p90_s);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, s) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

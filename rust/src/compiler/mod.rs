@@ -1,0 +1,342 @@
+//! Workload Compiler back-end (paper §VI-A steps 2–4, Fig. 6c-d): partition
+//! each chunk's operator graph over the chunk's core region, tile operators
+//! across cores, map logical cores to the physical array, and XY-route the
+//! resulting flows.
+//!
+//! The output [`CompiledChunk`] feeds every evaluator: the analytical
+//! op-level model and the GNN both consume its per-link flow structure, and
+//! the cycle-accurate simulator executes its phase/flow schedule directly.
+
+pub mod partition;
+pub mod routing;
+
+use crate::arch::CoreConfig;
+use crate::workload::{OpGraph, OpKind};
+
+pub use partition::{grid_for_op, OpPlacement};
+pub use routing::{link_index, route_xy, LinkId, NUM_DIRS};
+
+/// A point-to-point transfer between physical cores, attributed to the op
+/// edge of the chunk graph (the "communication trace" of §VI-A step 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Flow {
+    pub src: (usize, usize),
+    pub dst: (usize, usize),
+    pub bytes: f64,
+    /// Index of the producing op (phase) in the chunk graph.
+    pub src_op: usize,
+    /// Index of the consuming op.
+    pub dst_op: usize,
+}
+
+/// Per-op compute assignment: which sub-grid runs it and the per-core tile
+/// shape handed to tile-level evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct OpAssignment {
+    pub op: usize,
+    pub kind: OpKind,
+    pub placement: OpPlacement,
+    /// FLOPs per participating core.
+    pub flops_per_core: f64,
+    /// Input bytes streamed into each participating core (operand feeds).
+    pub in_bytes_per_core: f64,
+    /// Output bytes produced per participating core.
+    pub out_bytes_per_core: f64,
+    /// Resident working set per core (weights + stationary tile), bytes.
+    pub working_set_bytes: f64,
+}
+
+/// Result of compiling one chunk onto an `h × w` core region.
+#[derive(Debug, Clone)]
+pub struct CompiledChunk {
+    pub region_h: usize,
+    pub region_w: usize,
+    pub assignments: Vec<OpAssignment>,
+    /// All inter-core flows, in op (phase) order.
+    pub flows: Vec<Flow>,
+    /// Op-graph dependency edges (src_op, dst_op) — preserved for critical-
+    /// path traversal in op-level evaluation.
+    pub deps: Vec<(usize, usize)>,
+}
+
+impl CompiledChunk {
+    pub fn num_cores(&self) -> usize {
+        self.region_h * self.region_w
+    }
+
+    /// Total bytes crossing the NoC.
+    pub fn total_flow_bytes(&self) -> f64 {
+        self.flows.iter().map(|f| f.bytes).sum()
+    }
+
+    /// Bytes injected per source core (dense, row-major) — a GNN node
+    /// feature computable identically at dataset-generation and DSE time.
+    pub fn node_injected_bytes(&self) -> Vec<f64> {
+        let mut v = vec![0.0; self.region_h * self.region_w];
+        for f in &self.flows {
+            v[f.src.0 * self.region_w + f.src.1] += f.bytes;
+        }
+        v
+    }
+
+    /// Accumulate bytes per directed mesh link (for the analytical model
+    /// and as GNN edge features). Returns a dense vector indexed by
+    /// [`routing::link_index`].
+    pub fn link_loads(&self) -> Vec<f64> {
+        let mut loads = vec![0.0; self.region_h * self.region_w * NUM_DIRS];
+        for f in &self.flows {
+            for l in route_xy(f.src, f.dst) {
+                loads[link_index(l, self.region_w)] += f.bytes;
+            }
+        }
+        loads
+    }
+}
+
+/// Compile a chunk graph onto an `h × w` core region of `core` cores
+/// (§VI-A steps 2–4).
+///
+/// Traffic model per op:
+/// * operand feeding is systolic — A-tiles relay left-to-right along rows,
+///   B-tiles top-to-bottom along columns (neighbor flows);
+/// * between dependent ops the output tiles are *redistributed* to the
+///   consumer's layout with a transpose-like permutation (layout changes
+///   between GEMMs shuffle the data), producing the longer-range flows that
+///   create NoC congestion.
+pub fn compile_chunk(
+    graph: &OpGraph,
+    region_h: usize,
+    region_w: usize,
+    core: &CoreConfig,
+) -> CompiledChunk {
+    assert!(region_h >= 1 && region_w >= 1);
+    let mut assignments = Vec::with_capacity(graph.ops.len());
+    let mut flows = Vec::new();
+
+    for op in &graph.ops {
+        let placement = grid_for_op(&op.kind, region_h, region_w);
+        let cores = placement.num_cores() as f64;
+        let kind = op.kind;
+        let flops_per_core = kind.flops() / cores;
+        let out_bytes_per_core = kind.out_bytes() / cores;
+
+        // Operand volumes (per core) by op type.
+        let (in_bytes_per_core, working_set) = operand_footprint(&kind, &placement, core);
+        assignments.push(OpAssignment {
+            op: op.id,
+            kind,
+            placement,
+            flops_per_core,
+            in_bytes_per_core,
+            out_bytes_per_core,
+            working_set_bytes: working_set,
+        });
+
+        // Systolic operand-feed flows along rows/cols of the placement.
+        if let OpKind::Matmul { m, k, n } | OpKind::BatchMatmul { m, k, n, .. } = kind {
+            let bpe = crate::arch::constants::BYTES_PER_ELEM;
+            let gh = placement.grid_h as f64;
+            let gw = placement.grid_w as f64;
+            let a_tile = (m as f64 / gh) * k as f64 * bpe;
+            let b_tile = k as f64 * (n as f64 / gw) * bpe;
+            for r in 0..placement.grid_h {
+                for c in 0..placement.grid_w {
+                    let here = placement.physical(r, c);
+                    if c + 1 < placement.grid_w {
+                        flows.push(Flow {
+                            src: here,
+                            dst: placement.physical(r, c + 1),
+                            bytes: a_tile,
+                            src_op: op.id,
+                            dst_op: op.id,
+                        });
+                    }
+                    if r + 1 < placement.grid_h {
+                        flows.push(Flow {
+                            src: here,
+                            dst: placement.physical(r + 1, c),
+                            bytes: b_tile,
+                            src_op: op.id,
+                            dst_op: op.id,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // Redistribution flows along dependency edges.
+    let mut deps = Vec::with_capacity(graph.edges.len());
+    for e in &graph.edges {
+        deps.push((e.src, e.dst));
+        let src_p = assignments[e.src].placement;
+        let dst_p = assignments[e.dst].placement;
+        let per_src = e.bytes / src_p.num_cores() as f64;
+        for r in 0..src_p.grid_h {
+            for c in 0..src_p.grid_w {
+                let src = src_p.physical(r, c);
+                // Transpose-like permutation into the consumer grid.
+                let dr = c % dst_p.grid_h;
+                let dc = r % dst_p.grid_w;
+                let dst = dst_p.physical(dr, dc);
+                if src != dst {
+                    flows.push(Flow {
+                        src,
+                        dst,
+                        bytes: per_src,
+                        src_op: e.src,
+                        dst_op: e.dst,
+                    });
+                }
+            }
+        }
+    }
+
+    CompiledChunk {
+        region_h,
+        region_w,
+        assignments,
+        flows,
+        deps,
+    }
+}
+
+/// Per-core operand feed volume and resident working set for tile-level
+/// evaluation (§VI-B: SRAM capacity bounds data reuse).
+fn operand_footprint(kind: &OpKind, placement: &OpPlacement, _core: &CoreConfig) -> (f64, f64) {
+    let bpe = crate::arch::constants::BYTES_PER_ELEM;
+    let gh = placement.grid_h as f64;
+    let gw = placement.grid_w as f64;
+    match *kind {
+        OpKind::Matmul { m, k, n } => {
+            let a = (m as f64 / gh) * k as f64 * bpe;
+            let b = k as f64 * (n as f64 / gw) * bpe;
+            let out = (m as f64 / gh) * (n as f64 / gw) * bpe;
+            (a + b, b + out) // B tile stationary (WS-style), out accumulates
+        }
+        OpKind::BatchMatmul { batch, m, k, n } => {
+            let per = (batch as f64 / (gh * gw)).max(1.0);
+            let a = per * m as f64 * k as f64 * bpe;
+            let b = per * k as f64 * n as f64 * bpe;
+            let out = per * m as f64 * n as f64 * bpe;
+            (a + b, b + out)
+        }
+        OpKind::Softmax { rows, cols } | OpKind::LayerNorm { rows, cols } => {
+            let t = rows as f64 * cols as f64 * bpe / (gh * gw);
+            (t, t.min(64.0 * 1024.0))
+        }
+        OpKind::Elementwise { elems } => {
+            let t = elems as f64 * bpe / (gh * gw);
+            (2.0 * t, 0.0)
+        }
+        OpKind::KvRead { bytes } => (bytes / (gh * gw), 0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dataflow;
+    use crate::workload::models::benchmarks;
+    use crate::workload::{OpGraph, Phase};
+
+    fn core() -> CoreConfig {
+        CoreConfig {
+            dataflow: Dataflow::WS,
+            mac_num: 512,
+            buffer_kb: 128,
+            buffer_bw_bits: 256,
+            noc_bw_bits: 512,
+        }
+    }
+
+    fn compiled(h: usize, w: usize) -> CompiledChunk {
+        let spec = benchmarks()[0].clone();
+        let g = OpGraph::transformer_chunk(&spec, 1, 1, 4, Phase::Prefill, false);
+        compile_chunk(&g, h, w, &core())
+    }
+
+    #[test]
+    fn flows_stay_in_region() {
+        let c = compiled(8, 8);
+        for f in &c.flows {
+            assert!(f.src.0 < 8 && f.src.1 < 8);
+            assert!(f.dst.0 < 8 && f.dst.1 < 8);
+            assert!(f.bytes > 0.0);
+            assert_ne!(f.src, f.dst);
+        }
+        assert!(!c.flows.is_empty());
+    }
+
+    #[test]
+    fn every_op_assigned() {
+        let spec = benchmarks()[0].clone();
+        let g = OpGraph::transformer_chunk(&spec, 1, 1, 4, Phase::Prefill, false);
+        let c = compile_chunk(&g, 8, 8, &core());
+        assert_eq!(c.assignments.len(), g.ops.len());
+        for a in &c.assignments {
+            assert!(a.flops_per_core >= 0.0);
+            assert!(a.placement.num_cores() >= 1);
+        }
+    }
+
+    #[test]
+    fn flops_conserved_across_cores() {
+        let spec = benchmarks()[0].clone();
+        let g = OpGraph::transformer_chunk(&spec, 1, 1, 4, Phase::Prefill, false);
+        let c = compile_chunk(&g, 8, 8, &core());
+        let total: f64 = c
+            .assignments
+            .iter()
+            .map(|a| a.flops_per_core * a.placement.num_cores() as f64)
+            .sum();
+        let rel = (total - g.total_flops()).abs() / g.total_flops();
+        assert!(rel < 1e-9, "rel={rel}");
+    }
+
+    #[test]
+    fn link_loads_indexable_and_nonnegative() {
+        let c = compiled(6, 6);
+        let loads = c.link_loads();
+        assert_eq!(loads.len(), 6 * 6 * NUM_DIRS);
+        assert!(loads.iter().all(|&b| b >= 0.0));
+        assert!(loads.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn bigger_region_spreads_traffic() {
+        let small = compiled(4, 4);
+        let big = compiled(12, 12);
+        // More cores -> more flows (finer tiling).
+        assert!(big.flows.len() > small.flows.len());
+    }
+
+    #[test]
+    fn prop_region_bounds_and_dep_consistency() {
+        let spec = benchmarks()[0].clone();
+        crate::util::prop::check(
+            "compiled flows in-bounds, deps reference ops",
+            |r| {
+                let h = r.range(1, 12);
+                let w = r.range(1, 12);
+                let phase = *r.choose(&[Phase::Training, Phase::Prefill, Phase::Decode]);
+                (h, w, phase)
+            },
+            |&(h, w, phase)| {
+                let g = OpGraph::transformer_chunk(&spec, 1, 1, 2, phase, false);
+                let c = compile_chunk(&g, h, w, &core());
+                for f in &c.flows {
+                    if f.src.0 >= h || f.src.1 >= w || f.dst.0 >= h || f.dst.1 >= w {
+                        return Err(format!("flow out of bounds: {f:?}"));
+                    }
+                }
+                for &(s, d) in &c.deps {
+                    if s >= g.ops.len() || d >= g.ops.len() {
+                        return Err("dep out of range".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

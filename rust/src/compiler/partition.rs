@@ -1,0 +1,125 @@
+//! Partition & allocation (paper §VI-A step 2): choose the sub-grid of the
+//! chunk's core region each operator runs on, balancing intra-op
+//! parallelism against operand granularity (prior-work methodology the
+//! paper cites: Tangram/Timeloop-style even partitioning).
+
+use crate::workload::OpKind;
+
+/// Placement of one op on a rectangular sub-grid anchored at `(off_h, off_w)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpPlacement {
+    pub off_h: usize,
+    pub off_w: usize,
+    pub grid_h: usize,
+    pub grid_w: usize,
+}
+
+impl OpPlacement {
+    pub fn num_cores(&self) -> usize {
+        self.grid_h * self.grid_w
+    }
+
+    /// Physical coordinates of logical tile (r, c) — §VI-A step 4's
+    /// logical→physical mapping is a direct block embedding.
+    pub fn physical(&self, r: usize, c: usize) -> (usize, usize) {
+        (self.off_h + r, self.off_w + c)
+    }
+}
+
+/// Pick the op's grid: GEMMs use the whole region (2-D tiled over m × n);
+/// small memory-bound ops cap their parallelism so per-core tiles do not
+/// degenerate below one row/vector (allocating every core to a tiny
+/// LayerNorm just burns NoC bandwidth).
+pub fn grid_for_op(kind: &OpKind, region_h: usize, region_w: usize) -> OpPlacement {
+    let full = OpPlacement {
+        off_h: 0,
+        off_w: 0,
+        grid_h: region_h,
+        grid_w: region_w,
+    };
+    match *kind {
+        OpKind::Matmul { m, n, .. } => shrink_to(full, m, n),
+        OpKind::BatchMatmul { batch, m, n, .. } => {
+            // Batched products parallelize over batch first.
+            shrink_to(full, batch * m, n)
+        }
+        OpKind::Softmax { rows, .. } | OpKind::LayerNorm { rows, .. } => {
+            shrink_to(full, rows, 1)
+        }
+        OpKind::Elementwise { elems } => shrink_to(full, elems, 1),
+        OpKind::KvRead { .. } => full,
+    }
+}
+
+/// Shrink a grid so it has at most `par_h × par_w`-way useful parallelism.
+fn shrink_to(full: OpPlacement, par_h: usize, par_w: usize) -> OpPlacement {
+    let gh = full.grid_h.min(par_h.max(1));
+    let gw = if par_w <= 1 {
+        // 1-D parallel op: use the whole region linearized by rows.
+        full.grid_w.min((par_h / gh).max(1))
+    } else {
+        full.grid_w.min(par_w)
+    };
+    OpPlacement {
+        off_h: 0,
+        off_w: 0,
+        grid_h: gh.max(1),
+        grid_w: gw.max(1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_uses_full_region() {
+        let p = grid_for_op(
+            &OpKind::Matmul {
+                m: 2048,
+                k: 2304,
+                n: 2304,
+            },
+            8,
+            8,
+        );
+        assert_eq!((p.grid_h, p.grid_w), (8, 8));
+    }
+
+    #[test]
+    fn tiny_op_shrinks() {
+        let p = grid_for_op(&OpKind::LayerNorm { rows: 3, cols: 64 }, 8, 8);
+        assert!(p.num_cores() <= 3, "cores={}", p.num_cores());
+    }
+
+    #[test]
+    fn never_zero_cores() {
+        for kind in [
+            OpKind::Matmul { m: 1, k: 1, n: 1 },
+            OpKind::Softmax { rows: 1, cols: 1 },
+            OpKind::Elementwise { elems: 1 },
+        ] {
+            let p = grid_for_op(&kind, 16, 16);
+            assert!(p.num_cores() >= 1);
+        }
+    }
+
+    #[test]
+    fn physical_maps_into_region() {
+        let p = grid_for_op(
+            &OpKind::Matmul {
+                m: 512,
+                k: 64,
+                n: 512,
+            },
+            5,
+            7,
+        );
+        for r in 0..p.grid_h {
+            for c in 0..p.grid_w {
+                let (pr, pc) = p.physical(r, c);
+                assert!(pr < 5 && pc < 7);
+            }
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Dimension-order (XY) routing on the 2-D core mesh (paper §VI-A step 4).
+//!
+//! Links are identified by their *upstream* router and direction, giving a
+//! dense index space `core_count × 4` shared by the analytical model, the
+//! GNN feature builder and the CA simulator.
+
+/// Link direction out of a router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    East = 0,
+    West = 1,
+    South = 2,
+    North = 3,
+}
+
+pub const NUM_DIRS: usize = 4;
+
+/// A directed mesh link: from router `(row, col)` toward `dir`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkId {
+    pub row: usize,
+    pub col: usize,
+    pub dir: Dir,
+}
+
+impl LinkId {
+    /// The router this link feeds into.
+    pub fn downstream(&self) -> (usize, usize) {
+        match self.dir {
+            Dir::East => (self.row, self.col + 1),
+            Dir::West => (self.row, self.col - 1),
+            Dir::South => (self.row + 1, self.col),
+            Dir::North => (self.row - 1, self.col),
+        }
+    }
+}
+
+/// Dense index of a link for a mesh of `width` columns.
+#[inline]
+pub fn link_index(l: LinkId, width: usize) -> usize {
+    (l.row * width + l.col) * NUM_DIRS + l.dir as usize
+}
+
+/// XY route: traverse X (columns) first, then Y (rows). Returns the ordered
+/// list of links; empty when src == dst.
+pub fn route_xy(src: (usize, usize), dst: (usize, usize)) -> Vec<LinkId> {
+    let mut links = Vec::with_capacity(hops(src, dst));
+    for_each_link_xy(src, dst, |l| links.push(l));
+    links
+}
+
+/// Allocation-free XY route traversal — the op-level evaluator calls this
+/// hundreds of thousands of times per DSE iteration (§Perf hot path).
+#[inline]
+pub fn for_each_link_xy(src: (usize, usize), dst: (usize, usize), mut f: impl FnMut(LinkId)) {
+    let (mut r, mut c) = src;
+    while c != dst.1 {
+        let dir = if dst.1 > c { Dir::East } else { Dir::West };
+        f(LinkId { row: r, col: c, dir });
+        c = if dst.1 > c { c + 1 } else { c - 1 };
+    }
+    while r != dst.0 {
+        let dir = if dst.0 > r { Dir::South } else { Dir::North };
+        f(LinkId { row: r, col: c, dir });
+        r = if dst.0 > r { r + 1 } else { r - 1 };
+    }
+}
+
+/// Manhattan hop count.
+pub fn hops(src: (usize, usize), dst: (usize, usize)) -> usize {
+    src.0.abs_diff(dst.0) + src.1.abs_diff(dst.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_length_is_manhattan() {
+        let path = route_xy((0, 0), (3, 4));
+        assert_eq!(path.len(), 7);
+        assert_eq!(hops((0, 0), (3, 4)), 7);
+    }
+
+    #[test]
+    fn route_is_contiguous_and_x_first() {
+        let path = route_xy((2, 5), (4, 1));
+        // X-first: all E/W links precede S/N links.
+        let first_y = path
+            .iter()
+            .position(|l| matches!(l.dir, Dir::South | Dir::North))
+            .unwrap();
+        assert!(path[..first_y]
+            .iter()
+            .all(|l| matches!(l.dir, Dir::East | Dir::West)));
+        // Contiguity: each link's downstream is the next link's router.
+        let mut cur = (2, 5);
+        for l in &path {
+            assert_eq!((l.row, l.col), cur);
+            cur = l.downstream();
+        }
+        assert_eq!(cur, (4, 1));
+    }
+
+    #[test]
+    fn self_route_empty() {
+        assert!(route_xy((3, 3), (3, 3)).is_empty());
+    }
+
+    #[test]
+    fn link_index_dense_unique() {
+        let w = 6;
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..4 {
+            for c in 0..w {
+                for dir in [Dir::East, Dir::West, Dir::South, Dir::North] {
+                    let idx = link_index(LinkId { row: r, col: c, dir }, w);
+                    assert!(seen.insert(idx), "collision at {idx}");
+                    assert!(idx < 4 * w * NUM_DIRS);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_route_endpoints() {
+        crate::util::prop::check(
+            "xy route goes src->dst",
+            |rng| {
+                let h = rng.range(1, 16);
+                let w = rng.range(1, 16);
+                let src = (rng.below(h), rng.below(w));
+                let dst = (rng.below(h), rng.below(w));
+                (src, dst)
+            },
+            |&(src, dst)| {
+                let path = route_xy(src, dst);
+                if path.len() != hops(src, dst) {
+                    return Err("length != manhattan".into());
+                }
+                let mut cur = src;
+                for l in &path {
+                    if (l.row, l.col) != cur {
+                        return Err("discontiguous".into());
+                    }
+                    cur = l.downstream();
+                }
+                if cur != dst {
+                    return Err("wrong endpoint".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

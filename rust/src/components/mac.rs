@@ -1,0 +1,94 @@
+//! MAC-array datapath model (paper §VI-E: Chisel MAC arrays in different
+//! dataflows, synthesized and placed; here a parametric model at 14 nm).
+//!
+//! Dataflow affects the per-MAC register/control overhead: weight- and
+//! input-stationary arrays keep one stationary operand register per MAC;
+//! output-stationary keeps a (wider) accumulator per MAC. The differences
+//! are a few percent — module efficiency at *large* array sizes is what the
+//! paper's core-granularity tradeoff hinges on (control fanout and operand
+//! distribution networks grow superlinearly).
+
+use crate::arch::constants as k;
+use crate::arch::Dataflow;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MacArray {
+    pub area_mm2: f64,
+    /// Energy per MAC operation, pJ.
+    pub energy_pj_per_mac: f64,
+    pub leak_w: f64,
+}
+
+/// Dataflow-specific per-MAC overhead factors (area, energy).
+fn dataflow_factors(df: Dataflow) -> (f64, f64) {
+    match df {
+        // 16-bit stationary weight register.
+        Dataflow::WS => (1.00, 1.00),
+        // Input-stationary: same register cost, slightly busier operand
+        // network for weights streaming.
+        Dataflow::IS => (1.01, 1.02),
+        // Output-stationary: 32-bit accumulator per MAC, cheaper operand
+        // movement (psums stay put).
+        Dataflow::OS => (1.06, 0.97),
+    }
+}
+
+/// Characterize an array of `mac_num` MACs in dataflow `df`.
+pub fn mac_array(mac_num: usize, df: Dataflow) -> MacArray {
+    let (fa, fe) = dataflow_factors(df);
+
+    // Operand distribution + reduction networks: ~4 % area per doubling
+    // beyond a 64-MAC tile (H-tree fanout), normalized so a 64-MAC tile has
+    // zero overhead. This makes very large monolithic arrays less
+    // area-efficient, one leg of the paper's "module efficiency" argument.
+    let fanout = 1.0 + 0.04 * ((mac_num as f64 / 64.0).log2()).max(0.0);
+
+    let area_um2 = k::MAC_AREA_UM2 * mac_num as f64 * fa * fanout;
+    let area_mm2 = area_um2 / 1e6;
+    let energy_pj_per_mac = k::MAC_ENERGY_PJ * fe * fanout.sqrt();
+
+    // Leakage proportional to area-implied peak dynamic power.
+    let peak_dyn_w = mac_num as f64 * energy_pj_per_mac * 1e-12 * k::CLOCK_HZ;
+    let leak_w = k::LOGIC_LEAK_FRAC * peak_dyn_w;
+
+    MacArray {
+        area_mm2,
+        energy_pj_per_mac,
+        leak_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_roughly_linear_small() {
+        let a = mac_array(64, Dataflow::WS);
+        assert!((a.area_mm2 - 64.0 * 600.0 / 1e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn superlinear_fanout_at_scale() {
+        let small = mac_array(64, Dataflow::WS);
+        let big = mac_array(4096, Dataflow::WS);
+        let per_mac_small = small.area_mm2 / 64.0;
+        let per_mac_big = big.area_mm2 / 4096.0;
+        assert!(per_mac_big > per_mac_small * 1.1);
+    }
+
+    #[test]
+    fn os_bigger_cheaper_energy() {
+        let ws = mac_array(256, Dataflow::WS);
+        let os = mac_array(256, Dataflow::OS);
+        assert!(os.area_mm2 > ws.area_mm2);
+        assert!(os.energy_pj_per_mac < ws.energy_pj_per_mac);
+    }
+
+    #[test]
+    fn leakage_positive_fraction() {
+        let m = mac_array(1024, Dataflow::IS);
+        let peak_w = 1024.0 * m.energy_pj_per_mac * 1e-12 * 1e9;
+        assert!((m.leak_w / peak_w - k::LOGIC_LEAK_FRAC).abs() < 1e-12);
+    }
+}

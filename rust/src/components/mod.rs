@@ -1,0 +1,14 @@
+//! Component Estimator (paper §VI-E): parametric area/power models for WSC
+//! basic modules — SRAM macros, MAC arrays, NoC routers, inter-reticle PHYs,
+//! TSV fields — plus the [`estimator`] that assembles them into core /
+//! reticle / wafer physical characterizations with yield + redundancy
+//! resolved. All numbers at the paper's 14 nm reference node
+//! ([`crate::arch::constants`]).
+
+pub mod estimator;
+pub mod mac;
+pub mod noc;
+pub mod phy;
+pub mod sram;
+
+pub use estimator::{core_geom, reticle_phys, wafer_phys, CoreGeom, PhysError, ReticlePhys, WaferPhys};

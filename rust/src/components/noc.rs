@@ -1,0 +1,90 @@
+//! NoC router model (paper §VI-E, Orion 3.0-class).
+//!
+//! A 5-port mesh router with 8 VCs × 4-flit buffers (paper §VIII-A): buffer
+//! area is linear in flit-width × buffering, the crossbar grows
+//! quadratically in flit width — the second leg of the paper's "module
+//! efficiency" argument against very high-bandwidth routers.
+
+use crate::arch::constants as k;
+
+pub const ROUTER_PORTS: usize = 5; // N/S/E/W + local
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Router {
+    pub area_mm2: f64,
+    /// Energy per bit traversing the router (buffer rd/wr + crossbar +
+    /// arbitration amortized), pJ.
+    pub energy_pj_per_bit: f64,
+    pub leak_w: f64,
+}
+
+/// Characterize a router of `flit_bits` datapath width.
+pub fn router(flit_bits: usize) -> Router {
+    let fb = flit_bits as f64;
+
+    // Buffers: ports × VCs × depth × flit width.
+    let buffer_um2 =
+        k::NOC_AREA_UM2_PER_BIT_ENTRY * fb * (ROUTER_PORTS * k::NOC_VCS * k::NOC_BUFS_PER_VC) as f64
+            / ROUTER_PORTS as f64; // per-port entry constant is folded in
+    // Crossbar: ~quadratic in datapath width (wiring dominated).
+    let crossbar_um2 = 0.015 * fb * fb;
+    // Allocators/arbiters: fixed + log factor.
+    let ctrl_um2 = 3000.0 + 500.0 * fb.log2();
+
+    let area_mm2 = (buffer_um2 + crossbar_um2 + ctrl_um2) / 1e6;
+
+    // Energy per bit: base constant plus a width-dependent crossbar term
+    // (longer crossbar wires), normalized at 512-bit flits.
+    let energy_pj_per_bit = k::NOC_ROUTER_ENERGY_PJ_PER_BIT * (1.0 + 0.15 * (fb / 512.0).log2().max(-1.0));
+
+    let peak_dyn_w = fb * energy_pj_per_bit * 1e-12 * k::CLOCK_HZ * ROUTER_PORTS as f64;
+    let leak_w = k::LOGIC_LEAK_FRAC * peak_dyn_w;
+
+    Router {
+        area_mm2,
+        energy_pj_per_bit,
+        leak_w,
+    }
+}
+
+/// Link traversal energy for one bit over `dist_mm` of wire.
+pub fn link_energy_pj_per_bit(dist_mm: f64) -> f64 {
+    k::NOC_LINK_ENERGY_PJ_PER_BIT_MM * dist_mm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossbar_quadratic_dominates_at_width() {
+        // At the top of the range the quadratic crossbar term dominates:
+        // 4x width -> more than 4x area.
+        let r1k = router(1024);
+        let r4k = router(4096);
+        assert!(
+            r4k.area_mm2 / r1k.area_mm2 > 4.0,
+            "ratio={}",
+            r4k.area_mm2 / r1k.area_mm2
+        );
+    }
+
+    #[test]
+    fn energy_mildly_increasing_in_width() {
+        assert!(router(4096).energy_pj_per_bit > router(512).energy_pj_per_bit);
+        assert!(router(4096).energy_pj_per_bit < 3.0 * router(512).energy_pj_per_bit);
+    }
+
+    #[test]
+    fn positive_outputs() {
+        for bits in [32usize, 128, 1024, 4096] {
+            let r = router(bits);
+            assert!(r.area_mm2 > 0.0 && r.energy_pj_per_bit > 0.0 && r.leak_w > 0.0);
+        }
+    }
+
+    #[test]
+    fn link_energy_linear_in_distance() {
+        assert!((link_energy_pj_per_bit(2.0) - 2.0 * k::NOC_LINK_ENERGY_PJ_PER_BIT_MM).abs() < 1e-15);
+    }
+}

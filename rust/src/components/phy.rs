@@ -1,0 +1,177 @@
+//! Inter-reticle PHY and DRAM interface models (paper §VI-E, §VIII-A).
+//!
+//! Area: the paper quotes 3900 µm²/Gbps for RDL (InFO-SoW SerDes) and
+//! 1300 µm²/Gbps for offset exposure (die stitching) — used verbatim.
+//! Energy: offset exposure is near-wire (Cerebras fabric class), RDL is
+//! GRS-class SerDes.
+
+use crate::arch::constants as k;
+use crate::arch::{IntegrationStyle, MemoryKind, ReticleConfig};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhyBudget {
+    /// Total PHY area on one reticle for its inter-reticle links, mm².
+    pub area_mm2: f64,
+    /// Signalling energy, pJ per bit crossing a reticle boundary.
+    pub energy_pj_per_bit: f64,
+}
+
+/// PHY budget for a reticle: four edges, each carrying
+/// [`ReticleConfig::inter_reticle_bytes_per_sec`].
+pub fn inter_reticle_phy(ret: &ReticleConfig, style: IntegrationStyle) -> PhyBudget {
+    let per_edge_gbps = ret.inter_reticle_bytes_per_sec() * 8.0 / 1e9;
+    let total_gbps = 4.0 * per_edge_gbps;
+    let (um2_per_gbps, energy) = match style {
+        IntegrationStyle::InfoSoW => (k::PHY_AREA_UM2_PER_GBPS_RDL, k::PHY_ENERGY_PJ_PER_BIT_RDL),
+        IntegrationStyle::DieStitching => (
+            k::PHY_AREA_UM2_PER_GBPS_STITCH,
+            k::PHY_ENERGY_PJ_PER_BIT_STITCH,
+        ),
+    };
+    PhyBudget {
+        area_mm2: total_gbps * um2_per_gbps / 1e6,
+        energy_pj_per_bit: energy,
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TsvBudget {
+    pub tsv_count: usize,
+    /// Floorplan footprint of the TSV field (pitch-sized cells), mm² —
+    /// displaces compute area.
+    pub area_mm2: f64,
+    /// Drilled hole (via) area, mm² — what the §V-E stress cap bounds.
+    pub hole_area_mm2: f64,
+    /// Fraction of the §V-E stress budget consumed (1.0 = at the 1.5 % cap).
+    pub stress_utilization: f64,
+}
+
+/// TSV field needed to feed a reticle's stacked DRAM at its configured
+/// bandwidth density over `reticle_area_mm2` (paper: 1 Gbps/TSV, 5 µm via,
+/// 15 µm pitch). Off-chip designs need none.
+pub fn tsv_budget(ret: &ReticleConfig, reticle_area_mm2: f64) -> TsvBudget {
+    match ret.memory {
+        MemoryKind::OffChip => TsvBudget::default(),
+        MemoryKind::Stacking { .. } => {
+            let bytes_per_sec = ret.stacking_bytes_per_sec(reticle_area_mm2);
+            let bits_per_sec = bytes_per_sec * 8.0;
+            let tsv_count = (bits_per_sec / k::TSV_BW_BITS_PER_SEC).ceil() as usize;
+            let cell_mm2 = (k::TSV_PITCH_UM / 1e3).powi(2);
+            let hole_mm2 = (k::TSV_VIA_UM / 1e3).powi(2);
+            let area_mm2 = tsv_count as f64 * cell_mm2;
+            let hole_area_mm2 = tsv_count as f64 * hole_mm2;
+            let cap = k::TSV_AREA_RATIO_MAX * reticle_area_mm2;
+            TsvBudget {
+                tsv_count,
+                area_mm2,
+                hole_area_mm2,
+                stress_utilization: if cap > 0.0 {
+                    hole_area_mm2 / cap
+                } else {
+                    f64::INFINITY
+                },
+            }
+        }
+    }
+}
+
+/// DRAM access energy per bit for the reticle's memory system.
+pub fn dram_energy_pj_per_bit(mem: MemoryKind) -> f64 {
+    match mem {
+        MemoryKind::OffChip => k::DRAM_ENERGY_PJ_PER_BIT_OFFCHIP,
+        MemoryKind::Stacking { .. } => k::DRAM_ENERGY_PJ_PER_BIT_STACKED,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{CoreConfig, Dataflow};
+
+    fn reticle(bw_ratio: f64, mem: MemoryKind) -> ReticleConfig {
+        ReticleConfig {
+            core: CoreConfig {
+                dataflow: Dataflow::WS,
+                mac_num: 512,
+                buffer_kb: 128,
+                buffer_bw_bits: 512,
+                noc_bw_bits: 512,
+            },
+            array_h: 10,
+            array_w: 10,
+            inter_reticle_bw_ratio: bw_ratio,
+            memory: mem,
+        }
+    }
+
+    #[test]
+    fn rdl_costs_more_area_than_stitch() {
+        let r = reticle(1.0, MemoryKind::OffChip);
+        let rdl = inter_reticle_phy(&r, IntegrationStyle::InfoSoW);
+        let stitch = inter_reticle_phy(&r, IntegrationStyle::DieStitching);
+        assert!((rdl.area_mm2 / stitch.area_mm2 - 3900.0 / 1300.0).abs() < 1e-9);
+        assert!(rdl.energy_pj_per_bit > stitch.energy_pj_per_bit);
+    }
+
+    #[test]
+    fn phy_area_matches_paper_constant() {
+        // bisection = 10 links * 64 B/cycle * 1 GHz = 640 GB/s; ratio 1.0
+        // -> per edge 640 GB/s = 5120 Gbps; 4 edges = 20480 Gbps.
+        let r = reticle(1.0, MemoryKind::OffChip);
+        let phy = inter_reticle_phy(&r, IntegrationStyle::InfoSoW);
+        assert!((phy.area_mm2 - 20480.0 * 3900.0 / 1e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tsv_count_from_bandwidth() {
+        let r = reticle(
+            1.0,
+            MemoryKind::Stacking {
+                bw_tbps_per_100mm2: 1.0,
+                capacity_gb: 16.0,
+            },
+        );
+        let t = tsv_budget(&r, 500.0);
+        // 1 TB/s/100mm² × 500 mm² = 5 TB/s = 4e13 bits/s -> 40000 TSVs.
+        assert_eq!(t.tsv_count, 40_000);
+        // Footprint: 40000 × (15µm)² = 9 mm²; holes: 40000 × (5µm)² = 1 mm².
+        assert!((t.area_mm2 - 9.0).abs() < 1e-9);
+        assert!((t.hole_area_mm2 - 1.0).abs() < 1e-9);
+        // cap = 1.5% × 500 = 7.5 mm² -> hole utilization 1/7.5 ≈ 0.133.
+        assert!((t.stress_utilization - 1.0 / 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stress_cap_binds_only_beyond_table_range() {
+        // The Table I sweep (0.25–4 TB/s/100mm²) stays within the stress
+        // cap (paper Fig. 11b sweeps the full range), but ~7.5 TB/s/100mm²
+        // would trip it.
+        for bw in [0.25, 1.0, 4.0] {
+            let r = reticle(
+                1.0,
+                MemoryKind::Stacking {
+                    bw_tbps_per_100mm2: bw,
+                    capacity_gb: 16.0,
+                },
+            );
+            let t = tsv_budget(&r, 400.0);
+            assert!(t.stress_utilization <= 1.0, "bw={bw} util={}", t.stress_utilization);
+        }
+        let r = reticle(
+            1.0,
+            MemoryKind::Stacking {
+                bw_tbps_per_100mm2: 8.0,
+                capacity_gb: 8.0,
+            },
+        );
+        assert!(tsv_budget(&r, 400.0).stress_utilization > 1.0);
+    }
+
+    #[test]
+    fn offchip_needs_no_tsvs() {
+        let r = reticle(1.0, MemoryKind::OffChip);
+        let t = tsv_budget(&r, 500.0);
+        assert_eq!(t.tsv_count, 0);
+        assert_eq!(t.area_mm2, 0.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! SRAM macro model (paper §VI-E: "SRAM compiler" outputs).
+//!
+//! CACTI-class scaling at 14 nm ssg/0.9 V: area grows linearly with
+//! capacity plus a banking overhead for bandwidth (each 32 KB bank
+//! contributes one 64-bit port); per-bit access energy grows with the
+//! fourth root of capacity (longer wires); leakage is linear in capacity.
+//! The "SRAM constraint" of §V-E is [`feasible`]: the compiler cannot
+//! produce more ports than banks.
+
+use crate::arch::constants as k;
+
+/// Bank granularity assumed by the macro generator.
+pub const BANK_KB: usize = 32;
+/// Port width contributed by one bank (bits/cycle).
+pub const BANK_PORT_BITS: usize = 64;
+
+/// SRAM-compiler feasibility (paper §V-E "SRAM Constraint"): requested
+/// bandwidth must not exceed one 64-bit port per 32 KB bank.
+pub fn feasible(capacity_kb: usize, bw_bits: usize) -> bool {
+    let banks = capacity_kb / BANK_KB;
+    banks >= 1 && bw_bits <= banks * BANK_PORT_BITS
+}
+
+/// Generated macro characteristics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramMacro {
+    pub area_mm2: f64,
+    /// Dynamic energy per bit accessed (read ≈ write at this node), pJ.
+    pub energy_pj_per_bit: f64,
+    /// Leakage, W.
+    pub leak_w: f64,
+}
+
+/// Characterize a macro of `capacity_kb` with `bw_bits` per cycle.
+/// Callers must have checked [`feasible`]; infeasible requests are clamped
+/// to the max feasible bandwidth so the estimator never panics mid-DSE.
+pub fn sram_macro(capacity_kb: usize, bw_bits: usize) -> SramMacro {
+    let banks = (capacity_kb / BANK_KB).max(1);
+    let bw = bw_bits.min(banks * BANK_PORT_BITS);
+    let mb = capacity_kb as f64 / 1024.0;
+
+    // Banking overhead: wide aggregate ports need more peripheral logic
+    // and routing per bank. 6 % area per doubling of active ports.
+    let active_ports = (bw as f64 / BANK_PORT_BITS as f64).max(1.0);
+    let banking_overhead = 1.0 + 0.06 * active_ports.log2().max(0.0);
+    let area_mm2 = k::SRAM_MM2_PER_MB * mb * banking_overhead;
+
+    // Wire-length energy scaling ~ capacity^(1/4), normalized at 128 KB.
+    let cap_scale = (capacity_kb as f64 / 128.0).powf(0.25);
+    let energy_pj_per_bit = k::SRAM_ENERGY_PJ_PER_BIT * cap_scale;
+
+    let leak_w = k::SRAM_LEAK_W_PER_MB * mb;
+
+    SramMacro {
+        area_mm2,
+        energy_pj_per_bit,
+        leak_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasibility_diagonal() {
+        assert!(feasible(32, 32));
+        assert!(feasible(32, 64));
+        assert!(!feasible(32, 128)); // 1 bank -> max 64 bits
+        assert!(feasible(2048, 4096)); // 64 banks -> 4096 bits
+        assert!(!feasible(1024, 4096)); // 32 banks -> max 2048 bits
+    }
+
+    #[test]
+    fn area_scales_linearly_in_capacity() {
+        let a = sram_macro(128, 64).area_mm2;
+        let b = sram_macro(256, 64).area_mm2;
+        assert!((b / a - 2.0).abs() < 0.05, "ratio={}", b / a);
+    }
+
+    #[test]
+    fn bandwidth_costs_area() {
+        let narrow = sram_macro(2048, 64).area_mm2;
+        let wide = sram_macro(2048, 4096).area_mm2;
+        assert!(wide > narrow * 1.2, "narrow={narrow} wide={wide}");
+    }
+
+    #[test]
+    fn energy_grows_with_capacity() {
+        assert!(sram_macro(2048, 64).energy_pj_per_bit > sram_macro(32, 64).energy_pj_per_bit);
+        // Normalized point: 128 KB hits the base constant.
+        assert!(
+            (sram_macro(128, 64).energy_pj_per_bit - crate::arch::constants::SRAM_ENERGY_PJ_PER_BIT)
+                .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn infeasible_clamped_not_panic() {
+        let m = sram_macro(32, 4096);
+        assert!(m.area_mm2 > 0.0);
+    }
+
+    #[test]
+    fn prop_positive_outputs() {
+        crate::util::prop::check(
+            "sram outputs positive and monotone in capacity",
+            |r| {
+                let kb = 32 * (1 << r.below(7)); // 32..2048
+                let bw = 32 * (1 << r.below(8)); // 32..4096
+                (kb, bw)
+            },
+            |&(kb, bw)| {
+                let m = sram_macro(kb, bw);
+                if m.area_mm2 <= 0.0 || m.energy_pj_per_bit <= 0.0 || m.leak_w <= 0.0 {
+                    return Err(format!("non-positive: {m:?}"));
+                }
+                if kb < 2048 {
+                    let bigger = sram_macro(kb * 2, bw);
+                    if bigger.area_mm2 <= m.area_mm2 {
+                        return Err("area not monotone in capacity".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

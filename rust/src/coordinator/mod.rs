@@ -1,0 +1,216 @@
+//! DSE coordinator (paper Fig. 2): wires the design space, evaluation
+//! engine (at the explorer-requested fidelity) and Space Explorer into the
+//! iterative loop; owns result persistence and reporting.
+//!
+//! This is Layer 3's event loop: evaluations fan out over the thread pool,
+//! traces checkpoint to JSON, and the Pareto set prints as a table.
+
+pub mod objective;
+
+use std::sync::Arc;
+
+use crate::explorer::{self, BoConfig, MfConfig, Trace};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workload::models;
+
+pub use objective::{ref_power_for, InferenceObjective, TrainingObjective};
+
+/// Which explorer to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Explorer {
+    Random,
+    Mobo,
+    Mfmobo,
+}
+
+impl Explorer {
+    pub fn parse(s: &str) -> Option<Explorer> {
+        match s {
+            "random" => Some(Explorer::Random),
+            "mobo" => Some(Explorer::Mobo),
+            "mfmobo" => Some(Explorer::Mfmobo),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Explorer::Random => "random",
+            Explorer::Mobo => "mobo",
+            Explorer::Mfmobo => "mfmobo",
+        }
+    }
+}
+
+/// A full DSE run description.
+pub struct DseRun {
+    pub spec: crate::workload::LlmSpec,
+    pub explorer: Explorer,
+    pub cfg: BoConfig,
+    /// Low-fidelity trials for MFMOBO (paper: 100).
+    pub n1: usize,
+    pub k: usize,
+    /// Use the GNN runtime as the high fidelity when available.
+    pub use_gnn: bool,
+}
+
+/// Execute a DSE run; returns the trace.
+pub fn run(run: &DseRun) -> Trace {
+    let gnn: Option<Arc<crate::runtime::GnnModel>> = if run.use_gnn {
+        match crate::runtime::GnnModel::load_default() {
+            Ok(m) => Some(Arc::new(m)),
+            Err(e) => {
+                eprintln!("note: GNN unavailable ({e}); high fidelity = analytical");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    let low = TrainingObjective::analytical(run.spec.clone());
+    let high: Box<dyn explorer::DesignEval> = match &gnn {
+        Some(m) => Box::new(TrainingObjective::gnn(run.spec.clone(), m.clone())),
+        None => Box::new(TrainingObjective::analytical(run.spec.clone())),
+    };
+
+    match run.explorer {
+        Explorer::Random => explorer::random_search(high.as_ref(), &run.cfg),
+        Explorer::Mobo => explorer::mobo(high.as_ref(), &run.cfg),
+        Explorer::Mfmobo => explorer::mfmobo(
+            high.as_ref(),
+            &low,
+            &MfConfig {
+                base: run.cfg.clone(),
+                n1: run.n1,
+                d0: run.cfg.init,
+                d1: run.cfg.init,
+                k: run.k,
+            },
+        ),
+    }
+}
+
+/// Serialize a trace (checkpoint / bench consumption).
+pub fn trace_to_json(trace: &Trace) -> Json {
+    let mut points = Vec::new();
+    for p in &trace.points {
+        let mut o = Json::obj();
+        o.set("summary", Json::Str(p.point.wsc.summary()))
+            .set("throughput", Json::Num(p.objective.throughput))
+            .set("power_w", Json::Num(p.objective.power_w))
+            .set("fidelity", Json::Str(p.fidelity.to_string()))
+            .set(
+                "stacking",
+                Json::Bool(p.point.wsc.reticle.memory.is_stacking()),
+            );
+        points.push(o);
+    }
+    let mut doc = Json::obj();
+    doc.set("points", Json::Arr(points))
+        .set("hv_history", Json::from_f64_slice(&trace.hv_history));
+    doc
+}
+
+/// CLI entry (the `theseus dse` subcommand).
+pub fn run_from_cli(args: &Args) {
+    let model = args.str("model", "175b");
+    let spec = models::find(&model).expect("unknown model (try an index 0..15 or a name fragment)");
+    let explorer =
+        Explorer::parse(&args.str("explorer", "mfmobo")).expect("explorer: random|mobo|mfmobo");
+    let cfg = BoConfig {
+        iters: args.usize("iters", 40),
+        init: args.usize("init", 6),
+        pool: args.usize("pool", 96),
+        mc_samples: args.usize("mc", 64),
+        ref_power: args.f64("ref-power", ref_power_for(&spec)),
+        seed: args.u64("seed", 0),
+        sample_tries: 4000,
+    };
+    let dse = DseRun {
+        spec: spec.clone(),
+        explorer,
+        cfg,
+        n1: args.usize("n1", 40),
+        k: args.usize("k", 8),
+        use_gnn: !args.bool("no-gnn", false),
+    };
+    eprintln!(
+        "DSE: {} on {} ({} iters, seed {})",
+        explorer.name(),
+        spec.name,
+        dse.cfg.iters,
+        dse.cfg.seed
+    );
+    let t0 = std::time::Instant::now();
+    let trace = run(&dse);
+    eprintln!(
+        "explored {} points in {:.1}s; final hypervolume {:.4e}",
+        trace.points.len(),
+        t0.elapsed().as_secs_f64(),
+        trace.final_hv()
+    );
+
+    let mut table = Table::new(
+        &format!("Pareto set — {} training", spec.name),
+        &["tokens/s", "power(kW)", "fidelity", "config"],
+    );
+    let mut front = trace.pareto();
+    front.sort_by(|a, b| b.objective.throughput.partial_cmp(&a.objective.throughput).unwrap());
+    for p in front {
+        table.row(&[
+            format!("{:.1}", p.objective.throughput),
+            format!("{:.1}", p.objective.power_w / 1e3),
+            p.fidelity.to_string(),
+            p.point.wsc.summary(),
+        ]);
+    }
+    table.print();
+
+    if let Some(out) = args.opt_str("out") {
+        std::fs::write(&out, trace_to_json(&trace).to_pretty()).expect("write trace");
+        eprintln!("trace written to {out}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::benchmarks;
+
+    #[test]
+    fn explorer_parse() {
+        assert_eq!(Explorer::parse("mfmobo"), Some(Explorer::Mfmobo));
+        assert_eq!(Explorer::parse("nope"), None);
+    }
+
+    #[test]
+    fn tiny_random_dse_end_to_end() {
+        let spec = benchmarks()[0].clone();
+        let run_cfg = DseRun {
+            spec: spec.clone(),
+            explorer: Explorer::Random,
+            cfg: BoConfig {
+                iters: 2,
+                init: 2,
+                pool: 8,
+                mc_samples: 8,
+                ref_power: ref_power_for(&spec),
+                seed: 3,
+                sample_tries: 2000,
+            },
+            n1: 0,
+            k: 0,
+            use_gnn: false,
+        };
+        let trace = run(&run_cfg);
+        assert!(!trace.points.is_empty());
+        let json = trace_to_json(&trace);
+        assert!(json.get("points").unwrap().as_arr().unwrap().len() >= 1);
+        // Round-trips through the JSON substrate.
+        let parsed = crate::util::json::Json::parse(&json.to_string()).unwrap();
+        assert_eq!(parsed, json);
+    }
+}

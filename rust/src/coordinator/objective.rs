@@ -1,0 +1,159 @@
+//! Objective adapters: wrap the evaluation engine as [`DesignEval`]
+//! functions at the explorer's fidelity levels (paper §VII: analytical =
+//! low fidelity, GNN = high fidelity; CA simulation pluggable the same
+//! way).
+
+use std::sync::Arc;
+
+use crate::baselines::H100_DIE_MM2;
+use crate::design_space::Validated;
+use crate::eval::{self, Analytical, NocEstimator, SystemConfig};
+use crate::explorer::{DesignEval, Objective};
+use crate::workload::LlmSpec;
+
+/// Hypervolume reference power (paper §VII: "the peak power threshold of
+/// the WSC system"): 15 kW per wafer × the largest plausible area-matched
+/// wafer count (smallest committed wafer area we accept ≈ 15 000 mm²).
+pub fn ref_power_for(spec: &LlmSpec) -> f64 {
+    let gpu_area = spec.gpu_num as f64 * H100_DIE_MM2;
+    let wafers = (gpu_area / 15_000.0).ceil().max(1.0);
+    crate::arch::constants::WAFER_POWER_LIMIT_W * wafers
+}
+
+/// Training-throughput objective at a chosen NoC fidelity.
+pub struct TrainingObjective {
+    spec: LlmSpec,
+    noc: NocBackend,
+}
+
+enum NocBackend {
+    Analytical,
+    Gnn(Arc<crate::runtime::GnnModel>),
+    CycleAccurate,
+}
+
+impl TrainingObjective {
+    pub fn analytical(spec: LlmSpec) -> Self {
+        TrainingObjective {
+            spec,
+            noc: NocBackend::Analytical,
+        }
+    }
+
+    pub fn gnn(spec: LlmSpec, model: Arc<crate::runtime::GnnModel>) -> Self {
+        TrainingObjective {
+            spec,
+            noc: NocBackend::Gnn(model),
+        }
+    }
+
+    pub fn cycle_accurate(spec: LlmSpec) -> Self {
+        TrainingObjective {
+            spec,
+            noc: NocBackend::CycleAccurate,
+        }
+    }
+
+    fn estimator(&self) -> Box<dyn NocEstimator + '_> {
+        match &self.noc {
+            NocBackend::Analytical => Box::new(Analytical),
+            NocBackend::Gnn(m) => Box::new(GnnRef(m.clone())),
+            NocBackend::CycleAccurate => Box::new(eval::CycleAccurate::default()),
+        }
+    }
+}
+
+/// Arc wrapper implementing the estimator by delegation.
+struct GnnRef(Arc<crate::runtime::GnnModel>);
+
+impl NocEstimator for GnnRef {
+    fn link_waits(
+        &self,
+        chunk: &crate::compiler::CompiledChunk,
+        core: &crate::arch::CoreConfig,
+    ) -> Option<Vec<f64>> {
+        self.0.link_waits(chunk, core)
+    }
+
+    fn name(&self) -> &'static str {
+        "gnn"
+    }
+}
+
+impl DesignEval for TrainingObjective {
+    fn eval(&self, v: &Validated) -> Option<Objective> {
+        let sys = SystemConfig::area_matched(v.clone(), self.spec.gpu_num);
+        let r = eval::eval_training(&self.spec, &sys, self.estimator().as_ref())?;
+        Some(Objective {
+            throughput: r.tokens_per_sec,
+            power_w: r.power_w,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        match self.noc {
+            NocBackend::Analytical => "analytical",
+            NocBackend::Gnn(_) => "gnn",
+            NocBackend::CycleAccurate => "cycle-accurate",
+        }
+    }
+}
+
+/// Inference objective (throughput vs power at fixed batch; §IX-D/E).
+pub struct InferenceObjective {
+    pub spec: LlmSpec,
+    pub batch: usize,
+    pub mqa: bool,
+}
+
+impl DesignEval for InferenceObjective {
+    fn eval(&self, v: &Validated) -> Option<Objective> {
+        let sys = SystemConfig::area_matched(v.clone(), self.spec.gpu_num);
+        let r = eval::eval_inference(&self.spec, &sys, self.batch, self.mqa, &Analytical)?;
+        Some(Objective {
+            throughput: r.tokens_per_sec,
+            power_w: r.power_w,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "inference-analytical"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::{reference_point, validate};
+    use crate::workload::models::benchmarks;
+
+    #[test]
+    fn training_objective_evaluates_reference() {
+        let spec = benchmarks()[0].clone();
+        let obj = TrainingObjective::analytical(spec);
+        let v = validate(&reference_point()).unwrap();
+        let o = obj.eval(&v).expect("reference point evaluable");
+        assert!(o.throughput > 0.0);
+        assert!(o.power_w > 0.0);
+    }
+
+    #[test]
+    fn inference_objective_evaluates_reference() {
+        let spec = benchmarks()[0].clone();
+        let obj = InferenceObjective {
+            spec,
+            batch: 32,
+            mqa: false,
+        };
+        let v = validate(&reference_point()).unwrap();
+        let o = obj.eval(&v).expect("evaluable");
+        assert!(o.throughput > 0.0);
+    }
+
+    #[test]
+    fn ref_power_scales_with_model() {
+        let small = ref_power_for(&benchmarks()[0]);
+        let big = ref_power_for(&benchmarks()[9]);
+        assert!(big > small * 10.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! Unit-cube encoding of design points for the GP surrogate (paper §VII).
+//!
+//! Discrete power-of-two grids are log-scaled; categorical parameters map
+//! to evenly spaced levels. `decode(encode(p))` snaps back to the nearest
+//! grid values, so the explorer can move in continuous space while only
+//! ever evaluating legal grid points.
+
+use crate::arch::{
+    CoreConfig, Dataflow, IntegrationStyle, MemoryKind, ReticleConfig, WscConfig,
+};
+use crate::design_space::{candidates, default_mem_ctrl_count, default_nic_count, stack_capacity_gb, DesignPoint};
+
+/// Encoded dimensionality.
+pub const DIMS: usize = 12;
+
+fn log_unit(x: f64, lo: f64, hi: f64) -> f64 {
+    ((x.ln() - lo.ln()) / (hi.ln() - lo.ln())).clamp(0.0, 1.0)
+}
+
+fn unit_log(u: f64, lo: f64, hi: f64) -> f64 {
+    (lo.ln() + u.clamp(0.0, 1.0) * (hi.ln() - lo.ln())).exp()
+}
+
+fn lin_unit(x: f64, lo: f64, hi: f64) -> f64 {
+    ((x - lo) / (hi - lo)).clamp(0.0, 1.0)
+}
+
+fn unit_lin(u: f64, lo: f64, hi: f64) -> f64 {
+    lo + u.clamp(0.0, 1.0) * (hi - lo)
+}
+
+fn nearest_usize(grid: &[usize], target: f64) -> usize {
+    *grid
+        .iter()
+        .min_by(|a, b| {
+            let da = (**a as f64 - target).abs();
+            let db = (**b as f64 - target).abs();
+            da.partial_cmp(&db).unwrap()
+        })
+        .unwrap()
+}
+
+fn nearest_f64(grid: &[f64], target: f64) -> f64 {
+    *grid
+        .iter()
+        .min_by(|a, b| {
+            (*a - target)
+                .abs()
+                .partial_cmp(&(*b - target).abs())
+                .unwrap()
+        })
+        .unwrap()
+}
+
+/// Encode into [0,1]^DIMS:
+/// [dataflow, log mac, log buf_kb, log buf_bw, log noc_bw, ir_ratio,
+///  mem_kind, log stack_bw, array_h, array_w, reticle_h, reticle_w]
+/// (integration style rides on `mem_kind`'s fractional band — see decode).
+pub fn encode(p: &DesignPoint) -> [f64; DIMS] {
+    let c = &p.wsc.reticle.core;
+    let r = &p.wsc.reticle;
+    let df = match c.dataflow {
+        Dataflow::WS => 0.0,
+        Dataflow::IS => 0.5,
+        Dataflow::OS => 1.0,
+    };
+    let (mem_kind, stack_bw): (f64, f64) = match r.memory {
+        MemoryKind::OffChip => (0.25, candidates::STACK_BW[0]),
+        MemoryKind::Stacking {
+            bw_tbps_per_100mm2, ..
+        } => (0.75, bw_tbps_per_100mm2),
+    };
+    // Integration is folded into mem_kind's quadrant: [0,0.5) offchip,
+    // [0.5,1] stacking; within each half, lower quarter = DieStitching.
+    let integ_shift = match p.wsc.integration {
+        IntegrationStyle::DieStitching => -0.125,
+        IntegrationStyle::InfoSoW => 0.125,
+    };
+    [
+        df,
+        log_unit(c.mac_num as f64, 8.0, 4096.0),
+        log_unit(c.buffer_kb as f64, 32.0, 2048.0),
+        log_unit(c.buffer_bw_bits as f64, 32.0, 4096.0),
+        log_unit(c.noc_bw_bits as f64, 32.0, 4096.0),
+        lin_unit(r.inter_reticle_bw_ratio, 0.2, 2.0),
+        (mem_kind + integ_shift).clamp(0.0, 1.0),
+        log_unit(stack_bw, 0.25, 4.0),
+        lin_unit(r.array_h as f64, 1.0, candidates::MAX_ARRAY_DIM as f64),
+        lin_unit(r.array_w as f64, 1.0, candidates::MAX_ARRAY_DIM as f64),
+        lin_unit(p.wsc.reticle_h as f64, 1.0, candidates::MAX_RETICLE_DIM as f64),
+        lin_unit(p.wsc.reticle_w as f64, 1.0, candidates::MAX_RETICLE_DIM as f64),
+    ]
+}
+
+/// Decode from the unit cube, snapping to the candidate grids. Always
+/// produces a *syntactically* legal point; §V-E validity still requires
+/// [`super::validate`].
+pub fn decode(x: &[f64; DIMS]) -> DesignPoint {
+    let dataflow = if x[0] < 1.0 / 3.0 {
+        Dataflow::WS
+    } else if x[0] < 2.0 / 3.0 {
+        Dataflow::IS
+    } else {
+        Dataflow::OS
+    };
+    let mac_num = nearest_usize(&candidates::MAC_NUM, unit_log(x[1], 8.0, 4096.0));
+    let buffer_kb = nearest_usize(&candidates::BUFFER_KB, unit_log(x[2], 32.0, 2048.0));
+    let buffer_bw_bits = nearest_usize(&candidates::BUFFER_BW, unit_log(x[3], 32.0, 4096.0));
+    let noc_bw_bits = nearest_usize(&candidates::NOC_BW, unit_log(x[4], 32.0, 4096.0));
+    let ir = nearest_f64(&candidates::INTER_RETICLE_RATIO, unit_lin(x[5], 0.2, 2.0));
+
+    let stacking = x[6] >= 0.5;
+    let quarter = if stacking { x[6] - 0.5 } else { x[6] } * 4.0; // 0..2 within half
+    let integration = if quarter < 1.0 {
+        IntegrationStyle::DieStitching
+    } else {
+        IntegrationStyle::InfoSoW
+    };
+    let memory = if stacking {
+        let bw = nearest_f64(&candidates::STACK_BW, unit_log(x[7], 0.25, 4.0));
+        MemoryKind::Stacking {
+            bw_tbps_per_100mm2: bw,
+            capacity_gb: stack_capacity_gb(bw),
+        }
+    } else {
+        MemoryKind::OffChip
+    };
+
+    let snap_dim = |u: f64, max: usize| -> usize {
+        (unit_lin(u, 1.0, max as f64).round() as usize).clamp(1, max)
+    };
+
+    DesignPoint::homogeneous(WscConfig {
+        reticle: ReticleConfig {
+            core: CoreConfig {
+                dataflow,
+                mac_num,
+                buffer_kb,
+                buffer_bw_bits,
+                noc_bw_bits,
+            },
+            array_h: snap_dim(x[8], candidates::MAX_ARRAY_DIM),
+            array_w: snap_dim(x[9], candidates::MAX_ARRAY_DIM),
+            inter_reticle_bw_ratio: ir,
+            memory,
+        },
+        reticle_h: snap_dim(x[10], candidates::MAX_RETICLE_DIM),
+        reticle_w: snap_dim(x[11], candidates::MAX_RETICLE_DIM),
+        integration,
+        mem_ctrl_count: default_mem_ctrl_count(),
+        nic_count: default_nic_count(),
+    })
+}
+
+/// Squared Euclidean distance in encoded space (used by the explorer for
+/// candidate dedup).
+pub fn dist2(a: &[f64; DIMS], b: &[f64; DIMS]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::{reference_point, sample_raw};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_reference() {
+        let p = reference_point();
+        let x = encode(&p);
+        let q = decode(&x);
+        assert_eq!(p.wsc, q.wsc);
+    }
+
+    #[test]
+    fn prop_encode_decode_fixpoint() {
+        // decode(encode(p)) == p for all grid points (snapping is exact on
+        // grid values).
+        crate::util::prop::check(
+            "encode/decode is a fixpoint on grid points",
+            |r| {
+                let mut rng = r.fork(0);
+                sample_raw(&mut rng)
+            },
+            |p| {
+                let q = decode(&encode(p));
+                if q.wsc == p.wsc {
+                    Ok(())
+                } else {
+                    Err(format!("decoded {:?}\n != {:?}", q.wsc, p.wsc))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_decode_total_on_cube() {
+        // Any point of the cube decodes to a syntactically legal config.
+        crate::util::prop::check(
+            "decode total",
+            |r| {
+                let mut x = [0.0; DIMS];
+                for v in &mut x {
+                    *v = r.f64();
+                }
+                x
+            },
+            |x| {
+                let p = decode(x);
+                let c = &p.wsc.reticle.core;
+                if !candidates::MAC_NUM.contains(&c.mac_num) {
+                    return Err("mac off grid".into());
+                }
+                if !candidates::BUFFER_KB.contains(&c.buffer_kb) {
+                    return Err("buffer off grid".into());
+                }
+                if p.wsc.reticle.array_h == 0 || p.wsc.reticle_h == 0 {
+                    return Err("zero dim".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn encoded_in_unit_cube() {
+        let mut rng = Rng::new(31);
+        for _ in 0..100 {
+            let p = sample_raw(&mut rng);
+            for (i, v) in encode(&p).iter().enumerate() {
+                assert!((0.0..=1.0).contains(v), "dim {i} = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist2_zero_iff_same() {
+        let p = reference_point();
+        let x = encode(&p);
+        assert_eq!(dist2(&x, &x), 0.0);
+    }
+}

@@ -1,0 +1,220 @@
+//! Design space construction (paper §V, Table I).
+//!
+//! Candidate grids for every WSC architecture parameter, random sampling of
+//! *validated* design points, the unit-cube encoding consumed by the GP
+//! surrogate, and the Design Point Validator (§V-E constraints).
+
+pub mod encode;
+pub mod validator;
+
+use crate::arch::{
+    CoreConfig, Dataflow, HeteroConfig, IntegrationStyle, MemoryKind,
+    ReticleConfig, WscConfig,
+};
+use crate::util::rng::Rng;
+
+pub use encode::{decode, encode, DIMS};
+pub use validator::{validate, Validated, Violation};
+
+/// Candidate values (Table I). Power-of-two grids for the core parameters,
+/// a linear grid for the inter-reticle ratio, a log grid for stacking
+/// bandwidth density.
+pub mod candidates {
+    pub const MAC_NUM: [usize; 10] = [8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+    pub const BUFFER_KB: [usize; 7] = [32, 64, 128, 256, 512, 1024, 2048];
+    pub const BUFFER_BW: [usize; 8] = [32, 64, 128, 256, 512, 1024, 2048, 4096];
+    pub const NOC_BW: [usize; 8] = [32, 64, 128, 256, 512, 1024, 2048, 4096];
+    pub const INTER_RETICLE_RATIO: [f64; 10] =
+        [0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4, 1.6, 1.8, 2.0];
+    /// TB/s per 100 mm² (Table I: 0.25–4).
+    pub const STACK_BW: [f64; 9] = [0.25, 0.35, 0.5, 0.7, 1.0, 1.4, 2.0, 2.8, 4.0];
+    /// Core/reticle array dims range from 1 to the max fitting the area
+    /// constraints; we cap enumeration at these bounds.
+    pub const MAX_ARRAY_DIM: usize = 32;
+    pub const MAX_RETICLE_DIM: usize = 16;
+}
+
+/// Stacked-DRAM capacity implied by bandwidth density (paper §VIII-A:
+/// linear fit over existing stacked-memory configurations — capacity and
+/// bandwidth trade off). Clamped to Table I's 8–40 GB.
+pub fn stack_capacity_gb(bw_tbps_per_100mm2: f64) -> f64 {
+    (42.0 - 8.5 * bw_tbps_per_100mm2).clamp(8.0, 40.0)
+}
+
+/// Wafer-edge interface provisioning: one memory controller / NIC per
+/// ~25 mm of wafer perimeter (fixed, not searched — Table I fixes the
+/// per-interface bandwidths).
+pub fn default_mem_ctrl_count() -> usize {
+    24
+}
+
+pub fn default_nic_count() -> usize {
+    16
+}
+
+/// A design point: the wafer config plus (for inference studies) the
+/// heterogeneity configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignPoint {
+    pub wsc: WscConfig,
+    pub hetero: HeteroConfig,
+}
+
+impl DesignPoint {
+    pub fn homogeneous(wsc: WscConfig) -> DesignPoint {
+        DesignPoint {
+            wsc,
+            hetero: HeteroConfig::homogeneous(),
+        }
+    }
+}
+
+/// Number of feasible-grid combinations before constraint filtering —
+/// the headline "design space size" (paper: 8.4e14 for their grids; ours
+/// differs by grid resolution but lands in the same regime).
+pub fn cardinality() -> f64 {
+    let core = 3.0
+        * candidates::MAC_NUM.len() as f64
+        * candidates::BUFFER_KB.len() as f64
+        * candidates::BUFFER_BW.len() as f64
+        * candidates::NOC_BW.len() as f64;
+    let reticle = candidates::MAX_ARRAY_DIM as f64
+        * candidates::MAX_ARRAY_DIM as f64
+        * candidates::INTER_RETICLE_RATIO.len() as f64
+        * (1.0 + candidates::STACK_BW.len() as f64); // off-chip or one of the stack grids
+    let wafer =
+        candidates::MAX_RETICLE_DIM as f64 * candidates::MAX_RETICLE_DIM as f64 * 2.0;
+    // Heterogeneity: 4 granularities × prefill-ratio grid (20) × decode-bw grid.
+    let hetero = 4.0 * 20.0 * candidates::STACK_BW.len() as f64;
+    core * reticle * wafer * hetero
+}
+
+/// Sample a raw (unvalidated) design point uniformly over the grids.
+pub fn sample_raw(rng: &mut Rng) -> DesignPoint {
+    let core = CoreConfig {
+        dataflow: *rng.choose(&Dataflow::ALL),
+        mac_num: *rng.choose(&candidates::MAC_NUM),
+        buffer_kb: *rng.choose(&candidates::BUFFER_KB),
+        buffer_bw_bits: *rng.choose(&candidates::BUFFER_BW),
+        noc_bw_bits: *rng.choose(&candidates::NOC_BW),
+    };
+    let memory = if rng.bool(0.5) {
+        MemoryKind::OffChip
+    } else {
+        let bw = *rng.choose(&candidates::STACK_BW);
+        MemoryKind::Stacking {
+            bw_tbps_per_100mm2: bw,
+            capacity_gb: stack_capacity_gb(bw),
+        }
+    };
+    let reticle = ReticleConfig {
+        core,
+        array_h: rng.range(1, candidates::MAX_ARRAY_DIM),
+        array_w: rng.range(1, candidates::MAX_ARRAY_DIM),
+        inter_reticle_bw_ratio: *rng.choose(&candidates::INTER_RETICLE_RATIO),
+        memory,
+    };
+    let wsc = WscConfig {
+        reticle,
+        reticle_h: rng.range(1, candidates::MAX_RETICLE_DIM),
+        reticle_w: rng.range(1, candidates::MAX_RETICLE_DIM),
+        integration: *rng.choose(&IntegrationStyle::ALL),
+        mem_ctrl_count: default_mem_ctrl_count(),
+        nic_count: default_nic_count(),
+    };
+    DesignPoint::homogeneous(wsc)
+}
+
+/// Rejection-sample a *validated* design point. Returns the point plus its
+/// physical characterization. `max_tries` bounds the loop (the space is
+/// heavily constrained; ~2–10 % of raw samples validate).
+pub fn sample_valid(rng: &mut Rng, max_tries: usize) -> Option<Validated> {
+    for _ in 0..max_tries {
+        let p = sample_raw(rng);
+        if let Ok(v) = validate(&p) {
+            return Some(v);
+        }
+    }
+    None
+}
+
+/// A canonical known-good design point used by tests, examples and docs:
+/// close to the paper's Fig. 13 best configuration (1 TFLOPS cores with
+/// 128 KB SRAM, 12×12 cores/reticle, stacked DRAM, InFO-SoW).
+pub fn reference_point() -> DesignPoint {
+    let bw = 1.0;
+    DesignPoint::homogeneous(WscConfig {
+        reticle: ReticleConfig {
+            core: CoreConfig {
+                dataflow: Dataflow::WS,
+                mac_num: 512,
+                buffer_kb: 128,
+                buffer_bw_bits: 256,
+                noc_bw_bits: 512,
+            },
+            array_h: 12,
+            array_w: 12,
+            inter_reticle_bw_ratio: 1.0,
+            memory: MemoryKind::Stacking {
+                bw_tbps_per_100mm2: bw,
+                capacity_gb: stack_capacity_gb(bw),
+            },
+        },
+        reticle_h: 9,
+        reticle_w: 6,
+        integration: IntegrationStyle::InfoSoW,
+        mem_ctrl_count: default_mem_ctrl_count(),
+        nic_count: default_nic_count(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cardinality_is_huge() {
+        let c = cardinality();
+        assert!(c > 1e12, "cardinality={c:e}");
+    }
+
+    #[test]
+    fn capacity_bandwidth_tradeoff() {
+        assert!(stack_capacity_gb(0.25) > stack_capacity_gb(4.0));
+        assert!(stack_capacity_gb(0.25) <= 40.0);
+        assert!(stack_capacity_gb(4.0) >= 8.0);
+    }
+
+    #[test]
+    fn reference_point_validates() {
+        let v = validate(&reference_point()).expect("reference point must be valid");
+        assert!(v.phys.wafer_yield >= 0.9);
+        assert!(v.phys.peak_power_w <= crate::arch::constants::WAFER_POWER_LIMIT_W);
+    }
+
+    #[test]
+    fn sampling_finds_valid_points() {
+        let mut rng = Rng::new(2024);
+        let v = sample_valid(&mut rng, 5000).expect("should find a valid point");
+        assert!(v.phys.peak_flops > 0.0);
+    }
+
+    #[test]
+    fn raw_samples_cover_grids() {
+        let mut rng = Rng::new(7);
+        let mut saw_offchip = false;
+        let mut saw_stack = false;
+        let mut saw_stitch = false;
+        for _ in 0..200 {
+            let p = sample_raw(&mut rng);
+            match p.wsc.reticle.memory {
+                MemoryKind::OffChip => saw_offchip = true,
+                MemoryKind::Stacking { .. } => saw_stack = true,
+            }
+            if p.wsc.integration == IntegrationStyle::DieStitching {
+                saw_stitch = true;
+            }
+        }
+        assert!(saw_offchip && saw_stack && saw_stitch);
+    }
+}

@@ -1,0 +1,122 @@
+//! Design Point Validator (paper §V-E, Fig. 2).
+//!
+//! Checks, in order: SRAM-compiler feasibility, reticle area, TSV stress
+//! cap, yield reachability (with redundancy), wafer area, and the 15 kW
+//! power ceiling. Successful validation returns the physical
+//! characterization so downstream evaluation never recomputes it.
+
+use crate::arch::constants as k;
+use crate::components::{wafer_phys, PhysError, WaferPhys};
+use crate::design_space::DesignPoint;
+
+/// Constraint violations (§V-E). `Phys` wraps assembly-level failures from
+/// the component estimator; `Power` is checked here against the wafer cap.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum Violation {
+    #[error(transparent)]
+    Phys(#[from] PhysError),
+    #[error("peak power {power_w:.0} W exceeds wafer limit {limit_w:.0} W")]
+    Power { power_w: f64, limit_w: f64 },
+    #[error("prefill ratio {0} outside (0, 1)")]
+    HeteroRatio(f64),
+}
+
+/// A validated design point with its physical characterization.
+#[derive(Debug, Clone)]
+pub struct Validated {
+    pub point: DesignPoint,
+    pub phys: WaferPhys,
+}
+
+/// Run the full §V-E constraint chain.
+pub fn validate(point: &DesignPoint) -> Result<Validated, Violation> {
+    if !(point.hetero.prefill_ratio > 0.0 && point.hetero.prefill_ratio < 1.0) {
+        return Err(Violation::HeteroRatio(point.hetero.prefill_ratio));
+    }
+    let phys = wafer_phys(&point.wsc)?;
+    if phys.peak_power_w > k::WAFER_POWER_LIMIT_W {
+        return Err(Violation::Power {
+            power_w: phys.peak_power_w,
+            limit_w: k::WAFER_POWER_LIMIT_W,
+        });
+    }
+    Ok(Validated {
+        point: *point,
+        phys,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{CoreConfig, Dataflow, IntegrationStyle, MemoryKind, ReticleConfig, WscConfig};
+    use crate::design_space::{self, DesignPoint};
+
+    fn big_hot_point() -> DesignPoint {
+        // Max everything: should trip the power constraint (or area).
+        DesignPoint::homogeneous(WscConfig {
+            reticle: ReticleConfig {
+                core: CoreConfig {
+                    dataflow: Dataflow::WS,
+                    mac_num: 4096,
+                    buffer_kb: 2048,
+                    buffer_bw_bits: 4096,
+                    noc_bw_bits: 4096,
+                },
+                array_h: 8,
+                array_w: 8,
+                inter_reticle_bw_ratio: 2.0,
+                memory: MemoryKind::OffChip,
+            },
+            reticle_h: 8,
+            reticle_w: 8,
+            integration: IntegrationStyle::InfoSoW,
+            mem_ctrl_count: 24,
+            nic_count: 16,
+        })
+    }
+
+    #[test]
+    fn reference_validates_and_hot_point_fails() {
+        assert!(validate(&design_space::reference_point()).is_ok());
+        let err = validate(&big_hot_point());
+        assert!(err.is_err(), "max-config point should violate something");
+    }
+
+    #[test]
+    fn hetero_ratio_bounds() {
+        let mut p = design_space::reference_point();
+        p.hetero.prefill_ratio = 0.0;
+        assert!(matches!(validate(&p), Err(Violation::HeteroRatio(_))));
+        p.hetero.prefill_ratio = 1.0;
+        assert!(matches!(validate(&p), Err(Violation::HeteroRatio(_))));
+    }
+
+    #[test]
+    fn prop_validated_points_satisfy_all_constraints() {
+        crate::util::prop::check(
+            "validated => constraints hold",
+            |r| {
+                let mut rng = r.fork(0);
+                design_space::sample_valid(&mut rng, 3000)
+            },
+            |v| {
+                let Some(v) = v else { return Ok(()) }; // rare: no point found
+                let phys = &v.phys;
+                if phys.peak_power_w > crate::arch::constants::WAFER_POWER_LIMIT_W {
+                    return Err(format!("power {}", phys.peak_power_w));
+                }
+                if phys.wafer_yield < crate::arch::constants::YIELD_TARGET {
+                    return Err(format!("yield {}", phys.wafer_yield));
+                }
+                if phys.reticle.tsv.stress_utilization > 1.0 {
+                    return Err("stress violated".into());
+                }
+                if phys.reticle.width_mm > 33.0 + 1e-9 || phys.reticle.height_mm > 33.0 + 1e-9 {
+                    return Err("reticle overflow".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

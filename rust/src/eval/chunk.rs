@@ -1,0 +1,566 @@
+//! Chunk-level evaluation (paper §VI-D): inter-chunk communication (TP
+//! collectives, PP stage boundaries, DP weight updates), DRAM access, and
+//! 1F1B pipeline efficiency — composing op-level results into end-to-end
+//! training throughput and inference latency, with Aladdin-style power.
+
+use crate::arch::constants as k;
+use crate::arch::{HeteroGranularity, MemoryKind};
+use crate::design_space::Validated;
+use crate::eval::op_level::{chunk_latency, NocModel, OpLevelResult};
+use crate::eval::power::EnergyLedger;
+use crate::eval::NocEstimator;
+use crate::compiler::compile_chunk;
+use crate::workload::parallel::{enumerate_strategies, train_chunk_bytes, SystemMemory};
+use crate::workload::{LlmSpec, OpGraph, ParallelStrategy, Phase};
+
+/// The system under evaluation: one validated WSC design replicated over
+/// `n_wafers` wafers (§VIII-A: WSC area matched to the GPU-cluster area).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub validated: Validated,
+    pub n_wafers: usize,
+}
+
+impl SystemConfig {
+    /// Wafer count matching the total area of `gpu_num` H100s (§VIII-A).
+    pub fn area_matched(validated: Validated, gpu_num: usize) -> SystemConfig {
+        let gpu_area = gpu_num as f64 * crate::baselines::H100_DIE_MM2;
+        let n = (gpu_area / validated.phys.area_mm2).round().max(1.0) as usize;
+        SystemConfig {
+            validated,
+            n_wafers: n,
+        }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.n_wafers
+            * self.validated.point.wsc.num_reticles()
+            * self.validated.phys.reticle.operational_cores()
+    }
+
+    pub fn total_reticles(&self) -> usize {
+        self.n_wafers * self.validated.point.wsc.num_reticles()
+    }
+
+    pub fn memory(&self) -> SystemMemory {
+        let wsc = &self.validated.point.wsc;
+        SystemMemory {
+            sram_bytes: self.n_wafers as f64 * wsc.total_sram_bytes(),
+            stacking_bytes: self.n_wafers as f64 * wsc.total_stacking_bytes(),
+            offchip_bytes: self.n_wafers as f64
+                * wsc.mem_ctrl_count as f64
+                * crate::baselines::OFFCHIP_GB_PER_CTRL
+                * 1e9,
+            total_cores: self.total_cores(),
+        }
+    }
+
+    /// Aggregate DRAM bandwidth (bytes/s) per wafer, and its energy tier.
+    /// Off-chip bandwidth is additionally bounded by the wafer-edge
+    /// inter-reticle ring (§IX-F: "long-range DRAM-access-induced data
+    /// transfer from the WSC edge can become the performance bottleneck").
+    pub fn wafer_dram_bw(&self) -> (f64, bool) {
+        let wsc = &self.validated.point.wsc;
+        let phys = &self.validated.phys;
+        match wsc.reticle.memory {
+            MemoryKind::Stacking { .. } => (
+                wsc.num_reticles() as f64 * phys.reticle.stack_bytes_per_sec,
+                true,
+            ),
+            MemoryKind::OffChip => {
+                let ctrl = wsc.off_chip_bytes_per_sec();
+                let edge_links = 2.0 * (wsc.reticle_h + wsc.reticle_w) as f64;
+                let ring = edge_links * wsc.reticle.inter_reticle_bytes_per_sec() / 2.0;
+                (ctrl.min(ring), false)
+            }
+        }
+    }
+}
+
+/// Time breakdown of one training step (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    pub compute_s: f64,
+    pub noc_s: f64,
+    pub tp_s: f64,
+    pub pp_s: f64,
+    pub dp_s: f64,
+    pub dram_s: f64,
+}
+
+/// Training evaluation result.
+#[derive(Debug, Clone)]
+pub struct TrainEval {
+    pub strategy: ParallelStrategy,
+    pub step_time_s: f64,
+    pub tokens_per_sec: f64,
+    pub power_w: f64,
+    pub energy_per_token_j: f64,
+    /// Energy-delay product per step (J·s) — the Fig. 9 metric.
+    pub edp: f64,
+    pub breakdown: Breakdown,
+}
+
+/// Cap on strategies fully evaluated per design point (the paper iterates
+/// all; we rank by a cheap heuristic first and evaluate the best few —
+/// env `THESEUS_STRATEGY_CAP` overrides).
+fn strategy_cap() -> usize {
+    crate::util::cli::env_usize("THESEUS_STRATEGY_CAP", 16)
+}
+
+/// Evaluate LLM training on the system (§VI-D + §VI-A strategy search).
+/// Returns `None` when no parallel strategy fits memory.
+pub fn eval_training(
+    spec: &LlmSpec,
+    sys: &SystemConfig,
+    noc: &dyn NocEstimator,
+) -> Option<TrainEval> {
+    let mem = sys.memory();
+    let mut strategies = enumerate_strategies(spec, &mem);
+    if strategies.is_empty() {
+        return None;
+    }
+    // Heuristic rank: chunks close to the reticle count (one chunk per
+    // reticle neighborhood), high pipeline efficiency, moderate TP.
+    let n_ret = sys.total_reticles() as f64;
+    strategies.sort_by(|a, b| {
+        let score = |s: &ParallelStrategy| {
+            let chunk_ratio = ((s.num_chunks() as f64 / n_ret).ln()).abs();
+            let eff = s.pipeline_efficiency(spec);
+            let tp_pen = (s.tp as f64).ln() * 0.1;
+            chunk_ratio - eff + tp_pen
+        };
+        score(a).partial_cmp(&score(b)).unwrap()
+    });
+    strategies.truncate(strategy_cap());
+
+    strategies
+        .iter()
+        .filter_map(|s| eval_training_with(spec, sys, *s, noc))
+        .max_by(|a, b| a.tokens_per_sec.partial_cmp(&b.tokens_per_sec).unwrap())
+}
+
+/// Evaluate one specific strategy.
+pub fn eval_training_with(
+    spec: &LlmSpec,
+    sys: &SystemConfig,
+    s: ParallelStrategy,
+    noc: &dyn NocEstimator,
+) -> Option<TrainEval> {
+    let wsc = &sys.validated.point.wsc;
+    let phys = &sys.validated.phys;
+    let core_cfg = &wsc.reticle.core;
+    let chunks = s.num_chunks() as f64;
+    let cores_per_chunk = (sys.total_cores() as f64 / chunks).max(1.0);
+
+    // --- op level on a representative region ---
+    let graph_layers = s.layers_per_stage(spec).min(2).max(1);
+    let layer_scale = s.layers_per_stage(spec) as f64 / graph_layers as f64;
+    let graph = OpGraph::transformer_chunk(spec, graph_layers, s.microbatch, s.tp, Phase::Training, false);
+    let (rh, rw) = region_dims(cores_per_chunk, wsc.reticle.array_h, wsc.reticle.array_w);
+    let chunk = compile_chunk(&graph, rh, rw, core_cfg);
+    let scale = (cores_per_chunk / (rh * rw) as f64).max(1.0);
+    let op = op_result(&chunk, core_cfg, scale, noc);
+    let t_op = op.cycles * layer_scale / k::CLOCK_HZ;
+
+    // --- chunk-level communications ---
+    let bpe = k::BYTES_PER_ELEM;
+    let msh = s.microbatch as f64 * spec.seq_len as f64 * spec.hidden as f64 * bpe;
+
+    // TP ring all-reduce: 2 per layer fwd + 2 bwd.
+    let reticles_per_chunk = (cores_per_chunk / phys.reticle.operational_cores() as f64).max(1e-9);
+    let bw_tp = if s.tp == 1 {
+        f64::INFINITY
+    } else if reticles_per_chunk <= 1.0 {
+        wsc.reticle.bisection_bytes_per_sec()
+    } else {
+        let border = reticles_per_chunk.sqrt().ceil();
+        border * wsc.reticle.inter_reticle_bytes_per_sec()
+    };
+    let ar_bytes = 2.0 * (s.tp as f64 - 1.0) / s.tp as f64 * msh;
+    let t_tp = 4.0 * s.layers_per_stage(spec) as f64 * ar_bytes / bw_tp;
+
+    // PP boundary: activations + their gradients cross once per microbatch.
+    let wafers = sys.n_wafers as f64;
+    let pp_bytes = 2.0 * msh / s.tp as f64;
+    let cross_wafer_frac = if s.pp > 1 {
+        ((wafers - 1.0).max(0.0) / (s.pp as f64 - 1.0)).min(1.0)
+    } else {
+        0.0
+    };
+    let bw_pp_on = wsc.reticle.inter_reticle_bytes_per_sec()
+        * (wsc.reticle_h.min(wsc.reticle_w) as f64).max(1.0);
+    let bw_pp_off = wsc.inter_wafer_bytes_per_sec();
+    let t_pp = if s.pp == 1 {
+        0.0
+    } else {
+        pp_bytes * ((1.0 - cross_wafer_frac) / bw_pp_on + cross_wafer_frac / bw_pp_off)
+    };
+
+    // DRAM: weight streaming when the chunk state exceeds its SRAM share.
+    let sram_per_chunk = mem_share(sys.memory().sram_bytes, chunks);
+    let state_bytes = train_chunk_bytes(spec, &s);
+    let stage_weights = spec.param_bytes() / (s.tp * s.pp) as f64;
+    let (wafer_dram_bw, stacked) = sys.wafer_dram_bw();
+    let chunk_dram_bw = wafer_dram_bw * wafers / chunks;
+    let (t_dram_mb, dram_bytes_mb) = if state_bytes <= sram_per_chunk {
+        (0.0, 0.0)
+    } else {
+        (stage_weights / chunk_dram_bw, stage_weights)
+    };
+
+    // DP weight update: ring all-reduce of gradients once per step, plus
+    // optimizer state read+write from wherever it lives.
+    let grad_bytes = 2.0 * (s.dp as f64 - 1.0) / s.dp as f64 * stage_weights;
+    let dp_on_wafer = (s.dp as f64) <= wafers.max(1.0);
+    let bw_dp = if s.dp == 1 {
+        f64::INFINITY
+    } else if dp_on_wafer && wafers <= 1.0 {
+        bw_pp_on
+    } else {
+        wsc.inter_wafer_bytes_per_sec()
+    };
+    let t_dp = grad_bytes / bw_dp;
+    let opt_bytes = if state_bytes <= sram_per_chunk {
+        0.0
+    } else {
+        2.0 * spec.train_state_bytes() / (s.tp * s.pp) as f64
+    };
+    let t_opt = opt_bytes / chunk_dram_bw;
+
+    // --- 1F1B pipeline composition ---
+    let mb_count = s.microbatches_per_step(spec) as f64;
+    let t_mb = t_op + t_tp + t_pp + t_dram_mb;
+    let slots = mb_count + s.pp as f64 - 1.0;
+    let step_time = slots * t_mb + t_dp + t_opt;
+    if !step_time.is_finite() || step_time <= 0.0 {
+        return None;
+    }
+    let tokens = (spec.batch_size * spec.seq_len) as f64;
+
+    // --- energy ledger (action counts for the whole step) ---
+    let per_chunk_runs = mb_count; // each chunk executes every microbatch
+    let ledger_scale = chunks * per_chunk_runs * layer_scale;
+    let mut ledger = EnergyLedger {
+        mac_ops: op.mac_ops * scale * ledger_scale,
+        sram_bytes: op.sram_bytes * scale * ledger_scale,
+        noc_byte_hops: op.byte_hops * scale * ledger_scale,
+        inter_reticle_bytes: (ar_bytes * 4.0 * s.layers_per_stage(spec) as f64
+            * (s.tp > 1) as u64 as f64
+            + pp_bytes * (1.0 - cross_wafer_frac))
+            * chunks
+            * per_chunk_runs,
+        inter_wafer_bytes: (pp_bytes * cross_wafer_frac * per_chunk_runs + grad_bytes)
+            * chunks,
+        dram_stacked_bytes: 0.0,
+        dram_offchip_bytes: 0.0,
+        time_s: step_time,
+        static_w: total_static_w(sys),
+    };
+    let dram_total = (dram_bytes_mb * per_chunk_runs + opt_bytes) * chunks;
+    if stacked {
+        ledger.dram_stacked_bytes = dram_total;
+    } else {
+        ledger.dram_offchip_bytes = dram_total;
+    }
+    let power = ledger.avg_power_w(&phys.reticle.core, &phys.reticle);
+    let energy = ledger.total_energy_j(&phys.reticle.core, &phys.reticle);
+
+    Some(TrainEval {
+        strategy: s,
+        step_time_s: step_time,
+        tokens_per_sec: tokens / step_time,
+        power_w: power,
+        energy_per_token_j: energy / tokens,
+        edp: energy * step_time,
+        breakdown: Breakdown {
+            compute_s: op.compute_cycles * layer_scale / k::CLOCK_HZ * slots,
+            noc_s: op.comm_cycles * layer_scale / k::CLOCK_HZ * slots,
+            tp_s: t_tp * slots,
+            pp_s: t_pp * slots,
+            dp_s: t_dp,
+            dram_s: t_dram_mb * slots + t_opt,
+        },
+    })
+}
+
+fn region_dims(cores: f64, max_h: usize, max_w: usize) -> (usize, usize) {
+    let side = cores.sqrt().ceil() as usize;
+    let rh = side.clamp(1, max_h);
+    let rw = ((cores / rh as f64).ceil() as usize).clamp(1, max_w);
+    (rh, rw)
+}
+
+fn mem_share(total: f64, chunks: f64) -> f64 {
+    total / chunks
+}
+
+fn total_static_w(sys: &SystemConfig) -> f64 {
+    sys.n_wafers as f64
+        * sys.validated.point.wsc.num_reticles() as f64
+        * sys.validated.phys.reticle.leak_w
+}
+
+fn op_result(
+    chunk: &crate::compiler::CompiledChunk,
+    core: &crate::arch::CoreConfig,
+    scale: f64,
+    noc: &dyn NocEstimator,
+) -> OpLevelResult {
+    match noc.link_waits(chunk, core) {
+        Some(waits) => chunk_latency(chunk, core, scale, NocModel::LinkWaits(&waits)),
+        None => chunk_latency(chunk, core, scale, NocModel::Analytical),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Inference (§V-B, §IX-D/E): prefill + decode with optional heterogeneity.
+// ---------------------------------------------------------------------
+
+/// Inference evaluation result (per wafer-system).
+#[derive(Debug, Clone)]
+pub struct InferEval {
+    /// Prefill latency for one batch, seconds.
+    pub prefill_s: f64,
+    /// Per-token decode step latency, seconds.
+    pub decode_step_s: f64,
+    /// End-to-end tokens/s generating `seq_len` output tokens at `batch`.
+    pub tokens_per_sec: f64,
+    pub power_w: f64,
+    /// Where weights+KV live: "sram" / "stacked" / "offchip".
+    pub residency: &'static str,
+}
+
+/// Evaluate inference at `batch` with optional MQA (§VIII-A: in/out
+/// sequence 2048, batch 32).
+pub fn eval_inference(
+    spec: &LlmSpec,
+    sys: &SystemConfig,
+    batch: usize,
+    mqa: bool,
+    noc: &dyn NocEstimator,
+) -> Option<InferEval> {
+    let wsc = &sys.validated.point.wsc;
+    let phys = &sys.validated.phys;
+    let hetero = sys.validated.point.hetero;
+    let split = hetero.split(wsc);
+
+    // Memory residency for weights + KV cache.
+    let mem = sys.memory();
+    let weights = spec.param_bytes();
+    let kv = spec.kv_cache_bytes_per_seq(mqa) * batch as f64;
+    let need = weights + kv;
+    let (residency, mem_bw_total, stacked) = if need <= mem.sram_bytes {
+        // SRAM-resident: aggregate on-core SRAM bandwidth.
+        let bw = sys.total_cores() as f64 * wsc.reticle.core.sram_bytes_per_sec();
+        ("sram", bw, false)
+    } else if need <= mem.sram_bytes + mem.stacking_bytes && mem.stacking_bytes > 0.0 {
+        let decode_bw_scale = if split.shared {
+            1.0
+        } else {
+            // Reticle/wafer hetero: decode reticles carry their own
+            // (possibly boosted) stacking bandwidth.
+            (split.decode_stack_bw.max(0.01))
+                / stack_bw_of(wsc).max(0.01)
+                * (split.decode_reticles as f64 / wsc.num_reticles() as f64)
+        };
+        let (bw, _) = sys.wafer_dram_bw();
+        ("stacked", bw * sys.n_wafers as f64 * decode_bw_scale.max(1e-3), true)
+    } else if need <= mem.total_bytes() {
+        let (bw, _) = sys.wafer_dram_bw();
+        let bw = if matches!(wsc.reticle.memory, MemoryKind::OffChip) {
+            bw
+        } else {
+            wsc.off_chip_bytes_per_sec()
+        };
+        ("offchip", bw * sys.n_wafers as f64, false)
+    } else {
+        return None; // doesn't fit at all
+    };
+
+    // --- decode: memory-bound streaming of weights (shared by the batch)
+    // + KV (per sequence), plus the small GEMV compute ---
+    let tp = pick_infer_tp(spec, sys);
+    let decode_flops = spec.fwd_flops_per_token() * batch as f64;
+    let prefill_frac = if split.shared { 1.0 } else { hetero.prefill_ratio };
+    let decode_cores = (sys.total_cores() as f64 * if split.shared { 1.0 } else { 1.0 - prefill_frac }).max(1.0);
+    let decode_compute_s = decode_flops
+        / (decode_cores * wsc.reticle.core.peak_flops() * 0.3); // GEMV ~30 % util
+    let decode_mem_bytes = weights + spec.kv_cache_bytes_per_seq(mqa) * batch as f64;
+    let decode_mem_s = decode_mem_bytes / mem_bw_total;
+    let decode_step_s = decode_compute_s.max(decode_mem_s) * split.sched_overhead;
+
+    // --- prefill: compute-bound, refined by the op-level NoC model ---
+    let prefill_cores = (sys.total_cores() as f64 * prefill_frac).max(1.0);
+    let graph = OpGraph::transformer_chunk(spec, 1, batch.min(4), tp, Phase::Prefill, mqa);
+    let (rh, rw) = region_dims(
+        prefill_cores / spec.layers as f64,
+        wsc.reticle.array_h,
+        wsc.reticle.array_w,
+    );
+    let chunk = compile_chunk(&graph, rh, rw, &wsc.reticle.core);
+    let scale = (prefill_cores / spec.layers as f64 / (rh * rw) as f64).max(1.0);
+    let op = op_result(&chunk, &wsc.reticle.core, scale, noc);
+    // One layer evaluated at batch min(4): scale to full batch × layers
+    // (layers pipeline across the wafer, so latency ≈ layers × per-layer).
+    let batch_scale = batch as f64 / batch.min(4) as f64;
+    let prefill_s = op.cycles * spec.layers as f64 * batch_scale / k::CLOCK_HZ;
+
+    // KV handoff between stages (hetero §IX-E).
+    let kv_handoff_s = if split.shared {
+        0.0
+    } else {
+        kv / split.kv_transfer_bw.max(1.0)
+    };
+
+    // Generate seq_len output tokens.
+    let out_tokens = spec.seq_len as f64;
+    let total_s = if split.shared {
+        prefill_s + kv_handoff_s + out_tokens * decode_step_s
+    } else {
+        // Stages pipeline across requests: throughput set by the slower
+        // stage; latency still sums.
+        (prefill_s + kv_handoff_s).max(out_tokens * decode_step_s)
+    };
+    let tokens_per_sec = batch as f64 * out_tokens / total_s;
+
+    // --- power ---
+    let mut ledger = EnergyLedger {
+        mac_ops: (spec.fwd_flops_per_token() * (spec.seq_len as f64 + out_tokens) * batch as f64)
+            / k::FLOPS_PER_MAC,
+        sram_bytes: need * out_tokens * 0.5, // streaming reuse estimate
+        noc_byte_hops: op.byte_hops * scale * spec.layers as f64 * batch_scale,
+        inter_reticle_bytes: kv,
+        inter_wafer_bytes: if hetero.granularity == HeteroGranularity::Wafer {
+            kv
+        } else {
+            0.0
+        },
+        dram_stacked_bytes: if stacked { decode_mem_bytes * out_tokens } else { 0.0 },
+        dram_offchip_bytes: if residency == "offchip" {
+            decode_mem_bytes * out_tokens
+        } else {
+            0.0
+        },
+        time_s: total_s,
+        static_w: total_static_w(sys),
+    };
+    if residency == "sram" {
+        ledger.sram_bytes += decode_mem_bytes * out_tokens;
+    }
+    let power = ledger.avg_power_w(&phys.reticle.core, &phys.reticle);
+
+    Some(InferEval {
+        prefill_s,
+        decode_step_s,
+        tokens_per_sec,
+        power_w: power,
+        residency,
+    })
+}
+
+fn stack_bw_of(wsc: &crate::arch::WscConfig) -> f64 {
+    match wsc.reticle.memory {
+        MemoryKind::OffChip => 0.0,
+        MemoryKind::Stacking {
+            bw_tbps_per_100mm2, ..
+        } => bw_tbps_per_100mm2,
+    }
+}
+
+fn pick_infer_tp(spec: &LlmSpec, sys: &SystemConfig) -> usize {
+    let mut tp = 1;
+    while tp * 2 <= spec.heads.min(64) && spec.heads % (tp * 2) == 0 && tp * 2 <= sys.total_reticles()
+    {
+        tp *= 2;
+    }
+    tp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design_space::{reference_point, validate};
+    use crate::eval::Analytical;
+    use crate::workload::models::benchmarks;
+
+    fn sys(n_wafers: usize) -> SystemConfig {
+        SystemConfig {
+            validated: validate(&reference_point()).unwrap(),
+            n_wafers,
+        }
+    }
+
+    #[test]
+    fn training_gpt17b_single_wafer() {
+        let spec = &benchmarks()[0];
+        let r = eval_training(spec, &sys(1), &Analytical).expect("should evaluate");
+        assert!(r.tokens_per_sec > 0.0);
+        assert!(r.power_w > 100.0, "power={}", r.power_w);
+        assert!(r.power_w < 40_000.0, "power={}", r.power_w);
+        assert!(r.step_time_s > 0.0);
+        // Throughput sanity: bounded by peak flops.
+        let peak = sys(1).validated.phys.peak_flops;
+        let max_tokens = peak / spec.train_flops_per_token();
+        assert!(
+            r.tokens_per_sec <= max_tokens * 1.01,
+            "tokens/s {} exceeds roofline {max_tokens}",
+            r.tokens_per_sec
+        );
+        // And achieves a sane fraction of it.
+        assert!(
+            r.tokens_per_sec >= max_tokens * 0.02,
+            "tokens/s {} under 2% of roofline {max_tokens}",
+            r.tokens_per_sec
+        );
+    }
+
+    #[test]
+    fn more_wafers_more_throughput() {
+        let spec = &benchmarks()[3]; // 18.4B
+        let t1 = eval_training(spec, &sys(2), &Analytical).unwrap();
+        let t4 = eval_training(spec, &sys(8), &Analytical).unwrap();
+        assert!(t4.tokens_per_sec > t1.tokens_per_sec * 1.5);
+    }
+
+    #[test]
+    fn huge_model_needs_memory() {
+        // 530B on a single wafer without enough memory -> None or tiny.
+        let spec = &benchmarks()[9];
+        let r = eval_training(spec, &sys(1), &Analytical);
+        if let Some(r) = r {
+            assert!(r.tokens_per_sec >= 0.0);
+        } // None is acceptable: memory constraint
+    }
+
+    #[test]
+    fn inference_sram_beats_offchip_residency() {
+        let spec = &benchmarks()[0]; // 1.7B fits on-wafer SRAM? 3.4 GB bf16 — no (SRAM ~ MBs×cores)
+        let r = eval_inference(spec, &sys(4), 32, false, &Analytical).unwrap();
+        assert!(r.tokens_per_sec > 0.0);
+        assert!(r.decode_step_s > 0.0);
+    }
+
+    #[test]
+    fn mqa_speeds_decode() {
+        let spec = &benchmarks()[7];
+        let s = sys(8);
+        let full = eval_inference(spec, &s, 32, false, &Analytical).unwrap();
+        let mqa = eval_inference(spec, &s, 32, true, &Analytical).unwrap();
+        assert!(
+            mqa.decode_step_s < full.decode_step_s,
+            "mqa {} vs {}",
+            mqa.decode_step_s,
+            full.decode_step_s
+        );
+    }
+
+    #[test]
+    fn prefill_compute_bound_decode_memory_bound() {
+        let spec = &benchmarks()[7];
+        let r = eval_inference(spec, &sys(8), 32, false, &Analytical).unwrap();
+        // Prefill processes 2048x more tokens per invocation; decode step
+        // must be far cheaper than prefill.
+        assert!(r.decode_step_s < r.prefill_s);
+    }
+}

@@ -1,0 +1,115 @@
+//! Hierarchical evaluation engine (paper §VI, Fig. 6): tile-level
+//! ([`tile`]), op-level ([`op_level`] — analytical or GNN-backed), and
+//! chunk-level ([`chunk`]) evaluation, with Aladdin-style power accounting
+//! ([`power`]).
+
+pub mod chunk;
+pub mod op_level;
+pub mod power;
+pub mod tile;
+
+pub use chunk::{eval_inference, eval_training, InferEval, SystemConfig, TrainEval};
+pub use op_level::{chunk_latency, NocModel, OpLevelResult};
+
+use crate::arch::CoreConfig;
+use crate::compiler::CompiledChunk;
+
+/// Source of per-link waiting-time estimates for op-level evaluation.
+///
+/// * Returning `None` selects the closed-form analytical model
+///   (low fidelity, §VI-C "Analytical Model").
+/// * The GNN runtime ([`crate::runtime`]) returns Eq. 5 predictions
+///   (high fidelity, §VI-C "GNN-based Evaluation").
+///
+/// Not `Sync`: the PJRT executable handle is thread-confined; the
+/// coordinator keeps GNN-backed evaluation on the explorer thread.
+pub trait NocEstimator {
+    fn link_waits(&self, chunk: &CompiledChunk, core: &CoreConfig) -> Option<Vec<f64>>;
+
+    /// Display name for logs/benches.
+    fn name(&self) -> &'static str {
+        "noc-estimator"
+    }
+}
+
+/// The low-fidelity analytical estimator (link-sharing equivalent
+/// bandwidth).
+pub struct Analytical;
+
+impl NocEstimator for Analytical {
+    fn link_waits(&self, _chunk: &CompiledChunk, _core: &CoreConfig) -> Option<Vec<f64>> {
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+}
+
+/// Ground-truth estimator: runs the cycle-accurate simulator and feeds the
+/// measured per-link waits back through Eq. 6 (used for Fig. 7 validation
+/// and optionally as the highest-fidelity DSE stage).
+pub struct CycleAccurate {
+    /// Simulation budget per chunk.
+    pub max_cycles: u64,
+}
+
+impl Default for CycleAccurate {
+    fn default() -> Self {
+        CycleAccurate {
+            max_cycles: 300_000_000,
+        }
+    }
+}
+
+impl NocEstimator for CycleAccurate {
+    fn link_waits(&self, chunk: &CompiledChunk, core: &CoreConfig) -> Option<Vec<f64>> {
+        let stats = crate::noc_sim::simulate_chunk(
+            chunk,
+            core.noc_bw_bits,
+            &|op| {
+                let a = &chunk.assignments[op];
+                crate::eval::tile::eval_tile(a, core, 1.0).cycles.ceil() as u64
+            },
+            self.max_cycles,
+        );
+        Some(stats.link_wait_mean())
+    }
+
+    fn name(&self) -> &'static str {
+        "cycle-accurate"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dataflow;
+    use crate::compiler::compile_chunk;
+    use crate::workload::models::benchmarks;
+    use crate::workload::{OpGraph, Phase};
+
+    #[test]
+    fn estimator_names() {
+        assert_eq!(Analytical.name(), "analytical");
+        assert_eq!(CycleAccurate::default().name(), "cycle-accurate");
+    }
+
+    #[test]
+    fn cycle_accurate_estimator_produces_waits() {
+        let mut spec = benchmarks()[0].clone();
+        spec.seq_len = 32;
+        let g = OpGraph::transformer_chunk(&spec, 1, 1, 8, Phase::Prefill, false);
+        let core = CoreConfig {
+            dataflow: Dataflow::WS,
+            mac_num: 512,
+            buffer_kb: 128,
+            buffer_bw_bits: 256,
+            noc_bw_bits: 512,
+        };
+        let chunk = compile_chunk(&g, 3, 3, &core);
+        let waits = CycleAccurate::default().link_waits(&chunk, &core).unwrap();
+        assert_eq!(waits.len(), 9 * 4);
+        assert!(waits.iter().all(|&w| w >= 0.0));
+    }
+}

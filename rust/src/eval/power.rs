@@ -1,0 +1,149 @@
+//! Power estimation (paper §VI-E): Aladdin-style action counting. The
+//! evaluator accumulates action counts into an [`EnergyLedger`]; energy is
+//! counts × per-action energies from the component estimator, plus static
+//! power × runtime.
+
+use crate::arch::constants as k;
+use crate::components::{CoreGeom, ReticlePhys};
+
+/// Action counts for one evaluated workload interval.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyLedger {
+    /// MAC operations executed.
+    pub mac_ops: f64,
+    /// SRAM bytes moved (reads + writes).
+    pub sram_bytes: f64,
+    /// NoC traffic volume × hops traversed (byte-hops).
+    pub noc_byte_hops: f64,
+    /// Bytes crossing reticle boundaries.
+    pub inter_reticle_bytes: f64,
+    /// Bytes crossing wafer boundaries (NIC SerDes, GRS-class energy ×4).
+    pub inter_wafer_bytes: f64,
+    /// DRAM bytes, by tier.
+    pub dram_stacked_bytes: f64,
+    pub dram_offchip_bytes: f64,
+    /// Interval wall-clock, seconds.
+    pub time_s: f64,
+    /// Total static (leakage) power of the committed silicon, W.
+    pub static_w: f64,
+}
+
+impl EnergyLedger {
+    pub fn add(&mut self, other: &EnergyLedger) {
+        self.mac_ops += other.mac_ops;
+        self.sram_bytes += other.sram_bytes;
+        self.noc_byte_hops += other.noc_byte_hops;
+        self.inter_reticle_bytes += other.inter_reticle_bytes;
+        self.inter_wafer_bytes += other.inter_wafer_bytes;
+        self.dram_stacked_bytes += other.dram_stacked_bytes;
+        self.dram_offchip_bytes += other.dram_offchip_bytes;
+    }
+
+    /// Dynamic energy in joules for a given core geometry and reticle PHY.
+    pub fn dynamic_energy_j(&self, core: &CoreGeom, ret: &ReticlePhys) -> f64 {
+        let pj = self.mac_ops * core.e_mac_pj
+            + self.sram_bytes * 8.0 * core.e_sram_pj_per_bit
+            + self.noc_byte_hops * 8.0 * core.e_noc_router_pj_per_bit
+            + self.inter_reticle_bytes * 8.0 * ret.phy.energy_pj_per_bit
+            + self.inter_wafer_bytes * 8.0 * (4.0 * k::PHY_ENERGY_PJ_PER_BIT_RDL)
+            + self.dram_stacked_bytes * 8.0 * k::DRAM_ENERGY_PJ_PER_BIT_STACKED
+            + self.dram_offchip_bytes * 8.0 * k::DRAM_ENERGY_PJ_PER_BIT_OFFCHIP;
+        pj * 1e-12
+    }
+
+    pub fn total_energy_j(&self, core: &CoreGeom, ret: &ReticlePhys) -> f64 {
+        self.dynamic_energy_j(core, ret) + self.static_w * self.time_s
+    }
+
+    /// Average power over the interval, W.
+    pub fn avg_power_w(&self, core: &CoreGeom, ret: &ReticlePhys) -> f64 {
+        if self.time_s <= 0.0 {
+            return self.static_w;
+        }
+        self.total_energy_j(core, ret) / self.time_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{CoreConfig, Dataflow, IntegrationStyle, MemoryKind, ReticleConfig};
+    use crate::components::reticle_phys;
+
+    fn fixtures() -> (CoreGeom, ReticlePhys) {
+        let ret = ReticleConfig {
+            core: CoreConfig {
+                dataflow: Dataflow::WS,
+                mac_num: 512,
+                buffer_kb: 128,
+                buffer_bw_bits: 256,
+                noc_bw_bits: 512,
+            },
+            array_h: 10,
+            array_w: 10,
+            inter_reticle_bw_ratio: 1.0,
+            memory: MemoryKind::Stacking {
+                bw_tbps_per_100mm2: 1.0,
+                capacity_gb: 16.0,
+            },
+        };
+        let phys = reticle_phys(&ret, IntegrationStyle::InfoSoW, 54).unwrap();
+        (phys.core, phys.clone())
+    }
+
+    #[test]
+    fn energy_accumulates_linearly() {
+        let (core, ret) = fixtures();
+        let mut a = EnergyLedger {
+            mac_ops: 1e12,
+            sram_bytes: 1e9,
+            time_s: 1.0,
+            static_w: 100.0,
+            ..Default::default()
+        };
+        let e1 = a.total_energy_j(&core, &ret);
+        let b = a;
+        a.add(&b);
+        let e2 = a.total_energy_j(&core, &ret);
+        // Dynamic doubles, static unchanged (same interval).
+        let dyn1 = e1 - 100.0;
+        assert!((e2 - (100.0 + 2.0 * dyn1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn offchip_dram_costs_more() {
+        let (core, ret) = fixtures();
+        let stacked = EnergyLedger {
+            dram_stacked_bytes: 1e9,
+            ..Default::default()
+        };
+        let off = EnergyLedger {
+            dram_offchip_bytes: 1e9,
+            ..Default::default()
+        };
+        assert!(off.dynamic_energy_j(&core, &ret) > stacked.dynamic_energy_j(&core, &ret) * 2.0);
+    }
+
+    #[test]
+    fn avg_power_includes_static() {
+        let (core, ret) = fixtures();
+        let l = EnergyLedger {
+            time_s: 2.0,
+            static_w: 500.0,
+            ..Default::default()
+        };
+        assert!((l.avg_power_w(&core, &ret) - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mac_energy_magnitude() {
+        // 1e12 MACs at ~0.5 pJ ≈ 0.5 J.
+        let (core, ret) = fixtures();
+        let l = EnergyLedger {
+            mac_ops: 1e12,
+            ..Default::default()
+        };
+        let e = l.dynamic_energy_j(&core, &ret);
+        assert!(e > 0.3 && e < 1.5, "e={e}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Tile-level evaluation (paper §VI-B): latency of one operator tile on one
+//! core with a fixed dataflow — loop unrolling/tiling over the MAC array,
+//! SRAM-capacity-limited reuse, and bandwidth-limited operand feeds.
+
+use crate::arch::{constants as k, CoreConfig, Dataflow};
+use crate::compiler::OpAssignment;
+use crate::workload::OpKind;
+
+/// Tile-level result for one op on one core.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TileEval {
+    /// Core-cycles to execute the tile.
+    pub cycles: f64,
+    /// MAC-array utilization achieved (0–1].
+    pub utilization: f64,
+    /// SRAM bytes moved (for power accounting), including reload traffic.
+    pub sram_bytes: f64,
+    /// MAC operations executed (for power accounting).
+    pub mac_ops: f64,
+}
+
+/// Dataflow utilization: fraction of the MAC array kept busy by a tile of
+/// the given GEMM dims. The stationary tensor's two dims map onto the
+/// array; dims smaller than the array waste lanes (§IX-A "Utilization").
+fn gemm_utilization(df: Dataflow, m: f64, kk: f64, n: f64, rows: usize, cols: usize) -> f64 {
+    let (a, b) = match df {
+        Dataflow::WS => (kk, n),
+        Dataflow::IS => (m, kk),
+        Dataflow::OS => (m, n),
+    };
+    let ua = (a / rows as f64).min(1.0);
+    let ub = (b / cols as f64).min(1.0);
+    (ua * ub).max(1e-3)
+}
+
+/// Evaluate one op assignment on `core`. `scale` divides the per-core tile
+/// further when the op actually spreads over more cores than the compiled
+/// region (hierarchical evaluation: the region is a representative slice).
+pub fn eval_tile(a: &OpAssignment, core: &CoreConfig, scale: f64) -> TileEval {
+    let scale = scale.max(1e-12);
+    let flops = a.flops_per_core / scale;
+    let in_bytes = a.in_bytes_per_core / scale;
+    let out_bytes = a.out_bytes_per_core / scale;
+    let ws = a.working_set_bytes / scale;
+
+    let (rows, cols) = core.array_dims();
+    let util = match a.kind {
+        OpKind::Matmul { m, k: kk, n } => gemm_utilization(
+            core.dataflow,
+            m as f64 / a.placement.grid_h as f64,
+            kk as f64,
+            n as f64 / a.placement.grid_w as f64,
+            rows,
+            cols,
+        ),
+        OpKind::BatchMatmul { m, k: kk, n, .. } => {
+            gemm_utilization(core.dataflow, m as f64, kk as f64, n as f64, rows, cols)
+        }
+        // Vector ops run on one row of the array (lane-parallel).
+        _ => (cols as f64 / core.mac_num as f64).min(1.0),
+    };
+
+    // SRAM-capacity-limited reuse (§VI-B): if the stationary working set
+    // exceeds the buffer, operands stream multiple times.
+    let buffer_bytes = core.buffer_kb as f64 * 1024.0;
+    let reload = (ws / buffer_bytes).max(1.0);
+    let sram_bytes = (in_bytes * reload) + out_bytes;
+
+    let mac_ops = flops / k::FLOPS_PER_MAC;
+    let compute_cycles = mac_ops / (core.mac_num as f64 * util);
+    let sram_cycles = sram_bytes / (core.buffer_bw_bits as f64 / 8.0);
+    let feed_cycles = (in_bytes * reload) / (core.noc_bw_bits as f64 / 8.0);
+
+    TileEval {
+        cycles: compute_cycles.max(sram_cycles).max(feed_cycles).max(1.0),
+        utilization: util,
+        sram_bytes,
+        mac_ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::OpPlacement;
+
+    fn core(df: Dataflow, mac: usize, kb: usize, sbw: usize, nbw: usize) -> CoreConfig {
+        CoreConfig {
+            dataflow: df,
+            mac_num: mac,
+            buffer_kb: kb,
+            buffer_bw_bits: sbw,
+            noc_bw_bits: nbw,
+        }
+    }
+
+    fn gemm_assignment(m: usize, kk: usize, n: usize, gh: usize, gw: usize) -> OpAssignment {
+        let cores = (gh * gw) as f64;
+        let bpe = k::BYTES_PER_ELEM;
+        OpAssignment {
+            op: 0,
+            kind: OpKind::Matmul { m, k: kk, n },
+            placement: OpPlacement {
+                off_h: 0,
+                off_w: 0,
+                grid_h: gh,
+                grid_w: gw,
+            },
+            flops_per_core: 2.0 * (m * kk * n) as f64 / cores,
+            in_bytes_per_core: ((m / gh * kk) as f64 + (kk * n / gw) as f64) * bpe,
+            out_bytes_per_core: (m / gh * n / gw) as f64 * bpe,
+            working_set_bytes: ((kk * n / gw) as f64 + (m / gh * n / gw) as f64) * bpe,
+        }
+    }
+
+    #[test]
+    fn big_gemm_is_compute_bound_at_full_util() {
+        // Large dims on a small array: near-full utilization.
+        let c = core(Dataflow::WS, 256, 512, 2048, 1024);
+        let a = gemm_assignment(2048, 2048, 2048, 4, 4);
+        let t = eval_tile(&a, &c, 1.0);
+        assert!(t.utilization > 0.9, "util={}", t.utilization);
+        // cycles ≈ macs / (mac_num · util)
+        let ideal = (a.flops_per_core / 2.0) / 256.0;
+        assert!(t.cycles >= ideal * 0.99);
+        assert!(t.cycles <= ideal * 2.0, "cycles={} ideal={ideal}", t.cycles);
+    }
+
+    #[test]
+    fn small_dims_underutilize() {
+        // k=4 on a WS array with 16+ rows wastes most lanes.
+        let c = core(Dataflow::WS, 1024, 512, 2048, 1024);
+        let a = gemm_assignment(1024, 4, 1024, 2, 2);
+        let t = eval_tile(&a, &c, 1.0);
+        assert!(t.utilization < 0.3, "util={}", t.utilization);
+    }
+
+    #[test]
+    fn dataflow_changes_utilization() {
+        // Tall-skinny GEMM: m huge, k tiny -> OS/IS beat WS.
+        let c_ws = core(Dataflow::WS, 1024, 512, 2048, 1024);
+        let c_os = core(Dataflow::OS, 1024, 512, 2048, 1024);
+        let a = gemm_assignment(4096, 8, 4096, 2, 2);
+        let ws = eval_tile(&a, &c_ws, 1.0);
+        let os = eval_tile(&a, &c_os, 1.0);
+        assert!(os.utilization > ws.utilization);
+        assert!(os.cycles < ws.cycles);
+    }
+
+    #[test]
+    fn tiny_buffer_forces_reload() {
+        let big = core(Dataflow::WS, 256, 2048, 512, 512);
+        let small = core(Dataflow::WS, 256, 32, 512, 512);
+        let a = gemm_assignment(512, 512, 512, 2, 2);
+        let t_big = eval_tile(&a, &big, 1.0);
+        let t_small = eval_tile(&a, &small, 1.0);
+        assert!(t_small.sram_bytes > t_big.sram_bytes * 2.0);
+    }
+
+    #[test]
+    fn bandwidth_bound_when_starved() {
+        // 32-bit SRAM port can't feed 4096 MACs.
+        let c = core(Dataflow::WS, 4096, 2048, 32, 32);
+        let a = gemm_assignment(1024, 1024, 1024, 2, 2);
+        let t = eval_tile(&a, &c, 1.0);
+        let compute_only = (a.flops_per_core / 2.0) / 4096.0;
+        assert!(t.cycles > compute_only * 3.0, "not bw-bound");
+    }
+
+    #[test]
+    fn scale_divides_work() {
+        let c = core(Dataflow::WS, 256, 512, 1024, 512);
+        let a = gemm_assignment(2048, 2048, 2048, 4, 4);
+        let t1 = eval_tile(&a, &c, 1.0);
+        let t4 = eval_tile(&a, &c, 4.0);
+        assert!(t4.cycles < t1.cycles / 2.0);
+    }
+
+    #[test]
+    fn prop_cycles_positive_and_monotone_in_macs() {
+        crate::util::prop::check(
+            "tile cycles positive; more MACs never slower",
+            |r| {
+                let mac = 1usize << r.range(3, 12);
+                let m = 1 << r.range(4, 11);
+                let kk = 1 << r.range(4, 11);
+                let n = 1 << r.range(4, 11);
+                (mac, m, kk, n)
+            },
+            |&(mac, m, kk, n)| {
+                let c1 = core(Dataflow::WS, mac, 512, 2048, 1024);
+                let c2 = core(Dataflow::WS, (mac * 2).min(4096), 512, 2048, 1024);
+                let a = gemm_assignment(m, kk, n, 1, 1);
+                let t1 = eval_tile(&a, &c1, 1.0);
+                let t2 = eval_tile(&a, &c2, 1.0);
+                if t1.cycles <= 0.0 {
+                    return Err("non-positive cycles".into());
+                }
+                if t2.cycles > t1.cycles * 1.001 {
+                    return Err(format!("more MACs slower: {} -> {}", t1.cycles, t2.cycles));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,202 @@
+//! Gaussian-process surrogate (paper §VII: "we utilize the Gaussian
+//! Process as the surrogate model").
+//!
+//! Zero-mean GP with an isotropic RBF kernel over the unit-cube encoding,
+//! jittered Cholesky, and a small log-marginal-likelihood grid search for
+//! the length-scale. Targets are standardized internally.
+
+/// Symmetric positive-definite solve via Cholesky. Matrices are dense
+/// row-major `n × n`.
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (forward) then L^T x = y (backward).
+pub fn chol_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+fn rbf(x: &[f64], y: &[f64], len: f64) -> f64 {
+    let d2: f64 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+    (-0.5 * d2 / (len * len)).exp()
+}
+
+/// Fitted GP over one scalar objective.
+pub struct Gp {
+    xs: Vec<Vec<f64>>,
+    alpha: Vec<f64>,
+    l: Vec<f64>,
+    n: usize,
+    len: f64,
+    y_mean: f64,
+    y_std: f64,
+    noise: f64,
+}
+
+impl Gp {
+    /// Fit with length-scale selected from a small grid by LML.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64]) -> Gp {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let y_mean = crate::util::stats::mean(ys);
+        let y_std = crate::util::stats::std(ys).max(1e-9);
+        let yn: Vec<f64> = ys.iter().map(|y| (y - y_mean) / y_std).collect();
+        let noise = 1e-4;
+
+        let mut best: Option<(f64, f64, Vec<f64>, Vec<f64>)> = None;
+        for &len in &[0.2, 0.4, 0.8, 1.6] {
+            let mut kmat = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    kmat[i * n + j] = rbf(&xs[i], &xs[j], len);
+                }
+                kmat[i * n + i] += noise;
+            }
+            let Some(l) = cholesky(&kmat, n) else { continue };
+            let alpha = chol_solve(&l, n, &yn);
+            // LML = -0.5 yᵀα − Σ log L_ii − n/2 log 2π
+            let fit_term: f64 = yn.iter().zip(&alpha).map(|(y, a)| y * a).sum::<f64>();
+            let logdet: f64 = (0..n).map(|i| l[i * n + i].ln()).sum();
+            let lml = -0.5 * fit_term - logdet;
+            if best.as_ref().map(|b| lml > b.0).unwrap_or(true) {
+                best = Some((lml, len, l, alpha));
+            }
+        }
+        let (_, len, l, alpha) = best.expect("at least one length-scale must factor");
+        Gp {
+            xs: xs.to_vec(),
+            alpha,
+            l,
+            n,
+            len,
+            y_mean,
+            y_std,
+            noise,
+        }
+    }
+
+    /// Posterior mean and standard deviation at `x`.
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let kstar: Vec<f64> = self.xs.iter().map(|xi| rbf(xi, x, self.len)).collect();
+        let mean_n: f64 = kstar.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
+        // var = k(x,x) − vᵀv with v = L⁻¹ k*
+        let mut v = vec![0.0; self.n];
+        for i in 0..self.n {
+            let mut s = kstar[i];
+            for k in 0..i {
+                s -= self.l[i * self.n + k] * v[k];
+            }
+            v[i] = s / self.l[i * self.n + i];
+        }
+        let var_n = (1.0 + self.noise - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (
+            mean_n * self.y_std + self.y_mean,
+            var_n.sqrt() * self.y_std,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let l = cholesky(&a, 2).unwrap();
+        assert_eq!(l, vec![1.0, 0.0, 0.0, 1.0]);
+        let x = chol_solve(&l, 2, &[3.0, 4.0]);
+        assert_eq!(x, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+
+    #[test]
+    fn chol_solve_matches_direct() {
+        // A = [[4,2],[2,3]], b = [2, 5] -> x = A⁻¹b = [-0.5, 2.0]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let l = cholesky(&a, 2).unwrap();
+        let x = chol_solve(&l, 2, &[2.0, 5.0]);
+        assert!((x[0] + 0.5).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gp_interpolates_training_points() {
+        let xs: Vec<Vec<f64>> = vec![vec![0.0, 0.0], vec![0.5, 0.5], vec![1.0, 0.2]];
+        let ys = vec![1.0, 3.0, 2.0];
+        let gp = Gp::fit(&xs, &ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            let (m, s) = gp.predict(x);
+            assert!((m - y).abs() < 0.1, "mean {m} vs {y}");
+            assert!(s < 0.2, "std {s} at training point");
+        }
+    }
+
+    #[test]
+    fn gp_uncertainty_grows_away_from_data() {
+        let xs: Vec<Vec<f64>> = vec![vec![0.0; 4], vec![0.1; 4]];
+        let ys = vec![0.0, 0.1];
+        let gp = Gp::fit(&xs, &ys);
+        let (_, s_near) = gp.predict(&[0.05; 4]);
+        let (_, s_far) = gp.predict(&[0.9; 4]);
+        assert!(s_far > s_near);
+    }
+
+    #[test]
+    fn gp_learns_smooth_function() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<Vec<f64>> = (0..40)
+            .map(|_| (0..3).map(|_| rng.f64()).collect())
+            .collect();
+        let f = |x: &[f64]| (2.0 * x[0] - x[1]).sin() + x[2];
+        let ys: Vec<f64> = xs.iter().map(|x| f(x)).collect();
+        let gp = Gp::fit(&xs, &ys);
+        let mut err = 0.0;
+        for _ in 0..50 {
+            let x: Vec<f64> = (0..3).map(|_| rng.f64()).collect();
+            let (m, _) = gp.predict(&x);
+            err += (m - f(&x)).abs();
+        }
+        assert!(err / 50.0 < 0.25, "avg err {}", err / 50.0);
+    }
+}

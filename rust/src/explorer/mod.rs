@@ -1,0 +1,10 @@
+//! Space Explorer (paper §VII): Gaussian-process surrogates ([`gp`]),
+//! Pareto/hypervolume/EHVI machinery ([`pareto`]), and the explorers —
+//! random search, MOBO, and the paper's multi-fidelity MFMOBO ([`mobo`]).
+
+pub mod gp;
+pub mod mobo;
+pub mod pareto;
+
+pub use mobo::{mfmobo, mobo, random_search, BoConfig, DesignEval, MfConfig, Trace, TracePoint};
+pub use pareto::{hypervolume, pareto_indices, Objective};

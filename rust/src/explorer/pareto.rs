@@ -1,0 +1,208 @@
+//! Pareto utilities for the 2-objective (throughput ↑, power ↓) problem:
+//! non-dominated filtering, 2-D hypervolume, and Monte-Carlo EHVI (paper
+//! §VII: EHVI acquisition with reference point (throughput 0, power =
+//! peak power threshold)).
+
+use crate::util::rng::Rng;
+
+/// One objective vector: maximize `throughput`, minimize `power_w`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objective {
+    pub throughput: f64,
+    pub power_w: f64,
+}
+
+impl Objective {
+    /// `self` dominates `other` (≥ throughput, ≤ power, strict somewhere).
+    pub fn dominates(&self, other: &Objective) -> bool {
+        self.throughput >= other.throughput
+            && self.power_w <= other.power_w
+            && (self.throughput > other.throughput || self.power_w < other.power_w)
+    }
+}
+
+/// Indices of the non-dominated subset.
+pub fn pareto_indices(objs: &[Objective]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| {
+            !objs
+                .iter()
+                .enumerate()
+                .any(|(j, o)| j != i && o.dominates(&objs[i]))
+        })
+        .collect()
+}
+
+/// 2-D hypervolume dominated w.r.t. reference `(0 throughput, ref_power)`:
+/// the area between the staircase and the reference corner. Points with
+/// power above `ref_power` or non-positive throughput contribute nothing.
+pub fn hypervolume(objs: &[Objective], ref_power: f64) -> f64 {
+    let mut front: Vec<Objective> = pareto_indices(objs)
+        .into_iter()
+        .map(|i| objs[i])
+        .filter(|o| o.throughput > 0.0 && o.power_w < ref_power)
+        .collect();
+    // Sort by power ascending; throughput then descends along the front.
+    front.sort_by(|a, b| a.power_w.partial_cmp(&b.power_w).unwrap());
+    let mut hv = 0.0;
+    let mut prev_t = 0.0;
+    // Sweep from the lowest-power point: each point adds a rectangle of
+    // width (ref_power - power) and height (throughput - prev best).
+    for o in &front {
+        if o.throughput > prev_t {
+            hv += (ref_power - o.power_w) * (o.throughput - prev_t);
+            prev_t = o.throughput;
+        }
+    }
+    hv
+}
+
+/// Monte-Carlo Expected Hypervolume Improvement for a candidate with
+/// independent Gaussian posteriors on both objectives. Fixed-seed common
+/// random numbers keep the acquisition deterministic within an iteration.
+pub struct EhviEstimator {
+    /// Standard-normal draws shared by all candidates of one iteration.
+    draws: Vec<(f64, f64)>,
+}
+
+impl EhviEstimator {
+    pub fn new(samples: usize, rng: &mut Rng) -> EhviEstimator {
+        EhviEstimator {
+            draws: (0..samples).map(|_| (rng.normal(), rng.normal())).collect(),
+        }
+    }
+
+    /// EHVI of a candidate N(μ_t, σ_t) × N(μ_p, σ_p) against the current
+    /// front. `base_hv` = hypervolume(front) (precomputed by the caller).
+    pub fn ehvi(
+        &self,
+        front: &[Objective],
+        base_hv: f64,
+        ref_power: f64,
+        mu_t: f64,
+        sigma_t: f64,
+        mu_p: f64,
+        sigma_p: f64,
+    ) -> f64 {
+        let mut total = 0.0;
+        let mut buf: Vec<Objective> = Vec::with_capacity(front.len() + 1);
+        for &(z1, z2) in &self.draws {
+            let cand = Objective {
+                throughput: mu_t + sigma_t * z1,
+                power_w: mu_p + sigma_p * z2,
+            };
+            buf.clear();
+            buf.extend_from_slice(front);
+            buf.push(cand);
+            let hv = hypervolume(&buf, ref_power);
+            total += (hv - base_hv).max(0.0);
+        }
+        total / self.draws.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn o(t: f64, p: f64) -> Objective {
+        Objective {
+            throughput: t,
+            power_w: p,
+        }
+    }
+
+    #[test]
+    fn dominance() {
+        assert!(o(2.0, 1.0).dominates(&o(1.0, 2.0)));
+        assert!(!o(1.0, 1.0).dominates(&o(1.0, 1.0)));
+        assert!(!o(2.0, 2.0).dominates(&o(1.0, 1.0)));
+    }
+
+    #[test]
+    fn pareto_filtering() {
+        let objs = vec![o(1.0, 1.0), o(2.0, 2.0), o(0.5, 0.5), o(1.5, 3.0)];
+        let idx = pareto_indices(&objs);
+        // (1,1),(2,2),(0.5,0.5) are mutually non-dominated; (1.5,3) is
+        // dominated by (2,2).
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn hypervolume_single_point() {
+        // Point (t=2, p=4) vs ref power 10: rect (10-4)*2 = 12.
+        assert!((hypervolume(&[o(2.0, 4.0)], 10.0) - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_staircase() {
+        // Two points: (3, 8) and (1, 2), ref 10.
+        // Sweep: (1,2): (10-2)*1 = 8; (3,8): (10-8)*(3-1) = 4. Total 12.
+        let hv = hypervolume(&[o(3.0, 8.0), o(1.0, 2.0)], 10.0);
+        assert!((hv - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_monotone_in_points() {
+        let base = vec![o(2.0, 5.0)];
+        let more = vec![o(2.0, 5.0), o(1.0, 1.0)];
+        assert!(hypervolume(&more, 10.0) > hypervolume(&base, 10.0));
+        // Dominated points add nothing.
+        let dominated = vec![o(2.0, 5.0), o(1.0, 6.0)];
+        assert_eq!(hypervolume(&dominated, 10.0), hypervolume(&base, 10.0));
+    }
+
+    #[test]
+    fn out_of_reference_ignored() {
+        assert_eq!(hypervolume(&[o(2.0, 12.0)], 10.0), 0.0);
+        assert_eq!(hypervolume(&[o(-1.0, 5.0)], 10.0), 0.0);
+    }
+
+    #[test]
+    fn ehvi_prefers_promising_candidates() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let est = EhviEstimator::new(128, &mut rng);
+        let front = vec![o(2.0, 5.0)];
+        let base = hypervolume(&front, 10.0);
+        // Candidate clearly beyond the front vs clearly dominated.
+        let good = est.ehvi(&front, base, 10.0, 4.0, 0.1, 3.0, 0.1);
+        let bad = est.ehvi(&front, base, 10.0, 1.0, 0.1, 8.0, 0.1);
+        assert!(good > bad * 10.0, "good={good} bad={bad}");
+    }
+
+    #[test]
+    fn ehvi_values_uncertainty() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let est = EhviEstimator::new(256, &mut rng);
+        let front = vec![o(2.0, 5.0)];
+        let base = hypervolume(&front, 10.0);
+        // Same mean as an existing point: only σ creates improvement mass.
+        let certain = est.ehvi(&front, base, 10.0, 2.0, 1e-6, 5.0, 1e-6);
+        let uncertain = est.ehvi(&front, base, 10.0, 2.0, 1.0, 5.0, 1.0);
+        assert!(uncertain > certain + 1e-9);
+    }
+
+    #[test]
+    fn prop_hv_nonnegative_and_bounded() {
+        crate::util::prop::check(
+            "hypervolume bounded by ref box",
+            |r| {
+                let n = r.range(1, 10);
+                (0..n)
+                    .map(|_| o(r.uniform(0.0, 5.0), r.uniform(0.0, 12.0)))
+                    .collect::<Vec<_>>()
+            },
+            |objs| {
+                let hv = hypervolume(objs, 10.0);
+                let tmax = objs.iter().fold(0.0f64, |m, o| m.max(o.throughput));
+                if hv < 0.0 {
+                    return Err("negative".into());
+                }
+                if hv > 10.0 * tmax + 1e-9 {
+                    return Err(format!("hv {hv} exceeds box {}", 10.0 * tmax));
+                }
+                Ok(())
+            },
+        );
+    }
+}

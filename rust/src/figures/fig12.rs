@@ -1,0 +1,130 @@
+//! Fig. 12 — inference speedup under heterogeneity levels (paper §IX-E):
+//! core / reticle / wafer-granularity prefill-decode splits vs the
+//! homogeneous design, across decode-stage stacking bandwidths. The paper's
+//! takeaway 5: reticle-level heterogeneity gives the best tradeoff.
+
+use crate::arch::{HeteroConfig, HeteroGranularity, MemoryKind};
+use crate::design_space::{self, stack_capacity_gb};
+use crate::eval::{eval_inference, Analytical, SystemConfig};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workload::models;
+
+pub struct Fig12Row {
+    pub granularity: HeteroGranularity,
+    pub decode_bw: f64,
+    pub prefill_ratio: f64,
+    pub tokens_per_sec: f64,
+    pub speedup_vs_homog: f64,
+}
+
+pub fn fig12_hetero_speedup(seed: u64) -> (Table, Vec<Fig12Row>) {
+    let spec = models::benchmarks()[7].clone(); // GPT-175B
+    let batch = 32;
+    let mut rng = Rng::new(seed);
+
+    // Base stacked-memory design for the decode stage comparison.
+    let base = sample_stacked(&mut rng, 1.0).expect("base design");
+    let homog_sys = SystemConfig::area_matched(base.clone(), spec.gpu_num);
+    let homog = eval_inference(&spec, &homog_sys, batch, false, &Analytical)
+        .expect("homogeneous eval");
+
+    let mut rows = Vec::new();
+    for gran in [
+        HeteroGranularity::None,
+        HeteroGranularity::Core,
+        HeteroGranularity::Reticle,
+        HeteroGranularity::Wafer,
+    ] {
+        for &decode_bw in &[1.0, 2.0, 4.0] {
+            // Optimize the prefill ratio per configuration (§IX-E: "By
+            // adjusting the resource allocation between the two stages, we
+            // can achieve the optimal overall throughput").
+            let mut best: Option<Fig12Row> = None;
+            for &ratio in &[0.3, 0.4, 0.5, 0.6, 0.7] {
+                let mut point = base.point;
+                point.hetero = HeteroConfig {
+                    granularity: gran,
+                    prefill_ratio: ratio,
+                    decode_stack_bw: decode_bw,
+                };
+                let Ok(v) = design_space::validate(&point) else {
+                    continue;
+                };
+                let sys = SystemConfig::area_matched(v, spec.gpu_num);
+                let Some(r) = eval_inference(&spec, &sys, batch, false, &Analytical) else {
+                    continue;
+                };
+                let row = Fig12Row {
+                    granularity: gran,
+                    decode_bw,
+                    prefill_ratio: ratio,
+                    tokens_per_sec: r.tokens_per_sec,
+                    speedup_vs_homog: r.tokens_per_sec / homog.tokens_per_sec,
+                };
+                if best
+                    .as_ref()
+                    .map(|b| row.tokens_per_sec > b.tokens_per_sec)
+                    .unwrap_or(true)
+                {
+                    best = Some(row);
+                }
+                if gran == HeteroGranularity::None {
+                    break; // ratio is meaningless when homogeneous
+                }
+            }
+            if let Some(b) = best {
+                rows.push(b);
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig. 12 — GPT-175B inference speedup with heterogeneity",
+        &["granularity", "decode bw", "best prefill ratio", "tokens/s", "speedup vs homog"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.granularity.name().to_string(),
+            format!("{}", r.decode_bw),
+            format!("{:.1}", r.prefill_ratio),
+            format!("{:.0}", r.tokens_per_sec),
+            format!("{:.2}x", r.speedup_vs_homog),
+        ]);
+    }
+    (t, rows)
+}
+
+fn sample_stacked(rng: &mut Rng, bw: f64) -> Option<crate::design_space::Validated> {
+    for _ in 0..400 {
+        let mut p = design_space::sample_raw(rng);
+        p.wsc.reticle.memory = MemoryKind::Stacking {
+            bw_tbps_per_100mm2: bw,
+            capacity_gb: stack_capacity_gb(bw),
+        };
+        if let Ok(v) = design_space::validate(&p) {
+            return Some(v);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_smoke() {
+        let (t, rows) = fig12_hetero_speedup(21);
+        assert!(!rows.is_empty());
+        assert!(t.render().contains("Fig. 12"));
+        // All four granularities represented.
+        for g in HeteroGranularity::ALL {
+            assert!(
+                rows.iter().any(|r| r.granularity == g),
+                "missing {}",
+                g.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Fig. 13 — the GPT-175B training design space: scatter of sampled
+//! configurations (off-chip vs stacked DRAM), Pareto frontiers, and the
+//! §IX-F comparisons against H100 / WSE2-like / Dojo-like baselines under
+//! equal area.
+
+use crate::arch::MemoryKind;
+use crate::baselines;
+use crate::coordinator::{ref_power_for, TrainingObjective};
+use crate::design_space;
+use crate::eval::{eval_training, Analytical, SystemConfig};
+use crate::explorer::{hypervolume, pareto_indices, Objective};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workload::models;
+
+pub struct Fig13Point {
+    pub stacking: bool,
+    pub objective: Objective,
+    pub summary: String,
+}
+
+pub struct Fig13Result {
+    pub points: Vec<Fig13Point>,
+    /// (name, objective) for each baseline.
+    pub baselines: Vec<(String, Objective)>,
+    /// Best WSC vs each baseline: (perf gain at <= power, power saving at >= perf).
+    pub comparisons: Vec<(String, f64, f64)>,
+}
+
+pub fn fig13_design_space(bi: usize, samples: usize, seed: u64) -> (Table, Fig13Result) {
+    let spec = models::benchmarks()[bi].clone();
+    let mut rng = Rng::new(seed);
+    let mut points = Vec::new();
+
+    // Random scatter over the space (the blue/red dots of Fig. 13)...
+    for _ in 0..samples {
+        let Some(v) = design_space::sample_valid(&mut rng, 200) else {
+            continue;
+        };
+        let sys = SystemConfig::area_matched(v.clone(), spec.gpu_num);
+        let Some(r) = eval_training(&spec, &sys, &Analytical) else {
+            continue;
+        };
+        points.push(Fig13Point {
+            stacking: matches!(v.point.wsc.reticle.memory, MemoryKind::Stacking { .. }),
+            objective: Objective {
+                throughput: r.tokens_per_sec,
+                power_w: r.power_w,
+            },
+            summary: v.point.wsc.summary(),
+        });
+    }
+    // ...plus explorer-refined points (the paper's Pareto set comes from
+    // the iterative search, not raw sampling).
+    let obj = TrainingObjective::analytical(spec.clone());
+    let trace = crate::explorer::mobo(
+        &obj,
+        &crate::explorer::BoConfig {
+            iters: samples / 2,
+            init: 6,
+            pool: 48,
+            mc_samples: 32,
+            ref_power: ref_power_for(&spec),
+            seed,
+            sample_tries: 3000,
+        },
+    );
+    for p in &trace.points {
+        points.push(Fig13Point {
+            stacking: p.point.wsc.reticle.memory.is_stacking(),
+            objective: p.objective,
+            summary: p.point.wsc.summary(),
+        });
+    }
+
+    // Baselines under the same area budget.
+    let mut baseline_objs = Vec::new();
+    if let Some(g) = baselines::h100_train_eval(&spec, spec.gpu_num) {
+        baseline_objs.push((
+            "H100 cluster".to_string(),
+            Objective {
+                throughput: g.tokens_per_sec,
+                power_w: g.power_w,
+            },
+        ));
+    }
+    for (name, p) in [
+        ("WSE2-like", baselines::wse2_like()),
+        ("Dojo-like", baselines::dojo_like()),
+    ] {
+        let v = baselines::force_validate(&p);
+        let sys = SystemConfig::area_matched(v, spec.gpu_num);
+        if let Some(r) = eval_training(&spec, &sys, &Analytical) {
+            baseline_objs.push((
+                name.to_string(),
+                Objective {
+                    throughput: r.tokens_per_sec,
+                    power_w: r.power_w,
+                },
+            ));
+        }
+    }
+
+    // §IX-F-style comparisons: best searched WSC vs each baseline.
+    let objs: Vec<Objective> = points.iter().map(|p| p.objective).collect();
+    let front: Vec<Objective> = pareto_indices(&objs).into_iter().map(|i| objs[i]).collect();
+    let mut comparisons = Vec::new();
+    for (name, b) in &baseline_objs {
+        // Perf gain at the same-or-lower power.
+        let perf_gain = front
+            .iter()
+            .filter(|o| o.power_w <= b.power_w * 1.001)
+            .map(|o| o.throughput / b.throughput - 1.0)
+            .fold(f64::NEG_INFINITY, f64::max);
+        // Power saving at the same-or-higher perf.
+        let power_saving = front
+            .iter()
+            .filter(|o| o.throughput >= b.throughput * 0.999)
+            .map(|o| 1.0 - o.power_w / b.power_w)
+            .fold(f64::NEG_INFINITY, f64::max);
+        comparisons.push((name.clone(), perf_gain, power_saving));
+    }
+
+    let ref_power = ref_power_for(&spec);
+    let hv_stack = hypervolume(
+        &points
+            .iter()
+            .filter(|p| p.stacking)
+            .map(|p| p.objective)
+            .collect::<Vec<_>>(),
+        ref_power,
+    );
+    let hv_off = hypervolume(
+        &points
+            .iter()
+            .filter(|p| !p.stacking)
+            .map(|p| p.objective)
+            .collect::<Vec<_>>(),
+        ref_power,
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "Fig. 13 — {} training design space ({} pts; HV stacking {:.3e} vs off-chip {:.3e})",
+            spec.name,
+            points.len(),
+            hv_stack,
+            hv_off
+        ),
+        &["entry", "tokens/s", "power(kW)", "note"],
+    );
+    for (name, b) in &baseline_objs {
+        t.row(&[
+            name.clone(),
+            format!("{:.0}", b.throughput),
+            format!("{:.0}", b.power_w / 1e3),
+            "baseline".to_string(),
+        ]);
+    }
+    let mut front_pts: Vec<&Fig13Point> = pareto_indices(&objs)
+        .into_iter()
+        .map(|i| &points[i])
+        .collect();
+    front_pts.sort_by(|a, b| {
+        b.objective
+            .throughput
+            .partial_cmp(&a.objective.throughput)
+            .unwrap()
+    });
+    for p in front_pts.iter().take(8) {
+        t.row(&[
+            if p.stacking { "pareto(stack)" } else { "pareto(offchip)" }.to_string(),
+            format!("{:.0}", p.objective.throughput),
+            format!("{:.0}", p.objective.power_w / 1e3),
+            p.summary.clone(),
+        ]);
+    }
+    for (name, gain, saving) in &comparisons {
+        t.row(&[
+            format!("vs {name}"),
+            format!("{:+.1}% perf", gain * 100.0),
+            format!("{:+.1}% power", saving * 100.0),
+            "pareto vs baseline".to_string(),
+        ]);
+    }
+
+    (
+        t,
+        Fig13Result {
+            points,
+            baselines: baseline_objs,
+            comparisons,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_smoke() {
+        let (t, r) = fig13_design_space(0, 6, 17);
+        assert!(!r.points.is_empty());
+        assert!(!r.baselines.is_empty());
+        assert!(t.render().contains("Fig. 13"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Fig. 7 — evaluation speedup and accuracy: CA simulation vs the
+//! analytical model vs GNN-based evaluation, across workload scales.
+//!
+//! For each benchmark workload we generate a set of random WSC chunk
+//! configurations, measure per-evaluation wall time of each method, and
+//! compare chunk-latency estimates against CA ground truth (error % and
+//! Kendall's τ — the Fig. 7b metrics).
+
+use crate::arch::{CoreConfig, Dataflow};
+use crate::bench;
+use crate::compiler::compile_chunk;
+use crate::eval::op_level::{chunk_latency, NocModel};
+use crate::eval::NocEstimator;
+use crate::noc_sim;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::Table;
+use crate::workload::{models, OpGraph, Phase};
+
+pub struct Fig7Row {
+    pub benchmark: String,
+    pub ca_ms: f64,
+    pub analytical_ms: f64,
+    pub gnn_ms: f64,
+    pub ana_err: f64,
+    pub gnn_err: f64,
+    pub ana_kt: f64,
+    pub gnn_kt: f64,
+}
+
+/// Run the comparison over `n_benchmarks` Table II models (small end) with
+/// `configs_per` random configurations each. `gnn` may be `None` (rows
+/// report the analytical model only — used before artifacts exist).
+pub fn fig7_eval_comparison(
+    n_benchmarks: usize,
+    configs_per: usize,
+    gnn: Option<&dyn NocEstimator>,
+    seed: u64,
+) -> (Table, Vec<Fig7Row>) {
+    let specs = models::benchmarks();
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(seed);
+
+    for spec in specs.iter().take(n_benchmarks) {
+        let mut ca_lat = Vec::new();
+        let mut ana_lat = Vec::new();
+        let mut gnn_lat = Vec::new();
+        let mut ca_time = Vec::new();
+        let mut ana_time = Vec::new();
+        let mut gnn_time = Vec::new();
+
+        for _ in 0..configs_per {
+            // Random small chunk config (the op-level evaluation scale).
+            let core = CoreConfig {
+                dataflow: *rng.choose(&Dataflow::ALL),
+                mac_num: *rng.choose(&[128usize, 256, 512, 1024]),
+                buffer_kb: 128,
+                buffer_bw_bits: 256,
+                noc_bw_bits: *rng.choose(&[128usize, 256, 512]),
+            };
+            let h = rng.range(3, 8);
+            let w = rng.range(3, 8);
+            let mut small = spec.clone();
+            // Scale the per-chunk sequence with model size so bigger
+            // benchmarks stress the NoC more (Fig. 7a's x-axis).
+            small.seq_len = 32 + 16 * (spec.layers / 24).min(8);
+            let g = OpGraph::transformer_chunk(&small, 1, 1, 8, Phase::Prefill, false);
+            let chunk = compile_chunk(&g, h, w, &core);
+
+            // CA ground truth.
+            let (stats_ca, t_ca) = bench::time_once(|| {
+                noc_sim::simulate_chunk(
+                    &chunk,
+                    core.noc_bw_bits,
+                    &|op| {
+                        crate::eval::tile::eval_tile(&chunk.assignments[op], &core, 1.0)
+                            .cycles
+                            .ceil() as u64
+                    },
+                    300_000_000,
+                )
+            });
+            ca_lat.push(stats_ca.cycles as f64);
+            ca_time.push(t_ca);
+
+            // Analytical.
+            let (r_ana, t_ana) =
+                bench::time_once(|| chunk_latency(&chunk, &core, 1.0, NocModel::Analytical));
+            ana_lat.push(r_ana.cycles);
+            ana_time.push(t_ana);
+
+            // GNN (Eq. 6 reconstruction from predicted waits).
+            if let Some(gnn) = gnn {
+                let (r_gnn, t_gnn) = bench::time_once(|| {
+                    match gnn.link_waits(&chunk, &core) {
+                        Some(waits) => {
+                            chunk_latency(&chunk, &core, 1.0, NocModel::LinkWaits(&waits))
+                        }
+                        None => chunk_latency(&chunk, &core, 1.0, NocModel::Analytical),
+                    }
+                });
+                gnn_lat.push(r_gnn.cycles);
+                gnn_time.push(t_gnn);
+            }
+        }
+
+        let has_gnn = !gnn_lat.is_empty();
+        rows.push(Fig7Row {
+            benchmark: spec.name.clone(),
+            ca_ms: stats::mean(&ca_time) * 1e3,
+            analytical_ms: stats::mean(&ana_time) * 1e3,
+            gnn_ms: if has_gnn { stats::mean(&gnn_time) * 1e3 } else { f64::NAN },
+            ana_err: stats::mape(&ana_lat, &ca_lat),
+            gnn_err: if has_gnn { stats::mape(&gnn_lat, &ca_lat) } else { f64::NAN },
+            ana_kt: stats::kendall_tau(&ana_lat, &ca_lat),
+            gnn_kt: if has_gnn {
+                stats::kendall_tau(&gnn_lat, &ca_lat)
+            } else {
+                f64::NAN
+            },
+        });
+    }
+
+    let mut t = Table::new(
+        "Fig. 7 — evaluation speedup (a) and accuracy (b) vs CA simulation",
+        &[
+            "benchmark",
+            "CA ms",
+            "ana ms",
+            "gnn ms",
+            "speedup(ana)",
+            "speedup(gnn)",
+            "err%(ana)",
+            "err%(gnn)",
+            "KT(ana)",
+            "KT(gnn)",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.benchmark.clone(),
+            format!("{:.2}", r.ca_ms),
+            format!("{:.4}", r.analytical_ms),
+            format!("{:.3}", r.gnn_ms),
+            format!("{:.0}x", r.ca_ms / r.analytical_ms),
+            format!("{:.0}x", r.ca_ms / r.gnn_ms),
+            format!("{:.1}", r.ana_err * 100.0),
+            format!("{:.1}", r.gnn_err * 100.0),
+            format!("{:.2}", r.ana_kt),
+            format!("{:.2}", r.gnn_kt),
+        ]);
+    }
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_smoke_analytical_only() {
+        let (t, rows) = fig7_eval_comparison(1, 3, None, 5);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        // The analytical model must be at least 10x faster than CA sim.
+        assert!(r.ca_ms / r.analytical_ms > 10.0, "speedup too small");
+        // And rank-correlate positively with ground truth.
+        assert!(r.ana_kt > 0.0, "kt={}", r.ana_kt);
+        assert!(t.render().contains("Fig. 7"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Fig. 9 — core-granularity tradeoffs and Fig. 10 — reticle-granularity
+//! tradeoffs (paper §IX-A/B/C).
+//!
+//! For each core compute capability (mac grid point) we sample the other
+//! parameters, keep validated points, evaluate training, and report the
+//! best throughput and best (lowest) EDP — split by integration style for
+//! the Fig. 9 die-stitching vs InFO-SoW comparison. Fig. 10 buckets by
+//! reticle peak FLOPS and reports the reticle-area fraction of optima.
+
+use crate::arch::IntegrationStyle;
+use crate::design_space::{self, candidates, DesignPoint};
+use crate::eval::{eval_training, SystemConfig};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workload::models;
+
+pub struct Fig9Row {
+    pub core_gflops: f64,
+    pub style: IntegrationStyle,
+    pub best_throughput: f64,
+    pub best_edp: f64,
+    pub valid_points: usize,
+}
+
+/// Sample `per_grid` configs for each (mac_num, style), evaluate training
+/// on benchmark `bi`, keep the best.
+pub fn fig9_core_granularity(bi: usize, per_grid: usize, seed: u64) -> (Table, Vec<Fig9Row>) {
+    let spec = models::benchmarks()[bi].clone();
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+
+    for &mac in &candidates::MAC_NUM {
+        for style in IntegrationStyle::ALL {
+            let mut best_t = 0.0f64;
+            let mut best_edp = f64::INFINITY;
+            let mut valid = 0usize;
+            for _ in 0..per_grid {
+                let Some(p) = sample_with(&mut rng, |p: &mut DesignPoint| {
+                    p.wsc.reticle.core.mac_num = mac;
+                    p.wsc.integration = style;
+                }) else {
+                    continue;
+                };
+                valid += 1;
+                let sys = SystemConfig::area_matched(p.clone(), spec.gpu_num);
+                if let Some(r) = eval_training(&spec, &sys, &crate::eval::Analytical) {
+                    best_t = best_t.max(r.tokens_per_sec);
+                    best_edp = best_edp.min(r.edp);
+                }
+            }
+            rows.push(Fig9Row {
+                core_gflops: 2.0 * mac as f64, // GFLOPS at 1 GHz
+                style,
+                best_throughput: best_t,
+                best_edp,
+                valid_points: valid,
+            });
+        }
+    }
+
+    let mut t = Table::new(
+        &format!("Fig. 9 — core granularity ({}, training)", spec.name),
+        &["core GFLOPS", "integration", "best tokens/s", "best EDP (J*s)", "valid pts"],
+    );
+    for r in &rows {
+        t.row(&[
+            format!("{:.0}", r.core_gflops),
+            r.style.name().to_string(),
+            format!("{:.1}", r.best_throughput),
+            if r.best_edp.is_finite() {
+                format!("{:.3e}", r.best_edp)
+            } else {
+                "-".to_string()
+            },
+            r.valid_points.to_string(),
+        ]);
+    }
+    (t, rows)
+}
+
+fn sample_with(
+    rng: &mut Rng,
+    fix: impl Fn(&mut DesignPoint),
+) -> Option<crate::design_space::Validated> {
+    for _ in 0..300 {
+        let mut p = design_space::sample_raw(rng);
+        fix(&mut p);
+        if let Ok(v) = design_space::validate(&p) {
+            return Some(v);
+        }
+    }
+    None
+}
+
+pub struct Fig10Row {
+    pub reticle_tflops: f64,
+    pub core_gflops: f64,
+    pub array: (usize, usize),
+    pub throughput: f64,
+    pub area_fraction: f64,
+}
+
+/// Fig. 10: sweep (core granularity × array size) under the reticle area
+/// constraint; report throughput per reticle granularity and the area
+/// fraction of the best designs (paper: optima at 50–60 % of the limit).
+pub fn fig10_reticle_granularity(bi: usize, seed: u64) -> (Table, Vec<Fig10Row>) {
+    let spec = models::benchmarks()[bi].clone();
+    let mut rng = Rng::new(seed);
+    let mut rows: Vec<Fig10Row> = Vec::new();
+
+    for &mac in &[128usize, 256, 512, 1024, 2048] {
+        for &dim in &[4usize, 6, 8, 10, 12, 14, 16, 20] {
+            let Some(v) = sample_with(&mut rng, |p| {
+                p.wsc.reticle.core.mac_num = mac;
+                p.wsc.reticle.array_h = dim;
+                p.wsc.reticle.array_w = dim;
+            }) else {
+                continue;
+            };
+            let sys = SystemConfig::area_matched(v.clone(), spec.gpu_num);
+            let Some(r) = eval_training(&spec, &sys, &crate::eval::Analytical) else {
+                continue;
+            };
+            rows.push(Fig10Row {
+                reticle_tflops: v.point.wsc.reticle.peak_flops() / 1e12,
+                core_gflops: 2.0 * mac as f64,
+                array: (dim, dim),
+                throughput: r.tokens_per_sec,
+                area_fraction: v.phys.reticle.area_mm2
+                    / crate::arch::constants::RETICLE_AREA_MM2,
+            });
+        }
+    }
+    rows.sort_by(|a, b| a.reticle_tflops.partial_cmp(&b.reticle_tflops).unwrap());
+
+    let mut t = Table::new(
+        &format!("Fig. 10 — reticle granularity ({}, training)", spec.name),
+        &["reticle TFLOPS", "core GFLOPS", "array", "tokens/s", "reticle area frac"],
+    );
+    for r in &rows {
+        t.row(&[
+            format!("{:.1}", r.reticle_tflops),
+            format!("{:.0}", r.core_gflops),
+            format!("{}x{}", r.array.0, r.array.1),
+            format!("{:.1}", r.throughput),
+            format!("{:.2}", r.area_fraction),
+        ]);
+    }
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_smoke() {
+        let (_, rows) = fig9_core_granularity(0, 2, 3);
+        assert_eq!(rows.len(), candidates::MAC_NUM.len() * 2);
+        assert!(rows.iter().any(|r| r.best_throughput > 0.0));
+    }
+
+    #[test]
+    fn fig10_smoke() {
+        let (_, rows) = fig10_reticle_granularity(0, 3);
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.area_fraction <= 1.0 + 1e-9);
+        }
+    }
+}

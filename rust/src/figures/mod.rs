@@ -1,0 +1,18 @@
+//! Figure/table regenerators (paper §VIII–IX): each function reproduces
+//! one evaluation artifact of the paper as a [`Table`] (+ JSON rows via the
+//! bench harness). Benches under `rust/benches/` are thin wrappers; tests
+//! smoke each generator at miniature scale.
+
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+
+pub use fig7::fig7_eval_comparison;
+pub use fig8::fig8_explorer_comparison;
+pub use fig9::{fig10_reticle_granularity, fig9_core_granularity};
+pub use fig11::fig11_inference_speedup;
+pub use fig12::fig12_hetero_speedup;
+pub use fig13::fig13_design_space;

@@ -1,0 +1,30 @@
+//! # Theseus
+//!
+//! Reproduction of *"Theseus: Towards High-Efficiency Wafer-Scale Chip
+//! Design Space Exploration for Large Language Models"* (Zhu et al., 2024)
+//! as a three-layer Rust + JAX + Pallas stack — see DESIGN.md for the
+//! system inventory and the per-experiment index.
+//!
+//! Layer 3 (this crate) is the whole DSE framework: design-space
+//! construction and validation ([`design_space`], [`arch`], [`yield_model`],
+//! [`components`]), the workload compiler ([`workload`], [`compiler`]), the
+//! hierarchical evaluation engine ([`eval`]) backed by a cycle-accurate NoC
+//! simulator ([`noc_sim`]) and an AOT-compiled GNN congestion model executed
+//! via PJRT ([`runtime`]), and the multi-fidelity multi-objective Bayesian
+//! explorer ([`explorer`]) orchestrated by [`coordinator`].
+
+pub mod arch;
+pub mod baselines;
+pub mod bench;
+pub mod compiler;
+pub mod components;
+pub mod design_space;
+pub mod coordinator;
+pub mod eval;
+pub mod explorer;
+pub mod figures;
+pub mod noc_sim;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+pub mod yield_model;

@@ -1,0 +1,175 @@
+//! `theseus` CLI — leader entrypoint for the DSE framework.
+//!
+//! Subcommands:
+//!   gen-noc-dataset   CA-simulate random chunks -> GNN training JSON
+//!   models            print the Table II benchmark LLMs
+//!   space             design-space summary (cardinality, sample validity)
+//!   eval              evaluate one design point on one benchmark
+//!   dse               run the explorer (random | mobo | mfmobo)
+//!   baselines         characterize H100/WSE2/Dojo reference designs
+
+use theseus::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    match args.command() {
+        Some("gen-noc-dataset") => cmd_gen_dataset(&args),
+        Some("models") => cmd_models(),
+        Some("space") => cmd_space(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("baselines") => cmd_baselines(),
+        _ => {
+            eprintln!(
+                "usage: theseus <gen-noc-dataset|models|space|eval|dse|baselines> [--flags]\n\
+                 see README.md for the full flag reference"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_gen_dataset(args: &Args) {
+    let out = args.str("out", "artifacts/noc_dataset.json");
+    let n = args.usize(
+        "n",
+        theseus::util::cli::env_usize("THESEUS_DATASET_N", 256),
+    );
+    let seed = args.u64("seed", 2024);
+    eprintln!("generating {n} CA-simulated samples (seed {seed}) ...");
+    let t0 = std::time::Instant::now();
+    let doc = theseus::noc_sim::dataset::gen_dataset(n, seed);
+    std::fs::write(&out, doc.to_string()).expect("write dataset");
+    eprintln!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+fn cmd_models() {
+    use theseus::util::table::Table;
+    let mut t = Table::new(
+        "Table II — benchmark LLMs",
+        &["no", "name", "params(B)", "layers", "hidden", "heads", "gpus", "batch"],
+    );
+    for (i, m) in theseus::workload::models::benchmarks().iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            m.name.clone(),
+            format!("{:.1}", m.param_count() / 1e9),
+            m.layers.to_string(),
+            m.hidden.to_string(),
+            m.heads.to_string(),
+            m.gpu_num.to_string(),
+            m.batch_size.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_space(args: &Args) {
+    use theseus::design_space;
+    use theseus::util::rng::Rng;
+    println!(
+        "design-space grid cardinality: {:.3e} configurations",
+        design_space::cardinality()
+    );
+    let trials = args.usize("trials", 2000);
+    let mut rng = Rng::new(args.u64("seed", 1));
+    let mut ok = 0usize;
+    let mut why = std::collections::BTreeMap::<String, usize>::new();
+    for _ in 0..trials {
+        let p = design_space::sample_raw(&mut rng);
+        match design_space::validate(&p) {
+            Ok(_) => ok += 1,
+            Err(e) => {
+                let key = format!("{e}")
+                    .split([':', '('])
+                    .next()
+                    .unwrap_or("other")
+                    .trim()
+                    .to_string();
+                *why.entry(key).or_default() += 1;
+            }
+        }
+    }
+    println!(
+        "validator: {ok}/{trials} raw samples valid ({:.1}%)",
+        100.0 * ok as f64 / trials as f64
+    );
+    for (k, v) in why {
+        println!("  rejected by {k}: {v}");
+    }
+}
+
+fn cmd_eval(args: &Args) {
+    let model = args.str("model", "175b");
+    let spec = theseus::workload::models::find(&model).expect("unknown model");
+    let v = theseus::design_space::validate(&theseus::design_space::reference_point())
+        .expect("reference point valid");
+    let sys = if args.has("wafers") {
+        theseus::eval::SystemConfig {
+            validated: v,
+            n_wafers: args.usize("wafers", 1),
+        }
+    } else {
+        theseus::eval::SystemConfig::area_matched(v, spec.gpu_num)
+    };
+    println!(
+        "system: {} wafers of {}",
+        sys.n_wafers,
+        sys.validated.point.wsc.summary()
+    );
+    let noc = theseus::eval::Analytical;
+    match theseus::eval::eval_training(&spec, &sys, &noc) {
+        Some(r) => {
+            println!(
+                "training {}: {:.1} tokens/s  step {:.3}s  power {:.1} kW  strategy tp{} pp{} dp{} mb{}",
+                spec.name,
+                r.tokens_per_sec,
+                r.step_time_s,
+                r.power_w / 1e3,
+                r.strategy.tp,
+                r.strategy.pp,
+                r.strategy.dp,
+                r.strategy.microbatch
+            );
+        }
+        None => println!("no feasible parallel strategy (memory constraint)"),
+    }
+    if let Some(r) = theseus::eval::eval_inference(&spec, &sys, 32, false, &noc) {
+        println!(
+            "inference: prefill {:.3}s decode {:.2}ms/tok {:.1} tokens/s [{}]",
+            r.prefill_s,
+            r.decode_step_s * 1e3,
+            r.tokens_per_sec,
+            r.residency
+        );
+    }
+}
+
+fn cmd_dse(args: &Args) {
+    theseus::coordinator::run_from_cli(args);
+}
+
+fn cmd_baselines() {
+    for (name, p) in [
+        ("WSE2-like", theseus::baselines::wse2_like()),
+        ("Dojo-like", theseus::baselines::dojo_like()),
+    ] {
+        let v = theseus::baselines::force_validate(&p);
+        println!(
+            "{name}: peak {:.2} PFLOPS, area {:.0} mm2, yield {:.3}, power cap use {:.1} kW",
+            v.phys.peak_flops / 1e15,
+            v.phys.area_mm2,
+            v.phys.wafer_yield,
+            v.phys.peak_power_w / 1e3
+        );
+    }
+    let g = theseus::baselines::gpu::h100();
+    println!(
+        "H100: {:.0} TFLOPS bf16, {:.2} TB/s HBM, {:.0} GB, {:.0} W, {:.0} mm2",
+        g.peak_flops / 1e12,
+        g.hbm_bw / 1e12,
+        g.hbm_cap / 1e9,
+        g.tdp_w,
+        g.die_mm2
+    );
+}

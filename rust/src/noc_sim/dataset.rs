@@ -1,0 +1,169 @@
+//! GNN training-set generation (paper §VIII-A "GNN Training Setup"):
+//! random WSC core configs × benchmark workloads → Workload Compiler →
+//! CA simulation → per-link mean waiting times as regression targets.
+//!
+//! Emitted as JSON (consumed by `python/compile/train.py`). Each sample is
+//! one chunk execution on an `h × w` mesh: node features (injection rates),
+//! edge features (per-link transmitted volume + bandwidth), and labels
+//! (per-link mean waiting time in cycles).
+
+use crate::arch::{CoreConfig, Dataflow};
+use crate::compiler::{compile_chunk, routing::NUM_DIRS};
+use crate::eval::op_level::{chunk_latency, NocModel};
+use crate::noc_sim::{naive_compute_cycles, simulate_chunk};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::models::benchmarks;
+use crate::workload::{OpGraph, Phase};
+
+/// One dataset sample (matches the Python trainer's expected schema).
+pub struct Sample {
+    pub height: usize,
+    pub width: usize,
+    pub noc_bw_bits: usize,
+    /// Flits injected per node per cycle.
+    pub inject_rate: Vec<f64>,
+    /// Bytes routed over each directed link (dense `link_index` order).
+    pub link_bytes: Vec<f64>,
+    /// Flits observed per link.
+    pub link_flits: Vec<f64>,
+    /// Label: mean waiting cycles per flit per link.
+    pub link_wait: Vec<f64>,
+    /// End-to-end chunk cycles (Fig. 7 ground truth).
+    pub total_cycles: u64,
+    /// Zero-load analytical estimate (feature normalizer shared with the
+    /// DSE runtime — see python/compile/features.py).
+    pub t0_cycles: f64,
+    /// Bytes injected per node (from the compiled flows, not the sim).
+    pub node_bytes: Vec<f64>,
+}
+
+impl Sample {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("height", Json::Num(self.height as f64))
+            .set("width", Json::Num(self.width as f64))
+            .set("noc_bw_bits", Json::Num(self.noc_bw_bits as f64))
+            .set("inject_rate", Json::from_f64_slice(&self.inject_rate))
+            .set("link_bytes", Json::from_f64_slice(&self.link_bytes))
+            .set("link_flits", Json::from_f64_slice(&self.link_flits))
+            .set("link_wait", Json::from_f64_slice(&self.link_wait))
+            .set("total_cycles", Json::Num(self.total_cycles as f64))
+            .set("t0_cycles", Json::Num(self.t0_cycles))
+            .set("node_bytes", Json::from_f64_slice(&self.node_bytes));
+        o
+    }
+}
+
+/// Generate one sample: a random core config + a random small-benchmark
+/// chunk on a random mesh (bounded so CA simulation stays seconds-scale).
+pub fn gen_sample(rng: &mut Rng) -> Sample {
+    let specs = benchmarks();
+    let spec = specs[rng.below(4)].clone(); // the small end of Table II
+    let noc_bw_bits = *rng.choose(&[128usize, 256, 512, 1024]);
+    let mac_num = *rng.choose(&[128usize, 256, 512, 1024]);
+    let core = CoreConfig {
+        dataflow: *rng.choose(&Dataflow::ALL),
+        mac_num,
+        buffer_kb: 128,
+        buffer_bw_bits: 256,
+        noc_bw_bits,
+    };
+    let h = rng.range(3, 10);
+    let w = rng.range(3, 10);
+    let tp = 1 << rng.below(4);
+    let phase = *rng.choose(&[Phase::Prefill, Phase::Decode, Phase::Training]);
+    // Scale the workload down: a fraction of one layer's sequence keeps
+    // flow volumes mesh-sized (labels depend on *relative* load).
+    let mut small = spec.clone();
+    small.seq_len = *rng.choose(&[32usize, 64, 128]);
+    let g = OpGraph::transformer_chunk(&small, 1, 1, tp * 8, phase, false);
+    let chunk = compile_chunk(&g, h, w, &core);
+
+    let cycles_for = |op: usize| {
+        let a = &chunk.assignments[op];
+        naive_compute_cycles(a.flops_per_core, core.mac_num)
+            .max((a.in_bytes_per_core / (core.buffer_bw_bits as f64 / 8.0)).ceil() as u64)
+    };
+    let stats = simulate_chunk(&chunk, noc_bw_bits, &cycles_for, 80_000_000);
+    let zeros = vec![0.0; h * w * NUM_DIRS];
+    let t0 = chunk_latency(&chunk, &core, 1.0, NocModel::LinkWaits(&zeros)).cycles;
+
+    let cyc = stats.cycles.max(1) as f64;
+    Sample {
+        height: h,
+        width: w,
+        noc_bw_bits,
+        inject_rate: stats
+            .injected_flits
+            .iter()
+            .map(|&f| f as f64 / cyc)
+            .collect(),
+        link_bytes: chunk.link_loads(),
+        link_flits: stats.link_flits.iter().map(|&f| f as f64).collect(),
+        link_wait: stats.link_wait_mean(),
+        total_cycles: stats.cycles,
+        t0_cycles: t0,
+        node_bytes: chunk.node_injected_bytes(),
+    }
+}
+
+/// Generate `n` samples into the dataset JSON document.
+pub fn gen_dataset(n: usize, seed: u64) -> Json {
+    let rngs: Vec<Rng> = {
+        let mut base = Rng::new(seed);
+        (0..n).map(|i| base.fork(i as u64)).collect()
+    };
+    let samples = crate::util::pool::par_map(&rngs, |rng| {
+        let mut rng = rng.clone();
+        gen_sample(&mut rng).to_json()
+    });
+    let mut doc = Json::obj();
+    doc.set("version", Json::Num(1.0))
+        .set("num_dirs", Json::Num(NUM_DIRS as f64))
+        .set("seed", Json::Num(seed as f64))
+        .set("samples", Json::Arr(samples));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_shapes_consistent() {
+        let mut rng = Rng::new(99);
+        let s = gen_sample(&mut rng);
+        let n = s.height * s.width;
+        assert_eq!(s.inject_rate.len(), n);
+        assert_eq!(s.link_bytes.len(), n * NUM_DIRS);
+        assert_eq!(s.link_wait.len(), n * NUM_DIRS);
+        assert_eq!(s.node_bytes.len(), n);
+        assert!(s.total_cycles > 0);
+        assert!(s.t0_cycles > 0.0);
+        // Some traffic must have flowed.
+        assert!(s.link_flits.iter().sum::<f64>() > 0.0);
+        // Loaded links correlate: every link with waiting also saw flits.
+        for (i, &w) in s.link_wait.iter().enumerate() {
+            if w > 0.0 {
+                assert!(s.link_flits[i] > 0.0, "wait without flits at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_deterministic() {
+        let a = gen_dataset(2, 7).to_string();
+        let b = gen_dataset(2, 7).to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dataset_json_roundtrip() {
+        let d = gen_dataset(2, 11);
+        let parsed = Json::parse(&d.to_string()).unwrap();
+        let samples = parsed.get("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples.len(), 2);
+        assert!(samples[0].get("link_wait").unwrap().as_f64_vec().is_some());
+    }
+}

@@ -1,0 +1,613 @@
+//! Cycle-accurate NoC simulator (paper §VIII-A: BookSim2 [22] extended with
+//! instruction-driven cores).
+//!
+//! 2-D mesh, wormhole flow control, 8 virtual channels × 4-flit buffers per
+//! input port (§VIII-A router config), credit-based backpressure, XY
+//! routing, round-robin switch allocation. Cores execute micro-instruction
+//! streams (COMPUTE / SEND / RECV) generated from a [`CompiledChunk`] —
+//! compute and memory latency inside cores use analytical estimates, as the
+//! paper argues is sound for regular tensor operations.
+//!
+//! The simulator doubles as the ground-truth generator: per-link mean
+//! waiting times ([`SimStats::link_wait`]) are the GNN's regression targets
+//! (Eq. 5), and end-to-end chunk cycles validate the analytical model
+//! (Fig. 7).
+
+pub mod dataset;
+pub mod program;
+
+use std::collections::VecDeque;
+
+use crate::arch::constants as k;
+use crate::compiler::routing::{Dir, LinkId, NUM_DIRS};
+
+pub use program::{build_programs, CoreProgram, Instr};
+
+/// Ports on a router: 4 mesh directions + local (NIC).
+const PORTS: usize = 5;
+const LOCAL: usize = 4;
+
+/// Buffer depth per VC (flits) — paper §VIII-A.
+const VC_DEPTH: usize = 4;
+/// Virtual channels per input port — paper §VIII-A.
+const VCS: usize = 8;
+
+/// Max packet size in flits; larger transfers are segmented (§VI-C's
+/// variable packet sizes come from the flow byte volumes).
+pub const MAX_PACKET_FLITS: usize = 16;
+
+/// A packet in flight.
+#[derive(Debug, Clone, Copy)]
+struct Packet {
+    dst: (usize, usize),
+    size_flits: u32,
+    /// Tag = consuming op id (RECV matching).
+    tag: u32,
+    inject_cycle: u64,
+}
+
+/// One flit. Packets are wormhole-switched: body flits follow the head's
+/// VC/port allocation.
+#[derive(Debug, Clone, Copy)]
+struct Flit {
+    packet: u32,
+    is_head: bool,
+    is_tail: bool,
+}
+
+/// Per-input-VC state.
+#[derive(Debug, Clone, Default)]
+struct VcState {
+    buf: VecDeque<Flit>,
+    /// Allocated output port for the packet currently occupying this VC.
+    out_port: Option<u8>,
+    /// Allocated VC at the downstream router's input.
+    out_vc: Option<u8>,
+}
+
+/// One router: input-buffered, 5 ports × VCS VCs.
+#[derive(Debug, Clone)]
+struct Router {
+    vcs: Vec<VcState>, // PORTS * VCS
+    /// Credits we hold for each downstream input VC, per output direction.
+    credits: [[u8; VCS]; NUM_DIRS],
+    /// Round-robin pointers per output port.
+    rr: [usize; PORTS],
+    /// Buffered flits across all input VCs (§Perf: lets the switch pass
+    /// skip idle routers entirely).
+    occupancy: u32,
+}
+
+impl Router {
+    fn new() -> Router {
+        Router {
+            vcs: (0..PORTS * VCS).map(|_| VcState::default()).collect(),
+            credits: [[VC_DEPTH as u8; VCS]; NUM_DIRS],
+            rr: [0; PORTS],
+            occupancy: 0,
+        }
+    }
+
+    fn vc(&self, port: usize, vc: usize) -> &VcState {
+        &self.vcs[port * VCS + vc]
+    }
+
+    fn vc_mut(&mut self, port: usize, vc: usize) -> &mut VcState {
+        &mut self.vcs[port * VCS + vc]
+    }
+}
+
+/// Aggregate simulation statistics.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Total simulated cycles until drain.
+    pub cycles: u64,
+    /// Flits that crossed each directed mesh link (dense, `link_index`).
+    pub link_flits: Vec<u64>,
+    /// Cycles head-of-line flits spent blocked wanting each link.
+    pub link_wait: Vec<u64>,
+    /// Completed packets and their total latency (inject→eject).
+    pub packets_done: u64,
+    pub packet_latency_sum: u64,
+    /// Per-core injected flits (GNN node feature).
+    pub injected_flits: Vec<u64>,
+}
+
+impl SimStats {
+    /// Mean waiting time per link (the Eq. 5 target); 0 for idle links.
+    pub fn link_wait_mean(&self) -> Vec<f64> {
+        self.link_flits
+            .iter()
+            .zip(&self.link_wait)
+            .map(|(&f, &w)| if f == 0 { 0.0 } else { w as f64 / f as f64 })
+            .collect()
+    }
+
+    pub fn avg_packet_latency(&self) -> f64 {
+        if self.packets_done == 0 {
+            0.0
+        } else {
+            self.packet_latency_sum as f64 / self.packets_done as f64
+        }
+    }
+}
+
+/// Instruction-driven mesh simulator.
+pub struct Simulator {
+    pub height: usize,
+    pub width: usize,
+    routers: Vec<Router>,
+    packets: Vec<Packet>,
+    programs: Vec<CoreProgram>,
+    /// Per-core program counter and state.
+    pc: Vec<usize>,
+    compute_until: Vec<u64>,
+    recv_count: Vec<Vec<u32>>, // [core][tag] received packets
+    nic: Vec<VecDeque<(u32, u64)>>, // queued (packet, reserved)
+    nic_flits_left: Vec<u32>,
+    /// VC on which the current NIC packet is being injected.
+    inject_vc: Vec<usize>,
+    stats: SimStats,
+    cycle: u64,
+}
+
+impl Simulator {
+    /// Build a simulator for an `height × width` mesh running `programs`
+    /// (one per core, row-major; see [`program::build_programs`]).
+    pub fn new(height: usize, width: usize, programs: Vec<CoreProgram>) -> Simulator {
+        assert_eq!(programs.len(), height * width);
+        let n = height * width;
+        let max_tag = programs
+            .iter()
+            .flat_map(|p| p.instrs.iter())
+            .map(|i| match i {
+                Instr::Recv { tag, .. } => *tag + 1,
+                Instr::Send { tag, .. } => *tag + 1,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(1) as usize;
+        Simulator {
+            height,
+            width,
+            routers: (0..n).map(|_| Router::new()).collect(),
+            packets: Vec::new(),
+            programs,
+            pc: vec![0; n],
+            compute_until: vec![0; n],
+            recv_count: vec![vec![0; max_tag]; n],
+            nic: (0..n).map(|_| VecDeque::new()).collect(),
+            nic_flits_left: vec![0; n],
+            inject_vc: vec![0; n],
+            stats: SimStats {
+                link_flits: vec![0; n * NUM_DIRS],
+                link_wait: vec![0; n * NUM_DIRS],
+                injected_flits: vec![0; n],
+                ..Default::default()
+            },
+            cycle: 0,
+        }
+    }
+
+    fn node(&self, r: usize, c: usize) -> usize {
+        r * self.width + c
+    }
+
+    /// XY output port for a packet at router (r, c).
+    fn route(&self, at: (usize, usize), dst: (usize, usize)) -> usize {
+        if dst.1 > at.1 {
+            Dir::East as usize
+        } else if dst.1 < at.1 {
+            Dir::West as usize
+        } else if dst.0 > at.0 {
+            Dir::South as usize
+        } else if dst.0 < at.0 {
+            Dir::North as usize
+        } else {
+            LOCAL
+        }
+    }
+
+    fn link_idx(&self, node: usize, dir: usize) -> usize {
+        node * NUM_DIRS + dir
+    }
+
+    /// Neighbor node through `dir`, plus the input port on that neighbor.
+    fn neighbor(&self, node: usize, dir: usize) -> (usize, usize) {
+        let (r, c) = (node / self.width, node % self.width);
+        match dir {
+            d if d == Dir::East as usize => (self.node(r, c + 1), Dir::West as usize),
+            d if d == Dir::West as usize => (self.node(r, c - 1), Dir::East as usize),
+            d if d == Dir::South as usize => (self.node(r + 1, c), Dir::North as usize),
+            d if d == Dir::North as usize => (self.node(r - 1, c), Dir::South as usize),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Run to completion (all programs finished, network drained).
+    /// `max_cycles` guards against deadlock bugs; panics if exceeded.
+    pub fn run(mut self, max_cycles: u64) -> SimStats {
+        while !self.done() {
+            self.step();
+            if self.cycle > max_cycles {
+                let mut buf_state = String::new();
+                for (n, r) in self.routers.iter().enumerate() {
+                    for port in 0..PORTS {
+                        for vc in 0..VCS {
+                            let s = r.vc(port, vc);
+                            if !s.buf.is_empty() || s.out_port.is_some() {
+                                buf_state.push_str(&format!(
+                                    "\n  node {n} port {port} vc {vc}: {} flits head={:?} out_port={:?} out_vc={:?}",
+                                    s.buf.len(),
+                                    s.buf.front(),
+                                    s.out_port,
+                                    s.out_vc
+                                ));
+                            }
+                        }
+                    }
+                    for d in 0..NUM_DIRS {
+                        if r.credits[d] != [VC_DEPTH as u8; VCS] {
+                            buf_state.push_str(&format!("\n  node {n} credits[{d}]={:?}", r.credits[d]));
+                        }
+                    }
+                }
+                panic!(
+                    "noc_sim: exceeded {max_cycles} cycles — deadlock or undersized budget \
+                     (pc={:?}) nic={:?} state:{}",
+                    self.pc
+                        .iter()
+                        .zip(&self.programs)
+                        .map(|(pc, p)| format!("{}/{}", pc, p.instrs.len()))
+                        .collect::<Vec<_>>(),
+                    self.nic.iter().map(|q| q.len()).collect::<Vec<_>>(),
+                    buf_state,
+                );
+            }
+        }
+        self.stats.cycles = self.cycle;
+        self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.pc
+            .iter()
+            .zip(&self.programs)
+            .all(|(pc, p)| *pc >= p.instrs.len())
+            && self.network_empty()
+    }
+
+    fn network_empty(&self) -> bool {
+        self.nic.iter().all(|q| q.is_empty()) && self.routers.iter().all(|r| r.occupancy == 0)
+    }
+
+    fn step(&mut self) {
+        self.advance_cores();
+        self.inject();
+        self.switch_traversal();
+        self.cycle += 1;
+        self.maybe_skip_idle();
+    }
+
+    /// Fast-forward across compute-only stretches (§Perf): when the network
+    /// is drained, no NIC has pending packets, and every unfinished core is
+    /// mid-COMPUTE, nothing can happen until the earliest compute ends —
+    /// jump straight there. Waiting statistics are unaffected (no flits in
+    /// flight by construction).
+    fn maybe_skip_idle(&mut self) {
+        let mut min_until = u64::MAX;
+        for core in 0..self.programs.len() {
+            let pc = self.pc[core];
+            if pc >= self.programs[core].instrs.len() {
+                continue;
+            }
+            // Mid-compute cores have a nonzero deadline; anything else
+            // (pending Send/Recv at the PC) blocks the skip.
+            let until = self.compute_until[core];
+            if until > self.cycle && matches!(self.programs[core].instrs[pc], Instr::Compute { .. })
+            {
+                min_until = min_until.min(until);
+            } else {
+                return;
+            }
+        }
+        if min_until == u64::MAX || min_until <= self.cycle {
+            return;
+        }
+        if !self.network_empty() {
+            return;
+        }
+        self.cycle = min_until;
+    }
+
+    /// Progress each core's instruction stream.
+    fn advance_cores(&mut self) {
+        for core in 0..self.programs.len() {
+            loop {
+                let pc = self.pc[core];
+                if pc >= self.programs[core].instrs.len() {
+                    break;
+                }
+                match self.programs[core].instrs[pc] {
+                    Instr::Compute { cycles } => {
+                        if self.compute_until[core] == 0 {
+                            self.compute_until[core] = self.cycle + cycles;
+                        }
+                        if self.cycle >= self.compute_until[core] {
+                            self.compute_until[core] = 0;
+                            self.pc[core] += 1;
+                            continue;
+                        }
+                        break;
+                    }
+                    Instr::Send { dst, bytes, tag } => {
+                        // Segment into packets and queue on the NIC.
+                        let flit_bytes = self.programs[core].flit_bytes.max(1.0);
+                        let flits = (bytes / flit_bytes).ceil().max(1.0) as usize;
+                        let mut left = flits;
+                        while left > 0 {
+                            let sz = left.min(MAX_PACKET_FLITS) as u32;
+                            let id = self.packets.len() as u32;
+                            self.packets.push(Packet {
+                                dst,
+                                size_flits: sz,
+                                tag,
+                                inject_cycle: self.cycle,
+                            });
+                            self.nic[core].push_back((id, 0));
+                            left -= sz as usize;
+                        }
+                        self.pc[core] += 1;
+                        continue;
+                    }
+                    Instr::Recv { tag, packets } => {
+                        if self.recv_count[core][tag as usize] >= packets {
+                            self.pc[core] += 1;
+                            continue;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Inject one flit per core per cycle from the NIC into the local
+    /// input port (VC 0..VCS round-robin by packet).
+    fn inject(&mut self) {
+        for core in 0..self.nic.len() {
+            let Some(&(pkt_id, _)) = self.nic[core].front() else {
+                continue;
+            };
+            let pkt = self.packets[pkt_id as usize];
+            // Find / keep a local-input VC for this packet.
+            let router = &mut self.routers[core];
+            // Head flit needs a VC whose buffer is empty and unowned;
+            // body flits continue on the packet's VC.
+            let progress = self.nic_flits_left[core];
+            let vc_slot = if progress == 0 {
+                (0..VCS).find(|&v| {
+                    let s = router.vc(LOCAL, v);
+                    s.buf.is_empty() && s.out_port.is_none()
+                })
+            } else {
+                Some(self.inject_vc[core])
+            };
+            let Some(vc) = vc_slot else { continue };
+            let s = router.vc_mut(LOCAL, vc);
+            if s.buf.len() >= VC_DEPTH {
+                continue;
+            }
+            let is_head = progress == 0;
+            let is_tail = progress + 1 == pkt.size_flits;
+            s.buf.push_back(Flit {
+                packet: pkt_id,
+                is_head,
+                is_tail,
+            });
+            router.occupancy += 1;
+            if is_head {
+                self.inject_vc[core] = vc;
+            }
+            self.stats.injected_flits[core] += 1;
+            if is_tail {
+                self.nic[core].pop_front();
+                self.nic_flits_left[core] = 0;
+            } else {
+                self.nic_flits_left[core] = progress + 1;
+            }
+        }
+    }
+
+    /// Route computation + VC allocation + switch allocation + traversal,
+    /// collapsed into one cycle per hop (aggressive single-stage router).
+    fn switch_traversal(&mut self) {
+        let n = self.routers.len();
+        // (from_node, in_port, in_vc, out_port, flit) moves to apply.
+        let mut moves: Vec<(usize, usize, usize, usize, Flit)> = Vec::new();
+
+        for node in 0..n {
+            if self.routers[node].occupancy == 0 {
+                continue; // §Perf: idle router, nothing to arbitrate
+            }
+            let at = (node / self.width, node % self.width);
+            // Gather head-of-buffer requests per output port (fixed-size
+            // scratch — §Perf: no per-cycle heap allocation).
+            let mut requests = [[(0u8, 0u8); PORTS * VCS]; PORTS];
+            let mut req_len = [0usize; PORTS];
+            for port in 0..PORTS {
+                for vc in 0..VCS {
+                    let s = self.routers[node].vc(port, vc);
+                    let Some(f) = s.buf.front() else { continue };
+                    let out = if f.is_head {
+                        self.route(at, self.packets[f.packet as usize].dst)
+                    } else {
+                        match s.out_port {
+                            Some(p) => p as usize,
+                            None => continue, // body before head handled
+                        }
+                    };
+                    requests[out][req_len[out]] = (port as u8, vc as u8);
+                    req_len[out] += 1;
+                }
+            }
+            // One grant per output port, round-robin.
+            for out in 0..PORTS {
+                let len = req_len[out];
+                if len == 0 {
+                    continue;
+                }
+                let start = self.routers[node].rr[out];
+                let pick = (0..len)
+                    .map(|i| requests[out][(start + i) % len])
+                    .find(|&(port, vc)| self.can_traverse(node, port as usize, vc as usize, out));
+                // Waiting accounting: every requester of a *mesh* link that
+                // does not move this cycle accrues one wait cycle.
+                if out != LOCAL {
+                    let li = self.link_idx(node, out);
+                    let waiting = len - usize::from(pick.is_some());
+                    self.stats.link_wait[li] += waiting as u64;
+                }
+                let Some((port, vc)) = pick else { continue };
+                let (port, vc) = (port as usize, vc as usize);
+                self.routers[node].rr[out] = self.routers[node].rr[out].wrapping_add(1);
+                let flit = *self.routers[node].vc(port, vc).buf.front().unwrap();
+                moves.push((node, port, vc, out, flit));
+            }
+        }
+
+        // Apply moves: pop from input VC, push downstream (or eject).
+        for (node, port, vc, out, flit) in moves {
+            // Read the downstream VC allocation BEFORE the pop clears it on
+            // tail flits (regression: tails were misrouted to VC 0).
+            let alloc_vc = self.routers[node].vc(port, vc).out_vc;
+            // Pop.
+            {
+                self.routers[node].occupancy -= 1;
+                let s = self.routers[node].vc_mut(port, vc);
+                s.buf.pop_front();
+                if flit.is_head {
+                    s.out_port = Some(out as u8);
+                }
+                if flit.is_tail {
+                    s.out_port = None;
+                    s.out_vc = None;
+                }
+            }
+            // Return a credit upstream for the freed slot.
+            self.return_credit(node, port, vc);
+
+            if out == LOCAL {
+                // Ejected at destination.
+                let pkt = self.packets[flit.packet as usize];
+                if flit.is_tail {
+                    let core = node;
+                    self.recv_count[core][pkt.tag as usize] += 1;
+                    self.stats.packets_done += 1;
+                    self.stats.packet_latency_sum += self.cycle - pkt.inject_cycle;
+                }
+                continue;
+            }
+
+            let li = self.link_idx(node, out);
+            self.stats.link_flits[li] += 1;
+            let (down, down_port) = self.neighbor(node, out);
+            // Downstream VC: allocated at the head, held through the tail.
+            let dvc = alloc_vc.expect("traversing flit must hold a VC allocation") as usize;
+            self.routers[down].occupancy += 1;
+            let s = self.routers[down].vc_mut(down_port, dvc);
+            s.buf.push_back(flit);
+            self.routers[node].credits[out][dvc] -= 1;
+        }
+    }
+
+    /// Check credits / downstream VC availability; for head flits, also
+    /// perform VC allocation (recorded in `out_vc`).
+    fn can_traverse(&mut self, node: usize, port: usize, vc: usize, out: usize) -> bool {
+        if out == LOCAL {
+            return true; // ejection always accepted
+        }
+        let flit = *self.routers[node].vc(port, vc).buf.front().unwrap();
+        let (down, down_port) = self.neighbor(node, out);
+        if flit.is_head && self.routers[node].vc(port, vc).out_vc.is_none() {
+            // Allocate a downstream VC: must be empty and unowned.
+            let free = (0..VCS).find(|&v| {
+                self.routers[node].credits[out][v] as usize == VC_DEPTH
+                    && self.routers[down].vc(down_port, v).buf.is_empty()
+                    && self.routers[down].vc(down_port, v).out_port.is_none()
+            });
+            match free {
+                Some(v) => {
+                    self.routers[node].vc_mut(port, vc).out_vc = Some(v as u8);
+                }
+                None => return false,
+            }
+        }
+        let dvc = match self.routers[node].vc(port, vc).out_vc {
+            Some(v) => v as usize,
+            None => return false, // body flit before head allocated (shouldn't happen)
+        };
+        self.routers[node].credits[out][dvc] > 0
+    }
+
+    /// Credit return for the input buffer slot freed at (node, port, vc):
+    /// the *upstream* router regains a credit. Local-port slots have no
+    /// upstream credits (NIC checks buffer occupancy directly).
+    fn return_credit(&mut self, node: usize, port: usize, vc: usize) {
+        if port == LOCAL {
+            return;
+        }
+        // The upstream router is the neighbor in the direction the flit
+        // came *from*: input port X means the link arrives from direction
+        // X's neighbor, whose output dir is the opposite port.
+        let (up, up_out) = self.neighbor(node, port);
+        debug_assert!(up < self.routers.len());
+        self.routers[up].credits[up_out][vc] =
+            (self.routers[up].credits[up_out][vc] + 1).min(VC_DEPTH as u8);
+    }
+}
+
+/// Convenience: simulate a compiled chunk with per-op compute cycles given
+/// by `cycles_for(op_index)`, on cores with `noc_bw_bits`-wide flits.
+pub fn simulate_chunk(
+    chunk: &crate::compiler::CompiledChunk,
+    noc_bw_bits: usize,
+    cycles_for: &dyn Fn(usize) -> u64,
+    max_cycles: u64,
+) -> SimStats {
+    let programs = build_programs(chunk, noc_bw_bits, cycles_for);
+    Simulator::new(chunk.region_h, chunk.region_w, programs).run(max_cycles)
+}
+
+/// Mean waiting time keyed by [`LinkId`] (GNN dataset convenience).
+pub fn link_wait_by_id(stats: &SimStats, width: usize) -> impl Fn(LinkId) -> f64 + '_ {
+    move |l: LinkId| {
+        let idx = crate::compiler::routing::link_index(l, width);
+        let f = stats.link_flits[idx];
+        if f == 0 {
+            0.0
+        } else {
+            stats.link_wait[idx] as f64 / f as f64
+        }
+    }
+}
+
+/// Flit width in bytes for a core NoC config.
+pub fn flit_bytes(noc_bw_bits: usize) -> f64 {
+    noc_bw_bits as f64 / 8.0
+}
+
+/// Cycles to serialize `bytes` over one link.
+pub fn serialization_cycles(bytes: f64, noc_bw_bits: usize) -> f64 {
+    bytes / flit_bytes(noc_bw_bits).max(1.0)
+}
+
+/// Compute cycles for an op tile with a trivially analytic model —
+/// used by dataset generation where only *relative* compute/comm overlap
+/// matters. Real evaluation uses [`crate::eval::tile`].
+pub fn naive_compute_cycles(flops: f64, mac_num: usize) -> u64 {
+    (flops / (k::FLOPS_PER_MAC * mac_num as f64)).ceil().max(1.0) as u64
+}
+
+#[cfg(test)]
+mod tests;

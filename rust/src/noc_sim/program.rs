@@ -1,0 +1,195 @@
+//! Micro-instruction generation (paper §VIII-A: "We design a series of
+//! instructions and micro-instructions to describe the compute, memory
+//! access and communication of WSC cores").
+//!
+//! A [`CompiledChunk`] becomes one [`CoreProgram`] per core of the region:
+//! per op (in topological order) the core sends its intra-op systolic
+//! feeds, waits for its expected input packets, computes the analytic tile
+//! latency, then sends the redistribution flows to downstream ops.
+
+use std::collections::HashMap;
+
+use crate::compiler::CompiledChunk;
+use crate::noc_sim::MAX_PACKET_FLITS;
+
+/// Core micro-instructions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    /// Busy for `cycles` (analytic compute + local memory estimate).
+    Compute { cycles: u64 },
+    /// Send `bytes` to core `dst`, tagged with the consuming op.
+    Send {
+        dst: (usize, usize),
+        bytes: f64,
+        tag: u32,
+    },
+    /// Block until `packets` packets tagged `tag` have arrived.
+    Recv { tag: u32, packets: u32 },
+}
+
+/// One core's instruction stream.
+#[derive(Debug, Clone, Default)]
+pub struct CoreProgram {
+    pub instrs: Vec<Instr>,
+    /// Flit payload in bytes (from the core's NoC width).
+    pub flit_bytes: f64,
+}
+
+/// Packets a flow of `bytes` becomes (must match the simulator's
+/// segmentation).
+pub fn packets_for(bytes: f64, flit_bytes: f64) -> u32 {
+    let flits = (bytes / flit_bytes.max(1.0)).ceil().max(1.0) as u64;
+    flits.div_ceil(MAX_PACKET_FLITS as u64) as u32
+}
+
+/// Build per-core programs. `cycles_for(op)` supplies the per-core compute
+/// latency of each op (tile-level analytic estimate).
+pub fn build_programs(
+    chunk: &CompiledChunk,
+    noc_bw_bits: usize,
+    cycles_for: &dyn Fn(usize) -> u64,
+) -> Vec<CoreProgram> {
+    let flit_bytes = crate::noc_sim::flit_bytes(noc_bw_bits);
+    let n = chunk.region_h * chunk.region_w;
+    let mut programs = vec![
+        CoreProgram {
+            instrs: Vec::new(),
+            flit_bytes,
+        };
+        n
+    ];
+    let node = |rc: (usize, usize)| rc.0 * chunk.region_w + rc.1;
+
+    // Index flows by (src core, producing op) and count expected packets
+    // per (dst core, consuming op).
+    let mut sends: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+    let mut expected: HashMap<(usize, usize), u32> = HashMap::new();
+    for (i, f) in chunk.flows.iter().enumerate() {
+        sends.entry((node(f.src), f.src_op)).or_default().push(i);
+        *expected.entry((node(f.dst), f.dst_op)).or_default() +=
+            packets_for(f.bytes, flit_bytes);
+    }
+
+    for a in &chunk.assignments {
+        let op = a.op;
+        let cycles = cycles_for(op).max(1);
+        for r in 0..a.placement.grid_h {
+            for c in 0..a.placement.grid_w {
+                let core = node(a.placement.physical(r, c));
+                let prog = &mut programs[core];
+                // 1. Intra-op systolic feeds (sent eagerly, non-blocking).
+                if let Some(flow_ids) = sends.get(&(core, op)) {
+                    for &fi in flow_ids {
+                        let f = chunk.flows[fi];
+                        if f.dst_op == op {
+                            prog.instrs.push(Instr::Send {
+                                dst: f.dst,
+                                bytes: f.bytes,
+                                tag: f.dst_op as u32,
+                            });
+                        }
+                    }
+                }
+                // 2. Wait for all inputs of this op.
+                if let Some(&pkts) = expected.get(&(core, op)) {
+                    prog.instrs.push(Instr::Recv {
+                        tag: op as u32,
+                        packets: pkts,
+                    });
+                }
+                // 3. Compute.
+                prog.instrs.push(Instr::Compute { cycles });
+                // 4. Redistribution sends to downstream ops.
+                if let Some(flow_ids) = sends.get(&(core, op)) {
+                    for &fi in flow_ids {
+                        let f = chunk.flows[fi];
+                        if f.dst_op != op {
+                            prog.instrs.push(Instr::Send {
+                                dst: f.dst,
+                                bytes: f.bytes,
+                                tag: f.dst_op as u32,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    programs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{CoreConfig, Dataflow};
+    use crate::compiler::compile_chunk;
+    use crate::workload::models::benchmarks;
+    use crate::workload::{OpGraph, Phase};
+
+    fn chunk() -> CompiledChunk {
+        let spec = benchmarks()[0].clone();
+        let g = OpGraph::transformer_chunk(&spec, 1, 1, 8, Phase::Prefill, false);
+        let core = CoreConfig {
+            dataflow: Dataflow::WS,
+            mac_num: 512,
+            buffer_kb: 128,
+            buffer_bw_bits: 256,
+            noc_bw_bits: 512,
+        };
+        compile_chunk(&g, 4, 4, &core)
+    }
+
+    #[test]
+    fn program_per_core() {
+        let c = chunk();
+        let progs = build_programs(&c, 512, &|_| 10);
+        assert_eq!(progs.len(), 16);
+        assert!(progs.iter().any(|p| !p.instrs.is_empty()));
+    }
+
+    #[test]
+    fn sends_match_flows() {
+        let c = chunk();
+        let progs = build_programs(&c, 512, &|_| 10);
+        let sent: f64 = progs
+            .iter()
+            .flat_map(|p| &p.instrs)
+            .filter_map(|i| match i {
+                Instr::Send { bytes, .. } => Some(*bytes),
+                _ => None,
+            })
+            .sum();
+        let rel = (sent - c.total_flow_bytes()).abs() / c.total_flow_bytes();
+        assert!(rel < 1e-9, "rel={rel}");
+    }
+
+    #[test]
+    fn recv_counts_match_send_packets() {
+        let c = chunk();
+        let progs = build_programs(&c, 512, &|_| 10);
+        let flit_bytes = crate::noc_sim::flit_bytes(512);
+        // Per tag: total packets sent == total packets expected by Recvs.
+        let mut sent: HashMap<u32, u32> = HashMap::new();
+        let mut recv: HashMap<u32, u32> = HashMap::new();
+        for p in &progs {
+            for i in &p.instrs {
+                match *i {
+                    Instr::Send { bytes, tag, .. } => {
+                        *sent.entry(tag).or_default() += packets_for(bytes, flit_bytes)
+                    }
+                    Instr::Recv { tag, packets } => *recv.entry(tag).or_default() += packets,
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(sent, recv);
+    }
+
+    #[test]
+    fn packets_for_segmentation() {
+        let fb = 64.0;
+        assert_eq!(packets_for(1.0, fb), 1);
+        assert_eq!(packets_for(64.0 * 16.0, fb), 1); // exactly one max packet
+        assert_eq!(packets_for(64.0 * 16.0 + 1.0, fb), 2);
+    }
+}

@@ -1,0 +1,208 @@
+//! Behavioral tests for the cycle-accurate simulator: zero-load latency,
+//! contention, saturation shape (the canonical load-latency curve), drain
+//! and determinism.
+
+use super::*;
+use crate::compiler::routing::NUM_DIRS;
+
+/// Build a bare simulator with hand-written programs.
+fn sim(h: usize, w: usize, progs: Vec<Vec<Instr>>) -> Simulator {
+    let programs = progs
+        .into_iter()
+        .map(|instrs| CoreProgram {
+            instrs,
+            flit_bytes: 64.0, // 512-bit flits
+        })
+        .collect();
+    Simulator::new(h, w, programs)
+}
+
+fn idle(n: usize) -> Vec<Vec<Instr>> {
+    (0..n).map(|_| Vec::new()).collect()
+}
+
+#[test]
+fn single_packet_zero_load_latency() {
+    // One 4-flit packet from (0,0) to (0,3): hops=3, serialization=4.
+    // Inject (1/cycle) + per-hop traversal + ejection — latency must be
+    // close to hops + flits, and certainly within 2x.
+    let mut progs = idle(16);
+    progs[0] = vec![Instr::Send {
+        dst: (0, 3),
+        bytes: 4.0 * 64.0,
+        tag: 0,
+    }];
+    progs[3] = vec![Instr::Recv { tag: 0, packets: 1 }];
+    let stats = sim(4, 4, progs).run(10_000);
+    assert_eq!(stats.packets_done, 1);
+    let lat = stats.avg_packet_latency();
+    assert!(lat >= 5.0, "too fast: {lat}");
+    assert!(lat <= 16.0, "too slow: {lat}");
+}
+
+#[test]
+fn east_links_carry_the_flits() {
+    let mut progs = idle(16);
+    progs[0] = vec![Instr::Send {
+        dst: (0, 3),
+        bytes: 8.0 * 64.0,
+        tag: 0,
+    }];
+    progs[3] = vec![Instr::Recv { tag: 0, packets: 1 }];
+    let stats = sim(4, 4, progs).run(10_000);
+    // Links (0,0)E, (0,1)E, (0,2)E each carried 8 flits.
+    for col in 0..3 {
+        let idx = (0 * 4 + col) * NUM_DIRS + 0; // East = 0
+        assert_eq!(stats.link_flits[idx], 8, "col {col}");
+    }
+    // No other link carried anything.
+    let total: u64 = stats.link_flits.iter().sum();
+    assert_eq!(total, 24);
+}
+
+#[test]
+fn contention_creates_waiting() {
+    // Two cores stream to the same destination column through the shared
+    // link (1,1)->(1,2): (1,0) and (1,1) both send to (1,3).
+    let mut progs = idle(16);
+    let big = 64.0 * 64.0; // 64 flits each
+    progs[4] = vec![Instr::Send { dst: (1, 3), bytes: big, tag: 0 }];
+    progs[5] = vec![Instr::Send { dst: (1, 3), bytes: big, tag: 0 }];
+    progs[7] = vec![Instr::Recv { tag: 0, packets: 8 }]; // 64 flits = 4 pkts each
+    let stats = sim(4, 4, progs).run(100_000);
+    let shared = (1 * 4 + 1) * NUM_DIRS + 0; // (1,1) East
+    assert!(stats.link_flits[shared] >= 128);
+    assert!(
+        stats.link_wait[shared] > 0,
+        "shared link should record waiting"
+    );
+}
+
+#[test]
+fn no_contention_no_waiting() {
+    // Disjoint row flows: no link shared, waiting stays ~0.
+    let mut progs = idle(16);
+    progs[0] = vec![Instr::Send { dst: (0, 3), bytes: 32.0 * 64.0, tag: 0 }];
+    progs[4] = vec![Instr::Send { dst: (1, 3), bytes: 32.0 * 64.0, tag: 0 }];
+    progs[3] = vec![Instr::Recv { tag: 0, packets: 2 }];
+    progs[7] = vec![Instr::Recv { tag: 0, packets: 2 }];
+    let stats = sim(4, 4, progs).run(100_000);
+    let total_wait: u64 = stats.link_wait.iter().sum();
+    assert_eq!(total_wait, 0, "disjoint flows must not wait");
+}
+
+#[test]
+fn compute_serializes_with_recv() {
+    // (0,1) waits for a packet, computes 100 cycles; total cycles must
+    // exceed 100 + transfer.
+    let mut progs = idle(4);
+    progs[0] = vec![Instr::Send { dst: (0, 1), bytes: 64.0, tag: 0 }];
+    progs[1] = vec![
+        Instr::Recv { tag: 0, packets: 1 },
+        Instr::Compute { cycles: 100 },
+    ];
+    let stats = sim(2, 2, progs).run(10_000);
+    assert!(stats.cycles >= 100, "cycles={}", stats.cycles);
+    assert!(stats.cycles < 200, "cycles={}", stats.cycles);
+}
+
+#[test]
+fn deterministic_runs() {
+    let mk = || {
+        let mut progs = idle(16);
+        for i in 0..8 {
+            progs[i] = vec![Instr::Send {
+                dst: (3, 3 - (i % 4)),
+                bytes: (i as f64 + 1.0) * 200.0,
+                tag: 0,
+            }];
+        }
+        progs[15] = vec![Instr::Recv { tag: 0, packets: 1 }];
+        sim(4, 4, progs).run(1_000_000)
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.link_flits, b.link_flits);
+    assert_eq!(a.link_wait, b.link_wait);
+}
+
+#[test]
+fn load_latency_curve_saturates() {
+    // Uniform-random traffic at increasing load: average packet latency
+    // must rise monotonically-ish and blow up near saturation — the
+    // canonical NoC load-latency shape that validates the router model.
+    let mut latencies = Vec::new();
+    for &npkts in &[2usize, 8, 24] {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let h = 4;
+        let w = 4;
+        let mut progs = idle(h * w);
+        let mut expected = vec![0u32; h * w];
+        for core in 0..h * w {
+            for _ in 0..npkts {
+                let dst = (rng.below(h), rng.below(w));
+                let dst_core = dst.0 * w + dst.1;
+                if dst_core == core {
+                    continue;
+                }
+                progs[core].push(Instr::Send {
+                    dst,
+                    bytes: 4.0 * 64.0,
+                    tag: 0,
+                });
+                expected[dst_core] += 1;
+            }
+        }
+        for core in 0..h * w {
+            if expected[core] > 0 {
+                progs[core].push(Instr::Recv {
+                    tag: 0,
+                    packets: expected[core],
+                });
+            }
+        }
+        let stats = sim(h, w, progs).run(10_000_000);
+        latencies.push(stats.avg_packet_latency());
+    }
+    assert!(
+        latencies[2] > latencies[0],
+        "latency must grow with load: {latencies:?}"
+    );
+}
+
+#[test]
+fn chunk_simulation_end_to_end() {
+    use crate::arch::{CoreConfig, Dataflow};
+    use crate::compiler::compile_chunk;
+    use crate::workload::models::benchmarks;
+    use crate::workload::{OpGraph, Phase};
+
+    let mut spec = benchmarks()[0].clone();
+    spec.seq_len = 32;
+    let g = OpGraph::transformer_chunk(&spec, 1, 1, 8, Phase::Prefill, false);
+    let core = CoreConfig {
+        dataflow: Dataflow::WS,
+        mac_num: 512,
+        buffer_kb: 128,
+        buffer_bw_bits: 256,
+        noc_bw_bits: 512,
+    };
+    let chunk = compile_chunk(&g, 4, 4, &core);
+    let stats = simulate_chunk(
+        &chunk,
+        512,
+        &|op| naive_compute_cycles(chunk.assignments[op].flops_per_core, 512),
+        80_000_000,
+    );
+    assert!(stats.cycles > 0);
+    assert!(stats.packets_done > 0);
+    // Compute must dominate at this scale: cycles >= the largest op tile.
+    let max_compute = chunk
+        .assignments
+        .iter()
+        .map(|a| naive_compute_cycles(a.flops_per_core, 512))
+        .max()
+        .unwrap();
+    assert!(stats.cycles >= max_compute);
+}

@@ -1,0 +1,190 @@
+//! GNN feature construction — EXACT mirror of `python/compile/features.py`
+//! (the single source of truth; see its module docstring). Any change on
+//! either side must be made on both; the schema is pinned by
+//! `artifacts/gnn_noc.meta.json` and the tests below.
+
+use crate::arch::CoreConfig;
+use crate::compiler::routing::NUM_DIRS;
+use crate::compiler::CompiledChunk;
+use crate::eval::op_level::{chunk_latency, NocModel};
+
+pub const N_MAX: usize = 256;
+pub const E_MAX: usize = 1024;
+pub const F_N: usize = 5;
+pub const F_E: usize = 4;
+
+/// (drow, dcol) per direction — must match `Dir` (E, W, S, N) and the
+/// Python `DIR_OFFSETS`.
+const DIR_OFFSETS: [(isize, isize); 4] = [(0, 1), (0, -1), (1, 0), (-1, 0)];
+
+/// Valid directed mesh links in dense `link_index` order:
+/// (src_node, dst_node, dense_index).
+pub fn mesh_edges(h: usize, w: usize) -> Vec<(usize, usize, usize)> {
+    let mut edges = Vec::new();
+    for r in 0..h {
+        for c in 0..w {
+            let node = r * w + c;
+            for (d, (dr, dc)) in DIR_OFFSETS.iter().enumerate() {
+                let rr = r as isize + dr;
+                let cc = c as isize + dc;
+                if rr >= 0 && (rr as usize) < h && cc >= 0 && (cc as usize) < w {
+                    edges.push((node, rr as usize * w + cc as usize, node * NUM_DIRS + d));
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Padded GNN inputs for one compiled chunk.
+pub struct GnnInputs {
+    pub node_feat: Vec<f32>, // [N_MAX * F_N] row-major
+    pub edge_feat: Vec<f32>, // [E_MAX * F_E]
+    pub src_idx: Vec<i32>,
+    pub dst_idx: Vec<i32>,
+    pub edge_mask: Vec<f32>,
+    /// Dense link index per padded edge slot (for scattering predictions
+    /// back into `link_index` order).
+    pub dense_of_edge: Vec<usize>,
+    pub t0_cycles: f64,
+}
+
+/// Build features. Returns `None` when the region exceeds the padded
+/// shapes (the caller falls back to the analytical model — hierarchical
+/// scale reduction per §VI).
+pub fn build(chunk: &CompiledChunk, core: &CoreConfig) -> Option<GnnInputs> {
+    let h = chunk.region_h;
+    let w = chunk.region_w;
+    let n = h * w;
+    if n > N_MAX {
+        return None;
+    }
+    let edges = mesh_edges(h, w);
+    if edges.len() > E_MAX {
+        return None;
+    }
+
+    // Zero-load normalizer T0: identical to the dataset generator.
+    let zeros = vec![0.0; n * NUM_DIRS];
+    let t0 = chunk_latency(chunk, core, 1.0, NocModel::LinkWaits(&zeros))
+        .cycles
+        .max(1.0);
+    let flit_bytes = (core.noc_bw_bits as f64 / 8.0).max(1.0);
+
+    let node_bytes = chunk.node_injected_bytes();
+    let mut node_feat = vec![0.0f32; N_MAX * F_N];
+    for r in 0..h {
+        for c in 0..w {
+            let i = r * w + c;
+            let inject = node_bytes[i] / flit_bytes / t0;
+            let f = &mut node_feat[i * F_N..(i + 1) * F_N];
+            f[0] = inject as f32;
+            f[1] = 1.0;
+            f[2] = r as f32 / (h.max(2) - 1) as f32;
+            f[3] = c as f32 / (w.max(2) - 1) as f32;
+            f[4] = 1.0;
+        }
+    }
+
+    let link_bytes = chunk.link_loads();
+    let bw_norm = ((core.noc_bw_bits.max(32) as f64 / 32.0).log2() / 7.0) as f32;
+    let mut edge_feat = vec![0.0f32; E_MAX * F_E];
+    let mut src_idx = vec![0i32; E_MAX];
+    let mut dst_idx = vec![0i32; E_MAX];
+    let mut edge_mask = vec![0.0f32; E_MAX];
+    let mut dense_of_edge = vec![0usize; E_MAX];
+    for (e, &(s, d, dense)) in edges.iter().enumerate() {
+        let rho = link_bytes[dense] / flit_bytes / t0;
+        let f = &mut edge_feat[e * F_E..(e + 1) * F_E];
+        f[0] = rho as f32;
+        f[1] = bw_norm;
+        f[2] = 1.0;
+        f[3] = 1.0;
+        src_idx[e] = s as i32;
+        dst_idx[e] = d as i32;
+        edge_mask[e] = 1.0;
+        dense_of_edge[e] = dense;
+    }
+
+    Some(GnnInputs {
+        node_feat,
+        edge_feat,
+        src_idx,
+        dst_idx,
+        edge_mask,
+        dense_of_edge,
+        t0_cycles: t0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dataflow;
+    use crate::compiler::compile_chunk;
+    use crate::workload::models::benchmarks;
+    use crate::workload::{OpGraph, Phase};
+
+    fn chunk(h: usize, w: usize) -> (CompiledChunk, CoreConfig) {
+        let mut spec = benchmarks()[0].clone();
+        spec.seq_len = 64;
+        let g = OpGraph::transformer_chunk(&spec, 1, 1, 8, Phase::Prefill, false);
+        let core = CoreConfig {
+            dataflow: Dataflow::WS,
+            mac_num: 512,
+            buffer_kb: 128,
+            buffer_bw_bits: 256,
+            noc_bw_bits: 512,
+        };
+        (compile_chunk(&g, h, w, &core), core)
+    }
+
+    #[test]
+    fn mesh_edges_count_matches_formula() {
+        // h x w mesh: 2*(2hw - h - w) directed links.
+        for (h, w) in [(3usize, 3usize), (4, 7), (16, 16), (1, 5)] {
+            let expect = 2 * (2 * h * w - h - w);
+            assert_eq!(mesh_edges(h, w).len(), expect, "{h}x{w}");
+        }
+    }
+
+    #[test]
+    fn sixteen_square_fits_padding() {
+        assert!(mesh_edges(16, 16).len() <= E_MAX);
+        assert_eq!(mesh_edges(16, 16).len(), 960);
+    }
+
+    #[test]
+    fn build_shapes_and_mask() {
+        let (ch, core) = chunk(4, 5);
+        let f = build(&ch, &core).unwrap();
+        assert_eq!(f.node_feat.len(), N_MAX * F_N);
+        assert_eq!(f.edge_feat.len(), E_MAX * F_E);
+        let active: f32 = f.edge_mask.iter().sum();
+        assert_eq!(active as usize, mesh_edges(4, 5).len());
+        assert!(f.t0_cycles > 0.0);
+        // Node 0 active flag set, padded node inactive.
+        assert_eq!(f.node_feat[1], 1.0);
+        assert_eq!(f.node_feat[(4 * 5) * F_N + 1], 0.0);
+    }
+
+    #[test]
+    fn oversize_region_returns_none() {
+        let (ch, core) = chunk(17, 17);
+        assert!(build(&ch, &core).is_none());
+    }
+
+    #[test]
+    fn golden_matches_python_schema() {
+        // Pin the exact feature values for a tiny deterministic case so a
+        // drift on either side of the Rust/Python mirror fails loudly.
+        // (python/tests/test_features.py pins the same numbers.)
+        let h = 2;
+        let w = 2;
+        let edges = mesh_edges(h, w);
+        assert_eq!(
+            edges,
+            vec![(0, 1, 0), (0, 2, 2), (1, 0, 5), (1, 3, 6), (2, 3, 8), (2, 0, 11), (3, 2, 13), (3, 1, 15)]
+        );
+    }
+}

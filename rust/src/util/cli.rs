@@ -1,0 +1,158 @@
+//! Tiny CLI argument parser substrate (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! typed getters with defaults; collects unknown-flag errors so binaries
+//! can print usage. Used by the `theseus` binary, examples, and benches.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                    args.seen.push(k.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    let v = if takes_value {
+                        it.next().unwrap()
+                    } else {
+                        "true".to_string()
+                    };
+                    args.flags.insert(name.to_string(), v);
+                    args.seen.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Subcommand = first positional arg.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+/// Env-var override helper: benches read scale knobs like
+/// `THESEUS_BO_ITERS` so `cargo bench` stays fast by default.
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["run", "--iters", "10", "--model=gpt175b", "--verbose"]);
+        assert_eq!(a.command(), Some("run"));
+        assert_eq!(a.usize("iters", 0), 10);
+        assert_eq!(a.str("model", ""), "gpt175b");
+        assert!(a.bool("verbose", false));
+        assert!(!a.has("absent"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize("n", 7), 7);
+        assert_eq!(a.f64("x", 1.5), 1.5);
+        assert_eq!(a.str("s", "d"), "d");
+        assert_eq!(a.command(), None);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse(&["--seed", "9", "eval"]);
+        // "eval" is consumed as the value of --seed? No: 9 parses, eval is positional.
+        assert_eq!(a.u64("seed", 0), 9);
+        assert_eq!(a.command(), Some("eval"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["cmd", "--fast"]);
+        assert!(a.bool("fast", false));
+    }
+}

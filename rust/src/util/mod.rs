@@ -1,0 +1,12 @@
+//! Substrate utilities built in-repo because the offline environment has no
+//! `serde`/`rand`/`clap`/`rayon`/`proptest` (see DESIGN.md §2): JSON, PRNG,
+//! statistics, CLI parsing, a scoped thread pool, property-test helpers and
+//! fixed-width table printing for the bench harness.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

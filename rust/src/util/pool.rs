@@ -1,0 +1,111 @@
+//! Scoped thread-pool parallel map substrate (no `rayon`/`tokio` offline).
+//!
+//! The DSE coordinator evaluates candidate pools and Monte-Carlo yield
+//! batches in parallel; a plain `std::thread::scope` work-stealing-by-chunks
+//! map is all that's needed — tasks are coarse (whole design-point
+//! evaluations) so stealing granularity doesn't matter.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads: `THESEUS_THREADS` env override, else
+/// available_parallelism, else 4.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("THESEUS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Parallel map over `items`, preserving order. `f` must be `Sync` and is
+/// shared by reference across workers; items are claimed via an atomic
+/// cursor so uneven task costs balance out.
+pub fn par_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        return items.iter().map(|x| f(x)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<U>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(&items[i]);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker completed"))
+        .collect()
+}
+
+/// Parallel map over an index range (for Monte-Carlo style loops where the
+/// input is just a trial number).
+pub fn par_map_idx<U, F>(n: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    let idx: Vec<usize> = (0..n).collect();
+    par_map(&idx, |&i| f(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<usize> = (0..1000).collect();
+        let ys = par_map(&xs, |&x| x * 2);
+        assert_eq!(ys, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let xs: Vec<usize> = vec![];
+        let ys: Vec<usize> = par_map(&xs, |&x| x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn uneven_costs() {
+        // Items with wildly different costs still all complete, in order.
+        let xs: Vec<usize> = (0..64).collect();
+        let ys = par_map(&xs, |&x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i as u64);
+            }
+            (x, acc)
+        });
+        for (i, (x, _)) in ys.iter().enumerate() {
+            assert_eq!(i, *x);
+        }
+    }
+
+    #[test]
+    fn idx_variant() {
+        let ys = par_map_idx(10, |i| i * i);
+        assert_eq!(ys, vec![0, 1, 4, 9, 16, 25, 36, 49, 64, 81]);
+    }
+}

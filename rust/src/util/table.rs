@@ -1,0 +1,153 @@
+//! Fixed-width ASCII table printer for the bench harness — every figure
+//! regenerator prints "the same rows/series the paper reports" as a table
+//! plus machine-readable JSON rows.
+
+use crate::util::json::Json;
+
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience row builder from display values.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&cells)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |out: &mut String| {
+            for w in &widths {
+                out.push('+');
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        let render_row = |out: &mut String, cells: &[String]| {
+            for (c, w) in cells.iter().zip(&widths) {
+                let pad = w - c.chars().count();
+                out.push_str(&format!("| {}{} ", c, " ".repeat(pad)));
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out);
+        render_row(&mut out, &self.headers);
+        line(&mut out);
+        for row in &self.rows {
+            render_row(&mut out, row);
+        }
+        line(&mut out);
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Machine-readable form: {"title": ..., "rows": [{hdr: cell, ...}]}.
+    /// Cells that parse as f64 are emitted as numbers.
+    pub fn to_json(&self) -> Json {
+        let mut rows = Vec::new();
+        for row in &self.rows {
+            let mut obj = Json::obj();
+            for (h, c) in self.headers.iter().zip(row) {
+                let v = match c.parse::<f64>() {
+                    Ok(x) => Json::Num(x),
+                    Err(_) => Json::Str(c.clone()),
+                };
+                obj.set(h, v);
+            }
+            rows.push(obj);
+        }
+        let mut out = Json::obj();
+        out.set("title", Json::Str(self.title.clone()))
+            .set("rows", Json::Arr(rows));
+        out
+    }
+}
+
+/// Human-friendly engineering formatter: 1234567 -> "1.23M".
+pub fn eng(x: f64) -> String {
+    let ax = x.abs();
+    let (scale, suffix) = if ax >= 1e15 {
+        (1e15, "P")
+    } else if ax >= 1e12 {
+        (1e12, "T")
+    } else if ax >= 1e9 {
+        (1e9, "G")
+    } else if ax >= 1e6 {
+        (1e6, "M")
+    } else if ax >= 1e3 {
+        (1e3, "K")
+    } else {
+        (1.0, "")
+    };
+    if suffix.is_empty() {
+        format!("{:.3}", x)
+    } else {
+        format!("{:.2}{}", x / scale, suffix)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| longer | 2.5   |"));
+    }
+
+    #[test]
+    fn json_rows_typed() {
+        let mut t = Table::new("demo", &["k", "v"]);
+        t.row(&["x".into(), "3.5".into()]);
+        let j = t.to_json();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("v").unwrap().as_f64(), Some(3.5));
+        assert_eq!(rows[0].get("k").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn eng_format() {
+        assert_eq!(eng(1_230_000.0), "1.23M");
+        assert_eq!(eng(1.5e12), "1.50T");
+        assert_eq!(eng(12.0), "12.000");
+    }
+}

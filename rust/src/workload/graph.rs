@@ -1,0 +1,402 @@
+//! Operator graphs (paper §VI-A step 1, Fig. 6a-b).
+//!
+//! The Workload Compiler segments the model into chunks and generates the
+//! operator DAG of one chunk. For a GPT block the fwd graph is
+//! LN → QKV → scores → softmax → context → proj(+res) → LN → MLP-up →
+//! GeLU → MLP-down(+res); training appends explicit dgrad/wgrad matmuls.
+//! All dims are *per TP shard* of one microbatch.
+
+use crate::arch::constants as k;
+
+use super::LlmSpec;
+
+/// Which execution phase a graph models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Training fwd+bwd of one microbatch through one pipeline stage.
+    Training,
+    /// Inference prefill (full-sequence fwd).
+    Prefill,
+    /// Inference decode (one token per sequence, KV-cache reads).
+    Decode,
+}
+
+/// Operator kinds with their shard-local shapes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    /// Dense GEMM: (m × k) · (k × n).
+    Matmul { m: usize, k: usize, n: usize },
+    /// Batched GEMM (attention scores/context): `batch` independent
+    /// (m × k)·(k × n) products.
+    BatchMatmul { batch: usize, m: usize, k: usize, n: usize },
+    /// Row softmax over `rows` × `cols`.
+    Softmax { rows: usize, cols: usize },
+    /// LayerNorm over `rows` × `cols`.
+    LayerNorm { rows: usize, cols: usize },
+    /// Pointwise op over `elems` elements (GeLU, residual add, ...).
+    Elementwise { elems: usize },
+    /// KV-cache streaming read of `bytes` (decode only; hits DRAM).
+    KvRead { bytes: f64 },
+}
+
+impl OpKind {
+    pub fn flops(&self) -> f64 {
+        match *self {
+            OpKind::Matmul { m, k, n } => 2.0 * m as f64 * k as f64 * n as f64,
+            OpKind::BatchMatmul { batch, m, k, n } => {
+                2.0 * batch as f64 * m as f64 * k as f64 * n as f64
+            }
+            OpKind::Softmax { rows, cols } => 5.0 * rows as f64 * cols as f64,
+            OpKind::LayerNorm { rows, cols } => 8.0 * rows as f64 * cols as f64,
+            OpKind::Elementwise { elems } => elems as f64,
+            OpKind::KvRead { .. } => 0.0,
+        }
+    }
+
+    /// Output tensor bytes.
+    pub fn out_bytes(&self) -> f64 {
+        let elems = match *self {
+            OpKind::Matmul { m, n, .. } => m as f64 * n as f64,
+            OpKind::BatchMatmul { batch, m, n, .. } => batch as f64 * m as f64 * n as f64,
+            OpKind::Softmax { rows, cols } | OpKind::LayerNorm { rows, cols } => {
+                rows as f64 * cols as f64
+            }
+            OpKind::Elementwise { elems } => elems as f64,
+            OpKind::KvRead { bytes } => return bytes,
+        };
+        elems * k::BYTES_PER_ELEM
+    }
+
+    /// Weight bytes resident for the op (GEMM operands that persist).
+    pub fn weight_bytes(&self) -> f64 {
+        match *self {
+            OpKind::Matmul { k, n, .. } => k as f64 * n as f64 * crate::arch::constants::BYTES_PER_ELEM,
+            _ => 0.0,
+        }
+    }
+
+    /// Whether the op is dominated by memory streaming rather than MACs.
+    pub fn is_memory_bound_kind(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Softmax { .. }
+                | OpKind::LayerNorm { .. }
+                | OpKind::Elementwise { .. }
+                | OpKind::KvRead { .. }
+        )
+    }
+}
+
+/// One operator node.
+#[derive(Debug, Clone, Copy)]
+pub struct Op {
+    pub id: usize,
+    pub kind: OpKind,
+}
+
+/// Dependency edge carrying `bytes` of activation between ops.
+#[derive(Debug, Clone, Copy)]
+pub struct Edge {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+}
+
+/// Operator DAG of one chunk (Fig. 6b). Ops are in a valid topological
+/// order by construction.
+#[derive(Debug, Clone, Default)]
+pub struct OpGraph {
+    pub ops: Vec<Op>,
+    pub edges: Vec<Edge>,
+}
+
+impl OpGraph {
+    fn push(&mut self, kind: OpKind, deps: &[usize]) -> usize {
+        let id = self.ops.len();
+        self.ops.push(Op { id, kind });
+        for &d in deps {
+            self.edges.push(Edge {
+                src: d,
+                dst: id,
+                bytes: self.ops[d].kind.out_bytes(),
+            });
+        }
+        id
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.kind.flops()).sum()
+    }
+
+    pub fn total_edge_bytes(&self) -> f64 {
+        self.edges.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Resident weight bytes across all ops (per TP shard, per layer set).
+    pub fn total_weight_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.kind.weight_bytes()).sum()
+    }
+
+    /// Verify the edge list is consistent with a topological node order.
+    pub fn is_topo_ordered(&self) -> bool {
+        self.edges.iter().all(|e| e.src < e.dst)
+    }
+
+    /// Build the operator graph of `n_layers` transformer layers for one
+    /// microbatch of `mb_seqs` sequences, sharded over `tp` tensor-parallel
+    /// ways. `phase` selects training (adds bwd), prefill, or decode
+    /// (seq dim = 1 token, adds KV reads; `mqa` shrinks KV traffic).
+    pub fn transformer_chunk(
+        spec: &LlmSpec,
+        n_layers: usize,
+        mb_seqs: usize,
+        tp: usize,
+        phase: Phase,
+        mqa: bool,
+    ) -> OpGraph {
+        let mut g = OpGraph::default();
+        let h = spec.hidden;
+        let tp = tp.max(1);
+        let heads_shard = (spec.heads / tp).max(1);
+        let d = spec.head_dim();
+        // Token rows processed by this graph.
+        let s = match phase {
+            Phase::Decode => 1,
+            _ => spec.seq_len,
+        };
+        let rows = mb_seqs * s;
+        // Context length attended over.
+        let ctx = spec.seq_len;
+
+        let mut prev: usize = g.push(
+            OpKind::LayerNorm { rows, cols: h },
+            &[],
+        );
+
+        for _ in 0..n_layers {
+            // --- attention ---
+            let qkv = g.push(
+                OpKind::Matmul {
+                    m: rows,
+                    k: h,
+                    n: 3 * heads_shard * d,
+                },
+                &[prev],
+            );
+            let kv_deps = if phase == Phase::Decode {
+                let kv_heads = if mqa { 1 } else { heads_shard };
+                let bytes = 2.0
+                    * kv_heads as f64
+                    * ctx as f64
+                    * d as f64
+                    * k::BYTES_PER_ELEM
+                    * mb_seqs as f64;
+                let kv = g.push(OpKind::KvRead { bytes }, &[]);
+                vec![qkv, kv]
+            } else {
+                vec![qkv]
+            };
+            let scores = g.push(
+                OpKind::BatchMatmul {
+                    batch: mb_seqs * heads_shard,
+                    m: s,
+                    k: d,
+                    n: ctx,
+                },
+                &kv_deps,
+            );
+            let softmax = g.push(
+                OpKind::Softmax {
+                    rows: mb_seqs * heads_shard * s,
+                    cols: ctx,
+                },
+                &[scores],
+            );
+            let context = g.push(
+                OpKind::BatchMatmul {
+                    batch: mb_seqs * heads_shard,
+                    m: s,
+                    k: ctx,
+                    n: d,
+                },
+                &[softmax],
+            );
+            let proj = g.push(
+                OpKind::Matmul {
+                    m: rows,
+                    k: heads_shard * d,
+                    n: h,
+                },
+                &[context],
+            );
+            let res1 = g.push(OpKind::Elementwise { elems: rows * h }, &[proj, prev]);
+            let ln2 = g.push(OpKind::LayerNorm { rows, cols: h }, &[res1]);
+
+            // --- MLP ---
+            let up = g.push(
+                OpKind::Matmul {
+                    m: rows,
+                    k: h,
+                    n: 4 * h / tp,
+                },
+                &[ln2],
+            );
+            let gelu = g.push(
+                OpKind::Elementwise {
+                    elems: rows * 4 * h / tp,
+                },
+                &[up],
+            );
+            let down = g.push(
+                OpKind::Matmul {
+                    m: rows,
+                    k: 4 * h / tp,
+                    n: h,
+                },
+                &[gelu],
+            );
+            let res2 = g.push(OpKind::Elementwise { elems: rows * h }, &[down, res1]);
+            prev = res2;
+        }
+
+        if phase == Phase::Training {
+            // Backward: for each fwd GEMM, a dgrad and a wgrad GEMM of the
+            // same volume. We append them as a mirrored tail so the DAG
+            // stays topologically ordered; memory-bound ops get a 2×
+            // revisit (recompute under 2-layer checkpointing + grad).
+            let fwd_ops: Vec<Op> = g.ops.clone();
+            let mut tail_prev = prev;
+            for op in fwd_ops.iter().rev() {
+                match op.kind {
+                    OpKind::Matmul { m, k: kk, n } => {
+                        let dgrad = g.push(OpKind::Matmul { m, k: n, n: kk }, &[tail_prev]);
+                        let _wgrad = g.push(OpKind::Matmul { m: kk, k: m, n }, &[dgrad]);
+                        tail_prev = dgrad;
+                    }
+                    OpKind::BatchMatmul { batch, m, k: kk, n } => {
+                        let dgrad = g.push(
+                            OpKind::BatchMatmul { batch, m, k: n, n: kk },
+                            &[tail_prev],
+                        );
+                        let _wgrad =
+                            g.push(OpKind::BatchMatmul { batch, m: kk, k: m, n }, &[dgrad]);
+                        tail_prev = dgrad;
+                    }
+                    OpKind::Softmax { rows, cols } => {
+                        tail_prev = g.push(OpKind::Softmax { rows, cols }, &[tail_prev]);
+                    }
+                    OpKind::LayerNorm { rows, cols } => {
+                        tail_prev = g.push(OpKind::LayerNorm { rows, cols }, &[tail_prev]);
+                    }
+                    OpKind::Elementwise { elems } => {
+                        tail_prev = g.push(OpKind::Elementwise { elems }, &[tail_prev]);
+                    }
+                    OpKind::KvRead { .. } => {}
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::benchmarks;
+
+    fn spec() -> LlmSpec {
+        benchmarks()[0].clone() // GPT-1.7B
+    }
+
+    #[test]
+    fn topo_ordered_all_phases() {
+        for phase in [Phase::Training, Phase::Prefill, Phase::Decode] {
+            let g = OpGraph::transformer_chunk(&spec(), 2, 1, 2, phase, false);
+            assert!(g.is_topo_ordered());
+            assert!(!g.ops.is_empty());
+        }
+    }
+
+    #[test]
+    fn training_flops_triple_prefill() {
+        let f = OpGraph::transformer_chunk(&spec(), 2, 1, 1, Phase::Prefill, false);
+        let t = OpGraph::transformer_chunk(&spec(), 2, 1, 1, Phase::Training, false);
+        let ratio = t.total_flops() / f.total_flops();
+        assert!(ratio > 2.7 && ratio < 3.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn fwd_flops_match_analytic() {
+        // One full model fwd over one sequence ≈ fwd_flops_per_token × seq,
+        // excluding embeddings (graph models transformer blocks only).
+        let m = spec();
+        let g = OpGraph::transformer_chunk(&m, m.layers, 1, 1, Phase::Prefill, false);
+        let analytic = m.fwd_flops_per_token() * m.seq_len as f64;
+        let rel = (g.total_flops() - analytic).abs() / analytic;
+        assert!(rel < 0.15, "graph={:.3e} analytic={:.3e}", g.total_flops(), analytic);
+    }
+
+    #[test]
+    fn tp_shards_flops() {
+        let g1 = OpGraph::transformer_chunk(&spec(), 2, 1, 1, Phase::Prefill, false);
+        let g4 = OpGraph::transformer_chunk(&spec(), 2, 1, 4, Phase::Prefill, false);
+        let ratio = g1.total_flops() / g4.total_flops();
+        assert!(ratio > 3.0 && ratio < 4.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn decode_reads_kv_and_is_tiny() {
+        let d = OpGraph::transformer_chunk(&spec(), 2, 4, 1, Phase::Decode, false);
+        let p = OpGraph::transformer_chunk(&spec(), 2, 4, 1, Phase::Prefill, false);
+        assert!(d.total_flops() < p.total_flops() / 100.0);
+        let kv: f64 = d
+            .ops
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::KvRead { bytes } => Some(bytes),
+                _ => None,
+            })
+            .sum();
+        assert!(kv > 0.0);
+        // MQA shrinks KV traffic by ~heads.
+        let dm = OpGraph::transformer_chunk(&spec(), 2, 4, 1, Phase::Decode, true);
+        let kvm: f64 = dm
+            .ops
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::KvRead { bytes } => Some(bytes),
+                _ => None,
+            })
+            .sum();
+        assert!((kv / kvm - spec().heads as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn prop_graph_invariants() {
+        crate::util::prop::check(
+            "op graph edges reference valid ops, bytes positive",
+            |r| {
+                let layers = r.range(1, 4);
+                let mb = r.range(1, 4);
+                let tp = 1 << r.below(4);
+                let phase = *r.choose(&[Phase::Training, Phase::Prefill, Phase::Decode]);
+                (layers, mb, tp, phase)
+            },
+            |&(layers, mb, tp, phase)| {
+                let g = OpGraph::transformer_chunk(&spec(), layers, mb, tp, phase, false);
+                for e in &g.edges {
+                    if e.src >= g.ops.len() || e.dst >= g.ops.len() {
+                        return Err("dangling edge".into());
+                    }
+                    if e.bytes < 0.0 {
+                        return Err("negative bytes".into());
+                    }
+                }
+                if !g.is_topo_ordered() {
+                    return Err("not topo ordered".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

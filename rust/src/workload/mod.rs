@@ -1,0 +1,119 @@
+//! LLM workload modeling (paper §VI-A inputs): benchmark model specs
+//! (Table II), per-chunk operator graphs for training/prefill/decode, and
+//! parallel-strategy enumeration (TP × PP × DP × microbatch).
+
+pub mod graph;
+pub mod models;
+pub mod parallel;
+
+pub use graph::{Op, OpGraph, OpKind, Phase};
+pub use parallel::{enumerate_strategies, ParallelStrategy};
+
+use crate::arch::constants as k;
+
+/// A GPT-style benchmark model (Table II row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmSpec {
+    pub name: String,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// H100 count of the paper's area-matched GPU baseline.
+    pub gpu_num: usize,
+    /// Global training batch size (sequences).
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl LlmSpec {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Total parameter count: 12·L·h² transformer core (QKV 3h², proj h²,
+    /// MLP 8h²) + embeddings.
+    pub fn param_count(&self) -> f64 {
+        let h = self.hidden as f64;
+        let l = self.layers as f64;
+        12.0 * l * h * h + (self.vocab as f64) * h
+    }
+
+    /// Training FLOPs per token (fwd+bwd): the standard 6·N approximation
+    /// plus attention-score terms.
+    pub fn train_flops_per_token(&self) -> f64 {
+        let h = self.hidden as f64;
+        let l = self.layers as f64;
+        let s = self.seq_len as f64;
+        6.0 * self.param_count() + 12.0 * l * h * s
+    }
+
+    /// Forward-only FLOPs per token (inference prefill / decode step).
+    pub fn fwd_flops_per_token(&self) -> f64 {
+        self.train_flops_per_token() / 3.0
+    }
+
+    /// Parameter memory (bytes) at bf16.
+    pub fn param_bytes(&self) -> f64 {
+        self.param_count() * k::BYTES_PER_ELEM
+    }
+
+    /// Training state bytes per parameter: bf16 weight + bf16 grad + fp32
+    /// Adam (m, v, master) = 2 + 2 + 12 (Megatron/ZeRO accounting).
+    pub fn train_state_bytes(&self) -> f64 {
+        self.param_count() * 16.0
+    }
+
+    /// KV-cache bytes per sequence at full context (both K and V, all
+    /// layers). `mqa` = multi-query attention (one KV head).
+    pub fn kv_cache_bytes_per_seq(&self, mqa: bool) -> f64 {
+        let kv_heads = if mqa { 1.0 } else { self.heads as f64 };
+        2.0 * self.layers as f64
+            * self.seq_len as f64
+            * kv_heads
+            * self.head_dim() as f64
+            * k::BYTES_PER_ELEM
+    }
+
+    /// Activation bytes per sequence per layer boundary (activation
+    /// checkpointing at 2-layer granularity per §VIII-A keeps boundary
+    /// tensors only).
+    pub fn act_bytes_per_seq_layer(&self) -> f64 {
+        self.seq_len as f64 * self.hidden as f64 * k::BYTES_PER_ELEM
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::models::benchmarks;
+
+    #[test]
+    fn gpt3_param_count() {
+        let m = &benchmarks()[7];
+        let b = m.param_count() / 1e9;
+        assert!((b - 175.0).abs() / 175.0 < 0.05, "gpt3={b}B");
+    }
+
+    #[test]
+    fn train_flops_close_to_6n() {
+        let m = &benchmarks()[7];
+        let ratio = m.train_flops_per_token() / (6.0 * m.param_count());
+        assert!(ratio > 1.0 && ratio < 1.15, "ratio={ratio}");
+    }
+
+    #[test]
+    fn mqa_shrinks_kv_cache() {
+        let m = &benchmarks()[0];
+        let full = m.kv_cache_bytes_per_seq(false);
+        let mqa = m.kv_cache_bytes_per_seq(true);
+        assert!((full / mqa - m.heads as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_cache_magnitude_gpt3() {
+        // GPT-3, seq 2048, bf16: 2*96*2048*12288*2 ≈ 9.7 GB per sequence.
+        let m = &benchmarks()[7];
+        let gb = m.kv_cache_bytes_per_seq(false) / 1e9;
+        assert!((gb - 9.66).abs() < 0.5, "kv={gb}GB");
+    }
+}

@@ -1,0 +1,123 @@
+//! Benchmark LLMs (paper Table II): GPT-style models from 1.7 B to 32.4 T
+//! parameters, with the Megatron-LM scaling table for Nos. 0–6/8–10, GPT-3
+//! for No. 7, and the paper's extrapolated giants for Nos. 11–15.
+//! `gpu_num` is the paper's H100-cluster sizing used to match total silicon
+//! area between WSC and GPU baselines (§VIII-A).
+
+use super::LlmSpec;
+
+/// The sixteen benchmark models of Table II, indexed 0..=15.
+pub fn benchmarks() -> Vec<LlmSpec> {
+    // (name, layers, hidden, heads, gpus, global batch)
+    let rows: [(&str, usize, usize, usize, usize, usize); 16] = [
+        ("GPT-1.7B", 24, 2304, 24, 32, 512),
+        ("GPT-3.6B", 30, 3072, 32, 64, 512),
+        ("GPT-7.5B", 36, 4096, 32, 128, 512),
+        ("GPT-18.4B", 40, 6144, 48, 256, 1024),
+        ("GPT-39.1B", 48, 8192, 64, 512, 1536),
+        ("GPT-76.1B", 60, 10240, 80, 1024, 1792),
+        ("GPT-145.6B", 80, 12288, 96, 1536, 2304),
+        ("GPT-175B", 96, 12288, 96, 1000, 2048),
+        ("GPT-310.1B", 96, 16384, 128, 1920, 2160),
+        ("GPT-529.6B", 105, 20480, 128, 2520, 2520),
+        ("GPT-1008.0B", 128, 25600, 160, 3072, 3072),
+        ("GPT-2244.5B", 192, 32768, 256, 6000, 3072),
+        ("GPT-4066.6B", 192, 43008, 432, 12000, 5500),
+        ("GPT-9588.2B", 195, 65536, 512, 30000, 10000),
+        ("GPT-18436.5B", 240, 81920, 620, 60000, 15000),
+        ("GPT-32405.7B", 270, 102400, 850, 100000, 20000),
+    ];
+    rows.iter()
+        .map(|&(name, layers, hidden, heads, gpus, batch)| LlmSpec {
+            name: name.to_string(),
+            layers,
+            hidden,
+            heads,
+            gpu_num: gpus,
+            batch_size: batch,
+            seq_len: 2048,
+            vocab: 51200,
+        })
+        .collect()
+}
+
+/// Lookup by index or (case-insensitive) name fragment, e.g. "175b".
+pub fn find(key: &str) -> Option<LlmSpec> {
+    let all = benchmarks();
+    if let Ok(i) = key.parse::<usize>() {
+        return all.get(i).cloned();
+    }
+    let lower = key.to_lowercase();
+    all.into_iter()
+        .find(|m| m.name.to_lowercase().contains(&lower))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_models() {
+        assert_eq!(benchmarks().len(), 16);
+    }
+
+    #[test]
+    fn parameter_counts_match_names() {
+        // Each model's computed parameter count must match the billions in
+        // its name: within 10 % for the published rows (0–10); the paper's
+        // extrapolated giants (11–15, "32k"-style rounded hidden sizes) get
+        // 12 %.
+        for (i, m) in benchmarks().iter().enumerate() {
+            let name_b: f64 = m
+                .name
+                .trim_start_matches("GPT-")
+                .trim_end_matches('B')
+                .parse()
+                .unwrap();
+            let computed_b = m.param_count() / 1e9;
+            let rel = (computed_b - name_b).abs() / name_b;
+            let tol = if i <= 10 { 0.10 } else { 0.12 };
+            assert!(
+                rel < tol,
+                "{}: computed {:.1}B vs name {:.1}B",
+                m.name,
+                computed_b,
+                name_b
+            );
+        }
+    }
+
+    #[test]
+    fn table_2_explicit_rows() {
+        let b = benchmarks();
+        // No. 7 = GPT-3 175B exactly as in Table II.
+        assert_eq!(b[7].layers, 96);
+        assert_eq!(b[7].hidden, 12288);
+        assert_eq!(b[7].heads, 96);
+        assert_eq!(b[7].gpu_num, 1000);
+        assert_eq!(b[7].batch_size, 2048);
+        // No. 15 = 32.4T giant.
+        assert_eq!(b[15].layers, 270);
+        assert_eq!(b[15].hidden, 102400);
+        assert_eq!(b[15].gpu_num, 100000);
+    }
+
+    #[test]
+    fn find_by_fragment_and_index() {
+        assert_eq!(find("175b").unwrap().layers, 96);
+        assert_eq!(find("7").unwrap().name, "GPT-175B");
+        assert_eq!(find("1.7").unwrap().name, "GPT-1.7B");
+        assert!(find("nonexistent").is_none());
+    }
+
+    #[test]
+    fn monotone_scale() {
+        let b = benchmarks();
+        for i in 1..b.len() {
+            assert!(
+                b[i].param_count() > b[i - 1].param_count() * 0.9,
+                "non-monotone at {i}"
+            );
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Parallel-strategy enumeration (paper §VI-A: "we iterate through all
+//! combinations of TP, DP, PP, and micro-batch sizes that satisfy the
+//! memory capacity constraint and select the best-performance parallel
+//! strategy based on the evaluation results").
+//!
+//! A *chunk* is one (TP shard × PP stage × DP replica) of the model; the
+//! Workload Compiler binds each chunk to an equal share of the system's
+//! compute (Fig. 6).
+
+use super::LlmSpec;
+
+/// One point of the parallelism space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelStrategy {
+    /// Tensor-parallel ways (shards attention heads / MLP columns).
+    pub tp: usize,
+    /// Pipeline-parallel stages (must divide layers evenly — §II-A).
+    pub pp: usize,
+    /// Data-parallel replicas.
+    pub dp: usize,
+    /// Micro-batch size in sequences.
+    pub microbatch: usize,
+}
+
+impl ParallelStrategy {
+    pub fn num_chunks(&self) -> usize {
+        self.tp * self.pp * self.dp
+    }
+
+    /// Microbatches in flight per replica per step.
+    pub fn microbatches_per_step(&self, spec: &LlmSpec) -> usize {
+        (spec.batch_size / self.dp / self.microbatch).max(1)
+    }
+
+    /// 1F1B pipeline efficiency: mb / (mb + pp − 1).
+    pub fn pipeline_efficiency(&self, spec: &LlmSpec) -> f64 {
+        let mb = self.microbatches_per_step(spec) as f64;
+        mb / (mb + self.pp as f64 - 1.0)
+    }
+
+    /// Layers per pipeline stage.
+    pub fn layers_per_stage(&self, spec: &LlmSpec) -> usize {
+        spec.layers / self.pp
+    }
+}
+
+/// Memory-capacity description of the target system for the §VI-A
+/// feasibility filter.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemMemory {
+    /// Total on-wafer SRAM across the system, bytes.
+    pub sram_bytes: f64,
+    /// Total stacked-DRAM capacity, bytes (0 for off-chip designs).
+    pub stacking_bytes: f64,
+    /// Total off-chip DRAM capacity, bytes.
+    pub offchip_bytes: f64,
+    /// Total cores in the system (chunks cannot outnumber cores).
+    pub total_cores: usize,
+}
+
+impl SystemMemory {
+    pub fn total_bytes(&self) -> f64 {
+        self.sram_bytes + self.stacking_bytes + self.offchip_bytes
+    }
+}
+
+fn divisors_of(n: usize, cap: usize) -> Vec<usize> {
+    (1..=n.min(cap)).filter(|d| n % d == 0).collect()
+}
+
+fn pow2_up_to(n: usize) -> Vec<usize> {
+    let mut v = vec![1usize];
+    while *v.last().unwrap() * 2 <= n {
+        let next = v.last().unwrap() * 2;
+        v.push(next);
+    }
+    v
+}
+
+/// Per-chunk memory demand for *training*: full optimizer state of the
+/// chunk's layer shard plus checkpointed activations of in-flight
+/// microbatches.
+pub fn train_chunk_bytes(spec: &LlmSpec, s: &ParallelStrategy) -> f64 {
+    let state = spec.train_state_bytes() / (s.tp * s.pp) as f64;
+    // 2-layer checkpoint granularity: boundary activations for half the
+    // stage's layers, for up to `pp` in-flight microbatches (1F1B).
+    let ckpt_layers = (s.layers_per_stage(spec) as f64 / 2.0).ceil();
+    let act = spec.act_bytes_per_seq_layer() * s.microbatch as f64 * ckpt_layers
+        / s.tp as f64
+        * s.pp.min(4) as f64;
+    state + act
+}
+
+/// Per-chunk memory demand for *inference* (weights + KV cache at batch).
+pub fn infer_chunk_bytes(spec: &LlmSpec, s: &ParallelStrategy, batch: usize, mqa: bool) -> f64 {
+    let weights = spec.param_bytes() / (s.tp * s.pp) as f64;
+    let kv = spec.kv_cache_bytes_per_seq(mqa) * batch as f64 / (s.tp * s.pp) as f64;
+    weights + kv
+}
+
+/// Enumerate feasible strategies (training). Capped to keep the §VI-A
+/// iteration tractable: TP ≤ 64 and dividing heads, PP dividing layers,
+/// DP a power of two dividing batch, microbatch a power of two.
+pub fn enumerate_strategies(spec: &LlmSpec, mem: &SystemMemory) -> Vec<ParallelStrategy> {
+    let mut out = Vec::new();
+    let tps: Vec<usize> = pow2_up_to(spec.heads.min(64))
+        .into_iter()
+        .filter(|t| spec.heads % t == 0)
+        .collect();
+    let pps = divisors_of(spec.layers, 64);
+    let dps: Vec<usize> = pow2_up_to(spec.batch_size.min(1 << 14))
+        .into_iter()
+        .filter(|d| spec.batch_size % d == 0)
+        .collect();
+
+    for &tp in &tps {
+        for &pp in &pps {
+            for &dp in &dps {
+                let chunks = tp * pp * dp;
+                if chunks > mem.total_cores {
+                    continue;
+                }
+                let per_replica = spec.batch_size / dp;
+                for &mb in &pow2_up_to(per_replica.min(64)) {
+                    if per_replica % mb != 0 {
+                        continue;
+                    }
+                    let s = ParallelStrategy {
+                        tp,
+                        pp,
+                        dp,
+                        microbatch: mb,
+                    };
+                    let demand = train_chunk_bytes(spec, &s) * chunks as f64;
+                    if demand <= mem.total_bytes() {
+                        out.push(s);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::benchmarks;
+
+    fn mem_big() -> SystemMemory {
+        SystemMemory {
+            sram_bytes: 40e9,
+            stacking_bytes: 1e12,
+            offchip_bytes: 3e12,
+            total_cores: 10_000,
+        }
+    }
+
+    #[test]
+    fn finds_strategies_for_small_model() {
+        let spec = &benchmarks()[0];
+        let ss = enumerate_strategies(spec, &mem_big());
+        assert!(!ss.is_empty());
+        // All returned strategies satisfy divisibility + memory.
+        for s in &ss {
+            assert_eq!(spec.layers % s.pp, 0);
+            assert_eq!(spec.heads % s.tp, 0);
+            assert_eq!(spec.batch_size % s.dp, 0);
+            assert!(s.num_chunks() <= 10_000);
+        }
+    }
+
+    #[test]
+    fn tiny_memory_filters_everything() {
+        let spec = &benchmarks()[9]; // 529B params
+        let mem = SystemMemory {
+            sram_bytes: 1e9,
+            stacking_bytes: 0.0,
+            offchip_bytes: 0.0,
+            total_cores: 10_000,
+        };
+        assert!(enumerate_strategies(spec, &mem).is_empty());
+    }
+
+    #[test]
+    fn pipeline_efficiency_shape() {
+        let spec = &benchmarks()[0];
+        let s1 = ParallelStrategy { tp: 1, pp: 1, dp: 1, microbatch: 8 };
+        let s8 = ParallelStrategy { tp: 1, pp: 8, dp: 1, microbatch: 8 };
+        assert_eq!(s1.pipeline_efficiency(spec), 1.0);
+        let e8 = s8.pipeline_efficiency(spec);
+        assert!(e8 < 1.0 && e8 > 0.5, "e8={e8}");
+        // More microbatches -> better efficiency.
+        let s8small = ParallelStrategy { tp: 1, pp: 8, dp: 1, microbatch: 1 };
+        assert!(s8small.pipeline_efficiency(spec) > e8);
+    }
+
+    #[test]
+    fn train_memory_scales_down_with_tp_pp() {
+        let spec = &benchmarks()[7];
+        let base = ParallelStrategy { tp: 1, pp: 1, dp: 1, microbatch: 1 };
+        let split = ParallelStrategy { tp: 8, pp: 8, dp: 1, microbatch: 1 };
+        assert!(train_chunk_bytes(spec, &split) < train_chunk_bytes(spec, &base) / 30.0);
+    }
+
+    #[test]
+    fn infer_memory_mqa_helps() {
+        let spec = &benchmarks()[7];
+        let s = ParallelStrategy { tp: 8, pp: 1, dp: 1, microbatch: 1 };
+        let full = infer_chunk_bytes(spec, &s, 32, false);
+        let mqa = infer_chunk_bytes(spec, &s, 32, true);
+        assert!(mqa < full);
+    }
+
+    #[test]
+    fn prop_enumeration_feasible() {
+        let specs = benchmarks();
+        crate::util::prop::check(
+            "enumerated strategies satisfy the memory constraint",
+            |r| {
+                let spec = specs[r.below(4)].clone(); // small models for speed
+                let mem = SystemMemory {
+                    sram_bytes: r.uniform(1e9, 100e9),
+                    stacking_bytes: r.uniform(0.0, 2e12),
+                    offchip_bytes: r.uniform(0.0, 4e12),
+                    total_cores: r.range(100, 50_000),
+                };
+                (spec, mem)
+            },
+            |(spec, mem)| {
+                for s in enumerate_strategies(spec, mem).iter().take(200) {
+                    let demand = train_chunk_bytes(spec, s) * s.num_chunks() as f64;
+                    if demand > mem.total_bytes() {
+                        return Err(format!("{s:?} demand {demand:.2e} > cap"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

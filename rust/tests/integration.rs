@@ -1,0 +1,195 @@
+//! Cross-module integration tests: full pipeline slices that exercise
+//! several layers together (no artifacts required — the GNN-dependent path
+//! is covered by rust/tests/runtime_gnn.rs).
+
+use theseus::coordinator::{ref_power_for, run, DseRun, Explorer};
+use theseus::design_space::{reference_point, validate};
+use theseus::eval::chunk::eval_training_with;
+use theseus::eval::{eval_training, Analytical, CycleAccurate, SystemConfig};
+use theseus::explorer::BoConfig;
+use theseus::workload::models::benchmarks;
+use theseus::workload::ParallelStrategy;
+
+#[test]
+fn validator_to_evaluator_to_explorer() {
+    // A miniature random DSE run through the real evaluation engine.
+    let spec = benchmarks()[0].clone();
+    let dse = DseRun {
+        spec: spec.clone(),
+        explorer: Explorer::Random,
+        cfg: BoConfig {
+            iters: 3,
+            init: 2,
+            pool: 8,
+            mc_samples: 8,
+            ref_power: ref_power_for(&spec),
+            seed: 1,
+            sample_tries: 2000,
+        },
+        n1: 0,
+        k: 0,
+        use_gnn: false,
+    };
+    let trace = run(&dse);
+    assert!(trace.points.len() >= 3);
+    assert!(trace.final_hv() > 0.0);
+    // Every trace point re-validates (the explorer never leaks invalid
+    // configurations).
+    for p in &trace.points {
+        assert!(validate(&p.point).is_ok(), "invalid point in trace");
+    }
+}
+
+#[test]
+fn mobo_improves_over_iterations() {
+    let spec = benchmarks()[0].clone();
+    let cfg = BoConfig {
+        iters: 6,
+        init: 4,
+        pool: 16,
+        mc_samples: 16,
+        ref_power: ref_power_for(&spec),
+        seed: 5,
+        sample_tries: 2000,
+    };
+    let obj = theseus::coordinator::TrainingObjective::analytical(spec);
+    let trace = theseus::explorer::mobo(&obj, &cfg);
+    assert!(trace.points.len() >= 6);
+    // HV after all iterations >= HV after init (monotone by construction,
+    // but this checks the plumbing end to end).
+    let init_hv = trace.hv_history[cfg.init.min(trace.hv_history.len()) - 1];
+    assert!(trace.final_hv() >= init_hv);
+}
+
+#[test]
+fn analytical_and_ca_fidelities_agree_on_ordering() {
+    // Evaluate two very different design points with both fidelities; the
+    // better-by-analytical must also be better-by-CA (rank agreement at
+    // the decision level — what multi-fidelity optimization needs).
+    let spec = {
+        let mut s = benchmarks()[0].clone();
+        // Keep CA-sim time bounded; debug builds shrink further (the
+        // mandated `cargo test` runs unoptimized).
+        s.seq_len = if cfg!(debug_assertions) { 32 } else { 64 };
+        s.batch_size = if cfg!(debug_assertions) { 8 } else { 16 };
+        s
+    };
+    // One fixed strategy: the CA fidelity is too expensive for the full
+    // §VI-A strategy sweep in a test.
+    let strat = ParallelStrategy { tp: 2, pp: 1, dp: 4, microbatch: 2 };
+    let good = validate(&reference_point()).unwrap();
+    let mut weak_point = reference_point();
+    weak_point.wsc.reticle.core.noc_bw_bits = 32; // starved NoC
+    weak_point.wsc.reticle.core.buffer_bw_bits = 32;
+    let weak = validate(&weak_point).expect("weak point still valid");
+
+    let ana_good = eval_training_with(
+        &spec,
+        &SystemConfig {
+            validated: good.clone(),
+            n_wafers: 1,
+        },
+        strat,
+        &Analytical,
+    )
+    .unwrap()
+    .tokens_per_sec;
+    let ana_weak = eval_training_with(
+        &spec,
+        &SystemConfig {
+            validated: weak.clone(),
+            n_wafers: 1,
+        },
+        strat,
+        &Analytical,
+    )
+    .unwrap()
+    .tokens_per_sec;
+    assert!(ana_good > ana_weak, "analytical: {ana_good} !> {ana_weak}");
+
+    let ca = CycleAccurate {
+        max_cycles: 400_000_000,
+    };
+    let ca_good = eval_training_with(
+        &spec,
+        &SystemConfig {
+            validated: good,
+            n_wafers: 1,
+        },
+        strat,
+        &ca,
+    )
+    .unwrap()
+    .tokens_per_sec;
+    let ca_weak = eval_training_with(
+        &spec,
+        &SystemConfig {
+            validated: weak,
+            n_wafers: 1,
+        },
+        strat,
+        &ca,
+    )
+    .unwrap()
+    .tokens_per_sec;
+    assert!(ca_good > ca_weak, "CA: {ca_good} !> {ca_weak}");
+}
+
+#[test]
+fn paper_takeaway_1_core_granularity_has_interior_optimum() {
+    // Tiny Fig. 9 run: mid-range core granularity must beat tiny cores
+    // (the paper's optimum is 512G-1T FLOPS).
+    let per_grid = if cfg!(debug_assertions) { 2 } else { 4 };
+    let (_, rows) = theseus::figures::fig9_core_granularity(0, per_grid, 7);
+    let by_mac = |gflops: f64| {
+        rows.iter()
+            .filter(|r| (r.core_gflops - gflops).abs() < 1.0)
+            .map(|r| r.best_throughput)
+            .fold(0.0f64, f64::max)
+    };
+    let tiny = by_mac(16.0); // 8 MACs
+    let mid = by_mac(1024.0).max(by_mac(2048.0)).max(by_mac(512.0));
+    assert!(
+        mid > tiny,
+        "mid-granularity ({mid}) should beat tiny cores ({tiny})"
+    );
+}
+
+#[test]
+fn paper_takeaway_2_kgd_yield_mechanism() {
+    // Takeaway 2's mechanism: without KGD screening, die stitching must
+    // multiply reticle yields, so at realistic reticle counts it needs
+    // strictly more redundancy than InFO-SoW — or cannot reach the target
+    // at all. (Our reproduction finds the paper's blanket "InFO-SoW always
+    // wins" does NOT hold at small reticle counts, where stitching's
+    // cheaper PHY dominates — see EXPERIMENTS.md Fig. 9 notes.)
+    use theseus::arch::IntegrationStyle;
+    let p = reference_point(); // 54 reticles of 12x12 cores
+    let info = validate(&p).expect("InfoSoW reference validates");
+    let mut stitched = p;
+    stitched.wsc.integration = IntegrationStyle::DieStitching;
+    match validate(&stitched) {
+        Ok(v) => assert!(
+            v.phys.reticle.red_per_row > info.phys.reticle.red_per_row,
+            "stitching at 54 reticles must pay more redundancy ({} vs {})",
+            v.phys.reticle.red_per_row,
+            info.phys.reticle.red_per_row
+        ),
+        Err(e) => {
+            // Equally consistent: the yield target is simply unreachable.
+            let msg = format!("{e}");
+            assert!(msg.contains("yield"), "unexpected failure: {msg}");
+        }
+    }
+}
+
+#[test]
+fn equal_area_system_sizing() {
+    let v = validate(&reference_point()).unwrap();
+    let spec = benchmarks()[7].clone(); // 1000 GPUs
+    let sys = SystemConfig::area_matched(v, spec.gpu_num);
+    let gpu_area = spec.gpu_num as f64 * theseus::baselines::H100_DIE_MM2;
+    let wsc_area = sys.n_wafers as f64 * sys.validated.phys.area_mm2;
+    let ratio = wsc_area / gpu_area;
+    assert!(ratio > 0.8 && ratio < 1.2, "area mismatch ratio {ratio}");
+}

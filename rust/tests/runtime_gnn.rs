@@ -1,0 +1,104 @@
+//! Integration: load the AOT-compiled GNN through PJRT and check its
+//! predictions are usable by the op-level evaluator. Skips (with a note)
+//! when `artifacts/` has not been built yet — run `make artifacts`.
+
+use theseus::arch::{CoreConfig, Dataflow};
+use theseus::compiler::compile_chunk;
+use theseus::eval::op_level::{chunk_latency, NocModel};
+use theseus::eval::NocEstimator;
+use theseus::runtime::GnnModel;
+use theseus::workload::models::benchmarks;
+use theseus::workload::{OpGraph, Phase};
+
+fn model() -> Option<GnnModel> {
+    match GnnModel::load_default() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime_gnn tests: {e}");
+            None
+        }
+    }
+}
+
+fn chunk(h: usize, w: usize, seq: usize) -> (theseus::compiler::CompiledChunk, CoreConfig) {
+    let mut spec = benchmarks()[0].clone();
+    spec.seq_len = seq;
+    let g = OpGraph::transformer_chunk(&spec, 1, 1, 8, Phase::Prefill, false);
+    let core = CoreConfig {
+        dataflow: Dataflow::WS,
+        mac_num: 512,
+        buffer_kb: 128,
+        buffer_bw_bits: 256,
+        noc_bw_bits: 512,
+    };
+    (compile_chunk(&g, h, w, &core), core)
+}
+
+#[test]
+fn gnn_loads_and_predicts() {
+    let Some(m) = model() else { return };
+    let (ch, core) = chunk(4, 4, 64);
+    let waits = m
+        .predict_link_waits(&ch, &core)
+        .expect("predict")
+        .expect("4x4 within padding");
+    assert_eq!(waits.len(), 4 * 4 * 4);
+    assert!(waits.iter().all(|&w| w.is_finite() && w >= 0.0));
+    // Some link should see nonzero predicted waiting under load.
+    assert!(
+        waits.iter().any(|&w| w > 1e-6),
+        "all-zero predictions are suspicious"
+    );
+}
+
+#[test]
+fn gnn_feeds_op_level_evaluation() {
+    let Some(m) = model() else { return };
+    let (ch, core) = chunk(5, 5, 64);
+    let waits = m.link_waits(&ch, &core).expect("waits");
+    let gnn = chunk_latency(&ch, &core, 1.0, NocModel::LinkWaits(&waits));
+    let ana = chunk_latency(&ch, &core, 1.0, NocModel::Analytical);
+    assert!(gnn.cycles > 0.0);
+    // GNN and analytical must agree within an order of magnitude (both
+    // estimate the same chunk).
+    let ratio = gnn.cycles / ana.cycles;
+    assert!(ratio > 0.1 && ratio < 10.0, "ratio={ratio}");
+}
+
+#[test]
+fn gnn_tracks_ca_ordering_better_or_close() {
+    // Miniature Fig. 7b: Kendall-tau of GNN vs CA over a few configs.
+    let Some(m) = model() else { return };
+    let mut gnn_lat = Vec::new();
+    let mut ca_lat = Vec::new();
+    let configs: &[(usize, usize, usize)] = if cfg!(debug_assertions) {
+        &[(3, 3, 32), (4, 4, 32), (4, 3, 16)]
+    } else {
+        &[(3, 3, 32), (4, 4, 64), (5, 4, 32), (6, 6, 64), (4, 6, 96)]
+    };
+    for &(h, w, seq) in configs {
+        let (ch, core) = chunk(h, w, seq);
+        let waits = m.link_waits(&ch, &core).unwrap();
+        gnn_lat.push(chunk_latency(&ch, &core, 1.0, NocModel::LinkWaits(&waits)).cycles);
+        let stats = theseus::noc_sim::simulate_chunk(
+            &ch,
+            core.noc_bw_bits,
+            &|op| {
+                theseus::eval::tile::eval_tile(&ch.assignments[op], &core, 1.0)
+                    .cycles
+                    .ceil() as u64
+            },
+            300_000_000,
+        );
+        ca_lat.push(stats.cycles as f64);
+    }
+    let tau = theseus::util::stats::kendall_tau(&gnn_lat, &ca_lat);
+    assert!(tau > 0.0, "gnn should rank-correlate with CA: tau={tau}");
+}
+
+#[test]
+fn oversize_region_falls_back() {
+    let Some(m) = model() else { return };
+    let (ch, core) = chunk(17, 17, 32);
+    assert!(m.predict_link_waits(&ch, &core).unwrap().is_none());
+}
