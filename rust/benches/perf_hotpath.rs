@@ -1,10 +1,17 @@
 //! Bench: hot-path microbenchmarks for the §Perf optimization pass —
-//! op-level evaluation throughput, CA-sim cycle rate, GP fit/predict,
+//! op-level evaluation throughput, compile-cache behavior, cold-vs-warm
+//! design-point evaluation, CA-sim cycle rate, GP fit/incremental-update,
 //! validator throughput and (if built) GNN inference latency.
+//!
+//! The `median` column is numeric (unit in the `unit` column) so
+//! `scripts/bench_check.sh` can diff this run against the committed
+//! baseline `BENCH_perf_hotpath.json` with a regression gate.
 use theseus::arch::{CoreConfig, Dataflow};
 use theseus::bench;
+use theseus::compiler::cache::ChunkCache;
 use theseus::compiler::compile_chunk;
-use theseus::eval::op_level::{chunk_latency, NocModel};
+use theseus::eval::op_level::{chunk_latency, chunk_latency_with_topo, ChunkTopology, NocModel};
+use theseus::eval::{eval_training, eval_training_par, Analytical, SystemConfig};
 use theseus::util::rng::Rng;
 use theseus::util::table::Table;
 use theseus::workload::models::benchmarks;
@@ -16,7 +23,8 @@ fn main() {
         &["path", "median", "unit"],
     );
 
-    // 1. Op-level analytical evaluation (the DSE inner loop).
+    // 1. Op-level analytical evaluation (the DSE inner loop), with and
+    //    without a pre-built (cache-resident) topology.
     let mut spec = benchmarks()[0].clone();
     spec.seq_len = 256;
     let core = CoreConfig {
@@ -31,18 +39,74 @@ fn main() {
     let tm = bench::time("op_level_analytical", 2, 20, || {
         std::hint::black_box(chunk_latency(&chunk, &core, 1.0, NocModel::Analytical));
     });
-    t.row(&["op-level analytical (12x12, 2-layer bwd)".into(), format!("{:.3} ms", tm.median_s * 1e3), "per chunk".into()]);
+    t.row(&["op_level_analytical".into(), format!("{:.4}", tm.median_s * 1e3), "ms per chunk (12x12, 2-layer bwd)".into()]);
+    let topo = ChunkTopology::new(&chunk);
+    let tm = bench::time("op_level_cached_topo", 2, 20, || {
+        std::hint::black_box(chunk_latency_with_topo(
+            &chunk,
+            &topo,
+            &core,
+            1.0,
+            NocModel::Analytical,
+        ));
+    });
+    t.row(&["op_level_cached_topo".into(), format!("{:.4}", tm.median_s * 1e3), "ms per chunk (topology reused)".into()]);
 
-    // 2. Full training evaluation of one design point.
+    // 2. Compile-chunk cache: cold compile vs warm (hit-path) fetch.
+    let cache = ChunkCache::new(64);
+    let tm = bench::time("compile_chunk_cold", 1, 10, || {
+        cache.clear();
+        std::hint::black_box(cache.get_or_compile(&g, 12, 12, &core));
+    });
+    t.row(&["compile_chunk_cold".into(), format!("{:.4}", tm.median_s * 1e3), "ms (compile + index)".into()]);
+    cache.clear();
+    cache.get_or_compile(&g, 12, 12, &core);
+    let tm = bench::time("compile_chunk_warm", 2, 20, || {
+        std::hint::black_box(cache.get_or_compile(&g, 12, 12, &core));
+    });
+    t.row(&["compile_chunk_warm".into(), format!("{:.5}", tm.median_s * 1e3), "ms (memo hit)".into()]);
+
+    // 3. Full training evaluation of one design point: cold serial vs
+    //    warm pooled, plus the numeric-equivalence guard and the cache
+    //    hit rate of a steady-state sweep.
     let v = theseus::design_space::validate(&theseus::design_space::reference_point()).unwrap();
     let full_spec = benchmarks()[0].clone();
-    let tm = bench::time("eval_training", 1, 5, || {
-        let sys = theseus::eval::SystemConfig { validated: v.clone(), n_wafers: 1 };
-        std::hint::black_box(theseus::eval::eval_training(&full_spec, &sys, &theseus::eval::Analytical));
+    let sys = SystemConfig { validated: v.clone(), n_wafers: 1 };
+    let global = theseus::compiler::cache::global();
+    let cold = bench::time("eval_training_cold", 0, 5, || {
+        global.clear();
+        std::hint::black_box(eval_training(&full_spec, &sys, &Analytical));
     });
-    t.row(&["eval_training (strategy search)".into(), format!("{:.1} ms", tm.median_s * 1e3), "per design point".into()]);
+    t.row(&["eval_training_cold".into(), format!("{:.3}", cold.median_s * 1e3), "ms per design point (serial, cache cleared)".into()]);
+    global.clear();
+    let r_serial = eval_training(&full_spec, &sys, &Analytical); // prime cache
+    let before = global.stats();
+    let warm = bench::time("eval_training_warm_par", 1, 5, || {
+        std::hint::black_box(eval_training_par(&full_spec, &sys, &Analytical));
+    });
+    let after = global.stats();
+    t.row(&["eval_training_warm_par".into(), format!("{:.3}", warm.median_s * 1e3), "ms per design point (pooled, warm cache)".into()]);
+    t.row(&["eval_training_speedup".into(), format!("{:.2}", cold.median_s / warm.median_s.max(1e-12)), "x cold-serial / warm-pooled".into()]);
+    let swept = (after.hits + after.misses) - (before.hits + before.misses);
+    let hit_rate = if swept == 0 {
+        0.0
+    } else {
+        (after.hits - before.hits) as f64 / swept as f64
+    };
+    t.row(&["compile_cache_hit_rate".into(), format!("{:.4}", hit_rate), "fraction (warm strategy sweep)".into()]);
+    // Equivalence guard: pooled + cached must match serial + cold.
+    let r_par = eval_training_par(&full_spec, &sys, &Analytical);
+    let rel = match (&r_serial, &r_par) {
+        (Some(a), Some(b)) => {
+            (a.tokens_per_sec - b.tokens_per_sec).abs() / a.tokens_per_sec.abs().max(1e-300)
+        }
+        (None, None) => 0.0,
+        _ => f64::INFINITY,
+    };
+    assert!(rel <= 1e-9, "parallel/cached evaluation diverged: rel={rel}");
+    t.row(&["eval_match_rel_err".into(), format!("{rel:.2e}"), "serial vs pooled relative diff".into()]);
 
-    // 3. Design point validation (yield + floorplan + power).
+    // 4. Design point validation (yield + floorplan + power).
     let mut rng = Rng::new(1);
     let pts: Vec<_> = (0..64).map(|_| theseus::design_space::sample_raw(&mut rng)).collect();
     let tm = bench::time("validate", 1, 10, || {
@@ -50,9 +114,9 @@ fn main() {
             std::hint::black_box(theseus::design_space::validate(p).ok());
         }
     });
-    t.row(&["validator".into(), format!("{:.1} us", tm.median_s / 64.0 * 1e6), "per raw point".into()]);
+    t.row(&["validate".into(), format!("{:.2}", tm.median_s / 64.0 * 1e6), "us per raw point".into()]);
 
-    // 4. CA simulator cycle rate.
+    // 5. CA simulator cycle rate.
     let mut small = benchmarks()[0].clone();
     small.seq_len = 64;
     let g = OpGraph::transformer_chunk(&small, 1, 1, 8, Phase::Prefill, false);
@@ -64,24 +128,34 @@ fn main() {
             500_000_000,
         )
     });
-    t.row(&["CA simulator".into(), format!("{:.2} Mcyc/s", stats.cycles as f64 / wall / 1e6), "6x6 mesh".into()]);
+    t.row(&["ca_simulator".into(), format!("{:.2}", stats.cycles as f64 / wall / 1e6), "Mcyc/s (6x6 mesh)".into()]);
 
-    // 5. GP fit + predict at n=100.
+    // 6. GP fit vs incremental rank-1 update at n=100.
     let mut rng = Rng::new(2);
     let xs: Vec<Vec<f64>> = (0..100).map(|_| (0..12).map(|_| rng.f64()).collect()).collect();
     let ys: Vec<f64> = xs.iter().map(|x| x.iter().sum()).collect();
-    let tm = bench::time("gp_fit", 1, 5, || {
+    let fit = bench::time("gp_fit", 1, 5, || {
         std::hint::black_box(theseus::explorer::gp::Gp::fit(&xs, &ys));
     });
-    t.row(&["GP fit (n=100, d=12)".into(), format!("{:.1} ms", tm.median_s * 1e3), "per refit".into()]);
+    t.row(&["gp_fit_n100".into(), format!("{:.3}", fit.median_s * 1e3), "ms per refit (n=100, d=12)".into()]);
+    let mut gp = theseus::explorer::gp::Gp::fit(&xs, &ys);
+    let mut add_rng = Rng::new(3);
+    // < GP_REFIT_EVERY timed adds, so every one is a rank-1 border.
+    let add = bench::time("gp_add", 0, 10, || {
+        let x: Vec<f64> = (0..12).map(|_| add_rng.f64()).collect();
+        let y: f64 = x.iter().sum();
+        gp.add(&x, y);
+    });
+    t.row(&["gp_add_n100".into(), format!("{:.4}", add.median_s * 1e3), "ms per incremental update (n~100)".into()]);
+    t.row(&["gp_update_speedup".into(), format!("{:.2}", fit.median_s / add.median_s.max(1e-12)), "x full refit / rank-1 add".into()]);
 
-    // 6. GNN inference via PJRT (if artifacts exist).
+    // 7. GNN inference via PJRT (if artifacts exist).
     if let Ok(gnn) = theseus::runtime::GnnModel::load_default() {
         let inp = theseus::runtime::features::build(&ch, &core).unwrap();
         let tm = bench::time("gnn_predict", 2, 10, || {
             std::hint::black_box(gnn.predict_padded(&inp).unwrap());
         });
-        t.row(&["GNN inference (PJRT, padded 256/1024)".into(), format!("{:.2} ms", tm.median_s * 1e3), "per chunk".into()]);
+        t.row(&["gnn_predict".into(), format!("{:.3}", tm.median_s * 1e3), "ms per chunk (PJRT, padded 256/1024)".into()]);
     }
 
     t.print();

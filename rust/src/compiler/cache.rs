@@ -1,0 +1,387 @@
+//! Bounded, thread-safe memo of compiled chunks (§Perf: the DSE inner loop
+//! recompiled a near-identical [`CompiledChunk`] for every strategy probe).
+//!
+//! # Signature scheme
+//!
+//! Entries are keyed by a 64-bit structural signature covering everything
+//! `compile_chunk` reads: the op graph's shape (op kinds with their exact
+//! dims, edge endpoints and byte counts, in order) plus the region dims and
+//! the full [`CoreConfig`]. Floats are hashed by their IEEE bit patterns,
+//! so two graphs hash equal iff they are structurally identical inputs to
+//! the compiler — and compilation is deterministic, so equal signatures
+//! yield equal chunks. A 64-bit hash can collide in principle; every hit is
+//! therefore re-checked against cheap invariants (op count, region dims)
+//! and a mismatch is treated as a miss that overwrites the stale entry.
+//!
+//! # Thread-safety contract
+//!
+//! The cache is shared by reference across the evaluation pool
+//! ([`crate::util::pool`]). Lookups and inserts take a single internal
+//! mutex; **compilation runs outside the lock**, so concurrent misses on
+//! the same signature may compile the same chunk twice (last insert wins —
+//! harmless because compilation is deterministic) but never serialize the
+//! pool on compile time. Hit/miss counters are relaxed atomics: exact
+//! under quiescence (as read by benches/tests), approximate mid-flight.
+//!
+//! Entries are `Arc`ed so evaluators can hold a chunk + its
+//! [`ChunkTopology`] without cloning or blocking eviction. Eviction is
+//! least-recently-used via a monotonic use-tick — O(1) recency refresh on
+//! the hit path, with the O(len) evict-min scan paid only on eviction —
+//! bounded by `THESEUS_COMPILE_CACHE` (env, default 256 entries; 0
+//! disables caching entirely).
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::arch::CoreConfig;
+use crate::compiler::{compile_chunk, CompiledChunk};
+use crate::eval::op_level::ChunkTopology;
+use crate::workload::{OpGraph, OpKind};
+
+/// A compiled chunk bundled with its evaluation topology (built once,
+/// reused by every [`crate::eval::op_level::chunk_latency_with_topo`]
+/// call on the chunk).
+#[derive(Debug, Clone)]
+pub struct CachedChunk {
+    pub chunk: CompiledChunk,
+    pub topo: ChunkTopology,
+}
+
+impl CachedChunk {
+    /// Compile + index a chunk without touching any cache.
+    pub fn build(graph: &OpGraph, region_h: usize, region_w: usize, core: &CoreConfig) -> CachedChunk {
+        let chunk = compile_chunk(graph, region_h, region_w, core);
+        let topo = ChunkTopology::new(&chunk);
+        CachedChunk { chunk, topo }
+    }
+}
+
+fn hash_f64<H: Hasher>(h: &mut H, v: f64) {
+    h.write_u64(v.to_bits());
+}
+
+fn hash_kind<H: Hasher>(h: &mut H, k: &OpKind) {
+    match *k {
+        OpKind::Matmul { m, k: kk, n } => {
+            h.write_u8(0);
+            h.write_usize(m);
+            h.write_usize(kk);
+            h.write_usize(n);
+        }
+        OpKind::BatchMatmul { batch, m, k: kk, n } => {
+            h.write_u8(1);
+            h.write_usize(batch);
+            h.write_usize(m);
+            h.write_usize(kk);
+            h.write_usize(n);
+        }
+        OpKind::Softmax { rows, cols } => {
+            h.write_u8(2);
+            h.write_usize(rows);
+            h.write_usize(cols);
+        }
+        OpKind::LayerNorm { rows, cols } => {
+            h.write_u8(3);
+            h.write_usize(rows);
+            h.write_usize(cols);
+        }
+        OpKind::Elementwise { elems } => {
+            h.write_u8(4);
+            h.write_usize(elems);
+        }
+        OpKind::KvRead { bytes } => {
+            h.write_u8(5);
+            hash_f64(h, bytes);
+        }
+    }
+}
+
+/// Structural signature of one `compile_chunk` input (see module docs).
+pub fn chunk_signature(
+    graph: &OpGraph,
+    region_h: usize,
+    region_w: usize,
+    core: &CoreConfig,
+) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    region_h.hash(&mut h);
+    region_w.hash(&mut h);
+    h.write_u8(core.dataflow as u8);
+    h.write_usize(core.mac_num);
+    h.write_usize(core.buffer_kb);
+    h.write_usize(core.buffer_bw_bits);
+    h.write_usize(core.noc_bw_bits);
+    h.write_usize(graph.ops.len());
+    for op in &graph.ops {
+        h.write_usize(op.id);
+        hash_kind(&mut h, &op.kind);
+    }
+    h.write_usize(graph.edges.len());
+    for e in &graph.edges {
+        h.write_usize(e.src);
+        h.write_usize(e.dst);
+        hash_f64(&mut h, e.bytes);
+    }
+    h.finish()
+}
+
+/// Point-in-time cache counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    chunk: Arc<CachedChunk>,
+    /// Tick of the most recent hit/insert (monotonic; evict-min = LRU).
+    last_used: u64,
+}
+
+struct CacheMap {
+    entries: HashMap<u64, Entry>,
+    tick: u64,
+}
+
+/// The memo itself. Construct directly for an isolated cache (tests) or
+/// use [`global`] for the process-wide instance shared by the evaluators.
+pub struct ChunkCache {
+    map: Mutex<CacheMap>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    capacity: usize,
+}
+
+impl ChunkCache {
+    pub fn new(capacity: usize) -> ChunkCache {
+        ChunkCache {
+            map: Mutex::new(CacheMap {
+                entries: HashMap::new(),
+                tick: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            capacity,
+        }
+    }
+
+    /// Fetch the compiled chunk for `(graph, region, core)`, compiling on
+    /// miss. Compilation happens outside the lock (see module docs).
+    pub fn get_or_compile(
+        &self,
+        graph: &OpGraph,
+        region_h: usize,
+        region_w: usize,
+        core: &CoreConfig,
+    ) -> Arc<CachedChunk> {
+        if self.capacity == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(CachedChunk::build(graph, region_h, region_w, core));
+        }
+        let sig = chunk_signature(graph, region_h, region_w, core);
+        let cached: Option<Arc<CachedChunk>> = {
+            let mut m = self.map.lock().unwrap();
+            m.tick += 1;
+            let tick = m.tick;
+            // Collision guard: a 64-bit signature match must also agree on
+            // the cheap structural invariants.
+            match m.entries.get_mut(&sig) {
+                Some(e)
+                    if e.chunk.chunk.region_h == region_h
+                        && e.chunk.chunk.region_w == region_w
+                        && e.chunk.chunk.assignments.len() == graph.ops.len() =>
+                {
+                    e.last_used = tick;
+                    Some(e.chunk.clone())
+                }
+                _ => None,
+            }
+        };
+        if let Some(hit) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(CachedChunk::build(graph, region_h, region_w, core));
+        let mut m = self.map.lock().unwrap();
+        m.tick += 1;
+        let tick = m.tick;
+        m.entries.insert(
+            sig,
+            Entry {
+                chunk: built.clone(),
+                last_used: tick,
+            },
+        );
+        while m.entries.len() > self.capacity {
+            let Some((&old, _)) = m.entries.iter().min_by_key(|(_, e)| e.last_used) else {
+                break;
+            };
+            m.entries.remove(&old);
+        }
+        built
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            len: self.map.lock().unwrap().entries.len(),
+            capacity: self.capacity,
+        }
+    }
+
+    /// Drop all entries and zero the counters (bench isolation).
+    pub fn clear(&self) {
+        let mut m = self.map.lock().unwrap();
+        m.entries.clear();
+        m.tick = 0;
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+static GLOBAL: OnceLock<ChunkCache> = OnceLock::new();
+
+/// Process-wide cache; sized by `THESEUS_COMPILE_CACHE` (entries, default
+/// 256, 0 = disable) read once at first use.
+pub fn global() -> &'static ChunkCache {
+    GLOBAL.get_or_init(|| ChunkCache::new(crate::util::cli::env_usize("THESEUS_COMPILE_CACHE", 256)))
+}
+
+/// Convenience wrapper over [`global`].
+pub fn compile_chunk_cached(
+    graph: &OpGraph,
+    region_h: usize,
+    region_w: usize,
+    core: &CoreConfig,
+) -> Arc<CachedChunk> {
+    global().get_or_compile(graph, region_h, region_w, core)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dataflow;
+    use crate::eval::op_level::{chunk_latency, chunk_latency_with_topo, NocModel};
+    use crate::workload::models::benchmarks;
+    use crate::workload::{OpGraph, Phase};
+
+    fn core(noc_bw: usize) -> CoreConfig {
+        CoreConfig {
+            dataflow: Dataflow::WS,
+            mac_num: 512,
+            buffer_kb: 128,
+            buffer_bw_bits: 256,
+            noc_bw_bits: noc_bw,
+        }
+    }
+
+    fn graph(seq: usize) -> OpGraph {
+        let mut spec = benchmarks()[0].clone();
+        spec.seq_len = seq;
+        OpGraph::transformer_chunk(&spec, 1, 1, 8, Phase::Prefill, false)
+    }
+
+    #[test]
+    fn cached_chunk_latency_identical_to_fresh() {
+        let cache = ChunkCache::new(8);
+        let g = graph(64);
+        let c = core(512);
+        let miss = cache.get_or_compile(&g, 4, 4, &c);
+        let hit = cache.get_or_compile(&g, 4, 4, &c);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(Arc::ptr_eq(&miss, &hit));
+
+        let fresh = crate::compiler::compile_chunk(&g, 4, 4, &c);
+        // Analytical mode.
+        let a = chunk_latency(&fresh, &c, 1.0, NocModel::Analytical);
+        let b = chunk_latency_with_topo(&hit.chunk, &hit.topo, &c, 1.0, NocModel::Analytical);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.compute_cycles, b.compute_cycles);
+        assert_eq!(a.comm_cycles, b.comm_cycles);
+        assert_eq!(a.sram_bytes, b.sram_bytes);
+        assert_eq!(a.byte_hops, b.byte_hops);
+        // LinkWaits mode.
+        let waits = vec![2.5; 4 * 4 * 4];
+        let aw = chunk_latency(&fresh, &c, 1.0, NocModel::LinkWaits(&waits));
+        let bw = chunk_latency_with_topo(&hit.chunk, &hit.topo, &c, 1.0, NocModel::LinkWaits(&waits));
+        assert_eq!(aw.cycles, bw.cycles);
+    }
+
+    #[test]
+    fn signature_distinguishes_inputs() {
+        let g64 = graph(64);
+        let g128 = graph(128);
+        let c512 = core(512);
+        let c256 = core(256);
+        let base = chunk_signature(&g64, 4, 4, &c512);
+        assert_ne!(base, chunk_signature(&g128, 4, 4, &c512), "graph dims");
+        assert_ne!(base, chunk_signature(&g64, 5, 4, &c512), "region dims");
+        assert_ne!(base, chunk_signature(&g64, 4, 4, &c256), "core config");
+        assert_eq!(base, chunk_signature(&graph(64), 4, 4, &core(512)), "deterministic");
+    }
+
+    #[test]
+    fn eviction_respects_size_bound() {
+        let cache = ChunkCache::new(2);
+        let g = graph(32);
+        let c = core(512);
+        cache.get_or_compile(&g, 3, 3, &c); // A
+        cache.get_or_compile(&g, 4, 4, &c); // B
+        cache.get_or_compile(&g, 5, 5, &c); // C evicts A (LRU)
+        assert_eq!(cache.stats().len, 2);
+        // B and C still hit...
+        cache.get_or_compile(&g, 4, 4, &c);
+        cache.get_or_compile(&g, 5, 5, &c);
+        assert_eq!(cache.stats().hits, 2);
+        // ...while A was evicted and misses again.
+        cache.get_or_compile(&g, 3, 3, &c);
+        assert_eq!(cache.stats().misses, 4);
+        assert_eq!(cache.stats().len, 2);
+    }
+
+    #[test]
+    fn lru_refresh_on_hit() {
+        let cache = ChunkCache::new(2);
+        let g = graph(32);
+        let c = core(512);
+        cache.get_or_compile(&g, 3, 3, &c); // A
+        cache.get_or_compile(&g, 4, 4, &c); // B
+        cache.get_or_compile(&g, 3, 3, &c); // touch A -> B is now LRU
+        cache.get_or_compile(&g, 5, 5, &c); // C evicts B
+        cache.get_or_compile(&g, 3, 3, &c); // A still cached
+        assert_eq!(cache.stats().hits, 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let cache = ChunkCache::new(0);
+        let g = graph(32);
+        let c = core(512);
+        cache.get_or_compile(&g, 3, 3, &c);
+        cache.get_or_compile(&g, 3, 3, &c);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.len), (0, 2, 0));
+    }
+}

@@ -7,12 +7,14 @@
 //! op-level model and the GNN both consume its per-link flow structure, and
 //! the cycle-accurate simulator executes its phase/flow schedule directly.
 
+pub mod cache;
 pub mod partition;
 pub mod routing;
 
 use crate::arch::CoreConfig;
 use crate::workload::{OpGraph, OpKind};
 
+pub use cache::{compile_chunk_cached, CachedChunk, ChunkCache};
 pub use partition::{grid_for_op, OpPlacement};
 pub use routing::{link_index, route_xy, LinkId, NUM_DIRS};
 

@@ -4,9 +4,7 @@
 //! modules for exactly this reason — it sits on the DSE hot path).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
-
-use once_cell::sync::Lazy;
+use std::sync::{Mutex, OnceLock};
 
 use crate::arch::constants as k;
 use crate::arch::{CoreConfig, IntegrationStyle, MemoryKind, ReticleConfig, WscConfig};
@@ -40,17 +38,20 @@ fn core_key(c: &CoreConfig) -> CoreKey {
     )
 }
 
-static CORE_CACHE: Lazy<Mutex<HashMap<CoreKey, CoreGeom>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+static CORE_CACHE: OnceLock<Mutex<HashMap<CoreKey, CoreGeom>>> = OnceLock::new();
+
+fn core_cache() -> &'static Mutex<HashMap<CoreKey, CoreGeom>> {
+    CORE_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
 
 /// Characterize a core (memoized).
 pub fn core_geom(c: &CoreConfig) -> CoreGeom {
     let key = core_key(c);
-    if let Some(g) = CORE_CACHE.lock().unwrap().get(&key) {
+    if let Some(g) = core_cache().lock().unwrap().get(&key) {
         return *g;
     }
     let g = core_geom_uncached(c);
-    CORE_CACHE.lock().unwrap().insert(key, g);
+    core_cache().lock().unwrap().insert(key, g);
     g
 }
 
@@ -76,19 +77,39 @@ fn core_geom_uncached(c: &CoreConfig) -> CoreGeom {
 }
 
 /// Why a design fails physical assembly (feeds the §V-E validator).
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PhysError {
-    #[error("SRAM config infeasible: {kb} KB @ {bw} bit/cyc")]
     SramInfeasible { kb: usize, bw: usize },
-    #[error("core array ({w:.1} x {h:.1} mm) exceeds reticle limit even without redundancy")]
     ReticleOverflow { w: f64, h: f64 },
-    #[error("yield target {target} unreachable within redundancy budget")]
     YieldUnreachable { target: f64 },
-    #[error("TSV field needs {need:.2} mm2 but stress cap is {cap:.2} mm2")]
     StressViolation { need: f64, cap: f64 },
-    #[error("reticle array ({w:.0} x {h:.0} mm) exceeds wafer ({lim:.0} mm)")]
     WaferOverflow { w: f64, h: f64, lim: f64 },
 }
+
+impl std::fmt::Display for PhysError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PhysError::SramInfeasible { kb, bw } => {
+                write!(f, "SRAM config infeasible: {kb} KB @ {bw} bit/cyc")
+            }
+            PhysError::ReticleOverflow { w, h } => write!(
+                f,
+                "core array ({w:.1} x {h:.1} mm) exceeds reticle limit even without redundancy"
+            ),
+            PhysError::YieldUnreachable { target } => {
+                write!(f, "yield target {target} unreachable within redundancy budget")
+            }
+            PhysError::StressViolation { need, cap } => {
+                write!(f, "TSV field needs {need:.2} mm2 but stress cap is {cap:.2} mm2")
+            }
+            PhysError::WaferOverflow { w, h, lim } => {
+                write!(f, "reticle array ({w:.0} x {h:.0} mm) exceeds wafer ({lim:.0} mm)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PhysError {}
 
 /// Physical characterization of one reticle, with redundancy resolved.
 #[derive(Debug, Clone)]

@@ -15,7 +15,7 @@ use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::workload::models;
 
-pub use objective::{ref_power_for, InferenceObjective, TrainingObjective};
+pub use objective::{ref_power_for, AnalyticalTraining, InferenceObjective, TrainingObjective};
 
 /// Which explorer to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,6 +77,15 @@ pub fn run(run: &DseRun) -> Trace {
     };
 
     match run.explorer {
+        // Without the GNN, random search fans design-point evaluations out
+        // over the thread pool (the GNN's PJRT handle is thread-confined,
+        // so that fidelity keeps the serial path).
+        Explorer::Random if gnn.is_none() => explorer::random_search_par(
+            &AnalyticalTraining {
+                spec: run.spec.clone(),
+            },
+            &run.cfg,
+        ),
         Explorer::Random => explorer::random_search(high.as_ref(), &run.cfg),
         Explorer::Mobo => explorer::mobo(high.as_ref(), &run.cfg),
         Explorer::Mfmobo => explorer::mfmobo(

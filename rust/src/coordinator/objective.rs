@@ -83,7 +83,18 @@ impl NocEstimator for GnnRef {
 impl DesignEval for TrainingObjective {
     fn eval(&self, v: &Validated) -> Option<Objective> {
         let sys = SystemConfig::area_matched(v.clone(), self.spec.gpu_num);
-        let r = eval::eval_training(&self.spec, &sys, self.estimator().as_ref())?;
+        // The Sync fidelities fan the strategy sweep out over the thread
+        // pool; the GNN's PJRT handle is thread-confined, so it stays on
+        // the serial path.
+        let r = match &self.noc {
+            NocBackend::Analytical => eval::eval_training_par(&self.spec, &sys, &Analytical)?,
+            NocBackend::CycleAccurate => {
+                eval::eval_training_par(&self.spec, &sys, &eval::CycleAccurate::default())?
+            }
+            NocBackend::Gnn(_) => {
+                eval::eval_training(&self.spec, &sys, self.estimator().as_ref())?
+            }
+        };
         Some(Objective {
             throughput: r.tokens_per_sec,
             power_w: r.power_w,
@@ -96,6 +107,29 @@ impl DesignEval for TrainingObjective {
             NocBackend::Gnn(_) => "gnn",
             NocBackend::CycleAccurate => "cycle-accurate",
         }
+    }
+}
+
+/// Always-`Sync` analytical training objective for the pooled explorers
+/// ([`crate::explorer::random_search_par`]). [`TrainingObjective`] cannot
+/// be `Sync` in PJRT builds (its GNN variant holds a thread-confined
+/// executable), so pooled call sites use this concrete type instead.
+pub struct AnalyticalTraining {
+    pub spec: LlmSpec,
+}
+
+impl DesignEval for AnalyticalTraining {
+    fn eval(&self, v: &Validated) -> Option<Objective> {
+        let sys = SystemConfig::area_matched(v.clone(), self.spec.gpu_num);
+        let r = eval::eval_training(&self.spec, &sys, &Analytical)?;
+        Some(Objective {
+            throughput: r.tokens_per_sec,
+            power_w: r.power_w,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "analytical"
     }
 }
 

@@ -11,14 +11,31 @@ use crate::design_space::DesignPoint;
 
 /// Constraint violations (§V-E). `Phys` wraps assembly-level failures from
 /// the component estimator; `Power` is checked here against the wafer cap.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Violation {
-    #[error(transparent)]
-    Phys(#[from] PhysError),
-    #[error("peak power {power_w:.0} W exceeds wafer limit {limit_w:.0} W")]
+    Phys(PhysError),
     Power { power_w: f64, limit_w: f64 },
-    #[error("prefill ratio {0} outside (0, 1)")]
     HeteroRatio(f64),
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::Phys(e) => e.fmt(f),
+            Violation::Power { power_w, limit_w } => {
+                write!(f, "peak power {power_w:.0} W exceeds wafer limit {limit_w:.0} W")
+            }
+            Violation::HeteroRatio(r) => write!(f, "prefill ratio {r} outside (0, 1)"),
+        }
+    }
+}
+
+impl std::error::Error for Violation {}
+
+impl From<PhysError> for Violation {
+    fn from(e: PhysError) -> Violation {
+        Violation::Phys(e)
+    }
 }
 
 /// A validated design point with its physical characterization.

@@ -8,8 +8,12 @@ pub mod op_level;
 pub mod power;
 pub mod tile;
 
-pub use chunk::{eval_inference, eval_training, InferEval, SystemConfig, TrainEval};
-pub use op_level::{chunk_latency, NocModel, OpLevelResult};
+pub use chunk::{
+    eval_inference, eval_training, eval_training_par, InferEval, SystemConfig, TrainEval,
+};
+pub use op_level::{
+    chunk_latency, chunk_latency_with_topo, ChunkTopology, NocModel, OpLevelResult,
+};
 
 use crate::arch::CoreConfig;
 use crate::compiler::CompiledChunk;

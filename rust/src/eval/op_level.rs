@@ -6,6 +6,13 @@
 //!   bandwidth (`link_bw / max-sharers-on-path`);
 //! * **GNN** — per-link predicted mean waiting times ŷ_l reconstruct packet
 //!   latency via Eq. 6: `t(k) = k + Σ ŷ_l` (plus pipeline hops).
+//!
+//! The traversal is a true O(V+E) sweep over a [`ChunkTopology`] — a CSR
+//! predecessor adjacency with dense edge-delay slots built once per chunk.
+//! The topology depends only on the chunk structure, so the compile cache
+//! ([`crate::compiler::cache`]) stores it alongside the compiled chunk and
+//! repeated evaluations (strategy sweeps, BO probes, NoC-model swaps) skip
+//! the build entirely.
 
 use std::collections::HashMap;
 
@@ -40,11 +47,109 @@ pub enum NocModel<'a> {
     LinkWaits(&'a [f64]),
 }
 
-/// Evaluate a compiled chunk. `scale` spreads each op over `scale`× more
-/// cores than the compiled region holds (hierarchical evaluation — the
-/// region is a representative reticle-sized slice of the chunk).
+/// Sentinel for flows whose (src_op, dst_op) pair has no dependency edge
+/// (their delay cannot land on the critical path; the old hashmap-based
+/// code accumulated and then never read them).
+const SLOT_NONE: u32 = u32::MAX;
+
+/// Structure-only index of a compiled chunk's DAG, built once and reused
+/// across every evaluation of the chunk:
+/// * a CSR predecessor adjacency over the op DAG, each incoming edge
+///   carrying a dense *delay slot* (index into `chunk.deps`);
+/// * a per-flow map onto those slots (intra-op flows are recognized by
+///   `src_op == dst_op` at evaluation time);
+/// * flow indices grouped by consuming phase for the analytical
+///   link-sharing pass.
+#[derive(Debug, Clone)]
+pub struct ChunkTopology {
+    /// CSR offsets into `pred`; length `n_ops + 1`.
+    pred_off: Vec<u32>,
+    /// `(pred_op, delay_slot)` per incoming dep edge, in `chunk.deps`
+    /// order within each destination (preserves the legacy tie-breaks).
+    pred: Vec<(u32, u32)>,
+    /// Per-flow delay slot (`SLOT_NONE` for intra-op / unmatched flows).
+    flow_slot: Vec<u32>,
+    /// Flow indices sorted by consuming op (stable), i.e. phase order.
+    phase_order: Vec<u32>,
+    /// Number of dense delay slots (`chunk.deps.len()`).
+    n_slots: usize,
+}
+
+impl ChunkTopology {
+    pub fn new(chunk: &CompiledChunk) -> ChunkTopology {
+        let n_ops = chunk.assignments.len();
+        let n_slots = chunk.deps.len();
+
+        // CSR over predecessor edges.
+        let mut pred_off = vec![0u32; n_ops + 1];
+        for &(_, d) in &chunk.deps {
+            pred_off[d + 1] += 1;
+        }
+        for i in 0..n_ops {
+            pred_off[i + 1] += pred_off[i];
+        }
+        let mut cursor: Vec<u32> = pred_off[..n_ops].to_vec();
+        let mut pred = vec![(0u32, 0u32); n_slots];
+        // Duplicate (src, dst) pairs share the first slot, matching the
+        // old single-key hashmap semantics.
+        let mut slot_of: HashMap<(usize, usize), u32> = HashMap::with_capacity(n_slots);
+        for (ei, &(s, d)) in chunk.deps.iter().enumerate() {
+            pred[cursor[d] as usize] = (s as u32, ei as u32);
+            cursor[d] += 1;
+            slot_of.entry((s, d)).or_insert(ei as u32);
+        }
+
+        let flow_slot: Vec<u32> = chunk
+            .flows
+            .iter()
+            .map(|f| {
+                if f.src_op == f.dst_op {
+                    SLOT_NONE
+                } else {
+                    slot_of.get(&(f.src_op, f.dst_op)).copied().unwrap_or(SLOT_NONE)
+                }
+            })
+            .collect();
+
+        let mut phase_order: Vec<u32> = (0..chunk.flows.len() as u32).collect();
+        phase_order.sort_by_key(|&i| chunk.flows[i as usize].dst_op);
+
+        ChunkTopology {
+            pred_off,
+            pred,
+            flow_slot,
+            phase_order,
+            n_slots,
+        }
+    }
+
+    /// Incoming `(pred_op, delay_slot)` edges of op `i`.
+    #[inline]
+    fn preds(&self, i: usize) -> &[(u32, u32)] {
+        &self.pred[self.pred_off[i] as usize..self.pred_off[i + 1] as usize]
+    }
+}
+
+/// Evaluate a compiled chunk, building its topology on the fly. Prefer
+/// [`chunk_latency_with_topo`] with a cached [`ChunkTopology`] on the DSE
+/// hot path.
 pub fn chunk_latency(
     chunk: &CompiledChunk,
+    core: &CoreConfig,
+    scale: f64,
+    model: NocModel<'_>,
+) -> OpLevelResult {
+    let topo = ChunkTopology::new(chunk);
+    chunk_latency_with_topo(chunk, &topo, core, scale, model)
+}
+
+/// Evaluate a compiled chunk. `scale` spreads each op over `scale`× more
+/// cores than the compiled region holds (hierarchical evaluation — the
+/// region is a representative reticle-sized slice of the chunk). `topo`
+/// must be [`ChunkTopology::new`] of the same chunk.
+pub fn chunk_latency_with_topo(
+    chunk: &CompiledChunk,
+    topo: &ChunkTopology,
     core: &CoreConfig,
     scale: f64,
     model: NocModel<'_>,
@@ -64,19 +169,14 @@ pub fn chunk_latency(
     }
 
     // Per-phase link sharing (analytical model): flows that feed the same
-    // consumer op are concurrent. Flows are generated in op order, so one
-    // dense per-link counter can be reset at phase boundaries instead of a
-    // hashmap keyed by (phase, link) — §Perf: this loop dominates DSE time.
+    // consumer op are concurrent. One dense per-link counter is reset at
+    // phase boundaries; the phase grouping comes precomputed from `topo`.
     let n_links = chunk.region_h * chunk.region_w * crate::compiler::routing::NUM_DIRS;
     let mut share = vec![0u32; n_links];
-    let mut share_phase = usize::MAX;
     // Per-flow max sharing, filled in phase order (only analytical mode).
     let mut flow_share: Vec<u32> = Vec::new();
     if matches!(model, NocModel::Analytical) {
-        // Index flows by dst_op phase; flows of one phase are contiguous
-        // except redistribution flows appended later — sort indices once.
-        let mut order: Vec<u32> = (0..chunk.flows.len() as u32).collect();
-        order.sort_by_key(|&i| chunk.flows[i as usize].dst_op);
+        let order = &topo.phase_order;
         flow_share = vec![1; chunk.flows.len()];
         let mut i = 0;
         while i < order.len() {
@@ -108,12 +208,12 @@ pub fn chunk_latency(
                 });
             }
         }
-        share_phase = 0;
     }
-    let _ = share_phase;
 
-    // Flow latency -> edge delays, per (src_op, dst_op).
-    let mut edge_delay: HashMap<(usize, usize), f64> = HashMap::new();
+    // Flow latency -> dense edge-delay slots (max per dependency edge) and
+    // per-op intra-op feed delays.
+    let mut edge_delay = vec![0.0f64; topo.n_slots];
+    let mut intra_delay = vec![0.0f64; n_ops];
     let mut byte_hops = 0.0;
     for (fi, f) in chunk.flows.iter().enumerate() {
         let h = hops(f.src, f.dst) as f64;
@@ -139,33 +239,40 @@ pub fn chunk_latency(
                 h + flits + packets * path_wait
             }
         };
-        let key = (f.src_op, f.dst_op);
-        let cur = edge_delay.entry(key).or_insert(0.0);
-        if t > *cur {
-            *cur = t;
+        if f.src_op == f.dst_op {
+            if t > intra_delay[f.dst_op] {
+                intra_delay[f.dst_op] = t;
+            }
+        } else {
+            let slot = topo.flow_slot[fi];
+            if slot != SLOT_NONE {
+                let cur = &mut edge_delay[slot as usize];
+                if t > *cur {
+                    *cur = t;
+                }
+            }
         }
     }
 
-    // Critical path over the op DAG (ops are topologically ordered).
+    // Critical path over the op DAG (ops are topologically ordered): one
+    // O(V+E) sweep over the CSR predecessor lists.
     let mut finish = vec![0.0f64; n_ops];
     let mut comm_at = vec![0.0f64; n_ops];
     let mut compute_at = vec![0.0f64; n_ops];
     for i in 0..n_ops {
         // Intra-op feeds overlap with compute: take the max.
-        let intra = edge_delay.get(&(i, i)).copied().unwrap_or(0.0);
+        let intra = intra_delay[i];
         let op_lat = tile_cycles[i].max(intra);
         let mut start = 0.0;
         let mut best_pred: Option<usize> = None;
         let mut best_comm = 0.0;
-        for &(s, d) in &chunk.deps {
-            if d == i {
-                let delay = edge_delay.get(&(s, d)).copied().unwrap_or(0.0);
-                let t = finish[s] + delay;
-                if t > start {
-                    start = t;
-                    best_pred = Some(s);
-                    best_comm = delay;
-                }
+        for &(s, slot) in topo.preds(i) {
+            let delay = edge_delay[slot as usize];
+            let t = finish[s as usize] + delay;
+            if t > start {
+                start = t;
+                best_pred = Some(s as usize);
+                best_comm = delay;
             }
         }
         finish[i] = start + op_lat;
@@ -190,8 +297,12 @@ pub fn chunk_latency(
 
     OpLevelResult {
         cycles,
-        compute_cycles: compute_at[end],
-        comm_cycles: comm_at.get(end).copied().unwrap_or(0.0).max(cycles - compute_at[end]),
+        compute_cycles: compute_at.get(end).copied().unwrap_or(0.0),
+        comm_cycles: comm_at
+            .get(end)
+            .copied()
+            .unwrap_or(0.0)
+            .max(cycles - compute_at.get(end).copied().unwrap_or(0.0)),
         sram_bytes,
         mac_ops,
         byte_hops,
@@ -274,6 +385,43 @@ mod tests {
         let r1 = chunk_latency(&ch, &c, 1.0, NocModel::Analytical);
         let r8 = chunk_latency(&ch, &c, 8.0, NocModel::Analytical);
         assert!(r8.cycles < r1.cycles);
+    }
+
+    #[test]
+    fn cached_topology_matches_fresh_build() {
+        // Reusing one ChunkTopology across evaluations must be
+        // bit-identical to rebuilding it, in both NoC models.
+        for (seq, region, bw) in [(64usize, 4usize, 512usize), (128, 5, 256), (32, 3, 1024)] {
+            let (ch, c) = chunk(seq, region, bw);
+            let topo = ChunkTopology::new(&ch);
+            let fresh = chunk_latency(&ch, &c, 1.0, NocModel::Analytical);
+            let cached = chunk_latency_with_topo(&ch, &topo, &c, 1.0, NocModel::Analytical);
+            assert_eq!(fresh.cycles, cached.cycles);
+            assert_eq!(fresh.compute_cycles, cached.compute_cycles);
+            assert_eq!(fresh.comm_cycles, cached.comm_cycles);
+            assert_eq!(fresh.byte_hops, cached.byte_hops);
+
+            let waits = vec![3.0; ch.region_h * ch.region_w * 4];
+            let fresh_w = chunk_latency(&ch, &c, 2.0, NocModel::LinkWaits(&waits));
+            let cached_w =
+                chunk_latency_with_topo(&ch, &topo, &c, 2.0, NocModel::LinkWaits(&waits));
+            assert_eq!(fresh_w.cycles, cached_w.cycles);
+        }
+    }
+
+    #[test]
+    fn topology_csr_covers_all_deps() {
+        let (ch, _) = chunk(64, 4, 512);
+        let topo = ChunkTopology::new(&ch);
+        let n_ops = ch.assignments.len();
+        // Every dep edge appears exactly once in some predecessor list.
+        let total: usize = (0..n_ops).map(|i| topo.preds(i).len()).sum();
+        assert_eq!(total, ch.deps.len());
+        for i in 0..n_ops {
+            for &(s, slot) in topo.preds(i) {
+                assert_eq!(ch.deps[slot as usize], (s as usize, i));
+            }
+        }
     }
 
     #[test]

@@ -125,12 +125,38 @@ pub fn random_search(eval: &dyn DesignEval, cfg: &BoConfig) -> Trace {
     trace
 }
 
-/// Surrogate dataset state shared by MOBO/MFMOBO.
+/// [`random_search`] with evaluations fanned out over the thread pool.
+/// Each evaluation slot gets an independent forked RNG stream, so the
+/// trace is deterministic in `cfg.seed` regardless of worker interleaving
+/// (though it differs from the serial stream). Requires a `Sync`
+/// evaluator — analytical fidelities qualify; the GNN-backed one stays on
+/// [`random_search`].
+pub fn random_search_par(eval: &(dyn DesignEval + Sync), cfg: &BoConfig) -> Trace {
+    let mut rng = Rng::new(cfg.seed);
+    let streams: Vec<Rng> = (0..(cfg.init + cfg.iters))
+        .map(|i| rng.fork(i as u64))
+        .collect();
+    let results = crate::util::pool::par_map(&streams, |stream| {
+        let mut r = stream.clone();
+        sample_evaluated(&mut r, eval, cfg.sample_tries)
+    });
+    let mut trace = Trace::default();
+    for (v, o) in results.into_iter().flatten() {
+        trace.push(v.point, o, eval.name(), cfg.ref_power);
+    }
+    trace
+}
+
+/// Surrogate dataset state shared by MOBO/MFMOBO. The GP pair is kept
+/// fitted incrementally: `add` extends both models via rank-1 Cholesky
+/// borders ([`Gp::add`]) instead of refitting from scratch every
+/// iteration.
 struct Surrogate {
     xs: Vec<Vec<f64>>,
     t: Vec<f64>,
     p: Vec<f64>,
     objs: Vec<Objective>,
+    models: Option<(Gp, Gp)>,
 }
 
 impl Surrogate {
@@ -140,26 +166,37 @@ impl Surrogate {
             t: Vec::new(),
             p: Vec::new(),
             objs: Vec::new(),
+            models: None,
         }
     }
 
     fn add(&mut self, point: &DesignPoint, o: Objective) {
-        self.xs.push(encode(point).to_vec());
+        let x = encode(point).to_vec();
+        if let Some((gp_t, gp_p)) = &mut self.models {
+            gp_t.add(&x, o.throughput);
+            gp_p.add(&x, o.power_w);
+        }
+        self.xs.push(x);
         self.t.push(o.throughput);
         self.p.push(o.power_w);
         self.objs.push(o);
     }
 
-    fn fit(&self) -> Option<(Gp, Gp)> {
-        if self.xs.len() < 2 {
-            return None;
+    /// Fit the initial GP pair once enough data exists; afterwards `add`
+    /// keeps it current.
+    fn ensure_models(&mut self) {
+        if self.models.is_none() && self.xs.len() >= 2 {
+            self.models = Some((Gp::fit(&self.xs, &self.t), Gp::fit(&self.xs, &self.p)));
         }
-        Some((Gp::fit(&self.xs, &self.t), Gp::fit(&self.xs, &self.p)))
     }
 }
 
 /// Pick the EHVI-argmax candidate from a random validated pool, using
-/// models `(gp_t, gp_p)` and the front from `front_objs`.
+/// models `(gp_t, gp_p)` and the front from `front_objs`. The pool is
+/// sampled serially (the RNG is shared state) and scored through the
+/// thread pool — GP posteriors and the common-random-number EHVI draws
+/// are read-only, so pooled scoring selects exactly the candidate the
+/// serial loop would.
 fn propose(
     rng: &mut Rng,
     gp_t: &Gp,
@@ -173,20 +210,26 @@ fn propose(
         .map(|i| front_objs[i])
         .collect();
     let base_hv = hypervolume(&front, cfg.ref_power);
-    let mut best: Option<(f64, Validated)> = None;
-    for _ in 0..cfg.pool {
-        let Some(v) = design_space::sample_valid(rng, 64) else {
-            continue;
-        };
+    let mut cands: Vec<Validated> = (0..cfg.pool)
+        .filter_map(|_| design_space::sample_valid(rng, 64))
+        .collect();
+    if cands.is_empty() {
+        return None;
+    }
+    let scores = crate::util::pool::par_map(&cands, |v| {
         let x: [f64; DIMS] = encode(&v.point);
         let (mt, st) = gp_t.predict(&x);
         let (mp, sp) = gp_p.predict(&x);
-        let a = est.ehvi(&front, base_hv, cfg.ref_power, mt, st, mp, sp);
-        if best.as_ref().map(|b| a > b.0).unwrap_or(true) {
-            best = Some((a, v));
+        est.ehvi(&front, base_hv, cfg.ref_power, mt, st, mp, sp)
+    });
+    // First-max wins, matching the serial `a > best` scan.
+    let mut best = 0usize;
+    for i in 1..scores.len() {
+        if scores[i] > scores[best] {
+            best = i;
         }
     }
-    best.map(|(_, v)| v)
+    Some(cands.swap_remove(best))
 }
 
 /// Vanilla MOBO (§VIII-C comparison): GP + EHVI on a single fidelity.
@@ -202,8 +245,9 @@ pub fn mobo(eval: &dyn DesignEval, cfg: &BoConfig) -> Trace {
         }
     }
     for _ in 0..cfg.iters {
-        let proposal = match data.fit() {
-            Some((gp_t, gp_p)) => propose(&mut rng, &gp_t, &gp_p, &data.objs, cfg),
+        data.ensure_models();
+        let proposal = match &data.models {
+            Some((gp_t, gp_p)) => propose(&mut rng, gp_t, gp_p, &data.objs, cfg),
             None => design_space::sample_valid(&mut rng, cfg.sample_tries),
         };
         let Some(v) = proposal else { continue };
@@ -256,11 +300,13 @@ pub fn mfmobo(f0: &dyn DesignEval, f1: &dyn DesignEval, cfg: &MfConfig) -> Trace
         let guided = !low_phase && i < cfg.n1 + cfg.k;
         // Model selection (Algo. 1 lines 5-8): the guided phase still uses
         // the low-fidelity surrogate M1 while evaluating with f0.
-        let model_data = if low_phase || guided { &d1 } else { &d0 };
-        let proposal = match model_data.fit() {
+        let model_data = if low_phase || guided { &mut d1 } else { &mut d0 };
+        model_data.ensure_models();
+        let model_data = &*model_data;
+        let proposal = match &model_data.models {
             Some((gp_t, gp_p)) => {
                 // The front for EHVI is computed on the dataset in use.
-                propose(&mut rng, &gp_t, &gp_p, &model_data.objs, &cfg.base)
+                propose(&mut rng, gp_t, gp_p, &model_data.objs, &cfg.base)
             }
             None => design_space::sample_valid(&mut rng, cfg.base.sample_tries),
         };
@@ -327,6 +373,23 @@ mod tests {
             assert!(w[1] >= w[0] - 1e-9);
         }
         assert!(t.final_hv() > 0.0);
+    }
+
+    #[test]
+    fn random_search_par_is_deterministic_and_comparable() {
+        let e = Synthetic { flip: 0.0 };
+        let a = random_search_par(&e, &cfg(10));
+        let b = random_search_par(&e, &cfg(10));
+        // Deterministic in the seed regardless of worker interleaving.
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.objective, y.objective);
+        }
+        assert_eq!(a.hv_history, b.hv_history);
+        // Explores about as well as the serial baseline.
+        let serial = random_search(&e, &cfg(10));
+        assert!(a.points.len() >= 10);
+        assert!(a.final_hv() > 0.3 * serial.final_hv());
     }
 
     #[test]

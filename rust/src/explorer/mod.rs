@@ -6,5 +6,8 @@ pub mod gp;
 pub mod mobo;
 pub mod pareto;
 
-pub use mobo::{mfmobo, mobo, random_search, BoConfig, DesignEval, MfConfig, Trace, TracePoint};
+pub use mobo::{
+    mfmobo, mobo, random_search, random_search_par, BoConfig, DesignEval, MfConfig, Trace,
+    TracePoint,
+};
 pub use pareto::{hypervolume, pareto_indices, Objective};

@@ -1,0 +1,132 @@
+//! Real PJRT execution path — compiled only under `--cfg theseus_pjrt`
+//! because its dependencies (`xla`, `anyhow`, `log`) are unavailable in the
+//! offline build (see rust/Cargo.toml for how to enable).
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::arch::CoreConfig;
+use crate::compiler::routing::NUM_DIRS;
+use crate::compiler::CompiledChunk;
+use crate::eval::NocEstimator;
+use crate::util::json::Json;
+
+use super::{features, GnnMeta};
+
+/// The GNN NoC-congestion model, compiled for the CPU PJRT backend.
+pub struct GnnModel {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    pub meta: GnnMeta,
+}
+
+impl GnnModel {
+    /// Load + compile `artifacts/gnn_noc.hlo.txt` (path to the `.hlo.txt`).
+    pub fn load(path: &Path) -> Result<GnnModel> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+
+        let meta_path = path
+            .to_str()
+            .unwrap()
+            .replace(".hlo.txt", ".meta.json");
+        let meta = match std::fs::read_to_string(&meta_path) {
+            Ok(text) => {
+                let j = Json::parse(&text).context("parse gnn meta json")?;
+                GnnMeta {
+                    n_max: j.get("n_max").and_then(|v| v.as_usize()).unwrap_or(features::N_MAX),
+                    e_max: j.get("e_max").and_then(|v| v.as_usize()).unwrap_or(features::E_MAX),
+                    f_n: j.get("f_n").and_then(|v| v.as_usize()).unwrap_or(features::F_N),
+                    f_e: j.get("f_e").and_then(|v| v.as_usize()).unwrap_or(features::F_E),
+                }
+            }
+            Err(_) => GnnMeta {
+                n_max: features::N_MAX,
+                e_max: features::E_MAX,
+                f_n: features::F_N,
+                f_e: features::F_E,
+            },
+        };
+        anyhow::ensure!(
+            meta.n_max == features::N_MAX
+                && meta.e_max == features::E_MAX
+                && meta.f_n == features::F_N
+                && meta.f_e == features::F_E,
+            "gnn meta schema mismatch: {meta:?} vs runtime constants"
+        );
+        Ok(GnnModel {
+            exe: Mutex::new(exe),
+            meta,
+        })
+    }
+
+    /// Load from the conventional artifacts location, if present.
+    pub fn load_default() -> Result<GnnModel> {
+        let candidates = [
+            "artifacts/gnn_noc.hlo.txt",
+            "../artifacts/gnn_noc.hlo.txt",
+        ];
+        for c in candidates {
+            if Path::new(c).exists() {
+                return GnnModel::load(Path::new(c));
+            }
+        }
+        anyhow::bail!("no gnn_noc.hlo.txt found (run `make artifacts`)")
+    }
+
+    /// Predict per-edge mean waiting times for padded inputs; returns the
+    /// raw padded vector of length `E_MAX`.
+    pub fn predict_padded(&self, inp: &features::GnnInputs) -> Result<Vec<f32>> {
+        let node = xla::Literal::vec1(&inp.node_feat)
+            .reshape(&[features::N_MAX as i64, features::F_N as i64])?;
+        let edge = xla::Literal::vec1(&inp.edge_feat)
+            .reshape(&[features::E_MAX as i64, features::F_E as i64])?;
+        let src = xla::Literal::vec1(&inp.src_idx);
+        let dst = xla::Literal::vec1(&inp.dst_idx);
+        let mask = xla::Literal::vec1(&inp.edge_mask);
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&[node, edge, src, dst, mask])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Predict and scatter back into dense `link_index` order.
+    pub fn predict_link_waits(
+        &self,
+        chunk: &CompiledChunk,
+        core: &CoreConfig,
+    ) -> Result<Option<Vec<f64>>> {
+        let Some(inp) = features::build(chunk, core) else {
+            return Ok(None); // region exceeds padding: analytical fallback
+        };
+        let y = self.predict_padded(&inp)?;
+        let mut waits = vec![0.0f64; chunk.region_h * chunk.region_w * NUM_DIRS];
+        for (e, &dense) in inp.dense_of_edge.iter().enumerate() {
+            if inp.edge_mask[e] > 0.0 {
+                waits[dense] = y[e].max(0.0) as f64;
+            }
+        }
+        Ok(Some(waits))
+    }
+}
+
+impl NocEstimator for GnnModel {
+    fn link_waits(&self, chunk: &CompiledChunk, core: &CoreConfig) -> Option<Vec<f64>> {
+        match self.predict_link_waits(chunk, core) {
+            Ok(w) => w,
+            Err(e) => {
+                log::warn!("gnn predict failed ({e}); analytical fallback");
+                None
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "gnn"
+    }
+}

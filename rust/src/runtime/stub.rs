@@ -1,0 +1,72 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when
+//! `--cfg theseus_pjrt` is absent (the default offline build).
+//!
+//! `load`/`load_default` always fail with a [`GnnUnavailable`] error whose
+//! `Display` explains how to enable the real runtime, so every call site
+//! (coordinator, figures, benches, examples) takes its documented
+//! analytical-fallback path. The prediction methods exist only so code
+//! guarded by a successful load still type-checks; they are unreachable in
+//! practice because no `GnnModel` value can be constructed.
+
+use std::path::Path;
+
+use crate::arch::CoreConfig;
+use crate::compiler::CompiledChunk;
+use crate::eval::NocEstimator;
+
+use super::{features, GnnMeta};
+
+/// The GNN runtime was compiled out of this build.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GnnUnavailable;
+
+impl std::fmt::Display for GnnUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PJRT runtime not compiled in \
+             (build with RUSTFLAGS=\"--cfg theseus_pjrt\" and add the \
+             xla/anyhow/log dependencies listed in rust/Cargo.toml)"
+        )
+    }
+}
+
+impl std::error::Error for GnnUnavailable {}
+
+/// Stub model: carries the schema metadata but can never be loaded.
+pub struct GnnModel {
+    pub meta: GnnMeta,
+}
+
+impl GnnModel {
+    pub fn load(_path: &Path) -> Result<GnnModel, GnnUnavailable> {
+        Err(GnnUnavailable)
+    }
+
+    pub fn load_default() -> Result<GnnModel, GnnUnavailable> {
+        Err(GnnUnavailable)
+    }
+
+    pub fn predict_padded(&self, _inp: &features::GnnInputs) -> Result<Vec<f32>, GnnUnavailable> {
+        Err(GnnUnavailable)
+    }
+
+    pub fn predict_link_waits(
+        &self,
+        _chunk: &CompiledChunk,
+        _core: &CoreConfig,
+    ) -> Result<Option<Vec<f64>>, GnnUnavailable> {
+        Err(GnnUnavailable)
+    }
+}
+
+impl NocEstimator for GnnModel {
+    /// Always defers to the analytical model.
+    fn link_waits(&self, _chunk: &CompiledChunk, _core: &CoreConfig) -> Option<Vec<f64>> {
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "gnn"
+    }
+}

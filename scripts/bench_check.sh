@@ -1,0 +1,106 @@
+#!/usr/bin/env bash
+# Pre-merge perf gate for the DSE hot path (documented in ROADMAP.md).
+#
+#   scripts/bench_check.sh            build + run perf_hotpath, gate vs baseline
+#   scripts/bench_check.sh --update   additionally rewrite the baseline
+#
+# The gate compares every timing row (unit starting ms/us/Mcyc) of
+# artifacts/bench/perf_hotpath.json against BENCH_perf_hotpath.json and
+# fails on a >±30% drift. A baseline marked "unpopulated" (the committed
+# bootstrap state — this repo has no canonical bench machine yet) is
+# populated from the current run instead of gating.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+BASELINE=BENCH_perf_hotpath.json
+UPDATE="${1:-}"
+
+echo "== bench_check: building release =="
+cargo build --release
+
+echo "== bench_check: running perf_hotpath =="
+cargo bench --bench perf_hotpath
+
+# Cargo runs bench binaries with cwd = the package dir (rust/), so the
+# artifact normally lands in rust/artifacts/; accept the repo root too in
+# case the bench was invoked directly.
+CURRENT=""
+for c in rust/artifacts/bench/perf_hotpath.json artifacts/bench/perf_hotpath.json; do
+    if [ -f "$c" ]; then CURRENT="$c"; break; fi
+done
+if [ -z "$CURRENT" ]; then
+    echo "bench_check: FAIL — bench did not produce artifacts/bench/perf_hotpath.json" >&2
+    exit 1
+fi
+
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "bench_check: SKIP gate (python3 unavailable); bench ran and asserted its own invariants"
+    exit 0
+fi
+
+python3 - "$BASELINE" "$CURRENT" "$UPDATE" <<'EOF'
+import json, shutil, sys
+
+baseline_path, current_path = sys.argv[1], sys.argv[2]
+update = len(sys.argv) > 3 and sys.argv[3] == "--update"
+TOLERANCE = 0.30  # ±30%
+
+with open(current_path) as f:
+    current = json.load(f)
+
+def rows_by_path(doc):
+    out = {}
+    for row in doc.get("rows", []):
+        unit = str(row.get("unit", ""))
+        # Gate only timing/throughput rows; ratio and error rows are
+        # asserted by the bench itself.
+        if unit.startswith(("ms", "us", "Mcyc")):
+            try:
+                out[row["path"]] = float(row["median"])
+            except (KeyError, TypeError, ValueError):
+                pass
+    return out
+
+try:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+except FileNotFoundError:
+    baseline = {"unpopulated": True}
+
+if baseline.get("unpopulated") or update:
+    shutil.copy(current_path, baseline_path)
+    why = "--update" if update else "baseline was unpopulated"
+    print(f"bench_check: baseline written from this run ({why}); commit {baseline_path}")
+    sys.exit(0)
+
+base_rows, cur_rows = rows_by_path(baseline), rows_by_path(current)
+failures, checked = [], 0
+for path, base in sorted(base_rows.items()):
+    cur = cur_rows.get(path)
+    if cur is None:
+        # Environment-conditional rows (e.g. gnn_predict exists only when
+        # PJRT artifacts are built) must not fail machines without them.
+        print(f"  {path}: not emitted by this run (environment-conditional) — skipped")
+        continue
+    if base <= 0 or cur <= 0:
+        continue
+    checked += 1
+    ratio = cur / base
+    drift = ratio - 1.0
+    status = "ok"
+    # Mcyc/s is higher-better; ms/us are lower-better. Gate symmetric
+    # drift either way: a 30% improvement is worth re-baselining too,
+    # but only regressions fail.
+    higher_better = path == "ca_simulator"
+    regressed = ratio < 1 - TOLERANCE if higher_better else ratio > 1 + TOLERANCE
+    if regressed:
+        status = "REGRESSION"
+        failures.append(f"  {path}: {base:g} -> {cur:g} ({drift:+.0%})")
+    print(f"  {path}: {base:g} -> {cur:g} ({drift:+.0%}) {status}")
+
+if failures:
+    print(f"bench_check: FAIL — {len(failures)} gated row(s) regressed >{TOLERANCE:.0%}:")
+    print("\n".join(failures))
+    sys.exit(1)
+print(f"bench_check: PASS ({checked} rows within ±{TOLERANCE:.0%})")
+EOF
