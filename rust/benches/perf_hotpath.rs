@@ -12,10 +12,26 @@ use theseus::compiler::cache::ChunkCache;
 use theseus::compiler::compile_chunk;
 use theseus::eval::op_level::{chunk_latency, chunk_latency_with_topo, ChunkTopology, NocModel};
 use theseus::eval::{eval_training, eval_training_par, Analytical, SystemConfig};
+use theseus::noc_sim::{reference, CoreProgram, Instr, Simulator};
 use theseus::util::rng::Rng;
 use theseus::util::table::Table;
 use theseus::workload::models::benchmarks;
 use theseus::workload::{OpGraph, Phase};
+
+/// Hand-built mesh programs for the event-vs-reference simulator rows.
+fn mesh_programs(h: usize, w: usize, per_core: Vec<(usize, Vec<Instr>)>) -> Vec<CoreProgram> {
+    let mut progs = vec![
+        CoreProgram {
+            instrs: Vec::new(),
+            flit_bytes: 64.0,
+        };
+        h * w
+    ];
+    for (core, instrs) in per_core {
+        progs[core].instrs = instrs;
+    }
+    progs
+}
 
 fn main() {
     let mut t = Table::new(
@@ -81,10 +97,12 @@ fn main() {
     global.clear();
     let r_serial = eval_training(&full_spec, &sys, &Analytical); // prime cache
     let before = global.stats();
+    let tiles_before = theseus::eval::tile::tile_cache_stats();
     let warm = bench::time("eval_training_warm_par", 1, 5, || {
         std::hint::black_box(eval_training_par(&full_spec, &sys, &Analytical));
     });
     let after = global.stats();
+    let tiles_after = theseus::eval::tile::tile_cache_stats();
     t.row(&["eval_training_warm_par".into(), format!("{:.3}", warm.median_s * 1e3), "ms per design point (pooled, warm cache)".into()]);
     t.row(&["eval_training_speedup".into(), format!("{:.2}", cold.median_s / warm.median_s.max(1e-12)), "x cold-serial / warm-pooled".into()]);
     let swept = (after.hits + after.misses) - (before.hits + before.misses);
@@ -94,6 +112,14 @@ fn main() {
         (after.hits - before.hits) as f64 / swept as f64
     };
     t.row(&["compile_cache_hit_rate".into(), format!("{:.4}", hit_rate), "fraction (warm strategy sweep)".into()]);
+    let tile_lookups =
+        (tiles_after.hits + tiles_after.misses) - (tiles_before.hits + tiles_before.misses);
+    let tile_hit_rate = if tile_lookups == 0 {
+        0.0
+    } else {
+        (tiles_after.hits - tiles_before.hits) as f64 / tile_lookups as f64
+    };
+    t.row(&["tile_cache_hit_rate".into(), format!("{:.4}", tile_hit_rate), "fraction (warm strategy sweep)".into()]);
     // Equivalence guard: pooled + cached must match serial + cold.
     let r_par = eval_training_par(&full_spec, &sys, &Analytical);
     let rel = match (&r_serial, &r_par) {
@@ -129,6 +155,111 @@ fn main() {
         )
     });
     t.row(&["ca_simulator".into(), format!("{:.2}", stats.cycles as f64 / wall / 1e6), "Mcyc/s (6x6 mesh)".into()]);
+
+    // 5b. Event-driven vs frozen per-cycle reference stepper.
+    //
+    // Sparse: a corner-to-corner exchange with long compute gaps on a
+    // 40x40 mesh that is otherwise idle — the event-driven fast path
+    // (ISSUE 2 target: >= 5x; the receiver blocks on RECV, so the old
+    // all-or-nothing skip never fires and the reference pays O(cores)
+    // every cycle). Congested: all-to-hotspot on 12x12 — every router
+    // active, the event-driven engine's worst case (recorded so drift in
+    // its constant factor is gated too).
+    {
+        let (h, w) = (40usize, 40usize);
+        let rounds = 40u32;
+        let mut tx = Vec::new();
+        for _ in 0..rounds {
+            tx.push(Instr::Compute { cycles: 300 });
+            tx.push(Instr::Send { dst: (h - 1, w - 1), bytes: 16.0 * 64.0, tag: 0 });
+        }
+        let sparse = vec![
+            (0, tx),
+            (h * w - 1, vec![Instr::Recv { tag: 0, packets: rounds }]),
+        ];
+        let budget = 50_000_000;
+        let (ev_stats, _) = bench::time_once(|| {
+            Simulator::new(h, w, mesh_programs(h, w, sparse.clone())).run(budget)
+        });
+        let (ref_stats, _) = bench::time_once(|| {
+            reference::Simulator::new(h, w, mesh_programs(h, w, sparse.clone())).run(budget)
+        });
+        assert_eq!(ev_stats, ref_stats, "event-driven sim diverged from reference oracle");
+        let ev = bench::time("noc_sim_sparse_event", 1, 10, || {
+            std::hint::black_box(Simulator::new(h, w, mesh_programs(h, w, sparse.clone())).run(budget));
+        });
+        let rf = bench::time("noc_sim_sparse_ref", 1, 5, || {
+            std::hint::black_box(
+                reference::Simulator::new(h, w, mesh_programs(h, w, sparse.clone())).run(budget),
+            );
+        });
+        t.row(&["noc_sim_sparse_event".into(), format!("{:.4}", ev.median_s * 1e3), "ms (40x40 mesh, 2 active cores)".into()]);
+        t.row(&["noc_sim_sparse_ref".into(), format!("{:.4}", rf.median_s * 1e3), "ms (reference per-cycle stepper)".into()]);
+        let speedup = rf.median_s / ev.median_s.max(1e-12);
+        t.row(&["noc_sim_sparse_speedup".into(), format!("{:.1}", speedup), "x event-driven / reference".into()]);
+        assert!(
+            speedup >= 5.0,
+            "sparse-traffic event-driven speedup below the 5x floor: {speedup:.1}x"
+        );
+
+        let (gh, gw) = (12usize, 12usize);
+        let hotspot = (gh / 2, gw / 2);
+        let hot_core = hotspot.0 * gw + hotspot.1;
+        let mut congested = Vec::new();
+        let mut expected = 0u32;
+        for core in 0..gh * gw {
+            if core == hot_core {
+                continue;
+            }
+            let mut instrs = Vec::new();
+            for _ in 0..6 {
+                instrs.push(Instr::Send { dst: hotspot, bytes: 16.0 * 64.0, tag: 0 });
+                expected += 1;
+            }
+            congested.push((core, instrs));
+        }
+        congested.push((hot_core, vec![Instr::Recv { tag: 0, packets: expected }]));
+        let (evc_stats, _) = bench::time_once(|| {
+            Simulator::new(gh, gw, mesh_programs(gh, gw, congested.clone())).run(budget)
+        });
+        let (refc_stats, _) = bench::time_once(|| {
+            reference::Simulator::new(gh, gw, mesh_programs(gh, gw, congested.clone())).run(budget)
+        });
+        assert_eq!(evc_stats, refc_stats, "congested case diverged from reference oracle");
+        let evc = bench::time("noc_sim_congested_event", 1, 5, || {
+            std::hint::black_box(
+                Simulator::new(gh, gw, mesh_programs(gh, gw, congested.clone())).run(budget),
+            );
+        });
+        let rfc = bench::time("noc_sim_congested_ref", 1, 5, || {
+            std::hint::black_box(
+                reference::Simulator::new(gh, gw, mesh_programs(gh, gw, congested.clone())).run(budget),
+            );
+        });
+        t.row(&["noc_sim_congested_event".into(), format!("{:.4}", evc.median_s * 1e3), "ms (12x12 all-to-hotspot)".into()]);
+        t.row(&["noc_sim_congested_ref".into(), format!("{:.4}", rfc.median_s * 1e3), "ms (reference per-cycle stepper)".into()]);
+        t.row(&["noc_sim_congested_ratio".into(), format!("{:.2}", rfc.median_s / evc.median_s.max(1e-12)), "x event-driven / reference".into()]);
+    }
+
+    // 5c. Ground-truth dataset generation: serial loop vs pooled fan-out
+    // (each sample is an independent CA sim; ISSUE 2 target: >= 2x on a
+    // multi-core reference machine — the ratio approaches the worker
+    // count as samples per worker grow).
+    {
+        let n_samples = 8;
+        let (doc_serial, t_serial) =
+            bench::time_once(|| theseus::noc_sim::dataset::gen_dataset_serial(n_samples, 42));
+        let (doc_par, t_par) =
+            bench::time_once(|| theseus::noc_sim::dataset::gen_dataset(n_samples, 42));
+        assert_eq!(
+            doc_serial.to_string(),
+            doc_par.to_string(),
+            "pooled dataset generation must be byte-identical to serial"
+        );
+        t.row(&["noc_dataset_serial".into(), format!("{:.2}", t_serial * 1e3), format!("ms ({n_samples} samples, serial)")]);
+        t.row(&["noc_dataset_par".into(), format!("{:.2}", t_par * 1e3), format!("ms ({n_samples} samples, {} workers)", theseus::util::pool::num_threads())]);
+        t.row(&["noc_dataset_par_speedup".into(), format!("{:.2}", t_serial / t_par.max(1e-12)), "x serial / pooled".into()]);
+    }
 
     // 6. GP fit vs incremental rank-1 update at n=100.
     let mut rng = Rng::new(2);

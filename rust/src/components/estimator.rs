@@ -3,12 +3,12 @@
 //! memoizing core geometry (the paper builds an area-power table of basic
 //! modules for exactly this reason — it sits on the DSE hot path).
 
-use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
 
 use crate::arch::constants as k;
 use crate::arch::{CoreConfig, IntegrationStyle, MemoryKind, ReticleConfig, WscConfig};
 use crate::components::{mac, noc, phy, sram};
+use crate::util::memo::Memo;
 use crate::yield_model::{self, redundancy, YieldInputs};
 
 /// Physical characterization of one core.
@@ -38,21 +38,18 @@ fn core_key(c: &CoreConfig) -> CoreKey {
     )
 }
 
-static CORE_CACHE: OnceLock<Mutex<HashMap<CoreKey, CoreGeom>>> = OnceLock::new();
+static CORE_CACHE: OnceLock<Memo<CoreKey, CoreGeom>> = OnceLock::new();
 
-fn core_cache() -> &'static Mutex<HashMap<CoreKey, CoreGeom>> {
-    CORE_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn core_cache() -> &'static Memo<CoreKey, CoreGeom> {
+    // The design-space grid holds ~thousands of distinct cores; epoch
+    // eviction (see util::memo) keeps degenerate sweeps bounded.
+    CORE_CACHE.get_or_init(|| Memo::new(4096))
 }
 
-/// Characterize a core (memoized).
+/// Characterize a core (memoized on [`Memo`], shared with the tile-level
+/// evaluation cache substrate).
 pub fn core_geom(c: &CoreConfig) -> CoreGeom {
-    let key = core_key(c);
-    if let Some(g) = core_cache().lock().unwrap().get(&key) {
-        return *g;
-    }
-    let g = core_geom_uncached(c);
-    core_cache().lock().unwrap().insert(key, g);
-    g
+    core_cache().get_or_insert_with(core_key(c), || core_geom_uncached(c))
 }
 
 fn core_geom_uncached(c: &CoreConfig) -> CoreGeom {
@@ -440,7 +437,7 @@ pub fn peak_power(wsc: &WscConfig, ret: &ReticlePhys) -> f64 {
 
 /// Clear the core-geometry memo (test isolation).
 pub fn clear_cache() {
-    CORE_CACHE.lock().unwrap().clear();
+    core_cache().clear();
 }
 
 #[cfg(test)]

@@ -73,7 +73,7 @@ impl NocEstimator for CycleAccurate {
             core.noc_bw_bits,
             &|op| {
                 let a = &chunk.assignments[op];
-                crate::eval::tile::eval_tile(a, core, 1.0).cycles.ceil() as u64
+                crate::eval::tile::eval_tile_cached(a, core, 1.0).cycles.ceil() as u64
             },
             self.max_cycles,
         );

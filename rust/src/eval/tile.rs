@@ -1,9 +1,18 @@
 //! Tile-level evaluation (paper §VI-B): latency of one operator tile on one
 //! core with a fixed dataflow — loop unrolling/tiling over the MAC array,
 //! SRAM-capacity-limited reuse, and bandwidth-limited operand feeds.
+//!
+//! The DSE hot path re-evaluates the same (assignment, core, scale) tiles
+//! across every strategy probe and NoC-model swap once compile + topology
+//! are memoized, so [`eval_tile_cached`] memoizes results in a process-wide
+//! [`Memo`] keyed by every input the model reads (bounded by
+//! `THESEUS_TILE_CACHE`, default 65536 entries, 0 disables).
+
+use std::sync::OnceLock;
 
 use crate::arch::{constants as k, CoreConfig, Dataflow};
 use crate::compiler::OpAssignment;
+use crate::util::memo::{Memo, MemoStats};
 use crate::workload::OpKind;
 
 /// Tile-level result for one op on one core.
@@ -77,6 +86,71 @@ pub fn eval_tile(a: &OpAssignment, core: &CoreConfig, scale: f64) -> TileEval {
         sram_bytes,
         mac_ops,
     }
+}
+
+/// Memo key covering *every* input [`eval_tile`] reads: op kind + exact
+/// dims, placement grid (Matmul utilization divides by it), the per-core
+/// byte/flop loads (IEEE bit patterns — equal bits iff equal inputs), the
+/// full core config and the evaluation scale.
+type TileKey = (
+    (u8, u64, u64, u64, u64), // kind discriminant + dims (bits for KvRead)
+    (u64, u64),               // placement grid_h, grid_w
+    (u64, u64, u64, u64),     // flops/in/out/working-set per core, as bits
+    (u8, u64, u64, u64, u64), // core: dataflow, mac, buf_kb, buf_bw, noc_bw
+    u64,                      // scale bits
+);
+
+fn tile_key(a: &OpAssignment, core: &CoreConfig, scale: f64) -> TileKey {
+    let kind = match a.kind {
+        OpKind::Matmul { m, k: kk, n } => (0u8, m as u64, kk as u64, n as u64, 0u64),
+        OpKind::BatchMatmul { batch, m, k: kk, n } => (1, batch as u64, m as u64, kk as u64, n as u64),
+        OpKind::Softmax { rows, cols } => (2, rows as u64, cols as u64, 0, 0),
+        OpKind::LayerNorm { rows, cols } => (3, rows as u64, cols as u64, 0, 0),
+        OpKind::Elementwise { elems } => (4, elems as u64, 0, 0, 0),
+        OpKind::KvRead { bytes } => (5, bytes.to_bits(), 0, 0, 0),
+    };
+    (
+        kind,
+        (a.placement.grid_h as u64, a.placement.grid_w as u64),
+        (
+            a.flops_per_core.to_bits(),
+            a.in_bytes_per_core.to_bits(),
+            a.out_bytes_per_core.to_bits(),
+            a.working_set_bytes.to_bits(),
+        ),
+        (
+            core.dataflow as u8,
+            core.mac_num as u64,
+            core.buffer_kb as u64,
+            core.buffer_bw_bits as u64,
+            core.noc_bw_bits as u64,
+        ),
+        scale.to_bits(),
+    )
+}
+
+static TILE_CACHE: OnceLock<Memo<TileKey, TileEval>> = OnceLock::new();
+
+fn tile_cache() -> &'static Memo<TileKey, TileEval> {
+    TILE_CACHE
+        .get_or_init(|| Memo::new(crate::util::cli::env_usize("THESEUS_TILE_CACHE", 1 << 16)))
+}
+
+/// Memoized [`eval_tile`] — bit-identical results (the cached value *is*
+/// the computed one; the key captures every model input). Use on the DSE
+/// hot path; plain [`eval_tile`] stays for one-off evaluations.
+pub fn eval_tile_cached(a: &OpAssignment, core: &CoreConfig, scale: f64) -> TileEval {
+    tile_cache().get_or_insert_with(tile_key(a, core, scale), || eval_tile(a, core, scale))
+}
+
+/// Tile-memo counters (bench/diagnostics).
+pub fn tile_cache_stats() -> MemoStats {
+    tile_cache().stats()
+}
+
+/// Clear the tile memo (bench isolation).
+pub fn clear_tile_cache() {
+    tile_cache().clear();
 }
 
 #[cfg(test)]
@@ -174,6 +248,41 @@ mod tests {
         let t1 = eval_tile(&a, &c, 1.0);
         let t4 = eval_tile(&a, &c, 4.0);
         assert!(t4.cycles < t1.cycles / 2.0);
+    }
+
+    #[test]
+    fn cached_eval_is_bit_identical_and_hits() {
+        crate::util::prop::check(
+            "eval_tile_cached == eval_tile on random tiles",
+            |r| {
+                let mac = 1usize << r.range(4, 11);
+                let m = 1 << r.range(4, 10);
+                let kk = 1 << r.range(4, 10);
+                let n = 1 << r.range(4, 10);
+                let scale = [1.0, 2.0, 4.0][r.below(3)];
+                (mac, m, kk, n, scale)
+            },
+            |&(mac, m, kk, n, scale)| {
+                let c = core(Dataflow::WS, mac, 512, 2048, 1024);
+                let a = gemm_assignment(m, kk, n, 2, 2);
+                let fresh = eval_tile(&a, &c, scale);
+                let cached = eval_tile_cached(&a, &c, scale);
+                let again = eval_tile_cached(&a, &c, scale);
+                if fresh != cached || fresh != again {
+                    return Err(format!("diverged: {fresh:?} vs {cached:?}"));
+                }
+                Ok(())
+            },
+        );
+        // Repeated keys must actually hit (counters are process-global, so
+        // only assert hits grew).
+        let before = tile_cache_stats();
+        let c = core(Dataflow::WS, 256, 512, 2048, 1024);
+        let a = gemm_assignment(512, 512, 512, 2, 2);
+        eval_tile_cached(&a, &c, 1.0);
+        eval_tile_cached(&a, &c, 1.0);
+        let after = tile_cache_stats();
+        assert!(after.hits > before.hits, "second lookup must hit");
     }
 
     #[test]

@@ -73,7 +73,7 @@ pub fn fig7_eval_comparison(
                     &chunk,
                     core.noc_bw_bits,
                     &|op| {
-                        crate::eval::tile::eval_tile(&chunk.assignments[op], &core, 1.0)
+                        crate::eval::tile::eval_tile_cached(&chunk.assignments[op], &core, 1.0)
                             .cycles
                             .ceil() as u64
                     },

@@ -36,9 +36,19 @@ fn cmd_gen_dataset(args: &Args) {
         theseus::util::cli::env_usize("THESEUS_DATASET_N", 256),
     );
     let seed = args.u64("seed", 2024);
-    eprintln!("generating {n} CA-simulated samples (seed {seed}) ...");
+    // --serial bypasses the pooled fan-out (identical output; useful for
+    // timing baselines and single-core machines).
+    let serial = args.has("serial");
+    eprintln!(
+        "generating {n} CA-simulated samples (seed {seed}{}) ...",
+        if serial { ", serial" } else { "" }
+    );
     let t0 = std::time::Instant::now();
-    let doc = theseus::noc_sim::dataset::gen_dataset(n, seed);
+    let doc = if serial {
+        theseus::noc_sim::dataset::gen_dataset_serial(n, seed)
+    } else {
+        theseus::noc_sim::dataset::gen_dataset(n, seed)
+    };
     std::fs::write(&out, doc.to_string()).expect("write dataset");
     eprintln!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());
 }

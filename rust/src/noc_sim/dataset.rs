@@ -108,22 +108,43 @@ pub fn gen_sample(rng: &mut Rng) -> Sample {
     }
 }
 
-/// Generate `n` samples into the dataset JSON document.
-pub fn gen_dataset(n: usize, seed: u64) -> Json {
-    let rngs: Vec<Rng> = {
-        let mut base = Rng::new(seed);
-        (0..n).map(|i| base.fork(i as u64)).collect()
-    };
-    let samples = crate::util::pool::par_map(&rngs, |rng| {
-        let mut rng = rng.clone();
-        gen_sample(&mut rng).to_json()
-    });
+/// Per-sample RNG streams: each sample draws from an independent fork of
+/// the base seed, so the dataset is identical whether samples are
+/// generated serially or fanned out over the pool.
+fn sample_streams(n: usize, seed: u64) -> Vec<Rng> {
+    let mut base = Rng::new(seed);
+    (0..n).map(|i| base.fork(i as u64)).collect()
+}
+
+fn dataset_doc(seed: u64, samples: Vec<Json>) -> Json {
     let mut doc = Json::obj();
     doc.set("version", Json::Num(1.0))
         .set("num_dirs", Json::Num(NUM_DIRS as f64))
         .set("seed", Json::Num(seed as f64))
         .set("samples", Json::Arr(samples));
     doc
+}
+
+/// Generate `n` samples into the dataset JSON document, fanning the
+/// independent CA simulations out over [`crate::util::pool`].
+pub fn gen_dataset(n: usize, seed: u64) -> Json {
+    let rngs = sample_streams(n, seed);
+    let samples = crate::util::pool::par_map(&rngs, |rng| {
+        let mut rng = rng.clone();
+        gen_sample(&mut rng).to_json()
+    });
+    dataset_doc(seed, samples)
+}
+
+/// Serial [`gen_dataset`] — identical output, one sample at a time. Kept
+/// for single-core environments and as the baseline the `perf_hotpath`
+/// bench measures the pooled fan-out against.
+pub fn gen_dataset_serial(n: usize, seed: u64) -> Json {
+    let samples = sample_streams(n, seed)
+        .into_iter()
+        .map(|mut rng| gen_sample(&mut rng).to_json())
+        .collect();
+    dataset_doc(seed, samples)
 }
 
 #[cfg(test)]
@@ -152,9 +173,11 @@ mod tests {
     }
 
     #[test]
-    fn dataset_deterministic() {
+    fn dataset_deterministic_and_serial_matches_parallel() {
+        // Pooled generation must emit byte-identical JSON to the serial
+        // path (per-sample forked RNG streams + bit-identical simulator).
         let a = gen_dataset(2, 7).to_string();
-        let b = gen_dataset(2, 7).to_string();
+        let b = gen_dataset_serial(2, 7).to_string();
         assert_eq!(a, b);
     }
 

@@ -12,11 +12,50 @@
 //! waiting times ([`SimStats::link_wait`]) are the GNN's regression targets
 //! (Eq. 5), and end-to-end chunk cycles validate the analytical model
 //! (Fig. 7).
+//!
+//! # Event-driven scheduling (§Perf)
+//!
+//! The default [`Simulator`] is *event-driven*: instead of touching every
+//! core and every router every cycle, it maintains
+//!
+//! * a min-heap of **compute wake times** — a core mid-COMPUTE is dormant
+//!   until its deadline pops;
+//! * a **runnable-core** set — cores are advanced only when something that
+//!   can change their state happened (a compute deadline, a packet tail
+//!   ejected at them, or simulation start);
+//! * an **active-router** list — only routers holding buffered flits
+//!   arbitrate and traverse; idle routers cost zero work per cycle;
+//! * a **NIC-backlog** list — only cores with queued packets inject.
+//!
+//! When every list is empty the simulator jumps straight to the earliest
+//! compute deadline (per-entity generalization of the old all-or-nothing
+//! `maybe_skip_idle`): idle regions of a large mesh cost *zero* work per
+//! cycle rather than O(cores). Cycles in which any flit is buffered are
+//! still stepped one by one, because blocked head-of-line flits accrue one
+//! [`SimStats::link_wait`] cycle per blocked requester per cycle — exactly
+//! as in the per-cycle stepper.
+//!
+//! # Reference-oracle contract
+//!
+//! The original per-cycle stepper is retained, frozen, as
+//! [`reference::Simulator`]. The event-driven engine must produce
+//! **bit-identical [`SimStats`]** (cycles, per-link flit/wait counters,
+//! packet latencies, injected flits) on every program that completes within
+//! budget; `tests::equivalence` proves this over randomized meshes and
+//! programs, and compiled-chunk runs. Any future change to the router
+//! microarchitecture must be applied to both engines (or the change must be
+//! validated against a regenerated oracle) — the GNN training labels and
+//! the Fig. 7 validation depend on these exact semantics. The engines may
+//! differ only in *failure* behavior: budget overruns surface as
+//! [`SimError`] from [`Simulator::try_run`] with a bounded diagnostic,
+//! while the oracle keeps the legacy panic.
 
 pub mod dataset;
 pub mod program;
+pub mod reference;
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::arch::constants as k;
 use crate::compiler::routing::{Dir, LinkId, NUM_DIRS};
@@ -97,8 +136,37 @@ impl Router {
     }
 }
 
+/// XY output port for a packet at router coordinates `at`.
+fn route_port(at: (usize, usize), dst: (usize, usize)) -> usize {
+    if dst.1 > at.1 {
+        Dir::East as usize
+    } else if dst.1 < at.1 {
+        Dir::West as usize
+    } else if dst.0 > at.0 {
+        Dir::South as usize
+    } else if dst.0 < at.0 {
+        Dir::North as usize
+    } else {
+        LOCAL
+    }
+}
+
+/// Neighbor node through `dir` on a `width`-wide mesh, plus the input port
+/// on that neighbor.
+fn neighbor_of(width: usize, node: usize, dir: usize) -> (usize, usize) {
+    let (r, c) = (node / width, node % width);
+    let at = |r: usize, c: usize| r * width + c;
+    match dir {
+        d if d == Dir::East as usize => (at(r, c + 1), Dir::West as usize),
+        d if d == Dir::West as usize => (at(r, c - 1), Dir::East as usize),
+        d if d == Dir::South as usize => (at(r + 1, c), Dir::North as usize),
+        d if d == Dir::North as usize => (at(r - 1, c), Dir::South as usize),
+        _ => unreachable!(),
+    }
+}
+
 /// Aggregate simulation statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SimStats {
     /// Total simulated cycles until drain.
     pub cycles: u64,
@@ -132,7 +200,65 @@ impl SimStats {
     }
 }
 
-/// Instruction-driven mesh simulator.
+/// Budget overrun (deadlock or undersized `max_cycles`) from
+/// [`Simulator::try_run`]. Carries a *bounded* diagnostic — at most
+/// [`SimError::MAX_DIAG`] stuck VCs and blocked cores are sampled, so the
+/// error stays cheap to build and render even on a 100×100 mesh (the legacy
+/// panic rendered every busy VC in the network).
+#[derive(Debug, Clone)]
+pub struct SimError {
+    /// The budget that was exceeded.
+    pub max_cycles: u64,
+    /// Simulated cycle at which the run was abandoned.
+    pub cycle: u64,
+    /// True when no event could ever fire again (certain deadlock, e.g. a
+    /// RECV whose packets were never sent); false when the budget ran out
+    /// with traffic still moving.
+    pub deadlock: bool,
+    /// Cores that have not finished their instruction stream.
+    pub unfinished_cores: usize,
+    /// Cores with packets still queued on the NIC.
+    pub nic_backlog: usize,
+    /// Flits buffered somewhere in the network.
+    pub flits_in_network: u64,
+    /// Up to [`SimError::MAX_DIAG`] `(node, port, vc, buffered_flits)`
+    /// input VCs still holding flits.
+    pub sample_stuck: Vec<(usize, usize, usize, usize)>,
+    /// Up to [`SimError::MAX_DIAG`] `(core, pc)` unfinished cores.
+    pub sample_blocked: Vec<(usize, usize)>,
+}
+
+impl SimError {
+    /// Cap on each diagnostic sample list.
+    pub const MAX_DIAG: usize = 8;
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "exceeded {} cycles at cycle {}{}: {} unfinished core(s), {} NIC backlog(s), \
+             {} flit(s) in flight; stuck VCs (node,port,vc,flits) {:?}; blocked cores (core,pc) {:?}",
+            self.max_cycles,
+            self.cycle,
+            if self.deadlock {
+                " [deadlock: no pending events]"
+            } else {
+                ""
+            },
+            self.unfinished_cores,
+            self.nic_backlog,
+            self.flits_in_network,
+            self.sample_stuck,
+            self.sample_blocked,
+        )
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Instruction-driven mesh simulator (event-driven engine — see the module
+/// docs; [`reference::Simulator`] is the frozen per-cycle oracle).
 pub struct Simulator {
     pub height: usize,
     pub width: usize,
@@ -149,6 +275,26 @@ pub struct Simulator {
     inject_vc: Vec<usize>,
     stats: SimStats,
     cycle: u64,
+
+    // ---- event-driven scheduler state ----
+    /// Cores to advance this cycle (processed in ascending index order so
+    /// packet-id assignment matches the reference stepper's 0..n sweep).
+    runnable: Vec<u32>,
+    runnable_flag: Vec<bool>,
+    /// Min-heap of (compute deadline, core).
+    wake: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Routers holding buffered flits (lazily compacted).
+    active_routers: Vec<u32>,
+    router_in_list: Vec<bool>,
+    /// Cores with NIC backlog (lazily compacted).
+    nic_active: Vec<u32>,
+    nic_in_list: Vec<bool>,
+    /// O(1) `done()` bookkeeping.
+    unfinished: usize,
+    flits_in_network: u64,
+    nic_pending: usize,
+    /// Scratch for the switch pass (reused allocation).
+    moves: Vec<(usize, usize, usize, usize, Flit)>,
 }
 
 impl Simulator {
@@ -167,6 +313,7 @@ impl Simulator {
             })
             .max()
             .unwrap_or(1) as usize;
+        let unfinished = programs.iter().filter(|p| !p.instrs.is_empty()).count();
         Simulator {
             height,
             width,
@@ -186,249 +333,289 @@ impl Simulator {
                 ..Default::default()
             },
             cycle: 0,
-        }
-    }
-
-    fn node(&self, r: usize, c: usize) -> usize {
-        r * self.width + c
-    }
-
-    /// XY output port for a packet at router (r, c).
-    fn route(&self, at: (usize, usize), dst: (usize, usize)) -> usize {
-        if dst.1 > at.1 {
-            Dir::East as usize
-        } else if dst.1 < at.1 {
-            Dir::West as usize
-        } else if dst.0 > at.0 {
-            Dir::South as usize
-        } else if dst.0 < at.0 {
-            Dir::North as usize
-        } else {
-            LOCAL
-        }
-    }
-
-    fn link_idx(&self, node: usize, dir: usize) -> usize {
-        node * NUM_DIRS + dir
-    }
-
-    /// Neighbor node through `dir`, plus the input port on that neighbor.
-    fn neighbor(&self, node: usize, dir: usize) -> (usize, usize) {
-        let (r, c) = (node / self.width, node % self.width);
-        match dir {
-            d if d == Dir::East as usize => (self.node(r, c + 1), Dir::West as usize),
-            d if d == Dir::West as usize => (self.node(r, c - 1), Dir::East as usize),
-            d if d == Dir::South as usize => (self.node(r + 1, c), Dir::North as usize),
-            d if d == Dir::North as usize => (self.node(r - 1, c), Dir::South as usize),
-            _ => unreachable!(),
+            // Every core is runnable at cycle 0 (mirrors the reference
+            // stepper's first full advance pass).
+            runnable: (0..n as u32).collect(),
+            runnable_flag: vec![true; n],
+            wake: BinaryHeap::new(),
+            active_routers: Vec::new(),
+            router_in_list: vec![false; n],
+            nic_active: Vec::new(),
+            nic_in_list: vec![false; n],
+            unfinished,
+            flits_in_network: 0,
+            nic_pending: 0,
+            moves: Vec::new(),
         }
     }
 
     /// Run to completion (all programs finished, network drained).
-    /// `max_cycles` guards against deadlock bugs; panics if exceeded.
-    pub fn run(mut self, max_cycles: u64) -> SimStats {
-        while !self.done() {
-            self.step();
-            if self.cycle > max_cycles {
-                let mut buf_state = String::new();
-                for (n, r) in self.routers.iter().enumerate() {
-                    for port in 0..PORTS {
-                        for vc in 0..VCS {
-                            let s = r.vc(port, vc);
-                            if !s.buf.is_empty() || s.out_port.is_some() {
-                                buf_state.push_str(&format!(
-                                    "\n  node {n} port {port} vc {vc}: {} flits head={:?} out_port={:?} out_vc={:?}",
-                                    s.buf.len(),
-                                    s.buf.front(),
-                                    s.out_port,
-                                    s.out_vc
-                                ));
-                            }
-                        }
+    /// `max_cycles` guards against deadlock bugs; panics if exceeded —
+    /// prefer [`Simulator::try_run`] where a recoverable error is wanted.
+    pub fn run(self, max_cycles: u64) -> SimStats {
+        match self.try_run(max_cycles) {
+            Ok(stats) => stats,
+            Err(e) => panic!("noc_sim: {e}"),
+        }
+    }
+
+    /// Run to completion, or return a bounded [`SimError`] diagnostic if
+    /// the cycle budget is exceeded (deadlock or undersized budget).
+    pub fn try_run(mut self, max_cycles: u64) -> Result<SimStats, SimError> {
+        loop {
+            if self.done() {
+                break;
+            }
+            self.wake_due();
+            if self.quiescent() {
+                // Per-entity fast-forward: no flits buffered, no NIC
+                // backlog, no core can act — nothing can change state
+                // before the earliest compute deadline.
+                match self.wake.peek() {
+                    Some(&Reverse((t, _))) => {
+                        self.cycle = t;
+                        self.wake_due();
                     }
-                    for d in 0..NUM_DIRS {
-                        if r.credits[d] != [VC_DEPTH as u8; VCS] {
-                            buf_state.push_str(&format!("\n  node {n} credits[{d}]={:?}", r.credits[d]));
-                        }
+                    None => {
+                        // No pending events at all and not done: certain
+                        // deadlock. The reference stepper would idle-spin
+                        // to the budget; jump straight to the failure.
+                        self.cycle = max_cycles + 1;
+                        return Err(self.overrun_error(max_cycles, true));
                     }
                 }
-                panic!(
-                    "noc_sim: exceeded {max_cycles} cycles — deadlock or undersized budget \
-                     (pc={:?}) nic={:?} state:{}",
-                    self.pc
-                        .iter()
-                        .zip(&self.programs)
-                        .map(|(pc, p)| format!("{}/{}", pc, p.instrs.len()))
-                        .collect::<Vec<_>>(),
-                    self.nic.iter().map(|q| q.len()).collect::<Vec<_>>(),
-                    buf_state,
-                );
+            }
+            self.step_active();
+            if self.cycle > max_cycles {
+                return Err(self.overrun_error(max_cycles, false));
             }
         }
         self.stats.cycles = self.cycle;
-        self.stats
+        Ok(self.stats)
     }
 
     fn done(&self) -> bool {
-        self.pc
-            .iter()
-            .zip(&self.programs)
-            .all(|(pc, p)| *pc >= p.instrs.len())
-            && self.network_empty()
+        self.unfinished == 0 && self.flits_in_network == 0 && self.nic_pending == 0
     }
 
-    fn network_empty(&self) -> bool {
-        self.nic.iter().all(|q| q.is_empty()) && self.routers.iter().all(|r| r.occupancy == 0)
+    fn quiescent(&self) -> bool {
+        self.runnable.is_empty() && self.flits_in_network == 0 && self.nic_pending == 0
     }
 
-    fn step(&mut self) {
-        self.advance_cores();
-        self.inject();
-        self.switch_traversal();
+    /// Pop all compute deadlines due at or before the current cycle.
+    fn wake_due(&mut self) {
+        while let Some(&Reverse((t, core))) = self.wake.peek() {
+            if t > self.cycle {
+                break;
+            }
+            self.wake.pop();
+            self.mark_runnable(core as usize);
+        }
+    }
+
+    fn mark_runnable(&mut self, core: usize) {
+        if !self.runnable_flag[core] {
+            self.runnable_flag[core] = true;
+            self.runnable.push(core as u32);
+        }
+    }
+
+    fn mark_router(&mut self, node: usize) {
+        if !self.router_in_list[node] {
+            self.router_in_list[node] = true;
+            self.active_routers.push(node as u32);
+        }
+    }
+
+    fn mark_nic(&mut self, core: usize) {
+        if !self.nic_in_list[core] {
+            self.nic_in_list[core] = true;
+            self.nic_active.push(core as u32);
+        }
+    }
+
+    /// One simulated cycle touching only active entities. Phase order
+    /// matches the reference stepper: cores, then injection, then switch.
+    fn step_active(&mut self) {
+        self.advance_runnable();
+        self.inject_active();
+        self.switch_active();
         self.cycle += 1;
-        self.maybe_skip_idle();
     }
 
-    /// Fast-forward across compute-only stretches (§Perf): when the network
-    /// is drained, no NIC has pending packets, and every unfinished core is
-    /// mid-COMPUTE, nothing can happen until the earliest compute ends —
-    /// jump straight there. Waiting statistics are unaffected (no flits in
-    /// flight by construction).
-    fn maybe_skip_idle(&mut self) {
-        let mut min_until = u64::MAX;
-        for core in 0..self.programs.len() {
+    /// Advance every runnable core, in ascending index order (keeps the
+    /// `packets` vec — and thus packet ids — identical to the reference
+    /// stepper's 0..n sweep; core advancement itself is core-local, so the
+    /// *set* of advancing cores is order-independent).
+    fn advance_runnable(&mut self) {
+        if self.runnable.is_empty() {
+            return;
+        }
+        let mut cores = std::mem::take(&mut self.runnable);
+        cores.sort_unstable();
+        for &c in &cores {
+            self.runnable_flag[c as usize] = false;
+            self.advance_core(c as usize);
+        }
+        cores.clear();
+        // Reuse the allocation; wakes generated later this cycle (tail
+        // ejections) land here for the next cycle.
+        let leftover = std::mem::replace(&mut self.runnable, cores);
+        debug_assert!(leftover.is_empty());
+    }
+
+    /// Progress one core's instruction stream as far as it can go this
+    /// cycle — byte-for-byte the reference stepper's per-core loop, plus
+    /// scheduler bookkeeping (wake heap, NIC backlog, unfinished count).
+    fn advance_core(&mut self, core: usize) {
+        let was_finished = self.pc[core] >= self.programs[core].instrs.len();
+        loop {
             let pc = self.pc[core];
             if pc >= self.programs[core].instrs.len() {
-                continue;
+                break;
             }
-            // Mid-compute cores have a nonzero deadline; anything else
-            // (pending Send/Recv at the PC) blocks the skip.
-            let until = self.compute_until[core];
-            if until > self.cycle && matches!(self.programs[core].instrs[pc], Instr::Compute { .. })
-            {
-                min_until = min_until.min(until);
-            } else {
-                return;
-            }
-        }
-        if min_until == u64::MAX || min_until <= self.cycle {
-            return;
-        }
-        if !self.network_empty() {
-            return;
-        }
-        self.cycle = min_until;
-    }
-
-    /// Progress each core's instruction stream.
-    fn advance_cores(&mut self) {
-        for core in 0..self.programs.len() {
-            loop {
-                let pc = self.pc[core];
-                if pc >= self.programs[core].instrs.len() {
-                    break;
-                }
-                match self.programs[core].instrs[pc] {
-                    Instr::Compute { cycles } => {
-                        if self.compute_until[core] == 0 {
-                            self.compute_until[core] = self.cycle + cycles;
+            match self.programs[core].instrs[pc] {
+                Instr::Compute { cycles } => {
+                    if self.compute_until[core] == 0 {
+                        let until = self.cycle + cycles;
+                        self.compute_until[core] = until;
+                        if until > self.cycle {
+                            self.wake.push(Reverse((until, core as u32)));
                         }
-                        if self.cycle >= self.compute_until[core] {
-                            self.compute_until[core] = 0;
-                            self.pc[core] += 1;
-                            continue;
-                        }
-                        break;
                     }
-                    Instr::Send { dst, bytes, tag } => {
-                        // Segment into packets and queue on the NIC.
-                        let flit_bytes = self.programs[core].flit_bytes.max(1.0);
-                        let flits = (bytes / flit_bytes).ceil().max(1.0) as usize;
-                        let mut left = flits;
-                        while left > 0 {
-                            let sz = left.min(MAX_PACKET_FLITS) as u32;
-                            let id = self.packets.len() as u32;
-                            self.packets.push(Packet {
-                                dst,
-                                size_flits: sz,
-                                tag,
-                                inject_cycle: self.cycle,
-                            });
-                            self.nic[core].push_back((id, 0));
-                            left -= sz as usize;
-                        }
+                    if self.cycle >= self.compute_until[core] {
+                        self.compute_until[core] = 0;
                         self.pc[core] += 1;
                         continue;
                     }
-                    Instr::Recv { tag, packets } => {
-                        if self.recv_count[core][tag as usize] >= packets {
-                            self.pc[core] += 1;
-                            continue;
-                        }
-                        break;
+                    break;
+                }
+                Instr::Send { dst, bytes, tag } => {
+                    // Segment into packets and queue on the NIC.
+                    let flit_bytes = self.programs[core].flit_bytes.max(1.0);
+                    let flits = (bytes / flit_bytes).ceil().max(1.0) as usize;
+                    let was_empty = self.nic[core].is_empty();
+                    let mut left = flits;
+                    while left > 0 {
+                        let sz = left.min(MAX_PACKET_FLITS) as u32;
+                        let id = self.packets.len() as u32;
+                        self.packets.push(Packet {
+                            dst,
+                            size_flits: sz,
+                            tag,
+                            inject_cycle: self.cycle,
+                        });
+                        self.nic[core].push_back((id, 0));
+                        left -= sz as usize;
                     }
+                    if was_empty {
+                        self.nic_pending += 1;
+                        self.mark_nic(core);
+                    }
+                    self.pc[core] += 1;
+                    continue;
+                }
+                Instr::Recv { tag, packets } => {
+                    if self.recv_count[core][tag as usize] >= packets {
+                        self.pc[core] += 1;
+                        continue;
+                    }
+                    break;
                 }
             }
         }
+        if !was_finished && self.pc[core] >= self.programs[core].instrs.len() {
+            self.unfinished -= 1;
+        }
     }
 
-    /// Inject one flit per core per cycle from the NIC into the local
-    /// input port (VC 0..VCS round-robin by packet).
-    fn inject(&mut self) {
-        for core in 0..self.nic.len() {
-            let Some(&(pkt_id, _)) = self.nic[core].front() else {
-                continue;
-            };
-            let pkt = self.packets[pkt_id as usize];
-            // Find / keep a local-input VC for this packet.
-            let router = &mut self.routers[core];
-            // Head flit needs a VC whose buffer is empty and unowned;
-            // body flits continue on the packet's VC.
-            let progress = self.nic_flits_left[core];
-            let vc_slot = if progress == 0 {
-                (0..VCS).find(|&v| {
-                    let s = router.vc(LOCAL, v);
-                    s.buf.is_empty() && s.out_port.is_none()
-                })
-            } else {
-                Some(self.inject_vc[core])
-            };
-            let Some(vc) = vc_slot else { continue };
-            let s = router.vc_mut(LOCAL, vc);
-            if s.buf.len() >= VC_DEPTH {
+    /// Inject one flit per backlogged core per cycle from the NIC into the
+    /// local input port (VC 0..VCS round-robin by packet).
+    fn inject_active(&mut self) {
+        let mut i = 0;
+        while i < self.nic_active.len() {
+            let core = self.nic_active[i] as usize;
+            if self.nic[core].is_empty() {
+                self.nic_in_list[core] = false;
+                self.nic_active.swap_remove(i);
                 continue;
             }
-            let is_head = progress == 0;
-            let is_tail = progress + 1 == pkt.size_flits;
-            s.buf.push_back(Flit {
-                packet: pkt_id,
-                is_head,
-                is_tail,
-            });
-            router.occupancy += 1;
-            if is_head {
-                self.inject_vc[core] = vc;
+            self.try_inject(core);
+            if self.nic[core].is_empty() {
+                self.nic_in_list[core] = false;
+                self.nic_active.swap_remove(i);
+                continue;
             }
-            self.stats.injected_flits[core] += 1;
-            if is_tail {
-                self.nic[core].pop_front();
-                self.nic_flits_left[core] = 0;
-            } else {
-                self.nic_flits_left[core] = progress + 1;
+            i += 1;
+        }
+    }
+
+    /// Attempt to inject one flit at `core` — the reference stepper's
+    /// per-core inject body plus scheduler bookkeeping.
+    fn try_inject(&mut self, core: usize) {
+        let Some(&(pkt_id, _)) = self.nic[core].front() else {
+            return;
+        };
+        let pkt = self.packets[pkt_id as usize];
+        let progress = self.nic_flits_left[core];
+        let router = &mut self.routers[core];
+        // Head flit needs a VC whose buffer is empty and unowned;
+        // body flits continue on the packet's VC.
+        let vc_slot = if progress == 0 {
+            (0..VCS).find(|&v| {
+                let s = router.vc(LOCAL, v);
+                s.buf.is_empty() && s.out_port.is_none()
+            })
+        } else {
+            Some(self.inject_vc[core])
+        };
+        let Some(vc) = vc_slot else { return };
+        let s = router.vc_mut(LOCAL, vc);
+        if s.buf.len() >= VC_DEPTH {
+            return;
+        }
+        let is_head = progress == 0;
+        let is_tail = progress + 1 == pkt.size_flits;
+        s.buf.push_back(Flit {
+            packet: pkt_id,
+            is_head,
+            is_tail,
+        });
+        router.occupancy += 1;
+        if is_head {
+            self.inject_vc[core] = vc;
+        }
+        self.stats.injected_flits[core] += 1;
+        self.flits_in_network += 1;
+        self.mark_router(core);
+        if is_tail {
+            self.nic[core].pop_front();
+            self.nic_flits_left[core] = 0;
+            if self.nic[core].is_empty() {
+                self.nic_pending -= 1;
             }
+        } else {
+            self.nic_flits_left[core] = progress + 1;
         }
     }
 
     /// Route computation + VC allocation + switch allocation + traversal,
-    /// collapsed into one cycle per hop (aggressive single-stage router).
-    fn switch_traversal(&mut self) {
-        let n = self.routers.len();
-        // (from_node, in_port, in_vc, out_port, flit) moves to apply.
-        let mut moves: Vec<(usize, usize, usize, usize, Flit)> = Vec::new();
+    /// collapsed into one cycle per hop (aggressive single-stage router) —
+    /// over the active-router list only. Per-node decisions read only
+    /// pre-cycle network state plus node-local allocation, so the list
+    /// iteration order cannot affect the outcome.
+    fn switch_active(&mut self) {
+        if self.active_routers.is_empty() {
+            return;
+        }
+        let mut moves = std::mem::take(&mut self.moves);
+        debug_assert!(moves.is_empty());
 
-        for node in 0..n {
+        let n_active = self.active_routers.len();
+        for ai in 0..n_active {
+            let node = self.active_routers[ai] as usize;
             if self.routers[node].occupancy == 0 {
-                continue; // §Perf: idle router, nothing to arbitrate
+                continue; // drained earlier; compacted below
             }
             let at = (node / self.width, node % self.width);
             // Gather head-of-buffer requests per output port (fixed-size
@@ -440,7 +627,7 @@ impl Simulator {
                     let s = self.routers[node].vc(port, vc);
                     let Some(f) = s.buf.front() else { continue };
                     let out = if f.is_head {
-                        self.route(at, self.packets[f.packet as usize].dst)
+                        route_port(at, self.packets[f.packet as usize].dst)
                     } else {
                         match s.out_port {
                             Some(p) => p as usize,
@@ -464,7 +651,7 @@ impl Simulator {
                 // Waiting accounting: every requester of a *mesh* link that
                 // does not move this cycle accrues one wait cycle.
                 if out != LOCAL {
-                    let li = self.link_idx(node, out);
+                    let li = node * NUM_DIRS + out;
                     let waiting = len - usize::from(pick.is_some());
                     self.stats.link_wait[li] += waiting as u64;
                 }
@@ -477,48 +664,70 @@ impl Simulator {
         }
 
         // Apply moves: pop from input VC, push downstream (or eject).
-        for (node, port, vc, out, flit) in moves {
-            // Read the downstream VC allocation BEFORE the pop clears it on
-            // tail flits (regression: tails were misrouted to VC 0).
-            let alloc_vc = self.routers[node].vc(port, vc).out_vc;
-            // Pop.
-            {
-                self.routers[node].occupancy -= 1;
-                let s = self.routers[node].vc_mut(port, vc);
-                s.buf.pop_front();
-                if flit.is_head {
-                    s.out_port = Some(out as u8);
-                }
-                if flit.is_tail {
-                    s.out_port = None;
-                    s.out_vc = None;
-                }
-            }
-            // Return a credit upstream for the freed slot.
-            self.return_credit(node, port, vc);
-
-            if out == LOCAL {
-                // Ejected at destination.
-                let pkt = self.packets[flit.packet as usize];
-                if flit.is_tail {
-                    let core = node;
-                    self.recv_count[core][pkt.tag as usize] += 1;
-                    self.stats.packets_done += 1;
-                    self.stats.packet_latency_sum += self.cycle - pkt.inject_cycle;
-                }
-                continue;
-            }
-
-            let li = self.link_idx(node, out);
-            self.stats.link_flits[li] += 1;
-            let (down, down_port) = self.neighbor(node, out);
-            // Downstream VC: allocated at the head, held through the tail.
-            let dvc = alloc_vc.expect("traversing flit must hold a VC allocation") as usize;
-            self.routers[down].occupancy += 1;
-            let s = self.routers[down].vc_mut(down_port, dvc);
-            s.buf.push_back(flit);
-            self.routers[node].credits[out][dvc] -= 1;
+        for &(node, port, vc, out, flit) in &moves {
+            self.apply_move(node, port, vc, out, flit);
         }
+        moves.clear();
+        self.moves = moves;
+
+        // Compact: drop routers drained this cycle.
+        let mut i = 0;
+        while i < self.active_routers.len() {
+            let node = self.active_routers[i] as usize;
+            if self.routers[node].occupancy == 0 {
+                self.router_in_list[node] = false;
+                self.active_routers.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn apply_move(&mut self, node: usize, port: usize, vc: usize, out: usize, flit: Flit) {
+        // Read the downstream VC allocation BEFORE the pop clears it on
+        // tail flits (regression: tails were misrouted to VC 0).
+        let alloc_vc = self.routers[node].vc(port, vc).out_vc;
+        // Pop.
+        {
+            self.routers[node].occupancy -= 1;
+            let s = self.routers[node].vc_mut(port, vc);
+            s.buf.pop_front();
+            if flit.is_head {
+                s.out_port = Some(out as u8);
+            }
+            if flit.is_tail {
+                s.out_port = None;
+                s.out_vc = None;
+            }
+        }
+        // Return a credit upstream for the freed slot.
+        self.return_credit(node, port, vc);
+
+        if out == LOCAL {
+            // Ejected at destination.
+            let pkt = self.packets[flit.packet as usize];
+            self.flits_in_network -= 1;
+            if flit.is_tail {
+                let core = node;
+                self.recv_count[core][pkt.tag as usize] += 1;
+                self.stats.packets_done += 1;
+                self.stats.packet_latency_sum += self.cycle - pkt.inject_cycle;
+                // A blocked RECV at this core may now be satisfied.
+                self.mark_runnable(core);
+            }
+            return;
+        }
+
+        let li = node * NUM_DIRS + out;
+        self.stats.link_flits[li] += 1;
+        let (down, down_port) = neighbor_of(self.width, node, out);
+        // Downstream VC: allocated at the head, held through the tail.
+        let dvc = alloc_vc.expect("traversing flit must hold a VC allocation") as usize;
+        self.routers[down].occupancy += 1;
+        self.mark_router(down);
+        let s = self.routers[down].vc_mut(down_port, dvc);
+        s.buf.push_back(flit);
+        self.routers[node].credits[out][dvc] -= 1;
     }
 
     /// Check credits / downstream VC availability; for head flits, also
@@ -528,7 +737,7 @@ impl Simulator {
             return true; // ejection always accepted
         }
         let flit = *self.routers[node].vc(port, vc).buf.front().unwrap();
-        let (down, down_port) = self.neighbor(node, out);
+        let (down, down_port) = neighbor_of(self.width, node, out);
         if flit.is_head && self.routers[node].vc(port, vc).out_vc.is_none() {
             // Allocate a downstream VC: must be empty and unowned.
             let free = (0..VCS).find(|&v| {
@@ -560,10 +769,50 @@ impl Simulator {
         // The upstream router is the neighbor in the direction the flit
         // came *from*: input port X means the link arrives from direction
         // X's neighbor, whose output dir is the opposite port.
-        let (up, up_out) = self.neighbor(node, port);
+        let (up, up_out) = neighbor_of(self.width, node, port);
         debug_assert!(up < self.routers.len());
         self.routers[up].credits[up_out][vc] =
             (self.routers[up].credits[up_out][vc] + 1).min(VC_DEPTH as u8);
+    }
+
+    /// Build the bounded overrun diagnostic (see [`SimError`]).
+    fn overrun_error(&self, max_cycles: u64, deadlock: bool) -> SimError {
+        let mut sample_stuck = Vec::new();
+        'routers: for (node, r) in self.routers.iter().enumerate() {
+            if r.occupancy == 0 {
+                continue;
+            }
+            for port in 0..PORTS {
+                for vc in 0..VCS {
+                    let s = r.vc(port, vc);
+                    if !s.buf.is_empty() {
+                        sample_stuck.push((node, port, vc, s.buf.len()));
+                        if sample_stuck.len() >= SimError::MAX_DIAG {
+                            break 'routers;
+                        }
+                    }
+                }
+            }
+        }
+        let mut sample_blocked = Vec::new();
+        for (core, p) in self.programs.iter().enumerate() {
+            if self.pc[core] < p.instrs.len() {
+                sample_blocked.push((core, self.pc[core]));
+                if sample_blocked.len() >= SimError::MAX_DIAG {
+                    break;
+                }
+            }
+        }
+        SimError {
+            max_cycles,
+            cycle: self.cycle,
+            deadlock,
+            unfinished_cores: self.unfinished,
+            nic_backlog: self.nic_pending,
+            flits_in_network: self.flits_in_network,
+            sample_stuck,
+            sample_blocked,
+        }
     }
 }
 
@@ -577,6 +826,18 @@ pub fn simulate_chunk(
 ) -> SimStats {
     let programs = build_programs(chunk, noc_bw_bits, cycles_for);
     Simulator::new(chunk.region_h, chunk.region_w, programs).run(max_cycles)
+}
+
+/// [`simulate_chunk`] with the budget overrun surfaced as a [`SimError`]
+/// instead of a panic.
+pub fn simulate_chunk_result(
+    chunk: &crate::compiler::CompiledChunk,
+    noc_bw_bits: usize,
+    cycles_for: &dyn Fn(usize) -> u64,
+    max_cycles: u64,
+) -> Result<SimStats, SimError> {
+    let programs = build_programs(chunk, noc_bw_bits, cycles_for);
+    Simulator::new(chunk.region_h, chunk.region_w, programs).try_run(max_cycles)
 }
 
 /// Mean waiting time keyed by [`LinkId`] (GNN dataset convenience).

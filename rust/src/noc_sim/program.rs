@@ -42,6 +42,50 @@ pub fn packets_for(bytes: f64, flit_bytes: f64) -> u32 {
     flits.div_ceil(MAX_PACKET_FLITS as u64) as u32
 }
 
+/// Static satisfiability check for hand-built programs (test generators,
+/// bench scenarios): every SEND destination must be on the mesh, and every
+/// RECV must be coverable by the packets addressed to its core and tag
+/// (`recv_count` is cumulative, so the requirement per (core, tag) is the
+/// *max* RECV threshold, which the total sent packets must reach). This
+/// catches the common never-satisfiable-RECV deadlock; it cannot rule out
+/// ordering cycles (a SEND sequenced after a RECV that transitively waits
+/// on it).
+pub fn validate_programs(programs: &[CoreProgram], h: usize, w: usize) -> Result<(), String> {
+    if programs.len() != h * w {
+        return Err(format!("{} programs for a {h}x{w} mesh", programs.len()));
+    }
+    let mut sent: HashMap<(usize, u32), u64> = HashMap::new();
+    let mut need: HashMap<(usize, u32), u64> = HashMap::new();
+    for (core, p) in programs.iter().enumerate() {
+        for i in &p.instrs {
+            match *i {
+                Instr::Send { dst, bytes, tag } => {
+                    if dst.0 >= h || dst.1 >= w {
+                        return Err(format!("core {core}: send to off-mesh dst {dst:?}"));
+                    }
+                    let dst_core = dst.0 * w + dst.1;
+                    *sent.entry((dst_core, tag)).or_default() +=
+                        packets_for(bytes, p.flit_bytes) as u64;
+                }
+                Instr::Recv { tag, packets } => {
+                    let e = need.entry((core, tag)).or_default();
+                    *e = (*e).max(packets as u64);
+                }
+                Instr::Compute { .. } => {}
+            }
+        }
+    }
+    for (&(core, tag), &n) in &need {
+        let s = sent.get(&(core, tag)).copied().unwrap_or(0);
+        if s < n {
+            return Err(format!(
+                "core {core} tag {tag}: recv expects {n} packet(s) but only {s} addressed to it"
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Build per-core programs. `cycles_for(op)` supplies the per-core compute
 /// latency of each op (tile-level analytic estimate).
 pub fn build_programs(

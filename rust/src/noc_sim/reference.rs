@@ -1,0 +1,393 @@
+//! Frozen per-cycle reference stepper — the semantic oracle for the
+//! event-driven engine in the parent module.
+//!
+//! This is the original simulator loop: every cycle advances *every* core,
+//! attempts injection at *every* NIC and arbitrates *every* router (with
+//! the all-or-nothing `maybe_skip_idle` compute fast-forward). It is O(cores)
+//! per cycle and therefore slow on large sparse meshes, but its semantics
+//! define the ground truth: the event-driven [`super::Simulator`] must
+//! produce bit-identical [`SimStats`] on every program that completes
+//! within budget (see `super::tests::equivalence`). Do not optimize this
+//! module — change the event-driven engine and prove it against this one.
+
+use std::collections::VecDeque;
+
+use super::{
+    neighbor_of, route_port, CoreProgram, Flit, Instr, Packet, Router, SimStats, LOCAL,
+    MAX_PACKET_FLITS, PORTS, VCS, VC_DEPTH,
+};
+use crate::compiler::routing::NUM_DIRS;
+
+/// The original per-cycle instruction-driven mesh simulator (oracle).
+pub struct Simulator {
+    pub height: usize,
+    pub width: usize,
+    routers: Vec<Router>,
+    packets: Vec<Packet>,
+    programs: Vec<CoreProgram>,
+    pc: Vec<usize>,
+    compute_until: Vec<u64>,
+    recv_count: Vec<Vec<u32>>,
+    nic: Vec<VecDeque<(u32, u64)>>,
+    nic_flits_left: Vec<u32>,
+    inject_vc: Vec<usize>,
+    stats: SimStats,
+    cycle: u64,
+}
+
+impl Simulator {
+    /// Build an oracle simulator for an `height × width` mesh running
+    /// `programs` (one per core, row-major).
+    pub fn new(height: usize, width: usize, programs: Vec<CoreProgram>) -> Simulator {
+        assert_eq!(programs.len(), height * width);
+        let n = height * width;
+        let max_tag = programs
+            .iter()
+            .flat_map(|p| p.instrs.iter())
+            .map(|i| match i {
+                Instr::Recv { tag, .. } => *tag + 1,
+                Instr::Send { tag, .. } => *tag + 1,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(1) as usize;
+        Simulator {
+            height,
+            width,
+            routers: (0..n).map(|_| Router::new()).collect(),
+            packets: Vec::new(),
+            programs,
+            pc: vec![0; n],
+            compute_until: vec![0; n],
+            recv_count: vec![vec![0; max_tag]; n],
+            nic: (0..n).map(|_| VecDeque::new()).collect(),
+            nic_flits_left: vec![0; n],
+            inject_vc: vec![0; n],
+            stats: SimStats {
+                link_flits: vec![0; n * NUM_DIRS],
+                link_wait: vec![0; n * NUM_DIRS],
+                injected_flits: vec![0; n],
+                ..Default::default()
+            },
+            cycle: 0,
+        }
+    }
+
+    fn link_idx(&self, node: usize, dir: usize) -> usize {
+        node * NUM_DIRS + dir
+    }
+
+    /// Run to completion (all programs finished, network drained).
+    /// `max_cycles` guards against deadlock bugs; panics if exceeded.
+    pub fn run(mut self, max_cycles: u64) -> SimStats {
+        while !self.done() {
+            self.step();
+            if self.cycle > max_cycles {
+                panic!(
+                    "noc_sim::reference: exceeded {max_cycles} cycles at cycle {} — deadlock \
+                     or undersized budget ({} core(s) unfinished)",
+                    self.cycle,
+                    self.pc
+                        .iter()
+                        .zip(&self.programs)
+                        .filter(|(pc, p)| **pc < p.instrs.len())
+                        .count(),
+                );
+            }
+        }
+        self.stats.cycles = self.cycle;
+        self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.pc
+            .iter()
+            .zip(&self.programs)
+            .all(|(pc, p)| *pc >= p.instrs.len())
+            && self.network_empty()
+    }
+
+    fn network_empty(&self) -> bool {
+        self.nic.iter().all(|q| q.is_empty()) && self.routers.iter().all(|r| r.occupancy == 0)
+    }
+
+    fn step(&mut self) {
+        self.advance_cores();
+        self.inject();
+        self.switch_traversal();
+        self.cycle += 1;
+        self.maybe_skip_idle();
+    }
+
+    /// Fast-forward across compute-only stretches: when the network is
+    /// drained, no NIC has pending packets, and every unfinished core is
+    /// mid-COMPUTE, nothing can happen until the earliest compute ends —
+    /// jump straight there. Waiting statistics are unaffected (no flits in
+    /// flight by construction). All-or-nothing by design; the event-driven
+    /// engine generalizes this per entity.
+    fn maybe_skip_idle(&mut self) {
+        let mut min_until = u64::MAX;
+        for core in 0..self.programs.len() {
+            let pc = self.pc[core];
+            if pc >= self.programs[core].instrs.len() {
+                continue;
+            }
+            // Mid-compute cores have a nonzero deadline; anything else
+            // (pending Send/Recv at the PC) blocks the skip.
+            let until = self.compute_until[core];
+            if until > self.cycle && matches!(self.programs[core].instrs[pc], Instr::Compute { .. })
+            {
+                min_until = min_until.min(until);
+            } else {
+                return;
+            }
+        }
+        if min_until == u64::MAX || min_until <= self.cycle {
+            return;
+        }
+        if !self.network_empty() {
+            return;
+        }
+        self.cycle = min_until;
+    }
+
+    /// Progress each core's instruction stream.
+    fn advance_cores(&mut self) {
+        for core in 0..self.programs.len() {
+            loop {
+                let pc = self.pc[core];
+                if pc >= self.programs[core].instrs.len() {
+                    break;
+                }
+                match self.programs[core].instrs[pc] {
+                    Instr::Compute { cycles } => {
+                        if self.compute_until[core] == 0 {
+                            self.compute_until[core] = self.cycle + cycles;
+                        }
+                        if self.cycle >= self.compute_until[core] {
+                            self.compute_until[core] = 0;
+                            self.pc[core] += 1;
+                            continue;
+                        }
+                        break;
+                    }
+                    Instr::Send { dst, bytes, tag } => {
+                        // Segment into packets and queue on the NIC.
+                        let flit_bytes = self.programs[core].flit_bytes.max(1.0);
+                        let flits = (bytes / flit_bytes).ceil().max(1.0) as usize;
+                        let mut left = flits;
+                        while left > 0 {
+                            let sz = left.min(MAX_PACKET_FLITS) as u32;
+                            let id = self.packets.len() as u32;
+                            self.packets.push(Packet {
+                                dst,
+                                size_flits: sz,
+                                tag,
+                                inject_cycle: self.cycle,
+                            });
+                            self.nic[core].push_back((id, 0));
+                            left -= sz as usize;
+                        }
+                        self.pc[core] += 1;
+                        continue;
+                    }
+                    Instr::Recv { tag, packets } => {
+                        if self.recv_count[core][tag as usize] >= packets {
+                            self.pc[core] += 1;
+                            continue;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Inject one flit per core per cycle from the NIC into the local
+    /// input port (VC 0..VCS round-robin by packet).
+    fn inject(&mut self) {
+        for core in 0..self.nic.len() {
+            let Some(&(pkt_id, _)) = self.nic[core].front() else {
+                continue;
+            };
+            let pkt = self.packets[pkt_id as usize];
+            // Find / keep a local-input VC for this packet.
+            let router = &mut self.routers[core];
+            // Head flit needs a VC whose buffer is empty and unowned;
+            // body flits continue on the packet's VC.
+            let progress = self.nic_flits_left[core];
+            let vc_slot = if progress == 0 {
+                (0..VCS).find(|&v| {
+                    let s = router.vc(LOCAL, v);
+                    s.buf.is_empty() && s.out_port.is_none()
+                })
+            } else {
+                Some(self.inject_vc[core])
+            };
+            let Some(vc) = vc_slot else { continue };
+            let s = router.vc_mut(LOCAL, vc);
+            if s.buf.len() >= VC_DEPTH {
+                continue;
+            }
+            let is_head = progress == 0;
+            let is_tail = progress + 1 == pkt.size_flits;
+            s.buf.push_back(Flit {
+                packet: pkt_id,
+                is_head,
+                is_tail,
+            });
+            router.occupancy += 1;
+            if is_head {
+                self.inject_vc[core] = vc;
+            }
+            self.stats.injected_flits[core] += 1;
+            if is_tail {
+                self.nic[core].pop_front();
+                self.nic_flits_left[core] = 0;
+            } else {
+                self.nic_flits_left[core] = progress + 1;
+            }
+        }
+    }
+
+    /// Route computation + VC allocation + switch allocation + traversal,
+    /// collapsed into one cycle per hop (aggressive single-stage router).
+    fn switch_traversal(&mut self) {
+        let n = self.routers.len();
+        // (from_node, in_port, in_vc, out_port, flit) moves to apply.
+        let mut moves: Vec<(usize, usize, usize, usize, Flit)> = Vec::new();
+
+        for node in 0..n {
+            if self.routers[node].occupancy == 0 {
+                continue; // idle router, nothing to arbitrate
+            }
+            let at = (node / self.width, node % self.width);
+            // Gather head-of-buffer requests per output port.
+            let mut requests = [[(0u8, 0u8); PORTS * VCS]; PORTS];
+            let mut req_len = [0usize; PORTS];
+            for port in 0..PORTS {
+                for vc in 0..VCS {
+                    let s = self.routers[node].vc(port, vc);
+                    let Some(f) = s.buf.front() else { continue };
+                    let out = if f.is_head {
+                        route_port(at, self.packets[f.packet as usize].dst)
+                    } else {
+                        match s.out_port {
+                            Some(p) => p as usize,
+                            None => continue, // body before head handled
+                        }
+                    };
+                    requests[out][req_len[out]] = (port as u8, vc as u8);
+                    req_len[out] += 1;
+                }
+            }
+            // One grant per output port, round-robin.
+            for out in 0..PORTS {
+                let len = req_len[out];
+                if len == 0 {
+                    continue;
+                }
+                let start = self.routers[node].rr[out];
+                let pick = (0..len)
+                    .map(|i| requests[out][(start + i) % len])
+                    .find(|&(port, vc)| self.can_traverse(node, port as usize, vc as usize, out));
+                // Waiting accounting: every requester of a *mesh* link that
+                // does not move this cycle accrues one wait cycle.
+                if out != LOCAL {
+                    let li = self.link_idx(node, out);
+                    let waiting = len - usize::from(pick.is_some());
+                    self.stats.link_wait[li] += waiting as u64;
+                }
+                let Some((port, vc)) = pick else { continue };
+                let (port, vc) = (port as usize, vc as usize);
+                self.routers[node].rr[out] = self.routers[node].rr[out].wrapping_add(1);
+                let flit = *self.routers[node].vc(port, vc).buf.front().unwrap();
+                moves.push((node, port, vc, out, flit));
+            }
+        }
+
+        // Apply moves: pop from input VC, push downstream (or eject).
+        for (node, port, vc, out, flit) in moves {
+            // Read the downstream VC allocation BEFORE the pop clears it on
+            // tail flits (regression: tails were misrouted to VC 0).
+            let alloc_vc = self.routers[node].vc(port, vc).out_vc;
+            // Pop.
+            {
+                self.routers[node].occupancy -= 1;
+                let s = self.routers[node].vc_mut(port, vc);
+                s.buf.pop_front();
+                if flit.is_head {
+                    s.out_port = Some(out as u8);
+                }
+                if flit.is_tail {
+                    s.out_port = None;
+                    s.out_vc = None;
+                }
+            }
+            // Return a credit upstream for the freed slot.
+            self.return_credit(node, port, vc);
+
+            if out == LOCAL {
+                // Ejected at destination.
+                let pkt = self.packets[flit.packet as usize];
+                if flit.is_tail {
+                    let core = node;
+                    self.recv_count[core][pkt.tag as usize] += 1;
+                    self.stats.packets_done += 1;
+                    self.stats.packet_latency_sum += self.cycle - pkt.inject_cycle;
+                }
+                continue;
+            }
+
+            let li = self.link_idx(node, out);
+            self.stats.link_flits[li] += 1;
+            let (down, down_port) = neighbor_of(self.width, node, out);
+            // Downstream VC: allocated at the head, held through the tail.
+            let dvc = alloc_vc.expect("traversing flit must hold a VC allocation") as usize;
+            self.routers[down].occupancy += 1;
+            let s = self.routers[down].vc_mut(down_port, dvc);
+            s.buf.push_back(flit);
+            self.routers[node].credits[out][dvc] -= 1;
+        }
+    }
+
+    /// Check credits / downstream VC availability; for head flits, also
+    /// perform VC allocation (recorded in `out_vc`).
+    fn can_traverse(&mut self, node: usize, port: usize, vc: usize, out: usize) -> bool {
+        if out == LOCAL {
+            return true; // ejection always accepted
+        }
+        let flit = *self.routers[node].vc(port, vc).buf.front().unwrap();
+        let (down, down_port) = neighbor_of(self.width, node, out);
+        if flit.is_head && self.routers[node].vc(port, vc).out_vc.is_none() {
+            // Allocate a downstream VC: must be empty and unowned.
+            let free = (0..VCS).find(|&v| {
+                self.routers[node].credits[out][v] as usize == VC_DEPTH
+                    && self.routers[down].vc(down_port, v).buf.is_empty()
+                    && self.routers[down].vc(down_port, v).out_port.is_none()
+            });
+            match free {
+                Some(v) => {
+                    self.routers[node].vc_mut(port, vc).out_vc = Some(v as u8);
+                }
+                None => return false,
+            }
+        }
+        let dvc = match self.routers[node].vc(port, vc).out_vc {
+            Some(v) => v as usize,
+            None => return false, // body flit before head allocated (shouldn't happen)
+        };
+        self.routers[node].credits[out][dvc] > 0
+    }
+
+    /// Credit return for the input buffer slot freed at (node, port, vc).
+    fn return_credit(&mut self, node: usize, port: usize, vc: usize) {
+        if port == LOCAL {
+            return;
+        }
+        let (up, up_out) = neighbor_of(self.width, node, port);
+        debug_assert!(up < self.routers.len());
+        self.routers[up].credits[up_out][vc] =
+            (self.routers[up].credits[up_out][vc] + 1).min(VC_DEPTH as u8);
+    }
+}

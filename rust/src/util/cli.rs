@@ -115,6 +115,18 @@ pub fn env_f64(key: &str, default: f64) -> f64 {
         .unwrap_or(default)
 }
 
+/// Boolean env knob (e.g. `THESEUS_TEST_FAST=1`): set and not
+/// empty/`0`/`false` (case-insensitive) means on; unset means off.
+pub fn env_flag(key: &str) -> bool {
+    match std::env::var(key) {
+        Ok(v) => {
+            let v = v.trim();
+            !(v.is_empty() || v == "0" || v.eq_ignore_ascii_case("false"))
+        }
+        Err(_) => false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,149 @@
+//! Bounded, thread-safe memoization substrate (§Perf): a mutex-guarded
+//! hash map with hit/miss counters and *epoch* eviction — when the map
+//! reaches capacity it is cleared wholesale rather than tracking recency.
+//!
+//! Epoch eviction is the right trade for the caches built on this type
+//! (tile-level evaluations, core geometry): entries are cheap to recompute
+//! (sub-microsecond closed-form models), so LRU bookkeeping on every hit
+//! would cost more than the occasional cold re-fill after a clear. The
+//! compile-chunk cache ([`crate::compiler::cache`]) keeps its own LRU
+//! because compiles are milliseconds-scale.
+//!
+//! Thread-safety contract mirrors the chunk cache: lookups/inserts take the
+//! mutex, **the compute closure runs outside it**, so concurrent misses on
+//! one key may compute twice (last insert wins — harmless for pure
+//! functions) but never serialize the pool on compute time.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Point-in-time counters for one memo.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+impl MemoStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The memo itself. `capacity` 0 disables caching (every call computes).
+pub struct Memo<K, V> {
+    map: Mutex<HashMap<K, V>>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K: Eq + Hash, V: Clone> Memo<K, V> {
+    pub fn new(capacity: usize) -> Memo<K, V> {
+        Memo {
+            map: Mutex::new(HashMap::new()),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the memoized value for `key`, computing with `f` on a miss.
+    /// `f` must be a pure function of `key` for the memo to be transparent.
+    pub fn get_or_insert_with<F: FnOnce() -> V>(&self, key: K, f: F) -> V {
+        if self.capacity == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return f();
+        }
+        if let Some(v) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = f(); // compute outside the lock
+        let mut m = self.map.lock().unwrap();
+        if m.len() >= self.capacity {
+            m.clear(); // epoch eviction (see module docs)
+        }
+        m.insert(key, v.clone());
+        v
+    }
+
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            len: self.map.lock().unwrap().len(),
+            capacity: self.capacity,
+        }
+    }
+
+    /// Drop all entries and zero the counters (test/bench isolation).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn memoizes_and_counts() {
+        let calls = AtomicUsize::new(0);
+        let m: Memo<u64, u64> = Memo::new(16);
+        let f = |k: u64| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            k * 2
+        };
+        assert_eq!(m.get_or_insert_with(3, || f(3)), 6);
+        assert_eq!(m.get_or_insert_with(3, || f(3)), 6);
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+        let s = m.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn epoch_eviction_bounds_len() {
+        let m: Memo<u64, u64> = Memo::new(4);
+        for k in 0..100 {
+            m.get_or_insert_with(k, || k);
+        }
+        assert!(m.stats().len <= 4);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let m: Memo<u64, u64> = Memo::new(0);
+        m.get_or_insert_with(1, || 1);
+        m.get_or_insert_with(1, || 1);
+        let s = m.stats();
+        assert_eq!((s.hits, s.misses, s.len), (0, 2, 0));
+    }
+
+    #[test]
+    fn concurrent_use_is_consistent() {
+        let m: Memo<usize, usize> = Memo::new(64);
+        let vals = crate::util::pool::par_map_idx(256, |i| m.get_or_insert_with(i % 8, || (i % 8) * 10));
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(*v, (i % 8) * 10);
+        }
+    }
+}

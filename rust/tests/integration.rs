@@ -69,9 +69,18 @@ fn analytical_and_ca_fidelities_agree_on_ordering() {
     let spec = {
         let mut s = benchmarks()[0].clone();
         // Keep CA-sim time bounded; debug builds shrink further (the
-        // mandated `cargo test` runs unoptimized).
-        s.seq_len = if cfg!(debug_assertions) { 32 } else { 64 };
-        s.batch_size = if cfg!(debug_assertions) { 8 } else { 16 };
+        // mandated `cargo test` runs unoptimized), and THESEUS_TEST_FAST=1
+        // (e.g. from scripts/bench_check.sh) shrinks to the minimum config
+        // that still separates the two design points.
+        let fast = theseus::util::cli::env_flag("THESEUS_TEST_FAST");
+        s.seq_len = if fast {
+            16
+        } else if cfg!(debug_assertions) {
+            32
+        } else {
+            64
+        };
+        s.batch_size = if cfg!(debug_assertions) || fast { 8 } else { 16 };
         s
     };
     // One fixed strategy: the CA fidelity is too expensive for the full

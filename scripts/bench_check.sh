@@ -18,6 +18,14 @@ UPDATE="${1:-}"
 echo "== bench_check: building release =="
 cargo build --release
 
+# Tier-1 tests with the fast knob: THESEUS_TEST_FAST=1 shrinks the
+# CA-sim-backed configs (analytical_tracks_ca_sim_ordering,
+# analytical_and_ca_fidelities_agree_on_ordering and the noc_sim
+# equivalence suite) — the slowest tier-1 items in debug builds. Export
+# THESEUS_TEST_FAST=0 to force the full configs.
+echo "== bench_check: tier-1 tests (THESEUS_TEST_FAST=${THESEUS_TEST_FAST:-1}) =="
+THESEUS_TEST_FAST="${THESEUS_TEST_FAST:-1}" cargo test -q
+
 echo "== bench_check: running perf_hotpath =="
 cargo bench --bench perf_hotpath
 
