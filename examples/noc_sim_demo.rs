@@ -6,7 +6,7 @@
 
 use theseus::arch::{CoreConfig, Dataflow};
 use theseus::compiler::compile_chunk;
-use theseus::noc_sim::{naive_compute_cycles, simulate_chunk, CoreProgram, Instr, Simulator};
+use theseus::noc_sim::{naive_compute_cycles, simulate_chunk_result, CoreProgram, Instr, Simulator};
 use theseus::util::rng::Rng;
 use theseus::util::table::Table;
 use theseus::workload::models::benchmarks;
@@ -48,14 +48,14 @@ fn uniform_traffic(h: usize, w: usize, pkts_per_core: usize, seed: u64) -> Vec<C
         .collect()
 }
 
-fn main() {
+fn main() -> Result<(), theseus::noc_sim::SimError> {
     // 1. Load-latency curve on an 8x8 mesh (the canonical router check).
     let mut t = Table::new(
         "uniform random traffic, 8x8 mesh, 4-flit packets",
         &["pkts/core", "avg latency (cyc)", "drain cycles", "flits moved"],
     );
     for &load in &[1usize, 4, 8, 16, 32, 64] {
-        let stats = Simulator::new(8, 8, uniform_traffic(8, 8, load, 1)).run(50_000_000);
+        let stats = Simulator::new(8, 8, uniform_traffic(8, 8, load, 1)).try_run(50_000_000)?;
         t.row(&[
             load.to_string(),
             format!("{:.1}", stats.avg_packet_latency()),
@@ -84,12 +84,12 @@ fn main() {
         chunk.flows.len(),
         chunk.total_flow_bytes() / 1e6
     );
-    let stats = simulate_chunk(
+    let stats = simulate_chunk_result(
         &chunk,
         core.noc_bw_bits,
         &|op| naive_compute_cycles(chunk.assignments[op].flops_per_core, core.mac_num),
         500_000_000,
-    );
+    )?;
     println!(
         "cycle-accurate: {} cycles, {} packets, avg packet latency {:.1} cyc",
         stats.cycles,
@@ -106,4 +106,5 @@ fn main() {
         "most congested link: dense index {} with mean wait {:.2} cyc/flit",
         busiest.0, busiest.1
     );
+    Ok(())
 }

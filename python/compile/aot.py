@@ -6,13 +6,28 @@ emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
 the text parser reassigns ids (see /opt/xla-example/README.md and
 DESIGN.md §1).
 
+The export carries a leading batch dimension (``--batch``, default 8): the
+Rust strategy sweep packs several candidate chunks per execute call
+(rust/src/runtime/batch.rs) because the PJRT executable is thread-confined
+and per-call dispatch dominates single-chunk inference. ``--batch 1``
+keeps the legacy per-chunk signature; the slot count is recorded in the
+``gnn_noc.meta.json`` sidecar (``batch``) so the runtime knows which
+signature it loaded. The static shapes cut both ways: a batch-B executable
+runs all B slots even for a single-chunk prediction, so when ``--batch``
+exceeds 1 a per-chunk **sibling** (``*.chunk.hlo.txt`` + meta) is exported
+alongside it — ``GnnModel::load_per_chunk_default`` serves
+per-chunk-dominated callers (figure benches) from the sibling while the
+DSE batcher keeps the batched artifact.
+
 Usage (invoked by `make artifacts`):
     python -m compile.aot --params ../artifacts/gnn_params.npz \
-                          --out    ../artifacts/gnn_noc.hlo.txt
+                          --out    ../artifacts/gnn_noc.hlo.txt \
+                          [--batch 8]
 """
 
 import argparse
 import json
+import os
 
 import numpy as np
 
@@ -30,19 +45,38 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def lower_model(params, use_pallas=True):
-    """Lower forward(params frozen, padded inputs) to HLO text."""
+def lower_model(params, use_pallas=True, batch=1):
+    """Lower forward(params frozen, padded inputs) to HLO text.
+
+    ``batch > 1`` lowers the vmapped ``forward_batched`` over
+    ``[batch, ...]``-shaped inputs; ``batch == 1`` keeps the legacy
+    per-chunk signature (no leading dimension)."""
     frozen = {k: np.asarray(v) for k, v in params.items()}
 
-    def fn(node_feat, edge_feat, src_idx, dst_idx, edge_mask):
-        return (
-            model.forward(
-                frozen, node_feat, edge_feat, src_idx, dst_idx, edge_mask,
-                use_pallas=use_pallas,
-            ),
-        )
+    if batch > 1:
 
-    lowered = jax.jit(fn).lower(*model.input_shapes())
+        def fn(node_feat, edge_feat, src_idx, dst_idx, edge_mask):
+            return (
+                model.forward_batched(
+                    frozen, node_feat, edge_feat, src_idx, dst_idx, edge_mask,
+                    use_pallas=use_pallas,
+                ),
+            )
+
+        shapes = model.input_shapes_batched(batch)
+    else:
+
+        def fn(node_feat, edge_feat, src_idx, dst_idx, edge_mask):
+            return (
+                model.forward(
+                    frozen, node_feat, edge_feat, src_idx, dst_idx, edge_mask,
+                    use_pallas=use_pallas,
+                ),
+            )
+
+        shapes = model.input_shapes()
+
+    lowered = jax.jit(fn).lower(*shapes)
     return to_hlo_text(lowered)
 
 
@@ -53,27 +87,56 @@ def main():
     ap.add_argument("--no-pallas", action="store_true",
                     help="lower the pure-jnp reference path instead of the "
                          "Pallas kernels (debug only)")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="leading batch dimension of the export: padded "
+                         "chunk slots per execute call (1 = legacy "
+                         "per-chunk signature)")
     args = ap.parse_args()
+    if args.batch < 1:
+        ap.error("--batch must be >= 1")
+    if not args.out.endswith(".hlo.txt"):
+        # The meta-sidecar and sibling paths are derived by replacing the
+        # '.hlo.txt' suffix; any other suffix would make every derived
+        # path collapse onto --out and silently overwrite the export.
+        ap.error("--out must end in .hlo.txt")
 
     params = dict(np.load(args.params))
-    text = lower_model(params, use_pallas=not args.no_pallas)
-    with open(args.out, "w") as f:
-        f.write(text)
 
-    # Sidecar metadata so the Rust runtime can verify schema compatibility.
-    meta = {
-        "n_max": features.N_MAX,
-        "e_max": features.E_MAX,
-        "f_n": features.F_N,
-        "f_e": features.F_E,
-        "hidden": model.HIDDEN,
-        "rounds": model.T_ROUNDS,
-        "inputs": ["node_feat", "edge_feat", "src_idx", "dst_idx", "edge_mask"],
-        "pallas": not args.no_pallas,
-    }
-    with open(args.out.replace(".hlo.txt", ".meta.json"), "w") as f:
-        json.dump(meta, f, indent=2)
-    print(f"wrote {len(text)} chars of HLO to {args.out}")
+    def export(out_path, batch):
+        text = lower_model(params, use_pallas=not args.no_pallas, batch=batch)
+        with open(out_path, "w") as f:
+            f.write(text)
+        # Sidecar metadata so the Rust runtime can verify schema
+        # compatibility (and learn the executable's batch capacity).
+        meta = {
+            "n_max": features.N_MAX,
+            "e_max": features.E_MAX,
+            "f_n": features.F_N,
+            "f_e": features.F_E,
+            "batch": batch,
+            "hidden": model.HIDDEN,
+            "rounds": model.T_ROUNDS,
+            "inputs": ["node_feat", "edge_feat", "src_idx", "dst_idx", "edge_mask"],
+            "pallas": not args.no_pallas,
+        }
+        with open(out_path.replace(".hlo.txt", ".meta.json"), "w") as f:
+            json.dump(meta, f, indent=2)
+        print(f"wrote {len(text)} chars of HLO to {out_path} (batch={batch})")
+
+    export(args.out, args.batch)
+    sibling = args.out.replace(".hlo.txt", ".chunk.hlo.txt")
+    if args.batch > 1:
+        # Per-chunk sibling: single-slot callers (figure benches) would
+        # otherwise pay the full batch-slot program per prediction.
+        export(sibling, 1)
+    else:
+        # A --batch 1 re-export IS the per-chunk artifact; drop any stale
+        # sibling from an earlier batched export or the Rust
+        # load_per_chunk_default would silently prefer outdated weights.
+        for stale in (sibling, sibling.replace(".hlo.txt", ".meta.json")):
+            if os.path.exists(stale):
+                os.remove(stale)
+                print(f"removed stale sibling {stale}")
 
 
 if __name__ == "__main__":

@@ -62,6 +62,10 @@ def build_features(h, w, noc_bw_bits, node_bytes, link_bytes, t0_cycles):
             node_feat[i] = (
                 inject,
                 1.0,  # active
+                # max(extent - 1, 1): one normalizer expression on both
+                # sides of the mirror (rust runtime::features::coord_norm)
+                # — a 1xN strip degenerates the divisor, pinned by the
+                # golden strip test on each side.
                 r / max(h - 1, 1),
                 c / max(w - 1, 1),
                 1.0,  # bias

@@ -128,6 +128,20 @@ def loss_fn(params, batch, use_pallas=False):
     return jnp.mean(losses)
 
 
+def forward_batched(params, node_feat, edge_feat, src_idx, dst_idx, edge_mask,
+                    use_pallas=True):
+    """vmap of :func:`forward` over a leading batch dimension — one
+    independent padded slot per batch index. The Rust strategy sweep packs
+    several candidate chunks per execute call through this entry point
+    (rust/src/runtime/batch.rs); slots are fully independent, so batched
+    and per-slot predictions agree."""
+
+    def one(nf, ef, si, di, em):
+        return forward(params, nf, ef, si, di, em, use_pallas=use_pallas)
+
+    return jax.vmap(one)(node_feat, edge_feat, src_idx, dst_idx, edge_mask)
+
+
 def input_shapes():
     """AOT export signature (order matters — the Rust runtime feeds
     arguments positionally)."""
@@ -137,4 +151,13 @@ def input_shapes():
         jax.ShapeDtypeStruct((E_MAX,), jnp.int32),  # src_idx
         jax.ShapeDtypeStruct((E_MAX,), jnp.int32),  # dst_idx
         jax.ShapeDtypeStruct((E_MAX,), jnp.float32),  # edge_mask
+    ]
+
+
+def input_shapes_batched(batch):
+    """AOT export signature with a leading batch dimension of `batch`
+    (mirrored by `GnnMeta::batch` in rust/src/runtime/mod.rs)."""
+    return [
+        jax.ShapeDtypeStruct((batch,) + tuple(s.shape), s.dtype)
+        for s in input_shapes()
     ]

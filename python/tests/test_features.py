@@ -30,6 +30,32 @@ def test_mesh_edge_count_formula():
         assert len(features.mesh_edges(h, w)) == 2 * (2 * h * w - h - w)
 
 
+def test_golden_strip_mesh_1xn():
+    # 1xN strip — the degenerate height where the coordinate normalizer
+    # max(h - 1, 1) is most fragile. Rust pins the same numbers in
+    # runtime::features::tests::golden_matches_python_schema; a drift on
+    # either side of the mirror fails loudly.
+    assert features.mesh_edges(1, 5) == [
+        (0, 1, 0),
+        (1, 2, 4),
+        (1, 0, 5),
+        (2, 3, 8),
+        (2, 1, 9),
+        (3, 4, 12),
+        (3, 2, 13),
+        (4, 3, 17),
+    ]
+    f = features.build_features(
+        1, 5, 512, np.zeros(5), np.zeros(5 * 4), t0_cycles=1e3
+    )
+    # Row coordinate pins to exactly 0 (0 / max(1-1, 1)); column sweeps
+    # 0..1 in quarters (c / max(5-1, 1)).
+    assert np.all(f["node_feat"][:5, 2] == 0.0)
+    np.testing.assert_array_equal(
+        f["node_feat"][:5, 3], np.asarray([0.0, 0.25, 0.5, 0.75, 1.0], np.float32)
+    )
+
+
 def test_padding_invariants():
     n = 3 * 4
     f = features.build_features(

@@ -105,3 +105,53 @@ def test_aot_lowering_produces_hlo_text():
     text = aot.lower_model(params, use_pallas=False)
     assert "HloModule" in text
     assert len(text) > 1000
+
+
+def test_forward_batched_matches_per_slot():
+    # The batched export contract: each slot of forward_batched must equal
+    # forward on that slot alone (the Rust batcher relies on slot
+    # independence to keep batched == per-chunk predictions).
+    params = model.init_params(2)
+    slots = [synthetic_inputs(h=3, w=4, seed=s) for s in range(3)]
+    batch = {
+        k: jnp.asarray(np.stack([f[k] for f in slots]))
+        for k in ("node_feat", "edge_feat", "src_idx", "dst_idx", "edge_mask")
+    }
+    y_batched = np.asarray(
+        model.forward_batched(
+            params,
+            batch["node_feat"],
+            batch["edge_feat"],
+            batch["src_idx"],
+            batch["dst_idx"],
+            batch["edge_mask"],
+            use_pallas=False,
+        )
+    )
+    assert y_batched.shape == (3, features.E_MAX)
+    for i, f in enumerate(slots):
+        y_one = np.asarray(
+            model.forward(
+                params,
+                jnp.asarray(f["node_feat"]),
+                jnp.asarray(f["edge_feat"]),
+                jnp.asarray(f["src_idx"]),
+                jnp.asarray(f["dst_idx"]),
+                jnp.asarray(f["edge_mask"]),
+                use_pallas=False,
+            )
+        )
+        np.testing.assert_allclose(y_batched[i], y_one, rtol=1e-5, atol=1e-6)
+
+
+def test_batched_aot_lowering_has_leading_batch_dim():
+    from compile import aot
+
+    params = model.init_params(0)
+    text = aot.lower_model(params, use_pallas=False, batch=4)
+    assert "HloModule" in text
+    # The entry signature must carry the [4, N_MAX, F_N] node tensor.
+    assert f"f32[4,{features.N_MAX},{features.F_N}]" in text
+    shapes = model.input_shapes_batched(4)
+    assert shapes[0].shape == (4, features.N_MAX, features.F_N)
+    assert shapes[2].shape == (4, features.E_MAX)

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use crate::baselines::H100_DIE_MM2;
 use crate::design_space::Validated;
-use crate::eval::{self, Analytical, NocEstimator, SystemConfig};
+use crate::eval::{self, Analytical, SystemConfig};
 use crate::explorer::{DesignEval, Objective};
 use crate::workload::LlmSpec;
 
@@ -29,6 +29,9 @@ pub struct TrainingObjective {
 enum NocBackend {
     Analytical,
     Gnn(Arc<crate::runtime::GnnModel>),
+    /// Deterministic in-process pseudo-GNN ([`crate::runtime::TestBackend`])
+    /// — exercises the batched high-fidelity sweep in builds without PJRT.
+    PseudoGnn(crate::runtime::TestBackend),
     CycleAccurate,
 }
 
@@ -47,36 +50,20 @@ impl TrainingObjective {
         }
     }
 
+    /// GNN-fidelity objective backed by the closed-form pseudo-GNN — the
+    /// batched inference path end to end, no artifacts required.
+    pub fn pseudo_gnn(spec: LlmSpec) -> Self {
+        TrainingObjective {
+            spec,
+            noc: NocBackend::PseudoGnn(crate::runtime::TestBackend::new()),
+        }
+    }
+
     pub fn cycle_accurate(spec: LlmSpec) -> Self {
         TrainingObjective {
             spec,
             noc: NocBackend::CycleAccurate,
         }
-    }
-
-    fn estimator(&self) -> Box<dyn NocEstimator + '_> {
-        match &self.noc {
-            NocBackend::Analytical => Box::new(Analytical),
-            NocBackend::Gnn(m) => Box::new(GnnRef(m.clone())),
-            NocBackend::CycleAccurate => Box::new(eval::CycleAccurate::default()),
-        }
-    }
-}
-
-/// Arc wrapper implementing the estimator by delegation.
-struct GnnRef(Arc<crate::runtime::GnnModel>);
-
-impl NocEstimator for GnnRef {
-    fn link_waits(
-        &self,
-        chunk: &crate::compiler::CompiledChunk,
-        core: &crate::arch::CoreConfig,
-    ) -> Option<Vec<f64>> {
-        self.0.link_waits(chunk, core)
-    }
-
-    fn name(&self) -> &'static str {
-        "gnn"
     }
 }
 
@@ -84,15 +71,20 @@ impl DesignEval for TrainingObjective {
     fn eval(&self, v: &Validated) -> Option<Objective> {
         let sys = SystemConfig::area_matched(v.clone(), self.spec.gpu_num);
         // The Sync fidelities fan the strategy sweep out over the thread
-        // pool; the GNN's PJRT handle is thread-confined, so it stays on
-        // the serial path.
+        // pool; the GNN's PJRT handle is thread-confined, so that fidelity
+        // amortizes per-call dispatch by *batching* link-wait inference
+        // across the sweep instead (runtime::batch::GnnBatcher).
+        let batch = crate::runtime::batch::gnn_batch_size();
         let r = match &self.noc {
             NocBackend::Analytical => eval::eval_training_par(&self.spec, &sys, &Analytical)?,
             NocBackend::CycleAccurate => {
                 eval::eval_training_par(&self.spec, &sys, &eval::CycleAccurate::default())?
             }
-            NocBackend::Gnn(_) => {
-                eval::eval_training(&self.spec, &sys, self.estimator().as_ref())?
+            NocBackend::Gnn(m) => {
+                eval::eval_training_gnn_batched(&self.spec, &sys, m.as_ref(), batch)?
+            }
+            NocBackend::PseudoGnn(b) => {
+                eval::eval_training_gnn_batched(&self.spec, &sys, b, batch)?
             }
         };
         Some(Objective {
@@ -105,6 +97,7 @@ impl DesignEval for TrainingObjective {
         match self.noc {
             NocBackend::Analytical => "analytical",
             NocBackend::Gnn(_) => "gnn",
+            NocBackend::PseudoGnn(_) => "gnn-test",
             NocBackend::CycleAccurate => "cycle-accurate",
         }
     }
@@ -189,5 +182,50 @@ mod tests {
         let small = ref_power_for(&benchmarks()[0]);
         let big = ref_power_for(&benchmarks()[9]);
         assert!(big > small * 10.0);
+    }
+
+    #[test]
+    fn pseudo_gnn_objective_evaluates_reference() {
+        // The batched GNN-fidelity sweep end to end on the default build
+        // (TestBackend — no PJRT artifacts needed).
+        let spec = benchmarks()[0].clone();
+        let obj = TrainingObjective::pseudo_gnn(spec);
+        let v = validate(&reference_point()).unwrap();
+        let o = obj.eval(&v).expect("reference point evaluable");
+        assert!(o.throughput > 0.0);
+        assert!(o.power_w > 0.0);
+        assert_eq!(obj.name(), "gnn-test");
+    }
+
+    #[test]
+    fn mfmobo_high_fidelity_rides_the_batched_gnn_sweep() {
+        // Miniature MFMOBO with the pseudo-GNN as f0: the high-fidelity
+        // stage must produce trace points tagged with the batched GNN
+        // fidelity (the Algo. 1 handoff runs through GnnBatcher).
+        use crate::explorer::{mfmobo, BoConfig, MfConfig};
+        let spec = benchmarks()[0].clone();
+        let hi = TrainingObjective::pseudo_gnn(spec.clone());
+        let lo = TrainingObjective::analytical(spec.clone());
+        let mf = MfConfig {
+            base: BoConfig {
+                iters: 2,
+                init: 1,
+                pool: 8,
+                mc_samples: 8,
+                ref_power: ref_power_for(&spec),
+                seed: 9,
+                sample_tries: 2000,
+            },
+            n1: 1,
+            d0: 1,
+            d1: 1,
+            k: 1,
+        };
+        let t = mfmobo(&hi, &lo, &mf);
+        assert!(
+            t.points.iter().any(|p| p.fidelity == "gnn-test"),
+            "no high-fidelity (batched GNN) evaluations in the trace"
+        );
+        assert!(t.points.iter().any(|p| p.fidelity == "analytical"));
     }
 }

@@ -9,7 +9,8 @@ pub mod power;
 pub mod tile;
 
 pub use chunk::{
-    eval_inference, eval_training, eval_training_par, InferEval, SystemConfig, TrainEval,
+    eval_inference, eval_training, eval_training_gnn_batched, eval_training_par, InferEval,
+    SystemConfig, TrainEval,
 };
 pub use op_level::{
     chunk_latency, chunk_latency_with_topo, ChunkTopology, NocModel, OpLevelResult,
@@ -68,7 +69,12 @@ impl Default for CycleAccurate {
 
 impl NocEstimator for CycleAccurate {
     fn link_waits(&self, chunk: &CompiledChunk, core: &CoreConfig) -> Option<Vec<f64>> {
-        let stats = crate::noc_sim::simulate_chunk(
+        // A budget overrun (deadlock or undersized `max_cycles`) is a
+        // recoverable condition at this fidelity: report it (once — a DSE
+        // sweep calls this per strategy per design point, and a repeated
+        // identical warning would bury real output) and fall back to the
+        // analytical model instead of panicking the whole DSE run.
+        match crate::noc_sim::simulate_chunk_result(
             chunk,
             core.noc_bw_bits,
             &|op| {
@@ -76,8 +82,19 @@ impl NocEstimator for CycleAccurate {
                 crate::eval::tile::eval_tile_cached(a, core, 1.0).cycles.ceil() as u64
             },
             self.max_cycles,
-        );
-        Some(stats.link_wait_mean())
+        ) {
+            Ok(stats) => Some(stats.link_wait_mean()),
+            Err(e) => {
+                static OVERRUN_WARNED: std::sync::Once = std::sync::Once::new();
+                OVERRUN_WARNED.call_once(|| {
+                    eprintln!(
+                        "cycle-accurate estimator: {e}; analytical fallback \
+                         (further overruns fall back silently)"
+                    );
+                });
+                None
+            }
+        }
     }
 
     fn name(&self) -> &'static str {

@@ -433,7 +433,7 @@ mod tests {
         // simulator (the Fig. 7b claim, miniaturized).
         // THESEUS_TEST_FAST=1 drops the two most expensive configs — this
         // is among the slowest tier-1 items in debug builds.
-        use crate::noc_sim::{naive_compute_cycles, simulate_chunk};
+        use crate::noc_sim::{naive_compute_cycles, simulate_chunk_result};
         let configs: &[(usize, usize, usize)] = if crate::util::cli::env_flag("THESEUS_TEST_FAST") {
             &[(32, 3, 256), (64, 3, 128), (32, 5, 512)]
         } else {
@@ -445,12 +445,13 @@ mod tests {
             let (ch, c) = chunk(seq, region, bw);
             let r = chunk_latency(&ch, &c, 1.0, NocModel::Analytical);
             ana.push(r.cycles);
-            let stats = simulate_chunk(
+            let stats = simulate_chunk_result(
                 &ch,
                 bw,
                 &|op| naive_compute_cycles(ch.assignments[op].flops_per_core, c.mac_num),
                 200_000_000,
-            );
+            )
+            .expect("CA simulation within budget");
             ca.push(stats.cycles as f64);
         }
         let tau = crate::util::stats::kendall_tau(&ana, &ca);

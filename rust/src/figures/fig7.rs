@@ -30,13 +30,14 @@ pub struct Fig7Row {
 
 /// Run the comparison over `n_benchmarks` Table II models (small end) with
 /// `configs_per` random configurations each. `gnn` may be `None` (rows
-/// report the analytical model only — used before artifacts exist).
+/// report the analytical model only — used before artifacts exist). A CA
+/// simulation budget overrun propagates as [`noc_sim::SimError`].
 pub fn fig7_eval_comparison(
     n_benchmarks: usize,
     configs_per: usize,
     gnn: Option<&dyn NocEstimator>,
     seed: u64,
-) -> (Table, Vec<Fig7Row>) {
+) -> Result<(Table, Vec<Fig7Row>), noc_sim::SimError> {
     let specs = models::benchmarks();
     let mut rows = Vec::new();
     let mut rng = Rng::new(seed);
@@ -69,7 +70,7 @@ pub fn fig7_eval_comparison(
 
             // CA ground truth.
             let (stats_ca, t_ca) = bench::time_once(|| {
-                noc_sim::simulate_chunk(
+                noc_sim::simulate_chunk_result(
                     &chunk,
                     core.noc_bw_bits,
                     &|op| {
@@ -80,6 +81,7 @@ pub fn fig7_eval_comparison(
                     300_000_000,
                 )
             });
+            let stats_ca = stats_ca?;
             ca_lat.push(stats_ca.cycles as f64);
             ca_time.push(t_ca);
 
@@ -150,7 +152,7 @@ pub fn fig7_eval_comparison(
             format!("{:.2}", r.gnn_kt),
         ]);
     }
-    (t, rows)
+    Ok((t, rows))
 }
 
 #[cfg(test)]
@@ -159,7 +161,8 @@ mod tests {
 
     #[test]
     fn fig7_smoke_analytical_only() {
-        let (t, rows) = fig7_eval_comparison(1, 3, None, 5);
+        let (t, rows) =
+            fig7_eval_comparison(1, 3, None, 5).expect("CA simulation within budget");
         assert_eq!(rows.len(), 1);
         let r = &rows[0];
         // The analytical model must be at least 10x faster than CA sim.

@@ -35,7 +35,7 @@ fn cmd_gen_dataset(args: &Args) {
         "n",
         theseus::util::cli::env_usize("THESEUS_DATASET_N", 256),
     );
-    let seed = args.u64("seed", 2024);
+    let seed = args.u64("seed", theseus::util::cli::env_u64("THESEUS_DATASET_SEED", 2024));
     // --serial bypasses the pooled fan-out (identical output; useful for
     // timing baselines and single-core machines).
     let serial = args.has("serial");
@@ -44,10 +44,17 @@ fn cmd_gen_dataset(args: &Args) {
         if serial { ", serial" } else { "" }
     );
     let t0 = std::time::Instant::now();
-    let doc = if serial {
+    let result = if serial {
         theseus::noc_sim::dataset::gen_dataset_serial(n, seed)
     } else {
         theseus::noc_sim::dataset::gen_dataset(n, seed)
+    };
+    let doc = match result {
+        Ok(doc) => doc,
+        Err(e) => {
+            eprintln!("gen-noc-dataset failed: CA simulation overran its budget: {e}");
+            std::process::exit(1);
+        }
     };
     std::fs::write(&out, doc.to_string()).expect("write dataset");
     eprintln!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());

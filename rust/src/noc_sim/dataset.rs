@@ -10,7 +10,7 @@
 use crate::arch::{CoreConfig, Dataflow};
 use crate::compiler::{compile_chunk, routing::NUM_DIRS};
 use crate::eval::op_level::{chunk_latency, NocModel};
-use crate::noc_sim::{naive_compute_cycles, simulate_chunk};
+use crate::noc_sim::{naive_compute_cycles, simulate_chunk_result, SimError};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::models::benchmarks;
@@ -57,7 +57,9 @@ impl Sample {
 
 /// Generate one sample: a random core config + a random small-benchmark
 /// chunk on a random mesh (bounded so CA simulation stays seconds-scale).
-pub fn gen_sample(rng: &mut Rng) -> Sample {
+/// A budget overrun in the CA simulation propagates as [`SimError`]
+/// instead of panicking the whole generation run.
+pub fn gen_sample(rng: &mut Rng) -> Result<Sample, SimError> {
     let specs = benchmarks();
     let spec = specs[rng.below(4)].clone(); // the small end of Table II
     let noc_bw_bits = *rng.choose(&[128usize, 256, 512, 1024]);
@@ -85,12 +87,12 @@ pub fn gen_sample(rng: &mut Rng) -> Sample {
         naive_compute_cycles(a.flops_per_core, core.mac_num)
             .max((a.in_bytes_per_core / (core.buffer_bw_bits as f64 / 8.0)).ceil() as u64)
     };
-    let stats = simulate_chunk(&chunk, noc_bw_bits, &cycles_for, 80_000_000);
+    let stats = simulate_chunk_result(&chunk, noc_bw_bits, &cycles_for, 80_000_000)?;
     let zeros = vec![0.0; h * w * NUM_DIRS];
     let t0 = chunk_latency(&chunk, &core, 1.0, NocModel::LinkWaits(&zeros)).cycles;
 
     let cyc = stats.cycles.max(1) as f64;
-    Sample {
+    Ok(Sample {
         height: h,
         width: w,
         noc_bw_bits,
@@ -105,7 +107,7 @@ pub fn gen_sample(rng: &mut Rng) -> Sample {
         total_cycles: stats.cycles,
         t0_cycles: t0,
         node_bytes: chunk.node_injected_bytes(),
-    }
+    })
 }
 
 /// Per-sample RNG streams: each sample draws from an independent fork of
@@ -126,25 +128,28 @@ fn dataset_doc(seed: u64, samples: Vec<Json>) -> Json {
 }
 
 /// Generate `n` samples into the dataset JSON document, fanning the
-/// independent CA simulations out over [`crate::util::pool`].
-pub fn gen_dataset(n: usize, seed: u64) -> Json {
+/// independent CA simulations out over [`crate::util::pool`]. The first
+/// CA budget overrun (by sample index) propagates as [`SimError`].
+pub fn gen_dataset(n: usize, seed: u64) -> Result<Json, SimError> {
     let rngs = sample_streams(n, seed);
-    let samples = crate::util::pool::par_map(&rngs, |rng| {
+    let samples: Result<Vec<Json>, SimError> = crate::util::pool::par_map(&rngs, |rng| {
         let mut rng = rng.clone();
-        gen_sample(&mut rng).to_json()
-    });
-    dataset_doc(seed, samples)
+        gen_sample(&mut rng).map(|s| s.to_json())
+    })
+    .into_iter()
+    .collect();
+    Ok(dataset_doc(seed, samples?))
 }
 
 /// Serial [`gen_dataset`] — identical output, one sample at a time. Kept
 /// for single-core environments and as the baseline the `perf_hotpath`
 /// bench measures the pooled fan-out against.
-pub fn gen_dataset_serial(n: usize, seed: u64) -> Json {
-    let samples = sample_streams(n, seed)
+pub fn gen_dataset_serial(n: usize, seed: u64) -> Result<Json, SimError> {
+    let samples: Result<Vec<Json>, SimError> = sample_streams(n, seed)
         .into_iter()
-        .map(|mut rng| gen_sample(&mut rng).to_json())
+        .map(|mut rng| gen_sample(&mut rng).map(|s| s.to_json()))
         .collect();
-    dataset_doc(seed, samples)
+    Ok(dataset_doc(seed, samples?))
 }
 
 #[cfg(test)]
@@ -154,7 +159,7 @@ mod tests {
     #[test]
     fn sample_shapes_consistent() {
         let mut rng = Rng::new(99);
-        let s = gen_sample(&mut rng);
+        let s = gen_sample(&mut rng).expect("CA simulation within budget");
         let n = s.height * s.width;
         assert_eq!(s.inject_rate.len(), n);
         assert_eq!(s.link_bytes.len(), n * NUM_DIRS);
@@ -176,14 +181,14 @@ mod tests {
     fn dataset_deterministic_and_serial_matches_parallel() {
         // Pooled generation must emit byte-identical JSON to the serial
         // path (per-sample forked RNG streams + bit-identical simulator).
-        let a = gen_dataset(2, 7).to_string();
-        let b = gen_dataset_serial(2, 7).to_string();
+        let a = gen_dataset(2, 7).expect("within budget").to_string();
+        let b = gen_dataset_serial(2, 7).expect("within budget").to_string();
         assert_eq!(a, b);
     }
 
     #[test]
     fn dataset_json_roundtrip() {
-        let d = gen_dataset(2, 11);
+        let d = gen_dataset(2, 11).expect("within budget");
         let parsed = Json::parse(&d.to_string()).unwrap();
         let samples = parsed.get("samples").unwrap().as_arr().unwrap();
         assert_eq!(samples.len(), 2);

@@ -35,6 +35,15 @@
 //! [`SimStats::link_wait`] cycle per blocked requester per cycle — exactly
 //! as in the per-cycle stepper.
 //!
+//! Congested meshes are the active-list's constant-factor worst case
+//! (active ≈ all routers, so the list buys nothing and its bookkeeping
+//! costs extra): when the active-router count reaches half the mesh the
+//! switch pass falls back to the dense flat sweep over all routers for
+//! that cycle. Per-node switch decisions read only pre-cycle network state
+//! plus node-local allocation, so the regime flip cannot change results —
+//! the equivalence suite includes a seed that crosses the threshold
+//! mid-run in both directions.
+//!
 //! # Reference-oracle contract
 //!
 //! The original per-cycle stepper is retained, frozen, as
@@ -47,8 +56,10 @@
 //! validated against a regenerated oracle) — the GNN training labels and
 //! the Fig. 7 validation depend on these exact semantics. The engines may
 //! differ only in *failure* behavior: budget overruns surface as
-//! [`SimError`] from [`Simulator::try_run`] with a bounded diagnostic,
-//! while the oracle keeps the legacy panic.
+//! [`SimError`] from [`Simulator::try_run`] with a bounded diagnostic
+//! (every event-driven call site propagates the error; the legacy
+//! panicking `run()` wrapper is gone), while the frozen oracle keeps its
+//! original panic.
 
 pub mod dataset;
 pub mod program;
@@ -349,18 +360,11 @@ impl Simulator {
         }
     }
 
-    /// Run to completion (all programs finished, network drained).
-    /// `max_cycles` guards against deadlock bugs; panics if exceeded —
-    /// prefer [`Simulator::try_run`] where a recoverable error is wanted.
-    pub fn run(self, max_cycles: u64) -> SimStats {
-        match self.try_run(max_cycles) {
-            Ok(stats) => stats,
-            Err(e) => panic!("noc_sim: {e}"),
-        }
-    }
-
     /// Run to completion, or return a bounded [`SimError`] diagnostic if
     /// the cycle budget is exceeded (deadlock or undersized budget).
+    /// This is the only way to run the event-driven engine — the old
+    /// panicking `run()` wrapper had its call sites migrated to error
+    /// propagation and was removed.
     pub fn try_run(mut self, max_cycles: u64) -> Result<SimStats, SimError> {
         loop {
             if self.done() {
@@ -600,10 +604,13 @@ impl Simulator {
     }
 
     /// Route computation + VC allocation + switch allocation + traversal,
-    /// collapsed into one cycle per hop (aggressive single-stage router) —
-    /// over the active-router list only. Per-node decisions read only
-    /// pre-cycle network state plus node-local allocation, so the list
-    /// iteration order cannot affect the outcome.
+    /// collapsed into one cycle per hop (aggressive single-stage router).
+    /// Normally walks the active-router list only; when the active count
+    /// reaches half the mesh (a congested phase — the list buys nothing
+    /// there and its indirection costs extra) it falls back to the dense
+    /// flat sweep over all routers for this cycle. Per-node decisions read
+    /// only pre-cycle network state plus node-local allocation, so neither
+    /// the iteration order nor the regime choice can affect the outcome.
     fn switch_active(&mut self) {
         if self.active_routers.is_empty() {
             return;
@@ -611,55 +618,25 @@ impl Simulator {
         let mut moves = std::mem::take(&mut self.moves);
         debug_assert!(moves.is_empty());
 
-        let n_active = self.active_routers.len();
-        for ai in 0..n_active {
-            let node = self.active_routers[ai] as usize;
-            if self.routers[node].occupancy == 0 {
-                continue; // drained earlier; compacted below
-            }
-            let at = (node / self.width, node % self.width);
-            // Gather head-of-buffer requests per output port (fixed-size
-            // scratch — §Perf: no per-cycle heap allocation).
-            let mut requests = [[(0u8, 0u8); PORTS * VCS]; PORTS];
-            let mut req_len = [0usize; PORTS];
-            for port in 0..PORTS {
-                for vc in 0..VCS {
-                    let s = self.routers[node].vc(port, vc);
-                    let Some(f) = s.buf.front() else { continue };
-                    let out = if f.is_head {
-                        route_port(at, self.packets[f.packet as usize].dst)
-                    } else {
-                        match s.out_port {
-                            Some(p) => p as usize,
-                            None => continue, // body before head handled
-                        }
-                    };
-                    requests[out][req_len[out]] = (port as u8, vc as u8);
-                    req_len[out] += 1;
-                }
-            }
-            // One grant per output port, round-robin.
-            for out in 0..PORTS {
-                let len = req_len[out];
-                if len == 0 {
+        let n = self.routers.len();
+        let dense = 2 * self.active_routers.len() >= n;
+        #[cfg(test)]
+        note_switch_regime(dense);
+        if dense {
+            for node in 0..n {
+                if self.routers[node].occupancy == 0 {
                     continue;
                 }
-                let start = self.routers[node].rr[out];
-                let pick = (0..len)
-                    .map(|i| requests[out][(start + i) % len])
-                    .find(|&(port, vc)| self.can_traverse(node, port as usize, vc as usize, out));
-                // Waiting accounting: every requester of a *mesh* link that
-                // does not move this cycle accrues one wait cycle.
-                if out != LOCAL {
-                    let li = node * NUM_DIRS + out;
-                    let waiting = len - usize::from(pick.is_some());
-                    self.stats.link_wait[li] += waiting as u64;
+                self.switch_node(node, &mut moves);
+            }
+        } else {
+            let n_active = self.active_routers.len();
+            for ai in 0..n_active {
+                let node = self.active_routers[ai] as usize;
+                if self.routers[node].occupancy == 0 {
+                    continue; // drained earlier; compacted below
                 }
-                let Some((port, vc)) = pick else { continue };
-                let (port, vc) = (port as usize, vc as usize);
-                self.routers[node].rr[out] = self.routers[node].rr[out].wrapping_add(1);
-                let flit = *self.routers[node].vc(port, vc).buf.front().unwrap();
-                moves.push((node, port, vc, out, flit));
+                self.switch_node(node, &mut moves);
             }
         }
 
@@ -670,7 +647,9 @@ impl Simulator {
         moves.clear();
         self.moves = moves;
 
-        // Compact: drop routers drained this cycle.
+        // Compact: drop routers drained this cycle. (In dense cycles the
+        // list is still the membership structure — every router holding
+        // flits is on it, so the same compaction applies.)
         let mut i = 0;
         while i < self.active_routers.len() {
             let node = self.active_routers[i] as usize;
@@ -680,6 +659,55 @@ impl Simulator {
             } else {
                 i += 1;
             }
+        }
+    }
+
+    /// One router's switch allocation for this cycle (shared by the sparse
+    /// active-list walk and the dense flat sweep).
+    fn switch_node(&mut self, node: usize, moves: &mut Vec<(usize, usize, usize, usize, Flit)>) {
+        let at = (node / self.width, node % self.width);
+        // Gather head-of-buffer requests per output port (fixed-size
+        // scratch — §Perf: no per-cycle heap allocation).
+        let mut requests = [[(0u8, 0u8); PORTS * VCS]; PORTS];
+        let mut req_len = [0usize; PORTS];
+        for port in 0..PORTS {
+            for vc in 0..VCS {
+                let s = self.routers[node].vc(port, vc);
+                let Some(f) = s.buf.front() else { continue };
+                let out = if f.is_head {
+                    route_port(at, self.packets[f.packet as usize].dst)
+                } else {
+                    match s.out_port {
+                        Some(p) => p as usize,
+                        None => continue, // body before head handled
+                    }
+                };
+                requests[out][req_len[out]] = (port as u8, vc as u8);
+                req_len[out] += 1;
+            }
+        }
+        // One grant per output port, round-robin.
+        for out in 0..PORTS {
+            let len = req_len[out];
+            if len == 0 {
+                continue;
+            }
+            let start = self.routers[node].rr[out];
+            let pick = (0..len)
+                .map(|i| requests[out][(start + i) % len])
+                .find(|&(port, vc)| self.can_traverse(node, port as usize, vc as usize, out));
+            // Waiting accounting: every requester of a *mesh* link that
+            // does not move this cycle accrues one wait cycle.
+            if out != LOCAL {
+                let li = node * NUM_DIRS + out;
+                let waiting = len - usize::from(pick.is_some());
+                self.stats.link_wait[li] += waiting as u64;
+            }
+            let Some((port, vc)) = pick else { continue };
+            let (port, vc) = (port as usize, vc as usize);
+            self.routers[node].rr[out] = self.routers[node].rr[out].wrapping_add(1);
+            let flit = *self.routers[node].vc(port, vc).buf.front().unwrap();
+            moves.push((node, port, vc, out, flit));
         }
     }
 
@@ -816,20 +844,38 @@ impl Simulator {
     }
 }
 
-/// Convenience: simulate a compiled chunk with per-op compute cycles given
-/// by `cycles_for(op_index)`, on cores with `noc_bw_bits`-wide flits.
-pub fn simulate_chunk(
-    chunk: &crate::compiler::CompiledChunk,
-    noc_bw_bits: usize,
-    cycles_for: &dyn Fn(usize) -> u64,
-    max_cycles: u64,
-) -> SimStats {
-    let programs = build_programs(chunk, noc_bw_bits, cycles_for);
-    Simulator::new(chunk.region_h, chunk.region_w, programs).run(max_cycles)
+/// Test-only instrumentation: per-thread counters of how many switch
+/// cycles ran in the dense flat-sweep vs the sparse active-list regime
+/// (the dense-fallback equivalence test asserts both were visited).
+#[cfg(test)]
+thread_local! {
+    static SWITCH_REGIMES: std::cell::Cell<(u64, u64)> = std::cell::Cell::new((0, 0));
 }
 
-/// [`simulate_chunk`] with the budget overrun surfaced as a [`SimError`]
-/// instead of a panic.
+#[cfg(test)]
+fn note_switch_regime(dense: bool) {
+    SWITCH_REGIMES.with(|c| {
+        let (d, s) = c.get();
+        c.set(if dense { (d + 1, s) } else { (d, s + 1) });
+    });
+}
+
+#[cfg(test)]
+pub(crate) fn reset_switch_regimes() {
+    SWITCH_REGIMES.with(|c| c.set((0, 0)));
+}
+
+/// `(dense_cycles, sparse_cycles)` since the last reset, this thread.
+#[cfg(test)]
+pub(crate) fn switch_regimes() -> (u64, u64) {
+    SWITCH_REGIMES.with(|c| c.get())
+}
+
+/// Simulate a compiled chunk with per-op compute cycles given by
+/// `cycles_for(op_index)`, on cores with `noc_bw_bits`-wide flits. Budget
+/// overruns (deadlock or undersized `max_cycles`) surface as a bounded
+/// [`SimError`] — there is no panicking convenience wrapper anymore; every
+/// call site propagates or handles the error.
 pub fn simulate_chunk_result(
     chunk: &crate::compiler::CompiledChunk,
     noc_bw_bits: usize,

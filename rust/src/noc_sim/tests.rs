@@ -34,7 +34,7 @@ fn single_packet_zero_load_latency() {
         tag: 0,
     }];
     progs[3] = vec![Instr::Recv { tag: 0, packets: 1 }];
-    let stats = sim(4, 4, progs).run(10_000);
+    let stats = sim(4, 4, progs).try_run(10_000).expect("completes within budget");
     assert_eq!(stats.packets_done, 1);
     let lat = stats.avg_packet_latency();
     assert!(lat >= 5.0, "too fast: {lat}");
@@ -50,7 +50,7 @@ fn east_links_carry_the_flits() {
         tag: 0,
     }];
     progs[3] = vec![Instr::Recv { tag: 0, packets: 1 }];
-    let stats = sim(4, 4, progs).run(10_000);
+    let stats = sim(4, 4, progs).try_run(10_000).expect("completes within budget");
     // Links (0,0)E, (0,1)E, (0,2)E each carried 8 flits.
     for col in 0..3 {
         let idx = (0 * 4 + col) * NUM_DIRS + 0; // East = 0
@@ -70,7 +70,7 @@ fn contention_creates_waiting() {
     progs[4] = vec![Instr::Send { dst: (1, 3), bytes: big, tag: 0 }];
     progs[5] = vec![Instr::Send { dst: (1, 3), bytes: big, tag: 0 }];
     progs[7] = vec![Instr::Recv { tag: 0, packets: 8 }]; // 64 flits = 4 pkts each
-    let stats = sim(4, 4, progs).run(100_000);
+    let stats = sim(4, 4, progs).try_run(100_000).expect("completes within budget");
     let shared = (1 * 4 + 1) * NUM_DIRS + 0; // (1,1) East
     assert!(stats.link_flits[shared] >= 128);
     assert!(
@@ -87,7 +87,7 @@ fn no_contention_no_waiting() {
     progs[4] = vec![Instr::Send { dst: (1, 3), bytes: 32.0 * 64.0, tag: 0 }];
     progs[3] = vec![Instr::Recv { tag: 0, packets: 2 }];
     progs[7] = vec![Instr::Recv { tag: 0, packets: 2 }];
-    let stats = sim(4, 4, progs).run(100_000);
+    let stats = sim(4, 4, progs).try_run(100_000).expect("completes within budget");
     let total_wait: u64 = stats.link_wait.iter().sum();
     assert_eq!(total_wait, 0, "disjoint flows must not wait");
 }
@@ -102,7 +102,7 @@ fn compute_serializes_with_recv() {
         Instr::Recv { tag: 0, packets: 1 },
         Instr::Compute { cycles: 100 },
     ];
-    let stats = sim(2, 2, progs).run(10_000);
+    let stats = sim(2, 2, progs).try_run(10_000).expect("completes within budget");
     assert!(stats.cycles >= 100, "cycles={}", stats.cycles);
     assert!(stats.cycles < 200, "cycles={}", stats.cycles);
 }
@@ -119,7 +119,9 @@ fn deterministic_runs() {
             }];
         }
         progs[15] = vec![Instr::Recv { tag: 0, packets: 1 }];
-        sim(4, 4, progs).run(1_000_000)
+        sim(4, 4, progs)
+            .try_run(1_000_000)
+            .expect("completes within budget")
     };
     let a = mk();
     let b = mk();
@@ -163,7 +165,9 @@ fn load_latency_curve_saturates() {
                 });
             }
         }
-        let stats = sim(h, w, progs).run(10_000_000);
+        let stats = sim(h, w, progs)
+            .try_run(10_000_000)
+            .expect("completes within budget");
         latencies.push(stats.avg_packet_latency());
     }
     assert!(
@@ -203,14 +207,6 @@ fn undersized_budget_is_error_not_hang() {
     assert!(err.sample_blocked.len() <= SimError::MAX_DIAG);
 }
 
-#[test]
-#[should_panic(expected = "noc_sim: exceeded")]
-fn run_wrapper_panics_on_overrun() {
-    let mut progs = idle(4);
-    progs[0] = vec![Instr::Recv { tag: 0, packets: 1 }];
-    sim(2, 2, progs).run(100);
-}
-
 /// Reference-oracle equivalence: the event-driven engine must produce
 /// bit-identical [`SimStats`] to [`reference::Simulator`] on every program
 /// that completes within budget (module docs: the reference-oracle
@@ -231,9 +227,13 @@ mod equivalence {
             .collect()
     }
 
-    /// Run both engines on the same programs; both must complete.
+    /// Run both engines on the same programs; both must complete. (The
+    /// frozen oracle keeps its legacy panicking `run`; the event engine
+    /// propagates the budget overrun as `SimError`.)
     fn run_both(h: usize, w: usize, progs: &[Vec<Instr>], budget: u64) -> (SimStats, SimStats) {
-        let ev = Simulator::new(h, w, programs_of(progs)).run(budget);
+        let ev = Simulator::new(h, w, programs_of(progs))
+            .try_run(budget)
+            .expect("event engine completes within budget");
         let rf = reference::Simulator::new(h, w, programs_of(progs)).run(budget);
         (ev, rf)
     }
@@ -363,11 +363,63 @@ mod equivalence {
                 naive_compute_cycles(chunk.assignments[op].flops_per_core, 512)
             });
             let ev = Simulator::new(chunk.region_h, chunk.region_w, programs.clone())
-                .run(200_000_000);
+                .try_run(200_000_000)
+                .expect("completes within budget");
             let rf = reference::Simulator::new(chunk.region_h, chunk.region_w, programs)
                 .run(200_000_000);
             assert_eq!(ev, rf, "chunk seq={seq} region={region} bw={bw}");
         }
+    }
+
+    #[test]
+    fn dense_fallback_equivalence_crosses_threshold_mid_run() {
+        // ROADMAP carry-over: the dense-mode switch fallback. Phase 1
+        // (sparse) trickles one flow across an otherwise idle mesh while
+        // every other core sits in a long COMPUTE; phase 2 (dense) floods
+        // a hotspot from all cores at once, pushing the active-router
+        // count past half the mesh; the drain then falls back below it.
+        // Stats must stay bit-identical to the reference oracle across
+        // both regime flips, and both regimes must actually have been
+        // visited by the event-driven engine.
+        let (h, w) = (4usize, 4usize);
+        let n = h * w;
+        let hotspot = (h / 2, w / 2);
+        let hot_core = hotspot.0 * w + hotspot.1;
+        let trickle_bytes = 8.0 * 64.0; // 8 flits = 1 packet
+        let flood_bytes = 16.0 * 64.0; // 16 flits = 1 max-size packet
+        let mut progs: Vec<Vec<Instr>> = vec![Vec::new(); n];
+        // Sparse prelude: corner-to-corner trickle.
+        progs[0].push(Instr::Send { dst: (h - 1, w - 1), bytes: trickle_bytes, tag: 1 });
+        let mut flood_pkts = 0u32;
+        for core in 0..n {
+            if core == hot_core {
+                continue;
+            }
+            // The compute keeps the mesh sparse while the trickle crosses
+            // it, then every core releases its flood on the same cycle.
+            progs[core].push(Instr::Compute { cycles: 400 });
+            for _ in 0..4 {
+                progs[core].push(Instr::Send { dst: hotspot, bytes: flood_bytes, tag: 0 });
+                flood_pkts += packets_for(flood_bytes, 64.0);
+            }
+        }
+        progs[hot_core].push(Instr::Recv { tag: 0, packets: flood_pkts });
+        progs[n - 1].push(Instr::Recv {
+            tag: 1,
+            packets: packets_for(trickle_bytes, 64.0),
+        });
+        validate_programs(&programs_of(&progs), h, w).expect("generator soundness");
+
+        reset_switch_regimes();
+        let ev = Simulator::new(h, w, programs_of(&progs))
+            .try_run(5_000_000)
+            .expect("completes within budget");
+        let (dense, sparse) = switch_regimes();
+        assert!(dense > 0, "flood never reached the dense flat-sweep regime");
+        assert!(sparse > 0, "prelude never used the sparse active-list regime");
+
+        let rf = reference::Simulator::new(h, w, programs_of(&progs)).run(5_000_000);
+        assert_eq!(ev, rf, "dense fallback diverged from the reference oracle");
     }
 
     #[test]
@@ -406,7 +458,11 @@ mod equivalence {
             }
             (out.unwrap(), best)
         };
-        let (ev, t_event) = best_of(&|| Simulator::new(h, w, programs_of(&progs)).run(budget));
+        let (ev, t_event) = best_of(&|| {
+            Simulator::new(h, w, programs_of(&progs))
+                .try_run(budget)
+                .expect("completes within budget")
+        });
         let (rf, t_ref) =
             best_of(&|| reference::Simulator::new(h, w, programs_of(&progs)).run(budget));
         assert_eq!(ev, rf);
@@ -436,12 +492,13 @@ fn chunk_simulation_end_to_end() {
         noc_bw_bits: 512,
     };
     let chunk = compile_chunk(&g, 4, 4, &core);
-    let stats = simulate_chunk(
+    let stats = simulate_chunk_result(
         &chunk,
         512,
         &|op| naive_compute_cycles(chunk.assignments[op].flops_per_core, 512),
         80_000_000,
-    );
+    )
+    .expect("completes within budget");
     assert!(stats.cycles > 0);
     assert!(stats.packets_done > 0);
     // Compute must dominate at this scale: cycles >= the largest op tile.

@@ -36,6 +36,14 @@ pub fn mesh_edges(h: usize, w: usize) -> Vec<(usize, usize, usize)> {
     edges
 }
 
+/// Coordinate normalization shared with `python/compile/features.py`
+/// (`max(h - 1, 1)` there — one expression on both sides so a 1×N strip,
+/// where the divisor degenerates, cannot drift between the mirrors).
+#[inline]
+pub fn coord_norm(i: usize, extent: usize) -> f32 {
+    i as f32 / extent.saturating_sub(1).max(1) as f32
+}
+
 /// Padded GNN inputs for one compiled chunk.
 pub struct GnnInputs {
     pub node_feat: Vec<f32>, // [N_MAX * F_N] row-major
@@ -80,8 +88,8 @@ pub fn build(chunk: &CompiledChunk, core: &CoreConfig) -> Option<GnnInputs> {
             let f = &mut node_feat[i * F_N..(i + 1) * F_N];
             f[0] = inject as f32;
             f[1] = 1.0;
-            f[2] = r as f32 / (h.max(2) - 1) as f32;
-            f[3] = c as f32 / (w.max(2) - 1) as f32;
+            f[2] = coord_norm(r, h);
+            f[3] = coord_norm(c, w);
             f[4] = 1.0;
         }
     }
@@ -115,6 +123,53 @@ pub fn build(chunk: &CompiledChunk, core: &CoreConfig) -> Option<GnnInputs> {
         dense_of_edge,
         t0_cycles: t0,
     })
+}
+
+/// Packed multi-chunk tensors for one batched execute call:
+/// `[B, N_MAX, F_N]` / `[B, E_MAX, F_E]` (row-major, slot-major), matching
+/// the `--batch` AOT export signature of `python/compile/aot.py`.
+pub struct GnnBatch {
+    pub batch: usize,
+    pub node_feat: Vec<f32>, // [batch * N_MAX * F_N]
+    pub edge_feat: Vec<f32>, // [batch * E_MAX * F_E]
+    pub src_idx: Vec<i32>,   // [batch * E_MAX]
+    pub dst_idx: Vec<i32>,   // [batch * E_MAX]
+    pub edge_mask: Vec<f32>, // [batch * E_MAX]
+}
+
+/// Pack per-chunk [`GnnInputs`] into one [`GnnBatch`], slot `i` holding
+/// `inputs[i]` verbatim (all inputs are already padded to the static
+/// shapes, so packing is a straight concatenation).
+pub fn build_batch(inputs: &[&GnnInputs]) -> GnnBatch {
+    let b = inputs.len();
+    let mut batch = GnnBatch {
+        batch: b,
+        node_feat: Vec::with_capacity(b * N_MAX * F_N),
+        edge_feat: Vec::with_capacity(b * E_MAX * F_E),
+        src_idx: Vec::with_capacity(b * E_MAX),
+        dst_idx: Vec::with_capacity(b * E_MAX),
+        edge_mask: Vec::with_capacity(b * E_MAX),
+    };
+    for inp in inputs {
+        batch.node_feat.extend_from_slice(&inp.node_feat);
+        batch.edge_feat.extend_from_slice(&inp.edge_feat);
+        batch.src_idx.extend_from_slice(&inp.src_idx);
+        batch.dst_idx.extend_from_slice(&inp.dst_idx);
+        batch.edge_mask.extend_from_slice(&inp.edge_mask);
+    }
+    batch
+}
+
+/// Scatter one slot's padded per-edge predictions (`y`, length `E_MAX`)
+/// back through `dense_of_edge` into dense `link_index` order.
+pub fn scatter_link_waits(inp: &GnnInputs, y: &[f32], n_links: usize) -> Vec<f64> {
+    let mut waits = vec![0.0f64; n_links];
+    for (e, &dense) in inp.dense_of_edge.iter().enumerate() {
+        if inp.edge_mask[e] > 0.0 {
+            waits[dense] = y[e].max(0.0) as f64;
+        }
+    }
+    waits
 }
 
 #[cfg(test)]
@@ -186,5 +241,70 @@ mod tests {
             edges,
             vec![(0, 1, 0), (0, 2, 2), (1, 0, 5), (1, 3, 6), (2, 3, 8), (2, 0, 11), (3, 2, 13), (3, 1, 15)]
         );
+        // 2x2 coordinates normalize over extent-1 = 1.
+        assert_eq!(coord_norm(0, 2), 0.0);
+        assert_eq!(coord_norm(1, 2), 1.0);
+
+        // 1xN strip mesh — the degenerate case where the normalizer is
+        // most fragile (extent-1 = 0): both sides use max(h-1, 1), so the
+        // row coordinate pins to exactly 0 for every node.
+        assert_eq!(
+            mesh_edges(1, 5),
+            vec![
+                (0, 1, 0),
+                (1, 2, 4),
+                (1, 0, 5),
+                (2, 3, 8),
+                (2, 1, 9),
+                (3, 4, 12),
+                (3, 2, 13),
+                (4, 3, 17)
+            ]
+        );
+        assert_eq!(coord_norm(0, 1), 0.0);
+        for c in 0..5 {
+            assert_eq!(coord_norm(c, 5), c as f32 / 4.0);
+        }
+    }
+
+    #[test]
+    fn build_batch_packs_slots_in_order() {
+        let (c1, k1) = chunk(3, 3);
+        let (c2, k2) = chunk(4, 5);
+        let i1 = build(&c1, &k1).unwrap();
+        let i2 = build(&c2, &k2).unwrap();
+        let b = build_batch(&[&i1, &i2]);
+        assert_eq!(b.batch, 2);
+        assert_eq!(b.node_feat.len(), 2 * N_MAX * F_N);
+        assert_eq!(b.edge_feat.len(), 2 * E_MAX * F_E);
+        assert_eq!(b.src_idx.len(), 2 * E_MAX);
+        // Slot 0 holds the first chunk verbatim, slot 1 the second.
+        assert_eq!(&b.node_feat[..N_MAX * F_N], &i1.node_feat[..]);
+        assert_eq!(&b.node_feat[N_MAX * F_N..], &i2.node_feat[..]);
+        assert_eq!(&b.edge_mask[..E_MAX], &i1.edge_mask[..]);
+        assert_eq!(&b.edge_mask[E_MAX..], &i2.edge_mask[..]);
+        assert_eq!(&b.src_idx[E_MAX..], &i2.src_idx[..]);
+        assert_eq!(&b.dst_idx[..E_MAX], &i1.dst_idx[..]);
+    }
+
+    #[test]
+    fn scatter_restores_link_index_order() {
+        let (ch, core) = chunk(3, 3);
+        let inp = build(&ch, &core).unwrap();
+        let mut y = vec![0.0f32; E_MAX];
+        for e in 0..E_MAX {
+            y[e] = (e + 1) as f32;
+        }
+        let n_links = 3 * 3 * NUM_DIRS;
+        let waits = scatter_link_waits(&inp, &y, n_links);
+        assert_eq!(waits.len(), n_links);
+        for (e, &(_, _, dense)) in mesh_edges(3, 3).iter().enumerate() {
+            assert_eq!(waits[dense], (e + 1) as f64);
+        }
+        // Links with no edge slot (none on a full mesh interior edge set)
+        // and negative predictions clamp at zero.
+        let y_neg = vec![-1.0f32; E_MAX];
+        let w_neg = scatter_link_waits(&inp, &y_neg, n_links);
+        assert!(w_neg.iter().all(|&v| v == 0.0));
     }
 }

@@ -10,8 +10,29 @@
 //! default build substitutes [`stub`], whose `GnnModel::load_default`
 //! reports the runtime as unavailable and lets every caller fall back to
 //! the analytical NoC model. Both expose the same `GnnModel` API.
+//!
+//! # Batched inference (§Perf)
+//!
+//! The PJRT executable handle is thread-confined, so the GNN fidelity
+//! amortizes its per-call dispatch cost by *batching* instead of thread
+//! fan-out: [`batch::GnnBatcher`] packs several chunks' padded features
+//! into `[B, N_MAX, F_N]` / `[B, E_MAX, F_E]` tensors
+//! ([`features::build_batch`]) and runs one execute call per batch — the
+//! strategy sweep (`eval::eval_training_gnn_batched`) and the `mfmobo`
+//! high-fidelity stage ride on it. `python -m compile.aot --batch B` bakes
+//! the leading batch dimension into the HLO export and records it in the
+//! `gnn_noc.meta.json` sidecar ([`GnnMeta::batch`]); artifacts exported
+//! with `--batch 1` keep the legacy per-chunk signature and the batcher
+//! degrades to slot-at-a-time calls. [`TestBackend`] (a deterministic
+//! closed-form pseudo-GNN behind the same API) keeps the packing/scatter
+//! logic and the batched-vs-per-chunk equivalence contract testable in the
+//! default build.
 
+pub mod batch;
 pub mod features;
+pub mod test_backend;
+
+pub use test_backend::TestBackend;
 
 #[cfg(theseus_pjrt)]
 mod pjrt;
@@ -30,6 +51,10 @@ pub struct GnnMeta {
     pub e_max: usize,
     pub f_n: usize,
     pub f_e: usize,
+    /// Leading batch dimension of the AOT export (1 = legacy per-chunk
+    /// executable; `compile.aot --batch B` bakes `B` padded slots per
+    /// execute call).
+    pub batch: usize,
 }
 
 #[cfg(test)]
@@ -45,9 +70,11 @@ mod tests {
             e_max: features::E_MAX,
             f_n: features::F_N,
             f_e: features::F_E,
+            batch: 1,
         };
         assert_eq!(m.n_max, 256);
         assert_eq!(m.e_max, 1024);
+        assert_eq!(m.batch, 1);
     }
 
     #[cfg(not(theseus_pjrt))]

@@ -13,7 +13,9 @@ use crate::compiler::CompiledChunk;
 use crate::eval::NocEstimator;
 use crate::util::json::Json;
 
-use super::{features, GnnMeta};
+use super::batch::GnnBackend;
+use super::features::{self, GnnBatch};
+use super::GnnMeta;
 
 /// The GNN NoC-congestion model, compiled for the CPU PJRT backend.
 pub struct GnnModel {
@@ -42,6 +44,9 @@ impl GnnModel {
                     e_max: j.get("e_max").and_then(|v| v.as_usize()).unwrap_or(features::E_MAX),
                     f_n: j.get("f_n").and_then(|v| v.as_usize()).unwrap_or(features::F_N),
                     f_e: j.get("f_e").and_then(|v| v.as_usize()).unwrap_or(features::F_E),
+                    // Artifacts from before the batched export carry no
+                    // `batch` key: they have the legacy per-chunk signature.
+                    batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(1),
                 }
             }
             Err(_) => GnnMeta {
@@ -49,13 +54,15 @@ impl GnnModel {
                 e_max: features::E_MAX,
                 f_n: features::F_N,
                 f_e: features::F_E,
+                batch: 1,
             },
         };
         anyhow::ensure!(
             meta.n_max == features::N_MAX
                 && meta.e_max == features::E_MAX
                 && meta.f_n == features::F_N
-                && meta.f_e == features::F_E,
+                && meta.f_e == features::F_E
+                && meta.batch >= 1,
             "gnn meta schema mismatch: {meta:?} vs runtime constants"
         );
         Ok(GnnModel {
@@ -78,21 +85,123 @@ impl GnnModel {
         anyhow::bail!("no gnn_noc.hlo.txt found (run `make artifacts`)")
     }
 
-    /// Predict per-edge mean waiting times for padded inputs; returns the
-    /// raw padded vector of length `E_MAX`.
-    pub fn predict_padded(&self, inp: &features::GnnInputs) -> Result<Vec<f32>> {
-        let node = xla::Literal::vec1(&inp.node_feat)
+    /// Load the per-chunk (`--batch 1`) sibling artifact when one exists,
+    /// else fall back to [`GnnModel::load_default`]. Per-chunk-dominated
+    /// callers (figure benches) use this so a batched default artifact
+    /// does not make every single prediction pay the full batch-slot
+    /// program (see [`GnnModel::predict_padded`]).
+    pub fn load_per_chunk_default() -> Result<GnnModel> {
+        let candidates = [
+            "artifacts/gnn_noc.chunk.hlo.txt",
+            "../artifacts/gnn_noc.chunk.hlo.txt",
+        ];
+        for c in candidates {
+            if Path::new(c).exists() {
+                return GnnModel::load(Path::new(c));
+            }
+        }
+        GnnModel::load_default()
+    }
+
+    /// Execute the legacy per-chunk signature (`meta.batch == 1` exports:
+    /// no leading batch dimension).
+    fn execute_single(&self, slot: usize, b: &GnnBatch) -> Result<Vec<f32>> {
+        let n = features::N_MAX * features::F_N;
+        let m = features::E_MAX * features::F_E;
+        let e = features::E_MAX;
+        let node = xla::Literal::vec1(&b.node_feat[slot * n..(slot + 1) * n])
             .reshape(&[features::N_MAX as i64, features::F_N as i64])?;
-        let edge = xla::Literal::vec1(&inp.edge_feat)
+        let edge = xla::Literal::vec1(&b.edge_feat[slot * m..(slot + 1) * m])
             .reshape(&[features::E_MAX as i64, features::F_E as i64])?;
-        let src = xla::Literal::vec1(&inp.src_idx);
-        let dst = xla::Literal::vec1(&inp.dst_idx);
-        let mask = xla::Literal::vec1(&inp.edge_mask);
+        let src = xla::Literal::vec1(&b.src_idx[slot * e..(slot + 1) * e]);
+        let dst = xla::Literal::vec1(&b.dst_idx[slot * e..(slot + 1) * e]);
+        let mask = xla::Literal::vec1(&b.edge_mask[slot * e..(slot + 1) * e]);
         let exe = self.exe.lock().unwrap();
         let result = exe.execute::<xla::Literal>(&[node, edge, src, dst, mask])?[0][0]
             .to_literal_sync()?;
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
+    }
+
+    /// One execute call over the whole packed batch (`meta.batch > 1`
+    /// exports). Short batches are zero-padded up to the executable's
+    /// static slot count; the zero slots are masked out and discarded.
+    fn execute_batched(&self, b: &GnnBatch) -> Result<Vec<f32>> {
+        let cap = self.meta.batch;
+        anyhow::ensure!(
+            b.batch <= cap,
+            "batch {} exceeds executable capacity {cap}",
+            b.batch
+        );
+        let n = features::N_MAX * features::F_N;
+        let m = features::E_MAX * features::F_E;
+        let e = features::E_MAX;
+        let pad = |v: &[f32], per_slot: usize| -> Vec<f32> {
+            let mut full = Vec::with_capacity(cap * per_slot);
+            full.extend_from_slice(v);
+            full.resize(cap * per_slot, 0.0);
+            full
+        };
+        let pad_i = |v: &[i32], per_slot: usize| -> Vec<i32> {
+            let mut full = Vec::with_capacity(cap * per_slot);
+            full.extend_from_slice(v);
+            full.resize(cap * per_slot, 0);
+            full
+        };
+        let node = xla::Literal::vec1(&pad(&b.node_feat, n)).reshape(&[
+            cap as i64,
+            features::N_MAX as i64,
+            features::F_N as i64,
+        ])?;
+        let edge = xla::Literal::vec1(&pad(&b.edge_feat, m)).reshape(&[
+            cap as i64,
+            features::E_MAX as i64,
+            features::F_E as i64,
+        ])?;
+        let src = xla::Literal::vec1(&pad_i(&b.src_idx, e))
+            .reshape(&[cap as i64, features::E_MAX as i64])?;
+        let dst = xla::Literal::vec1(&pad_i(&b.dst_idx, e))
+            .reshape(&[cap as i64, features::E_MAX as i64])?;
+        let mask = xla::Literal::vec1(&pad(&b.edge_mask, e))
+            .reshape(&[cap as i64, features::E_MAX as i64])?;
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&[node, edge, src, dst, mask])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let mut y = out.to_vec::<f32>()?;
+        y.truncate(b.batch * features::E_MAX);
+        Ok(y)
+    }
+
+    /// Predict padded per-edge mean waiting times for a packed batch
+    /// (slot-major, `batch.batch * E_MAX` values).
+    pub fn predict_padded_batch(&self, b: &GnnBatch) -> Result<Vec<f32>> {
+        if self.meta.batch <= 1 {
+            // Legacy artifact: per-chunk signature, loop slot by slot.
+            let mut y = Vec::with_capacity(b.batch * features::E_MAX);
+            for slot in 0..b.batch {
+                y.extend(self.execute_single(slot, b)?);
+            }
+            return Ok(y);
+        }
+        self.execute_batched(b)
+    }
+
+    /// Predict per-edge mean waiting times for padded inputs; returns the
+    /// raw padded vector of length `E_MAX`.
+    ///
+    /// NOTE: on a batched artifact (`meta.batch > 1`) the executable's
+    /// shapes are static, so a single prediction still runs the full
+    /// `meta.batch`-slot program (~`batch`× the per-chunk cost of a
+    /// `--batch 1` export). Hot paths should batch through
+    /// [`super::batch::GnnBatcher`]; per-chunk callers that dominate a
+    /// profile (e.g. figure benches) can load a `--batch 1` sibling
+    /// artifact instead.
+    pub fn predict_padded(&self, inp: &features::GnnInputs) -> Result<Vec<f32>> {
+        let b = features::build_batch(&[inp]);
+        let mut y = self.predict_padded_batch(&b)?;
+        y.truncate(features::E_MAX);
+        Ok(y)
     }
 
     /// Predict and scatter back into dense `link_index` order.
@@ -105,13 +214,21 @@ impl GnnModel {
             return Ok(None); // region exceeds padding: analytical fallback
         };
         let y = self.predict_padded(&inp)?;
-        let mut waits = vec![0.0f64; chunk.region_h * chunk.region_w * NUM_DIRS];
-        for (e, &dense) in inp.dense_of_edge.iter().enumerate() {
-            if inp.edge_mask[e] > 0.0 {
-                waits[dense] = y[e].max(0.0) as f64;
-            }
-        }
-        Ok(Some(waits))
+        Ok(Some(features::scatter_link_waits(
+            &inp,
+            &y,
+            chunk.region_h * chunk.region_w * NUM_DIRS,
+        )))
+    }
+}
+
+impl GnnBackend for GnnModel {
+    fn max_batch(&self) -> usize {
+        self.meta.batch.max(1)
+    }
+
+    fn predict_batch(&self, batch: &GnnBatch) -> Result<Vec<f32>, String> {
+        self.predict_padded_batch(batch).map_err(|e| e.to_string())
     }
 }
 

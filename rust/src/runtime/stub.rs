@@ -14,7 +14,9 @@ use crate::arch::CoreConfig;
 use crate::compiler::CompiledChunk;
 use crate::eval::NocEstimator;
 
-use super::{features, GnnMeta};
+use super::batch::GnnBackend;
+use super::features::{self, GnnBatch};
+use super::GnnMeta;
 
 /// The GNN runtime was compiled out of this build.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -47,6 +49,11 @@ impl GnnModel {
         Err(GnnUnavailable)
     }
 
+    /// Per-chunk sibling loader (see the pjrt twin) — equally unavailable.
+    pub fn load_per_chunk_default() -> Result<GnnModel, GnnUnavailable> {
+        Err(GnnUnavailable)
+    }
+
     pub fn predict_padded(&self, _inp: &features::GnnInputs) -> Result<Vec<f32>, GnnUnavailable> {
         Err(GnnUnavailable)
     }
@@ -57,6 +64,18 @@ impl GnnModel {
         _core: &CoreConfig,
     ) -> Result<Option<Vec<f64>>, GnnUnavailable> {
         Err(GnnUnavailable)
+    }
+}
+
+impl GnnBackend for GnnModel {
+    fn max_batch(&self) -> usize {
+        self.meta.batch.max(1)
+    }
+
+    /// Unreachable in practice (no stub model can be constructed); exists
+    /// so the batched sweep type-checks against either build.
+    fn predict_batch(&self, _batch: &GnnBatch) -> Result<Vec<f32>, String> {
+        Err(GnnUnavailable.to_string())
     }
 }
 

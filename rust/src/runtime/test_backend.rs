@@ -1,0 +1,191 @@
+//! Deterministic in-process pseudo-GNN behind the same `GnnModel`-shaped
+//! API as [`super::pjrt`]/[`super::stub`].
+//!
+//! The real PJRT path is compiled out of the default build, so the batched
+//! inference subsystem ([`super::batch`]) would otherwise be dead code
+//! there. [`TestBackend`] is a closed-form stand-in: two rounds of demand
+//! aggregation over the mesh graph followed by a per-edge readout — pure
+//! f32 arithmetic over exactly the tensors the real GNN consumes
+//! (`node_feat`, `edge_feat`, `src_idx`, `dst_idx`, `edge_mask`). It
+//! evaluates one *slot* at a time whether that slot arrives alone or packed
+//! inside a batch, so batched and per-chunk predictions are bit-identical
+//! by construction and any packing/scatter bug in the batcher surfaces as
+//! a mismatch. It also implements [`NocEstimator`], which makes the full
+//! GNN-fidelity strategy sweep exercisable end to end without artifacts.
+
+use crate::arch::CoreConfig;
+use crate::compiler::routing::NUM_DIRS;
+use crate::compiler::CompiledChunk;
+use crate::eval::NocEstimator;
+
+use super::batch::GnnBackend;
+use super::features::{self, GnnBatch, GnnInputs, E_MAX, F_E, F_N, N_MAX};
+use super::GnnMeta;
+
+/// Default slot count mirroring `python -m compile.aot --batch 8`.
+pub const TEST_BATCH: usize = 8;
+
+/// Closed-form pseudo-GNN forward pass over one padded slot.
+///
+/// Round 1 accumulates a per-node demand potential from incident edge
+/// utilizations; round 2 smooths it one hop along the graph (a miniature
+/// message-passing step); the readout scales each edge's utilization by
+/// its endpoints' congestion and the source's injection rate. Outputs are
+/// non-negative, finite, and zero on masked slots — the same contract as
+/// the trained model.
+pub fn pseudo_forward(
+    node_feat: &[f32],
+    edge_feat: &[f32],
+    src_idx: &[i32],
+    dst_idx: &[i32],
+    edge_mask: &[f32],
+) -> Vec<f32> {
+    debug_assert_eq!(node_feat.len(), N_MAX * F_N);
+    debug_assert_eq!(edge_feat.len(), E_MAX * F_E);
+    debug_assert_eq!(src_idx.len(), E_MAX);
+    debug_assert_eq!(dst_idx.len(), E_MAX);
+    debug_assert_eq!(edge_mask.len(), E_MAX);
+
+    let mut pot = vec![0.0f32; N_MAX];
+    for e in 0..E_MAX {
+        if edge_mask[e] == 0.0 {
+            continue;
+        }
+        let rho = edge_feat[e * F_E];
+        pot[src_idx[e] as usize] += rho;
+        pot[dst_idx[e] as usize] += 0.5 * rho;
+    }
+    let mut pot2 = pot.clone();
+    for e in 0..E_MAX {
+        if edge_mask[e] == 0.0 {
+            continue;
+        }
+        pot2[dst_idx[e] as usize] += 0.25 * pot[src_idx[e] as usize];
+    }
+    (0..E_MAX)
+        .map(|e| {
+            if edge_mask[e] == 0.0 {
+                return 0.0;
+            }
+            let rho = edge_feat[e * F_E];
+            let bw = edge_feat[e * F_E + 1];
+            let s = src_idx[e] as usize;
+            let d = dst_idx[e] as usize;
+            let inject = node_feat[s * F_N];
+            rho * (1.0 + pot2[s] + pot2[d]) * (1.0 + 0.25 * inject) / (1.0 + bw)
+        })
+        .collect()
+}
+
+/// The in-process pseudo-GNN backend (always constructible — no artifact).
+pub struct TestBackend {
+    pub meta: GnnMeta,
+}
+
+impl TestBackend {
+    pub fn new() -> TestBackend {
+        TestBackend {
+            meta: GnnMeta {
+                n_max: N_MAX,
+                e_max: E_MAX,
+                f_n: F_N,
+                f_e: F_E,
+                batch: TEST_BATCH,
+            },
+        }
+    }
+
+    /// Mirror of `GnnModel::predict_padded`: one slot, padded output.
+    pub fn predict_padded(&self, inp: &GnnInputs) -> Vec<f32> {
+        pseudo_forward(
+            &inp.node_feat,
+            &inp.edge_feat,
+            &inp.src_idx,
+            &inp.dst_idx,
+            &inp.edge_mask,
+        )
+    }
+
+    /// Mirror of `GnnModel::predict_link_waits`: `None` when the region
+    /// exceeds the padded shapes (analytical fallback).
+    pub fn predict_link_waits(
+        &self,
+        chunk: &CompiledChunk,
+        core: &CoreConfig,
+    ) -> Option<Vec<f64>> {
+        let inp = features::build(chunk, core)?;
+        let y = self.predict_padded(&inp);
+        Some(features::scatter_link_waits(
+            &inp,
+            &y,
+            chunk.region_h * chunk.region_w * NUM_DIRS,
+        ))
+    }
+}
+
+impl Default for TestBackend {
+    fn default() -> Self {
+        TestBackend::new()
+    }
+}
+
+impl GnnBackend for TestBackend {
+    fn max_batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn predict_batch(&self, batch: &GnnBatch) -> Result<Vec<f32>, String> {
+        let mut out = Vec::with_capacity(batch.batch * E_MAX);
+        for s in 0..batch.batch {
+            out.extend(pseudo_forward(
+                &batch.node_feat[s * N_MAX * F_N..(s + 1) * N_MAX * F_N],
+                &batch.edge_feat[s * E_MAX * F_E..(s + 1) * E_MAX * F_E],
+                &batch.src_idx[s * E_MAX..(s + 1) * E_MAX],
+                &batch.dst_idx[s * E_MAX..(s + 1) * E_MAX],
+                &batch.edge_mask[s * E_MAX..(s + 1) * E_MAX],
+            ));
+        }
+        Ok(out)
+    }
+}
+
+impl NocEstimator for TestBackend {
+    fn link_waits(&self, chunk: &CompiledChunk, core: &CoreConfig) -> Option<Vec<f64>> {
+        self.predict_link_waits(chunk, core)
+    }
+
+    fn name(&self) -> &'static str {
+        "gnn-test"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pseudo_forward_zero_on_masked_slots() {
+        let node = vec![1.0f32; N_MAX * F_N];
+        let edge = vec![1.0f32; E_MAX * F_E];
+        let src = vec![0i32; E_MAX];
+        let dst = vec![1i32; E_MAX];
+        let mut mask = vec![0.0f32; E_MAX];
+        mask[0] = 1.0;
+        let y = pseudo_forward(&node, &edge, &src, &dst, &mask);
+        assert!(y[0] > 0.0);
+        assert!(y[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pseudo_forward_is_deterministic() {
+        let node = vec![0.5f32; N_MAX * F_N];
+        let edge = vec![0.25f32; E_MAX * F_E];
+        let src = vec![2i32; E_MAX];
+        let dst = vec![3i32; E_MAX];
+        let mask = vec![1.0f32; E_MAX];
+        let a = pseudo_forward(&node, &edge, &src, &dst, &mask);
+        let b = pseudo_forward(&node, &edge, &src, &dst, &mask);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| v.is_finite() && v >= 0.0));
+    }
+}

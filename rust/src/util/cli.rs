@@ -99,20 +99,62 @@ impl Args {
     }
 }
 
+/// Registry of env vars that already triggered a malformed-value warning,
+/// so each variable warns at most once per process (knobs like
+/// `THESEUS_TILE_CACHE` are read on hot paths).
+fn warned_env_vars() -> &'static std::sync::Mutex<std::collections::BTreeSet<String>> {
+    static WARNED: std::sync::OnceLock<std::sync::Mutex<std::collections::BTreeSet<String>>> =
+        std::sync::OnceLock::new();
+    WARNED.get_or_init(|| std::sync::Mutex::new(std::collections::BTreeSet::new()))
+}
+
+/// Typed env-var reader shared by [`env_usize`]/[`env_u64`]/[`env_f64`]:
+/// unset (or empty) falls back silently, but a *set-and-malformed* value
+/// (e.g. `THESEUS_TILE_CACHE=64k`) emits a one-time stderr warning naming
+/// the variable and the rejected value instead of silently ignoring it.
+fn env_parse<T>(key: &str, default: T) -> T
+where
+    T: std::str::FromStr + std::fmt::Display,
+{
+    env_parse_raw(key, std::env::var(key).ok().as_deref(), default)
+}
+
+/// [`env_parse`] with the raw lookup result injected — the testable core
+/// (tests feed values directly instead of mutating the process
+/// environment, which is unsound under `cargo test`'s thread pool: setenv
+/// racing getenv in another thread is UB on glibc).
+fn env_parse_raw<T>(key: &str, raw: Option<&str>, default: T) -> T
+where
+    T: std::str::FromStr + std::fmt::Display,
+{
+    match raw {
+        Some(raw) if !raw.is_empty() => match raw.parse() {
+            Ok(v) => v,
+            Err(_) => {
+                if warned_env_vars().lock().unwrap().insert(key.to_string()) {
+                    eprintln!(
+                        "warning: ignoring malformed env {key}={raw:?} (using default {default})"
+                    );
+                }
+                default
+            }
+        },
+        _ => default,
+    }
+}
+
 /// Env-var override helper: benches read scale knobs like
 /// `THESEUS_BO_ITERS` so `cargo bench` stays fast by default.
 pub fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    env_parse(key, default)
+}
+
+pub fn env_u64(key: &str, default: u64) -> u64 {
+    env_parse(key, default)
 }
 
 pub fn env_f64(key: &str, default: f64) -> f64 {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    env_parse(key, default)
 }
 
 /// Boolean env knob (e.g. `THESEUS_TEST_FAST=1`): set and not
@@ -166,5 +208,45 @@ mod tests {
     fn trailing_flag_is_boolean() {
         let a = parse(&["cmd", "--fast"]);
         assert!(a.bool("fast", false));
+    }
+
+    #[test]
+    fn env_malformed_value_warns_once_and_falls_back() {
+        // Set-but-malformed values must fall back to the default AND land
+        // in the one-time warning registry (previously they fell back
+        // silently, hiding typos like `THESEUS_TILE_CACHE=64k`). The test
+        // drives env_parse_raw directly — mutating the real process
+        // environment would race getenv in concurrently running tests.
+        assert_eq!(env_parse_raw("THESEUS_TEST_MALFORMED_USIZE", Some("64k"), 7usize), 7);
+        // Second read: same fallback, and the registry already holds the
+        // key so no duplicate warning is emitted.
+        assert_eq!(env_parse_raw("THESEUS_TEST_MALFORMED_USIZE", Some("64k"), 9usize), 9);
+        assert!(warned_env_vars()
+            .lock()
+            .unwrap()
+            .contains("THESEUS_TEST_MALFORMED_USIZE"));
+
+        assert_eq!(env_parse_raw("THESEUS_TEST_MALFORMED_U64", Some("12 months"), 3u64), 3);
+        assert!(warned_env_vars()
+            .lock()
+            .unwrap()
+            .contains("THESEUS_TEST_MALFORMED_U64"));
+
+        assert_eq!(env_parse_raw("THESEUS_TEST_MALFORMED_F64", Some("fast"), 1.5f64), 1.5);
+
+        // Valid values still parse; unset and empty stay silent defaults.
+        assert_eq!(env_parse_raw("THESEUS_TEST_VALID_USIZE", Some("42"), 0usize), 42);
+        assert_eq!(env_parse_raw("THESEUS_TEST_EMPTY_USIZE", Some(""), 5usize), 5);
+        assert_eq!(env_parse_raw("THESEUS_TEST_UNSET_U64", None, 11u64), 11);
+        assert!(!warned_env_vars()
+            .lock()
+            .unwrap()
+            .contains("THESEUS_TEST_EMPTY_USIZE"));
+
+        // And the public wrappers read the (untouched) real environment:
+        // unset vars silently fall back.
+        assert_eq!(env_usize("THESEUS_TEST_UNSET_NOBODY_SETS", 13), 13);
+        assert_eq!(env_u64("THESEUS_TEST_UNSET_NOBODY_SETS", 17), 17);
+        assert_eq!(env_f64("THESEUS_TEST_UNSET_NOBODY_SETS", 2.5), 2.5);
     }
 }

@@ -80,7 +80,7 @@ fn gnn_tracks_ca_ordering_better_or_close() {
         let (ch, core) = chunk(h, w, seq);
         let waits = m.link_waits(&ch, &core).unwrap();
         gnn_lat.push(chunk_latency(&ch, &core, 1.0, NocModel::LinkWaits(&waits)).cycles);
-        let stats = theseus::noc_sim::simulate_chunk(
+        let stats = theseus::noc_sim::simulate_chunk_result(
             &ch,
             core.noc_bw_bits,
             &|op| {
@@ -89,7 +89,8 @@ fn gnn_tracks_ca_ordering_better_or_close() {
                     .ceil() as u64
             },
             300_000_000,
-        );
+        )
+        .expect("CA simulation within budget");
         ca_lat.push(stats.cycles as f64);
     }
     let tau = theseus::util::stats::kendall_tau(&gnn_lat, &ca_lat);
@@ -101,4 +102,31 @@ fn oversize_region_falls_back() {
     let Some(m) = model() else { return };
     let (ch, core) = chunk(17, 17, 32);
     assert!(m.predict_link_waits(&ch, &core).unwrap().is_none());
+}
+
+#[test]
+fn batched_inference_tracks_per_chunk() {
+    // The batcher over the real PJRT executable: batched predictions must
+    // match per-chunk predictions (approximately — XLA may reassociate
+    // f32 reductions under the vmapped batch program).
+    use theseus::runtime::batch::GnnBatcher;
+    let Some(m) = model() else { return };
+    let built = [chunk(3, 3, 32), chunk(4, 4, 64), chunk(17, 17, 32), chunk(4, 3, 32)];
+    let reqs: Vec<(&theseus::compiler::CompiledChunk, &CoreConfig)> =
+        built.iter().map(|(c, k)| (c, k)).collect();
+    let batched = GnnBatcher::new(&m, 4).link_waits_many(&reqs);
+    assert!(batched[2].is_none(), "oversize chunk must fall back");
+    for (i, (c, k)) in reqs.iter().enumerate() {
+        let direct = m.predict_link_waits(c, k).expect("predict");
+        match (&batched[i], &direct) {
+            (Some(b), Some(d)) => {
+                assert_eq!(b.len(), d.len(), "chunk {i}");
+                for (x, y) in b.iter().zip(d) {
+                    assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0), "chunk {i}: {x} vs {y}");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("chunk {i}: batched/per-chunk fallback disagrees"),
+        }
+    }
 }
