@@ -1,0 +1,13 @@
+"""Make `compile` importable regardless of pytest's invocation directory.
+
+`scripts/ci_check.sh` runs `pytest python/tests -q` from the repo root;
+the test modules import `from compile import ...`, which lives in
+`python/compile`. Putting `python/` on sys.path here keeps both
+invocations (`cd python && pytest tests` and root-level `pytest
+python/tests`) working.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

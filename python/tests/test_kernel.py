@@ -3,6 +3,10 @@ with hypothesis sweeping shapes and value distributions."""
 
 import numpy as np
 import pytest
+
+# Offline CI images may lack hypothesis; skip (loudly) instead of erroring
+# the whole collection.
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

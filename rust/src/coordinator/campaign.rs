@@ -1,0 +1,960 @@
+//! Scenario campaign engine: one-command reproduction of the paper's full
+//! DSE evaluation matrix (§IX).
+//!
+//! A [`Scenario`] is a declarative spec — model × phase (training /
+//! prefill / decode) × inference batch × wafer count × explorer × fidelity
+//! × BO budget — serializable to/from JSON. [`paper_suite`] mirrors the
+//! §IX matrix (every Table II model × training + inference × {random,
+//! mobo, mfmobo}); [`run_campaign`] fans scenarios over the thread pool
+//! while the compile-chunk ([`crate::compiler::cache`]) and tile
+//! ([`crate::eval::tile`]) memo caches — process-wide singletons — stay
+//! shared across scenarios, so identical regions compiled by one scenario
+//! are cache hits for the next.
+//!
+//! # Determinism contract
+//!
+//! Each scenario's RNG seed is derived as
+//! `scenario_seed(campaign_seed, scenario.key())` — FNV-1a over the key
+//! string, XORed into the campaign seed and finalized with SplitMix64 —
+//! so a scenario's trace depends only on the campaign seed and its own
+//! spec, never on sibling scenarios, worker interleaving, or position in
+//! the matrix. Two runs with the same campaign seed produce byte-identical
+//! artifacts (enforced by `rust/tests/campaign.rs`); adding or removing
+//! scenarios does not perturb the survivors.
+//!
+//! # Failure isolation
+//!
+//! A failing scenario (unknown model key, unsupported fidelity, panic in
+//! the evaluation stack) records an error row instead of aborting the
+//! campaign; `campaign.json` reports per-row status.
+
+use std::panic::AssertUnwindSafe;
+
+use crate::baselines::{h100_infer_eval, h100_train_eval};
+use crate::coordinator::{ref_power_for, AnalyticalTraining, Explorer, TrainingObjective};
+use crate::design_space::Validated;
+use crate::eval::{self, Analytical};
+use crate::explorer::{
+    mfmobo, mobo, random_search, random_search_par, BoConfig, DesignEval, MfConfig, Objective,
+    Trace, TracePoint,
+};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::workload::{models, LlmSpec};
+
+use super::objective::system_for;
+
+/// Which workload phase a scenario optimizes for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioPhase {
+    Training,
+    /// Inference prompt processing: throughput = prompt tokens/s.
+    Prefill,
+    /// Inference generation: throughput = generated tokens/s across the
+    /// batch (the §IX-D serving metric).
+    Decode,
+}
+
+impl ScenarioPhase {
+    pub fn parse(s: &str) -> Option<ScenarioPhase> {
+        match s {
+            "training" => Some(ScenarioPhase::Training),
+            "prefill" => Some(ScenarioPhase::Prefill),
+            "decode" => Some(ScenarioPhase::Decode),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioPhase::Training => "training",
+            ScenarioPhase::Prefill => "prefill",
+            ScenarioPhase::Decode => "decode",
+        }
+    }
+
+    pub fn is_inference(&self) -> bool {
+        !matches!(self, ScenarioPhase::Training)
+    }
+}
+
+/// Evaluation fidelity of a scenario's objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Closed-form NoC model (§VI-C, low fidelity).
+    Analytical,
+    /// Deterministic pseudo-GNN ([`crate::runtime::TestBackend`]) through
+    /// the batched inference path — the high-fidelity stage in builds
+    /// without PJRT artifacts.
+    GnnTest,
+    /// Cycle-accurate NoC simulation (ground truth; expensive).
+    CycleAccurate,
+}
+
+impl Fidelity {
+    pub fn parse(s: &str) -> Option<Fidelity> {
+        match s {
+            "analytical" => Some(Fidelity::Analytical),
+            "gnn-test" => Some(Fidelity::GnnTest),
+            "cycle-accurate" => Some(Fidelity::CycleAccurate),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fidelity::Analytical => "analytical",
+            Fidelity::GnnTest => "gnn-test",
+            Fidelity::CycleAccurate => "cycle-accurate",
+        }
+    }
+}
+
+/// Explorer budget (the BO knobs of [`BoConfig`] plus MFMOBO's split).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Budget {
+    /// Evaluations after initialization.
+    pub iters: usize,
+    /// Initial design set size.
+    pub init: usize,
+    /// Candidate pool per BO iteration.
+    pub pool: usize,
+    /// Monte-Carlo EHVI samples.
+    pub mc: usize,
+    /// MFMOBO low-fidelity trials.
+    pub n1: usize,
+    /// MFMOBO guided-handoff iterations.
+    pub k: usize,
+}
+
+impl Default for Budget {
+    /// The paper's §VIII-C / §IX search budget (also the `theseus dse`
+    /// CLI defaults).
+    fn default() -> Budget {
+        Budget {
+            iters: 40,
+            init: 6,
+            pool: 96,
+            mc: 64,
+            n1: 40,
+            k: 8,
+        }
+    }
+}
+
+/// One declarative DSE scenario of a campaign.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Model key for [`models::find`] (index or name fragment).
+    pub model: String,
+    pub phase: ScenarioPhase,
+    /// Inference batch (sequences in flight); 0 for training scenarios
+    /// (the training batch comes from the model spec).
+    pub batch: usize,
+    /// Fixed wafer count; `None` = area-matched to the model's GPU
+    /// cluster (§VIII-A).
+    pub wafers: Option<usize>,
+    pub explorer: Explorer,
+    pub fidelity: Fidelity,
+    pub budget: Budget,
+    /// Free-form disambiguator, appended to [`Scenario::key`] when
+    /// non-empty. Budget-only variations (e.g. an iteration-count sweep)
+    /// don't show up in the key, so give each variant a distinct tag —
+    /// [`run_campaign`] rejects campaigns with colliding keys (they would
+    /// share a derived seed and overwrite each other's artifact file).
+    pub tag: String,
+}
+
+fn slugify(s: &str) -> String {
+    s.to_lowercase()
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '.' || c == '-' {
+                c
+            } else {
+                '-'
+            }
+        })
+        .collect()
+}
+
+impl Scenario {
+    /// Stable identifier: artifact filename and seed-derivation input.
+    pub fn key(&self) -> String {
+        let wafers = match self.wafers {
+            Some(n) => n.to_string(),
+            None => "auto".to_string(),
+        };
+        let mut key = format!(
+            "{}-{}-{}-{}-b{}-w{}",
+            slugify(&self.model),
+            self.phase.name(),
+            self.explorer.name(),
+            self.fidelity.name(),
+            self.batch,
+            wafers
+        );
+        if !self.tag.is_empty() {
+            key.push('-');
+            key.push_str(&slugify(&self.tag));
+        }
+        key
+    }
+
+    /// Flat JSON form (the schema pinned by
+    /// `rust/tests/golden/campaign_suite.json`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", Json::Str(self.model.clone()))
+            .set("phase", Json::Str(self.phase.name().to_string()))
+            .set("batch", Json::Num(self.batch as f64))
+            .set(
+                "wafers",
+                match self.wafers {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            )
+            .set("explorer", Json::Str(self.explorer.name().to_string()))
+            .set("fidelity", Json::Str(self.fidelity.name().to_string()))
+            .set("iters", Json::Num(self.budget.iters as f64))
+            .set("init", Json::Num(self.budget.init as f64))
+            .set("pool", Json::Num(self.budget.pool as f64))
+            .set("mc", Json::Num(self.budget.mc as f64))
+            .set("n1", Json::Num(self.budget.n1 as f64))
+            .set("k", Json::Num(self.budget.k as f64))
+            .set("tag", Json::Str(self.tag.clone()));
+        o
+    }
+
+    /// Every field [`Scenario::from_json`] accepts — anything else is
+    /// rejected (a typo like `iter` silently falling back to the
+    /// 40-iteration paper budget would burn hours across a matrix).
+    pub const FIELDS: [&'static str; 13] = [
+        "batch", "explorer", "fidelity", "init", "iters", "k", "mc", "model", "n1", "phase",
+        "pool", "tag", "wafers",
+    ];
+
+    /// Decode one scenario object. `model`, `phase` and `explorer` are
+    /// required; everything else defaults (fidelity analytical, batch 0 /
+    /// 32 by phase, wafers auto, paper budget, empty tag). Unknown fields
+    /// are errors, not silent fallbacks.
+    pub fn from_json(j: &Json) -> Result<Scenario, String> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| "scenario must be a JSON object".to_string())?;
+        for field in obj.keys() {
+            if !Scenario::FIELDS.iter().any(|f| *f == field.as_str()) {
+                return Err(format!(
+                    "unknown scenario field '{field}' — valid: {}",
+                    Scenario::FIELDS.join(", ")
+                ));
+            }
+        }
+        let str_field = |key: &str| -> Result<String, String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("scenario missing string field '{key}'"))
+        };
+        let usize_field = |key: &str, default: usize| -> Result<usize, String> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                    .map(|x| x as usize)
+                    .ok_or_else(|| format!("scenario field '{key}' must be a non-negative integer")),
+            }
+        };
+        let phase_s = str_field("phase")?;
+        let phase = ScenarioPhase::parse(&phase_s)
+            .ok_or_else(|| format!("unknown phase '{phase_s}' — valid: training, prefill, decode"))?;
+        let explorer_s = str_field("explorer")?;
+        let explorer = Explorer::parse(&explorer_s)
+            .ok_or_else(|| format!("unknown explorer '{explorer_s}' — valid: random, mobo, mfmobo"))?;
+        let fidelity_s = match j.get("fidelity") {
+            None | Some(Json::Null) => Fidelity::Analytical.name().to_string(),
+            Some(_) => str_field("fidelity")?,
+        };
+        let fidelity = Fidelity::parse(&fidelity_s).ok_or_else(|| {
+            format!("unknown fidelity '{fidelity_s}' — valid: analytical, gnn-test, cycle-accurate")
+        })?;
+        let default_budget = Budget::default();
+        let scenario = Scenario {
+            model: str_field("model")?,
+            phase,
+            batch: usize_field("batch", if phase.is_inference() { 32 } else { 0 })?,
+            wafers: match j.get("wafers") {
+                None | Some(Json::Null) => None,
+                Some(_) => Some(usize_field("wafers", 1)?),
+            },
+            explorer,
+            fidelity,
+            budget: Budget {
+                iters: usize_field("iters", default_budget.iters)?,
+                init: usize_field("init", default_budget.init)?,
+                pool: usize_field("pool", default_budget.pool)?,
+                mc: usize_field("mc", default_budget.mc)?,
+                n1: usize_field("n1", default_budget.n1)?,
+                k: usize_field("k", default_budget.k)?,
+            },
+            tag: match j.get("tag") {
+                None | Some(Json::Null) => String::new(),
+                Some(_) => str_field("tag")?,
+            },
+        };
+        if scenario.phase.is_inference() && scenario.batch == 0 {
+            return Err(format!(
+                "scenario '{}': inference phases need batch >= 1",
+                scenario.key()
+            ));
+        }
+        Ok(scenario)
+    }
+}
+
+/// Serialize a scenario list as `{"scenarios": [...]}` (the campaign-file
+/// format; also the golden-pinned form of [`paper_suite`]).
+pub fn suite_to_json(scenarios: &[Scenario]) -> Json {
+    let mut doc = Json::obj();
+    doc.set(
+        "scenarios",
+        Json::Arr(scenarios.iter().map(Scenario::to_json).collect()),
+    );
+    doc
+}
+
+/// Decode a campaign file: either `{"scenarios": [...]}` or a bare array.
+pub fn scenarios_from_json(j: &Json) -> Result<Vec<Scenario>, String> {
+    let arr = match j.get("scenarios") {
+        Some(v) => v,
+        None => j,
+    };
+    let arr = arr
+        .as_arr()
+        .ok_or_else(|| "campaign file must be a JSON array of scenarios or {\"scenarios\": [...]}".to_string())?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, s)| Scenario::from_json(s).map_err(|e| format!("scenario {i}: {e}")))
+        .collect()
+}
+
+/// The §IX evaluation matrix: every Table II benchmark × {training,
+/// decode inference} × {random, mobo, mfmobo}, analytical fidelity,
+/// area-matched sizing, the paper's search budget — 96 scenarios.
+pub fn paper_suite() -> Vec<Scenario> {
+    let budget = Budget::default();
+    let mut out = Vec::new();
+    for m in models::benchmarks() {
+        for phase in [ScenarioPhase::Training, ScenarioPhase::Decode] {
+            for explorer in [Explorer::Random, Explorer::Mobo, Explorer::Mfmobo] {
+                out.push(Scenario {
+                    model: m.name.clone(),
+                    phase,
+                    batch: if phase.is_inference() { 32 } else { 0 },
+                    wafers: None,
+                    explorer,
+                    fidelity: Fidelity::Analytical,
+                    budget,
+                    tag: String::new(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Derive a scenario's RNG seed from the campaign seed and the scenario
+/// key: FNV-1a(key) XOR campaign seed, finalized with SplitMix64. The
+/// derivation is position-independent — adding or removing sibling
+/// scenarios never changes a surviving scenario's stream.
+pub fn scenario_seed(campaign_seed: u64, key: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let mut z = campaign_seed ^ h;
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// A campaign: scenarios + the seed every scenario seed derives from +
+/// the fan-out width.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub scenarios: Vec<Scenario>,
+    pub seed: u64,
+    /// Concurrent scenarios (0 = thread-pool default). Each scenario's
+    /// evaluation fans strategies over its own pool, so a small `jobs`
+    /// bounds oversubscription.
+    pub jobs: usize,
+}
+
+/// One scenario's outcome: the trace, or the error that isolated it.
+#[derive(Debug)]
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    pub seed: u64,
+    pub outcome: Result<Trace, String>,
+}
+
+#[derive(Debug)]
+pub struct CampaignResult {
+    pub campaign_seed: u64,
+    pub rows: Vec<ScenarioResult>,
+}
+
+impl CampaignResult {
+    pub fn n_errors(&self) -> usize {
+        self.rows.iter().filter(|r| r.outcome.is_err()).count()
+    }
+}
+
+/// Phase-aware inference objective: throughput is the phase's serving
+/// metric (prompt tokens/s for prefill, generated tokens/s for decode),
+/// power the steady-state draw. Analytical fidelity only — `Sync`, so
+/// random search fans over the pool.
+struct PhaseInference {
+    spec: LlmSpec,
+    batch: usize,
+    phase: ScenarioPhase,
+    wafers: Option<usize>,
+}
+
+impl DesignEval for PhaseInference {
+    fn eval(&self, v: &Validated) -> Option<Objective> {
+        let sys = system_for(v, self.spec.gpu_num, self.wafers);
+        let r = eval::eval_inference(&self.spec, &sys, self.batch, false, &Analytical)?;
+        let throughput = match self.phase {
+            ScenarioPhase::Prefill => (self.batch * self.spec.seq_len) as f64 / r.prefill_s,
+            _ => self.batch as f64 / r.decode_step_s,
+        };
+        if !throughput.is_finite() {
+            return None;
+        }
+        Some(Objective {
+            throughput,
+            power_w: r.power_w,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        match self.phase {
+            ScenarioPhase::Prefill => "inference-prefill",
+            _ => "inference-decode",
+        }
+    }
+}
+
+fn bo_config(s: &Scenario, spec: &LlmSpec, seed: u64) -> BoConfig {
+    BoConfig {
+        iters: s.budget.iters,
+        init: s.budget.init,
+        pool: s.budget.pool,
+        mc_samples: s.budget.mc,
+        ref_power: ref_power_for(spec),
+        seed,
+        sample_tries: 4000,
+    }
+}
+
+fn mf_config(s: &Scenario, cfg: &BoConfig) -> MfConfig {
+    MfConfig {
+        base: cfg.clone(),
+        n1: s.budget.n1,
+        d0: cfg.init,
+        d1: cfg.init,
+        k: s.budget.k,
+    }
+}
+
+fn run_training(s: &Scenario, spec: &LlmSpec, cfg: &BoConfig) -> Trace {
+    let high: Box<dyn DesignEval> = match s.fidelity {
+        Fidelity::Analytical => {
+            Box::new(TrainingObjective::analytical(spec.clone()).with_wafers(s.wafers))
+        }
+        Fidelity::GnnTest => {
+            Box::new(TrainingObjective::pseudo_gnn(spec.clone()).with_wafers(s.wafers))
+        }
+        Fidelity::CycleAccurate => {
+            Box::new(TrainingObjective::cycle_accurate(spec.clone()).with_wafers(s.wafers))
+        }
+    };
+    match s.explorer {
+        // Analytical random search is Sync: fan evaluations over the pool
+        // (forked per-slot RNG streams keep it deterministic in the seed).
+        Explorer::Random if s.fidelity == Fidelity::Analytical => random_search_par(
+            &AnalyticalTraining {
+                spec: spec.clone(),
+                wafers: s.wafers,
+            },
+            cfg,
+        ),
+        Explorer::Random => random_search(high.as_ref(), cfg),
+        Explorer::Mobo => mobo(high.as_ref(), cfg),
+        Explorer::Mfmobo => {
+            let low = TrainingObjective::analytical(spec.clone()).with_wafers(s.wafers);
+            mfmobo(high.as_ref(), &low, &mf_config(s, cfg))
+        }
+    }
+}
+
+fn run_inference(s: &Scenario, spec: &LlmSpec, cfg: &BoConfig) -> Result<Trace, String> {
+    if s.fidelity != Fidelity::Analytical {
+        return Err(format!(
+            "inference scenarios support fidelity 'analytical' only (got '{}')",
+            s.fidelity.name()
+        ));
+    }
+    let obj = PhaseInference {
+        spec: spec.clone(),
+        batch: s.batch.max(1),
+        phase: s.phase,
+        wafers: s.wafers,
+    };
+    Ok(match s.explorer {
+        Explorer::Random => random_search_par(&obj, cfg),
+        Explorer::Mobo => mobo(&obj, cfg),
+        // Inference has a single fidelity; MFMOBO degenerates to the same
+        // objective at both levels (the budget split still applies).
+        Explorer::Mfmobo => mfmobo(&obj, &obj, &mf_config(s, cfg)),
+    })
+}
+
+/// Run one scenario at its derived seed.
+pub fn run_scenario(s: &Scenario, seed: u64) -> Result<Trace, String> {
+    let spec = models::find_or_usage(&s.model)?;
+    let cfg = bo_config(s, &spec, seed);
+    match s.phase {
+        ScenarioPhase::Training => Ok(run_training(s, &spec, &cfg)),
+        _ => run_inference(s, &spec, &cfg),
+    }
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: (non-string payload)".to_string()
+    }
+}
+
+/// Execute every scenario (fanned over the pool, `cfg.jobs` wide); a
+/// failing scenario records an error row instead of sinking the campaign.
+///
+/// Errors up front — before any evaluation — if two scenarios share a
+/// [`Scenario::key`]: colliding keys would derive the same RNG seed and
+/// overwrite each other's `scenarios/<key>.json` artifact. Give
+/// budget-only variants distinct `tag`s.
+pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignResult, String> {
+    let mut seen: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    for (i, s) in cfg.scenarios.iter().enumerate() {
+        if let Some(first) = seen.insert(s.key(), i) {
+            return Err(format!(
+                "duplicate scenario key '{}' (scenarios {first} and {i}) — keys must be \
+                 unique (shared derived seed + artifact overwrite); set a distinct \"tag\"",
+                s.key()
+            ));
+        }
+    }
+    let rows = pool::par_map_workers(&cfg.scenarios, cfg.jobs, |s| {
+        let seed = scenario_seed(cfg.seed, &s.key());
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| run_scenario(s, seed)))
+            .unwrap_or_else(|p| Err(panic_message(p)));
+        ScenarioResult {
+            scenario: s.clone(),
+            seed,
+            outcome,
+        }
+    });
+    Ok(CampaignResult {
+        campaign_seed: cfg.seed,
+        rows,
+    })
+}
+
+/// Pareto front of a trace in deterministic order: throughput descending,
+/// ties by power ascending then config summary.
+pub fn sorted_front(trace: &Trace) -> Vec<&TracePoint> {
+    let mut front = trace.pareto();
+    front.sort_by(|a, b| {
+        b.objective
+            .throughput
+            .partial_cmp(&a.objective.throughput)
+            .unwrap()
+            .then(a.objective.power_w.partial_cmp(&b.objective.power_w).unwrap())
+            .then_with(|| a.point.wsc.summary().cmp(&b.point.wsc.summary()))
+    });
+    front
+}
+
+/// GPU-cluster reference for a scenario, in the scenario's own throughput
+/// metric: `(throughput, power_w)` of the area-matched H100 cluster.
+pub fn gpu_reference(s: &Scenario, spec: &LlmSpec) -> Option<(f64, f64)> {
+    match s.phase {
+        ScenarioPhase::Training => {
+            h100_train_eval(spec, spec.gpu_num).map(|r| (r.tokens_per_sec, r.power_w))
+        }
+        ScenarioPhase::Prefill => h100_infer_eval(spec, spec.gpu_num, s.batch.max(1), false)
+            .map(|r| ((s.batch.max(1) * spec.seq_len) as f64 / r.prefill_s, r.power_w)),
+        ScenarioPhase::Decode => h100_infer_eval(spec, spec.gpu_num, s.batch.max(1), false)
+            .map(|r| (s.batch.max(1) as f64 / r.decode_step_s, r.power_w)),
+    }
+}
+
+/// Per-row digest — the single source of truth for "best Pareto point"
+/// and the GPU comparison, shared by [`summary_json`] and the
+/// [`crate::figures::campaign`] table so the two renderings cannot drift.
+#[derive(Debug, Clone)]
+pub struct RowSummary {
+    pub key: String,
+    /// `Some(message)` for error rows (all metric fields then empty).
+    pub error: Option<String>,
+    pub points: usize,
+    pub final_hv: f64,
+    pub best_throughput: Option<f64>,
+    pub best_power_w: Option<f64>,
+    pub gpu_throughput: Option<f64>,
+    pub gpu_power_w: Option<f64>,
+    pub speedup_vs_gpu: Option<f64>,
+}
+
+pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
+    let key = r.scenario.key();
+    match &r.outcome {
+        Err(e) => RowSummary {
+            key,
+            error: Some(e.clone()),
+            points: 0,
+            final_hv: 0.0,
+            best_throughput: None,
+            best_power_w: None,
+            gpu_throughput: None,
+            gpu_power_w: None,
+            speedup_vs_gpu: None,
+        },
+        Ok(trace) => {
+            let front = sorted_front(trace);
+            let best = front
+                .first()
+                .map(|p| (p.objective.throughput, p.objective.power_w));
+            let gpu = models::find(&r.scenario.model)
+                .and_then(|spec| gpu_reference(&r.scenario, &spec));
+            RowSummary {
+                key,
+                error: None,
+                points: trace.points.len(),
+                final_hv: trace.final_hv(),
+                best_throughput: best.map(|b| b.0),
+                best_power_w: best.map(|b| b.1),
+                gpu_throughput: gpu.map(|g| g.0),
+                gpu_power_w: gpu.map(|g| g.1),
+                speedup_vs_gpu: match (best, gpu) {
+                    (Some(b), Some(g)) => Some(b.0 / g.0),
+                    _ => None,
+                },
+            }
+        }
+    }
+}
+
+/// Per-scenario artifact: spec + seed + trace + Pareto front +
+/// hypervolume (or the error row). Excludes wall-clock so artifacts are
+/// byte-identical across same-seed runs.
+pub fn scenario_result_json(r: &ScenarioResult) -> Json {
+    let mut doc = Json::obj();
+    doc.set("key", Json::Str(r.scenario.key()))
+        .set("scenario", r.scenario.to_json())
+        // Seeds are full-width u64; JSON numbers are f64, so keep exact.
+        .set("seed", Json::Str(r.seed.to_string()));
+    match &r.outcome {
+        Ok(trace) => {
+            let mut pareto = Vec::new();
+            for p in sorted_front(trace) {
+                let mut o = Json::obj();
+                o.set("throughput", Json::Num(p.objective.throughput))
+                    .set("power_w", Json::Num(p.objective.power_w))
+                    .set("fidelity", Json::Str(p.fidelity.to_string()))
+                    .set("config", Json::Str(p.point.wsc.summary()));
+                pareto.push(o);
+            }
+            doc.set("status", Json::Str("ok".to_string()))
+                .set("trace", super::trace_to_json(trace))
+                .set("pareto", Json::Arr(pareto))
+                .set("final_hv", Json::Num(trace.final_hv()))
+                .set("points", Json::Num(trace.points.len() as f64));
+        }
+        Err(e) => {
+            doc.set("status", Json::Str("error".to_string()))
+                .set("error", Json::Str(e.clone()));
+        }
+    }
+    doc
+}
+
+/// Cross-scenario summary (the `campaign.json` artifact): one row per
+/// scenario with final hypervolume, the best point, and the
+/// throughput/power comparison against the [`crate::baselines::gpu`]
+/// reference (Fig. 11–13 in spirit).
+pub fn summary_json(result: &CampaignResult) -> Json {
+    let opt_num = |x: Option<f64>| x.map_or(Json::Null, Json::Num);
+    let mut rows = Vec::new();
+    for r in &result.rows {
+        let s = summarize_row(r);
+        let mut o = Json::obj();
+        o.set("key", Json::Str(s.key))
+            .set("model", Json::Str(r.scenario.model.clone()))
+            .set("phase", Json::Str(r.scenario.phase.name().to_string()))
+            .set("explorer", Json::Str(r.scenario.explorer.name().to_string()))
+            .set("fidelity", Json::Str(r.scenario.fidelity.name().to_string()))
+            .set("seed", Json::Str(r.seed.to_string()));
+        match s.error {
+            None => {
+                o.set("status", Json::Str("ok".to_string()))
+                    .set("points", Json::Num(s.points as f64))
+                    .set("final_hv", Json::Num(s.final_hv))
+                    .set("best_throughput", opt_num(s.best_throughput))
+                    .set("best_power_w", opt_num(s.best_power_w))
+                    .set("gpu_throughput", opt_num(s.gpu_throughput))
+                    .set("gpu_power_w", opt_num(s.gpu_power_w))
+                    .set("speedup_vs_gpu", opt_num(s.speedup_vs_gpu));
+            }
+            Some(e) => {
+                o.set("status", Json::Str("error".to_string()))
+                    .set("error", Json::Str(e));
+            }
+        }
+        rows.push(o);
+    }
+    let mut doc = Json::obj();
+    doc.set("campaign_seed", Json::Str(result.campaign_seed.to_string()))
+        .set("n_scenarios", Json::Num(result.rows.len() as f64))
+        .set("n_errors", Json::Num(result.n_errors() as f64))
+        .set("scenarios", Json::Arr(rows));
+    doc
+}
+
+/// Write the results store under `out`: `campaign.json` (cross-scenario
+/// summary) + `scenarios/<key>.json` (per-scenario trace / Pareto front /
+/// hypervolume or error row). All files are deterministic in the campaign
+/// seed.
+pub fn write_artifacts(result: &CampaignResult, out: &std::path::Path) -> std::io::Result<()> {
+    let scen_dir = out.join("scenarios");
+    std::fs::create_dir_all(&scen_dir)?;
+    for r in &result.rows {
+        std::fs::write(
+            scen_dir.join(format!("{}.json", r.scenario.key())),
+            scenario_result_json(r).to_pretty() + "\n",
+        )?;
+    }
+    std::fs::write(
+        out.join("campaign.json"),
+        summary_json(result).to_pretty() + "\n",
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_suite_shape() {
+        let suite = paper_suite();
+        // 16 models × {training, decode} × {random, mobo, mfmobo}.
+        assert_eq!(suite.len(), 96);
+        let mut keys: Vec<String> = suite.iter().map(Scenario::key).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 96, "scenario keys must be unique");
+        assert!(suite.iter().all(|s| s.fidelity == Fidelity::Analytical));
+        assert!(suite
+            .iter()
+            .filter(|s| s.phase == ScenarioPhase::Training)
+            .all(|s| s.batch == 0));
+        assert!(suite
+            .iter()
+            .filter(|s| s.phase.is_inference())
+            .all(|s| s.batch == 32));
+    }
+
+    #[test]
+    fn scenario_json_roundtrip() {
+        for s in [
+            paper_suite()[0].clone(),
+            Scenario {
+                model: "GPT-175B".to_string(),
+                phase: ScenarioPhase::Prefill,
+                batch: 8,
+                wafers: Some(4),
+                explorer: Explorer::Mobo,
+                fidelity: Fidelity::GnnTest,
+                budget: Budget {
+                    iters: 3,
+                    init: 2,
+                    pool: 8,
+                    mc: 16,
+                    n1: 2,
+                    k: 1,
+                },
+                tag: "Budget Sweep A".to_string(),
+            },
+        ] {
+            let j = s.to_json();
+            let back = Scenario::from_json(&j).unwrap();
+            assert_eq!(back, s);
+            // And through the text form.
+            let reparsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(Scenario::from_json(&reparsed).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn from_json_defaults_and_errors_list_options() {
+        let minimal = Json::parse(
+            r#"{"model": "1.7", "phase": "decode", "explorer": "random"}"#,
+        )
+        .unwrap();
+        let s = Scenario::from_json(&minimal).unwrap();
+        assert_eq!(s.batch, 32);
+        assert_eq!(s.wafers, None);
+        assert_eq!(s.fidelity, Fidelity::Analytical);
+        assert_eq!(s.budget, Budget::default());
+        assert_eq!(s.tag, "");
+
+        let bad_phase =
+            Json::parse(r#"{"model": "1.7", "phase": "serving", "explorer": "random"}"#).unwrap();
+        let e = Scenario::from_json(&bad_phase).unwrap_err();
+        assert!(e.contains("training, prefill, decode"), "{e}");
+
+        let bad_explorer =
+            Json::parse(r#"{"model": "1.7", "phase": "decode", "explorer": "grid"}"#).unwrap();
+        let e = Scenario::from_json(&bad_explorer).unwrap_err();
+        assert!(e.contains("random, mobo, mfmobo"), "{e}");
+
+        let bad_fidelity = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "mobo", "fidelity": "oracle"}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&bad_fidelity).unwrap_err();
+        assert!(e.contains("analytical, gnn-test, cycle-accurate"), "{e}");
+
+        let zero_batch = Json::parse(
+            r#"{"model": "1.7", "phase": "decode", "explorer": "random", "batch": 0}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&zero_batch)
+            .unwrap_err()
+            .contains("batch >= 1"));
+    }
+
+    #[test]
+    fn scenarios_from_json_accepts_both_shapes() {
+        let arr = Json::parse(r#"[{"model": "1.7", "phase": "training", "explorer": "random"}]"#)
+            .unwrap();
+        assert_eq!(scenarios_from_json(&arr).unwrap().len(), 1);
+        let wrapped = suite_to_json(&paper_suite());
+        assert_eq!(scenarios_from_json(&wrapped).unwrap(), paper_suite());
+        let bad = Json::parse(r#"{"model": "x"}"#).unwrap();
+        assert!(scenarios_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn seed_derivation_is_stable_and_key_sensitive() {
+        let a = scenario_seed(2024, "gpt-1.7b-training-random-analytical-b0-wauto");
+        assert_eq!(
+            a,
+            scenario_seed(2024, "gpt-1.7b-training-random-analytical-b0-wauto")
+        );
+        assert_ne!(
+            a,
+            scenario_seed(2024, "gpt-1.7b-training-mobo-analytical-b0-wauto")
+        );
+        assert_ne!(
+            a,
+            scenario_seed(2025, "gpt-1.7b-training-random-analytical-b0-wauto")
+        );
+        // Every paper-suite scenario gets a distinct stream.
+        let mut seeds: Vec<u64> = paper_suite()
+            .iter()
+            .map(|s| scenario_seed(7, &s.key()))
+            .collect();
+        seeds.sort();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 96);
+    }
+
+    #[test]
+    fn tag_disambiguates_keys_and_duplicates_are_rejected() {
+        let mut a = paper_suite()[0].clone();
+        let mut b = a.clone();
+        b.budget.iters = 10; // budget-only difference: invisible in the key
+        assert_eq!(a.key(), b.key());
+        let cfg = CampaignConfig {
+            scenarios: vec![a.clone(), b.clone()],
+            seed: 1,
+            jobs: 1,
+        };
+        let e = run_campaign(&cfg).unwrap_err();
+        assert!(e.contains("duplicate scenario key"), "{e}");
+        assert!(e.contains(&a.key()), "{e}");
+        // A tag restores uniqueness (and is slugged into the key).
+        a.tag = "iters 40".to_string();
+        b.tag = "iters10".to_string();
+        assert_ne!(a.key(), b.key());
+        assert!(a.key().ends_with("-iters-40"), "{}", a.key());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_fields() {
+        let typo = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "mobo", "iter": 1}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&typo).unwrap_err();
+        assert!(e.contains("unknown scenario field 'iter'"), "{e}");
+        assert!(e.contains("iters"), "must list the valid fields: {e}");
+        assert!(Scenario::from_json(&Json::Num(3.0))
+            .unwrap_err()
+            .contains("JSON object"));
+    }
+
+    #[test]
+    fn unknown_model_scenario_is_an_error_not_a_fallback() {
+        let s = Scenario {
+            model: "no-such-model".to_string(),
+            phase: ScenarioPhase::Training,
+            batch: 0,
+            wafers: None,
+            explorer: Explorer::Random,
+            fidelity: Fidelity::Analytical,
+            budget: Budget::default(),
+            tag: String::new(),
+        };
+        let e = run_scenario(&s, 1).unwrap_err();
+        assert!(e.contains("unknown model 'no-such-model'"), "{e}");
+        assert!(e.contains("GPT-175B"), "error must list valid models: {e}");
+    }
+
+    #[test]
+    fn inference_rejects_non_analytical_fidelity() {
+        let s = Scenario {
+            model: "1.7".to_string(),
+            phase: ScenarioPhase::Decode,
+            batch: 8,
+            wafers: None,
+            explorer: Explorer::Random,
+            fidelity: Fidelity::CycleAccurate,
+            budget: Budget::default(),
+            tag: String::new(),
+        };
+        let e = run_scenario(&s, 1).unwrap_err();
+        assert!(e.contains("analytical"), "{e}");
+    }
+}

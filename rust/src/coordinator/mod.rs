@@ -4,7 +4,27 @@
 //!
 //! This is Layer 3's event loop: evaluations fan out over the thread pool,
 //! traces checkpoint to JSON, and the Pareto set prints as a table.
+//!
+//! # Scenario campaigns ([`campaign`])
+//!
+//! One `theseus dse` invocation runs a single `(model, phase, explorer)`
+//! tuple; the [`campaign`] subsystem batches the paper's whole §IX matrix:
+//!
+//! ```text
+//! # the built-in §IX suite (96 scenarios), 4 at a time:
+//! theseus campaign --suite paper --out artifacts/campaign --seed 2024 --jobs 4
+//! # or a custom matrix from a JSON file (see campaign::scenarios_from_json):
+//! theseus campaign --scenarios my_sweep.json --out artifacts/sweep
+//! ```
+//!
+//! Each scenario's RNG seed derives as `scenario_seed(campaign_seed,
+//! scenario.key())` — FNV-1a over the scenario key folded into the
+//! campaign seed and SplitMix64-finalized — so results are reproducible
+//! per scenario (independent of sibling scenarios and worker
+//! interleaving), and two same-seed campaign runs write byte-identical
+//! artifacts (`campaign.json` + `scenarios/<key>.json`).
 
+pub mod campaign;
 pub mod objective;
 
 use std::sync::Arc;
@@ -33,6 +53,14 @@ impl Explorer {
             "mfmobo" => Some(Explorer::Mfmobo),
             _ => None,
         }
+    }
+
+    /// [`Explorer::parse`] with a human-oriented error naming the valid
+    /// explorers — CLI call sites print this and exit 1 instead of
+    /// silently falling back.
+    pub fn parse_or_usage(s: &str) -> Result<Explorer, String> {
+        Explorer::parse(s)
+            .ok_or_else(|| format!("unknown explorer '{s}' — valid: random, mobo, mfmobo"))
     }
 
     pub fn name(&self) -> &'static str {
@@ -83,6 +111,7 @@ pub fn run(run: &DseRun) -> Trace {
         Explorer::Random if gnn.is_none() => explorer::random_search_par(
             &AnalyticalTraining {
                 spec: run.spec.clone(),
+                wafers: None,
             },
             &run.cfg,
         ),
@@ -123,12 +152,19 @@ pub fn trace_to_json(trace: &Trace) -> Json {
     doc
 }
 
-/// CLI entry (the `theseus dse` subcommand).
+/// CLI entry (the `theseus dse` subcommand). Unknown `--model` /
+/// `--explorer` keys exit 1 listing the valid options (never a silent
+/// fallback to a default).
 pub fn run_from_cli(args: &Args) {
     let model = args.str("model", "175b");
-    let spec = models::find(&model).expect("unknown model (try an index 0..15 or a name fragment)");
-    let explorer =
-        Explorer::parse(&args.str("explorer", "mfmobo")).expect("explorer: random|mobo|mfmobo");
+    let spec = models::find_or_usage(&model).unwrap_or_else(|e| {
+        eprintln!("dse: {e}");
+        std::process::exit(1);
+    });
+    let explorer = Explorer::parse_or_usage(&args.str("explorer", "mfmobo")).unwrap_or_else(|e| {
+        eprintln!("dse: {e}");
+        std::process::exit(1);
+    });
     let cfg = BoConfig {
         iters: args.usize("iters", 40),
         init: args.usize("init", 6),
@@ -193,6 +229,14 @@ mod tests {
     fn explorer_parse() {
         assert_eq!(Explorer::parse("mfmobo"), Some(Explorer::Mfmobo));
         assert_eq!(Explorer::parse("nope"), None);
+    }
+
+    #[test]
+    fn explorer_parse_or_usage_lists_options() {
+        assert_eq!(Explorer::parse_or_usage("mobo"), Ok(Explorer::Mobo));
+        let e = Explorer::parse_or_usage("grid").unwrap_err();
+        assert!(e.contains("unknown explorer 'grid'"), "{e}");
+        assert!(e.contains("random, mobo, mfmobo"), "{e}");
     }
 
     #[test]

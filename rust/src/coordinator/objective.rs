@@ -20,10 +20,25 @@ pub fn ref_power_for(spec: &LlmSpec) -> f64 {
     crate::arch::constants::WAFER_POWER_LIMIT_W * wafers
 }
 
+/// System sizing shared by every objective: a fixed wafer count when the
+/// scenario pins one (multi-wafer sweeps), else area-matched to the
+/// model's GPU-cluster baseline (§VIII-A).
+pub fn system_for(v: &Validated, gpu_num: usize, wafers: Option<usize>) -> SystemConfig {
+    match wafers {
+        Some(n) => SystemConfig {
+            validated: v.clone(),
+            n_wafers: n.max(1),
+        },
+        None => SystemConfig::area_matched(v.clone(), gpu_num),
+    }
+}
+
 /// Training-throughput objective at a chosen NoC fidelity.
 pub struct TrainingObjective {
     spec: LlmSpec,
     noc: NocBackend,
+    /// Fixed wafer count; `None` = area-matched (the default).
+    wafers: Option<usize>,
 }
 
 enum NocBackend {
@@ -40,6 +55,7 @@ impl TrainingObjective {
         TrainingObjective {
             spec,
             noc: NocBackend::Analytical,
+            wafers: None,
         }
     }
 
@@ -47,6 +63,7 @@ impl TrainingObjective {
         TrainingObjective {
             spec,
             noc: NocBackend::Gnn(model),
+            wafers: None,
         }
     }
 
@@ -56,6 +73,7 @@ impl TrainingObjective {
         TrainingObjective {
             spec,
             noc: NocBackend::PseudoGnn(crate::runtime::TestBackend::new()),
+            wafers: None,
         }
     }
 
@@ -63,13 +81,21 @@ impl TrainingObjective {
         TrainingObjective {
             spec,
             noc: NocBackend::CycleAccurate,
+            wafers: None,
         }
+    }
+
+    /// Pin the system to a fixed wafer count (campaign multi-wafer
+    /// scenarios); `None` restores area matching.
+    pub fn with_wafers(mut self, wafers: Option<usize>) -> Self {
+        self.wafers = wafers;
+        self
     }
 }
 
 impl DesignEval for TrainingObjective {
     fn eval(&self, v: &Validated) -> Option<Objective> {
-        let sys = SystemConfig::area_matched(v.clone(), self.spec.gpu_num);
+        let sys = system_for(v, self.spec.gpu_num, self.wafers);
         // The Sync fidelities fan the strategy sweep out over the thread
         // pool; the GNN's PJRT handle is thread-confined, so that fidelity
         // amortizes per-call dispatch by *batching* link-wait inference
@@ -109,11 +135,13 @@ impl DesignEval for TrainingObjective {
 /// executable), so pooled call sites use this concrete type instead.
 pub struct AnalyticalTraining {
     pub spec: LlmSpec,
+    /// Fixed wafer count; `None` = area-matched.
+    pub wafers: Option<usize>,
 }
 
 impl DesignEval for AnalyticalTraining {
     fn eval(&self, v: &Validated) -> Option<Objective> {
-        let sys = SystemConfig::area_matched(v.clone(), self.spec.gpu_num);
+        let sys = system_for(v, self.spec.gpu_num, self.wafers);
         let r = eval::eval_training(&self.spec, &sys, &Analytical)?;
         Some(Objective {
             throughput: r.tokens_per_sec,
@@ -175,6 +203,23 @@ mod tests {
         let v = validate(&reference_point()).unwrap();
         let o = obj.eval(&v).expect("evaluable");
         assert!(o.throughput > 0.0);
+    }
+
+    #[test]
+    fn wafer_override_pins_system_sizing() {
+        let spec = benchmarks()[0].clone();
+        let v = validate(&reference_point()).unwrap();
+        assert_eq!(system_for(&v, spec.gpu_num, Some(3)).n_wafers, 3);
+        assert_eq!(system_for(&v, spec.gpu_num, Some(0)).n_wafers, 1);
+        let auto = system_for(&v, spec.gpu_num, None);
+        assert_eq!(
+            auto.n_wafers,
+            SystemConfig::area_matched(v.clone(), spec.gpu_num).n_wafers
+        );
+        // And the objective rides the override end to end.
+        let obj = TrainingObjective::analytical(spec).with_wafers(Some(1));
+        let o = obj.eval(&v).expect("single-wafer point evaluable");
+        assert!(o.throughput > 0.0 && o.power_w > 0.0);
     }
 
     #[test]

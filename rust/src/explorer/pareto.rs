@@ -182,6 +182,167 @@ mod tests {
         assert!(uncertain > certain + 1e-9);
     }
 
+    /// Random objective sets with deliberate exact duplicates (dominance
+    /// is non-strict on ties, so duplicates are the sharp edge case).
+    fn gen_objs(r: &mut crate::util::rng::Rng) -> Vec<Objective> {
+        let n = r.range(1, 16);
+        let mut v: Vec<Objective> = Vec::with_capacity(n);
+        for _ in 0..n {
+            if !v.is_empty() && r.bool(0.25) {
+                let dup = *r.choose(&v);
+                v.push(dup);
+            } else {
+                v.push(o(r.uniform(0.1, 5.0), r.uniform(0.0, 9.0)));
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn prop_pareto_indices_exactly_nondominated() {
+        // Membership is by the definition itself: i is returned iff no
+        // other point dominates it — pinned so a future faster
+        // implementation (sort-based sweep) cannot drift on ties.
+        crate::util::prop::check("pareto_indices = non-dominated set", gen_objs, |objs| {
+            let front: std::collections::BTreeSet<usize> =
+                pareto_indices(objs).into_iter().collect();
+            for i in 0..objs.len() {
+                let dominated = objs
+                    .iter()
+                    .enumerate()
+                    .any(|(j, q)| j != i && q.dominates(&objs[i]));
+                if front.contains(&i) == dominated {
+                    return Err(format!(
+                        "index {i}: dominated={dominated} but in-front={}",
+                        front.contains(&i)
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hv_monotone_under_insertion() {
+        crate::util::prop::check(
+            "hypervolume monotone under point insertion",
+            |r| (gen_objs(r), o(r.uniform(0.1, 5.0), r.uniform(0.0, 9.0))),
+            |(objs, extra)| {
+                let base = hypervolume(objs, 10.0);
+                let mut more = objs.clone();
+                more.push(*extra);
+                let grown = hypervolume(&more, 10.0);
+                if grown + 1e-9 * (1.0 + base) < base {
+                    return Err(format!("hv shrank: {base} -> {grown} adding {extra:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_hv_invariant_under_duplicates() {
+        crate::util::prop::check(
+            "hypervolume invariant under duplicated points",
+            |r| {
+                let objs = gen_objs(r);
+                let dup = objs[r.below(objs.len())];
+                (objs, dup)
+            },
+            |(objs, dup)| {
+                let base = hypervolume(objs, 10.0);
+                let mut with_dup = objs.clone();
+                with_dup.push(*dup);
+                let hv = hypervolume(&with_dup, 10.0);
+                // An exact copy contributes the exact same staircase: the
+                // sweep's float sequence is unchanged, so equality is exact.
+                if hv != base {
+                    return Err(format!("duplicate changed hv: {base} -> {hv}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_hv_invariant_under_permutation() {
+        crate::util::prop::check(
+            "hypervolume invariant under permutation",
+            |r| {
+                let objs = gen_objs(r);
+                let mut shuffled = objs.clone();
+                r.shuffle(&mut shuffled);
+                (objs, shuffled)
+            },
+            |(objs, shuffled)| {
+                let a = hypervolume(objs, 10.0);
+                let b = hypervolume(shuffled, 10.0);
+                if (a - b).abs() > 1e-9 * (1.0 + a.abs()) {
+                    return Err(format!("permutation changed hv: {a} vs {b}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_ehvi_nonnegative() {
+        crate::util::prop::check(
+            "ehvi is non-negative",
+            |r| {
+                (
+                    gen_objs(r),
+                    r.uniform(-1.0, 6.0),
+                    r.uniform(0.0, 2.0),
+                    r.uniform(0.0, 12.0),
+                    r.uniform(0.0, 2.0),
+                )
+            },
+            |(objs, mu_t, sigma_t, mu_p, sigma_p)| {
+                let front: Vec<Objective> =
+                    pareto_indices(objs).into_iter().map(|i| objs[i]).collect();
+                let base = hypervolume(&front, 10.0);
+                let mut rng = crate::util::rng::Rng::new(42);
+                let est = EhviEstimator::new(32, &mut rng);
+                let v = est.ehvi(&front, base, 10.0, *mu_t, *sigma_t, *mu_p, *sigma_p);
+                if v < 0.0 {
+                    return Err(format!("negative ehvi {v}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_ehvi_zero_for_fully_dominated_candidate() {
+        crate::util::prop::check(
+            "ehvi of a strictly dominated certain candidate is exactly 0",
+            |r| {
+                let objs = gen_objs(r);
+                let front: Vec<Objective> =
+                    pareto_indices(&objs).into_iter().map(|i| objs[i]).collect();
+                let anchor = front[r.below(front.len())];
+                // Strictly worse on both axes; σ = 0 puts every MC draw
+                // exactly there, so the front is unchanged draw-by-draw.
+                let cand = o(
+                    anchor.throughput - r.uniform(1e-6, 0.5),
+                    anchor.power_w + r.uniform(1e-6, 0.5),
+                );
+                (front, cand)
+            },
+            |(front, cand)| {
+                let base = hypervolume(front, 10.0);
+                let mut rng = crate::util::rng::Rng::new(9);
+                let est = EhviEstimator::new(64, &mut rng);
+                let v = est.ehvi(front, base, 10.0, cand.throughput, 0.0, cand.power_w, 0.0);
+                if v != 0.0 {
+                    return Err(format!("dominated candidate got ehvi {v}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn prop_hv_nonnegative_and_bounded() {
         crate::util::prop::check(

@@ -1,0 +1,104 @@
+//! Campaign summary emitter: the cross-scenario table a `theseus
+//! campaign` run prints — per-scenario final hypervolume, best Pareto
+//! point, and the throughput/power comparison against the GPU-cluster
+//! reference, in the spirit of the paper's Fig. 11–13 cross-workload
+//! comparisons. Rendered from [`summarize_row`], the same digest
+//! `campaign.json` serializes, so table and artifact cannot drift.
+
+use crate::coordinator::campaign::{summarize_row, CampaignResult};
+use crate::util::table::Table;
+
+/// Render a [`CampaignResult`] as a fixed-width table, one row per
+/// scenario (error rows show the isolating failure instead of metrics).
+pub fn campaign_summary(result: &CampaignResult) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Campaign summary — {} scenarios, seed {} ({} error rows)",
+            result.rows.len(),
+            result.campaign_seed,
+            result.n_errors()
+        ),
+        &[
+            "scenario",
+            "status",
+            "points",
+            "final HV",
+            "best tok/s",
+            "power(kW)",
+            "vs GPU",
+        ],
+    );
+    let dash = || "-".to_string();
+    for r in &result.rows {
+        let s = summarize_row(r);
+        match s.error {
+            None => {
+                t.row(&[
+                    s.key,
+                    "ok".to_string(),
+                    s.points.to_string(),
+                    format!("{:.3e}", s.final_hv),
+                    s.best_throughput.map_or_else(dash, |x| format!("{x:.1}")),
+                    s.best_power_w.map_or_else(dash, |x| format!("{:.1}", x / 1e3)),
+                    s.speedup_vs_gpu.map_or_else(dash, |x| format!("{x:.2}x")),
+                ]);
+            }
+            Some(e) => {
+                t.row(&[s.key, "error".to_string(), dash(), dash(), dash(), dash(), e]);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::campaign::{
+        run_campaign, Budget, CampaignConfig, Fidelity, Scenario, ScenarioPhase,
+    };
+    use crate::coordinator::Explorer;
+
+    #[test]
+    fn campaign_summary_smoke_tiny() {
+        let budget = Budget {
+            iters: 1,
+            init: 1,
+            pool: 8,
+            mc: 8,
+            n1: 0,
+            k: 0,
+        };
+        let cfg = CampaignConfig {
+            scenarios: vec![
+                Scenario {
+                    model: "1.7".to_string(),
+                    phase: ScenarioPhase::Decode,
+                    batch: 8,
+                    wafers: None,
+                    explorer: Explorer::Random,
+                    fidelity: Fidelity::Analytical,
+                    budget,
+                    tag: String::new(),
+                },
+                Scenario {
+                    model: "no-such-model".to_string(),
+                    phase: ScenarioPhase::Training,
+                    batch: 0,
+                    wafers: None,
+                    explorer: Explorer::Random,
+                    fidelity: Fidelity::Analytical,
+                    budget,
+                    tag: String::new(),
+                },
+            ],
+            seed: 5,
+            jobs: 1,
+        };
+        let result = run_campaign(&cfg).unwrap();
+        let rendered = campaign_summary(&result).render();
+        assert!(rendered.contains("Campaign summary"), "{rendered}");
+        assert!(rendered.contains("1 error rows"), "{rendered}");
+        assert!(rendered.contains("unknown model"), "{rendered}");
+    }
+}

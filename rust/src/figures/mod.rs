@@ -3,6 +3,7 @@
 //! bench harness). Benches under `rust/benches/` are thin wrappers; tests
 //! smoke each generator at miniature scale.
 
+pub mod campaign;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
@@ -10,6 +11,7 @@ pub mod fig11;
 pub mod fig12;
 pub mod fig13;
 
+pub use campaign::campaign_summary;
 pub use fig7::fig7_eval_comparison;
 pub use fig8::fig8_explorer_comparison;
 pub use fig9::{fig10_reticle_granularity, fig9_core_granularity};

@@ -6,6 +6,7 @@
 //!   space             design-space summary (cardinality, sample validity)
 //!   eval              evaluate one design point on one benchmark
 //!   dse               run the explorer (random | mobo | mfmobo)
+//!   campaign          run a scenario matrix (--suite paper | --scenarios f.json)
 //!   baselines         characterize H100/WSE2/Dojo reference designs
 
 use theseus::util::cli::Args;
@@ -18,10 +19,11 @@ fn main() {
         Some("space") => cmd_space(&args),
         Some("eval") => cmd_eval(&args),
         Some("dse") => cmd_dse(&args),
+        Some("campaign") => cmd_campaign(&args),
         Some("baselines") => cmd_baselines(),
         _ => {
             eprintln!(
-                "usage: theseus <gen-noc-dataset|models|space|eval|dse|baselines> [--flags]\n\
+                "usage: theseus <gen-noc-dataset|models|space|eval|dse|campaign|baselines> [--flags]\n\
                  see README.md for the full flag reference"
             );
             std::process::exit(2);
@@ -118,7 +120,10 @@ fn cmd_space(args: &Args) {
 
 fn cmd_eval(args: &Args) {
     let model = args.str("model", "175b");
-    let spec = theseus::workload::models::find(&model).expect("unknown model");
+    let spec = theseus::workload::models::find_or_usage(&model).unwrap_or_else(|e| {
+        eprintln!("eval: {e}");
+        std::process::exit(1);
+    });
     let v = theseus::design_space::validate(&theseus::design_space::reference_point())
         .expect("reference point valid");
     let sys = if args.has("wafers") {
@@ -164,6 +169,79 @@ fn cmd_eval(args: &Args) {
 
 fn cmd_dse(args: &Args) {
     theseus::coordinator::run_from_cli(args);
+}
+
+/// `theseus campaign`: batch-run a scenario matrix (the paper's §IX
+/// evaluation matrix via `--suite paper`, or a custom JSON file via
+/// `--scenarios`), with per-scenario seeds derived deterministically from
+/// `--seed` and artifacts under `--out`.
+fn cmd_campaign(args: &Args) {
+    use theseus::coordinator::campaign;
+
+    let scenarios = if let Some(file) = args.opt_str("scenarios") {
+        let text = std::fs::read_to_string(&file).unwrap_or_else(|e| {
+            eprintln!("campaign: cannot read {file}: {e}");
+            std::process::exit(1);
+        });
+        let json = theseus::util::json::Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("campaign: {file}: {e}");
+            std::process::exit(1);
+        });
+        campaign::scenarios_from_json(&json).unwrap_or_else(|e| {
+            eprintln!("campaign: {file}: {e}");
+            std::process::exit(1);
+        })
+    } else {
+        let suite = args.str("suite", "paper");
+        match suite.as_str() {
+            "paper" => campaign::paper_suite(),
+            _ => {
+                eprintln!("campaign: unknown suite '{suite}' — valid: paper");
+                std::process::exit(1);
+            }
+        }
+    };
+    if scenarios.is_empty() {
+        eprintln!("campaign: no scenarios to run");
+        std::process::exit(1);
+    }
+    let cfg = campaign::CampaignConfig {
+        scenarios,
+        seed: args.u64("seed", 2024),
+        jobs: args.usize("jobs", 0),
+    };
+    eprintln!(
+        "campaign: {} scenarios (seed {}, jobs {})",
+        cfg.scenarios.len(),
+        cfg.seed,
+        if cfg.jobs == 0 {
+            "auto".to_string()
+        } else {
+            cfg.jobs.to_string()
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let result = campaign::run_campaign(&cfg).unwrap_or_else(|e| {
+        eprintln!("campaign: {e}");
+        std::process::exit(1);
+    });
+    theseus::figures::campaign_summary(&result).print();
+
+    let out = args.str("out", "artifacts/campaign");
+    campaign::write_artifacts(&result, std::path::Path::new(&out)).unwrap_or_else(|e| {
+        eprintln!("campaign: writing artifacts under {out} failed: {e}");
+        std::process::exit(1);
+    });
+    let errors = result.n_errors();
+    eprintln!(
+        "campaign: {} ok / {errors} error rows in {:.1}s; artifacts under {out}",
+        result.rows.len() - errors,
+        t0.elapsed().as_secs_f64()
+    );
+    if errors == result.rows.len() {
+        // Every scenario failed: surface it in the exit status.
+        std::process::exit(1);
+    }
 }
 
 fn cmd_baselines() {

@@ -84,6 +84,13 @@ impl Json {
         }
     }
 
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
     /// Convenience: array of f64s.
     pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
         self.as_arr()
@@ -480,6 +487,16 @@ mod tests {
             .set("name", Json::Str("theseus".into()));
         let pretty = o.to_pretty();
         assert_eq!(Json::parse(&pretty).unwrap(), o);
+    }
+
+    #[test]
+    fn as_obj_accessor() {
+        let mut o = Json::obj();
+        o.set("a", Json::Num(1.0));
+        let m = o.as_obj().unwrap();
+        assert_eq!(m.len(), 1);
+        assert!(m.contains_key("a"));
+        assert!(Json::Num(1.0).as_obj().is_none());
     }
 
     #[test]

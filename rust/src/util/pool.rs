@@ -30,11 +30,25 @@ where
     U: Send,
     F: Fn(&T) -> U + Sync,
 {
+    par_map_workers(items, 0, f)
+}
+
+/// [`par_map`] with an explicit worker cap (`0` = the [`num_threads`]
+/// default). Callers whose tasks are themselves parallel — the campaign
+/// runner fans scenarios out here while each scenario's evaluation fans
+/// strategies over its own `par_map` — use this to bound oversubscription
+/// (`theseus campaign --jobs N`).
+pub fn par_map_workers<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
-    let workers = num_threads().min(n);
+    let workers = if workers == 0 { num_threads() } else { workers }.min(n);
     if workers <= 1 {
         return items.iter().map(|x| f(x)).collect();
     }
@@ -107,5 +121,14 @@ mod tests {
     fn idx_variant() {
         let ys = par_map_idx(10, |i| i * i);
         assert_eq!(ys, vec![0, 1, 4, 9, 16, 25, 36, 49, 64, 81]);
+    }
+
+    #[test]
+    fn explicit_worker_cap_preserves_results() {
+        let xs: Vec<usize> = (0..100).collect();
+        for workers in [1, 2, 7, 0] {
+            let ys = par_map_workers(&xs, workers, |&x| x + 1);
+            assert_eq!(ys, (1..=100).collect::<Vec<_>>(), "workers={workers}");
+        }
     }
 }

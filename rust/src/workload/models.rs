@@ -52,6 +52,21 @@ pub fn find(key: &str) -> Option<LlmSpec> {
         .find(|m| m.name.to_lowercase().contains(&lower))
 }
 
+/// [`find`] with a human-oriented error naming every valid key — CLI call
+/// sites print this and exit 1 instead of silently falling back (same
+/// convention as the malformed-env-var warnings in `util::cli`).
+pub fn find_or_usage(key: &str) -> Result<LlmSpec, String> {
+    find(key).ok_or_else(|| {
+        let all = benchmarks();
+        let names: Vec<&str> = all.iter().map(|m| m.name.as_str()).collect();
+        format!(
+            "unknown model '{key}' — valid: an index 0..{} or a name fragment of: {}",
+            all.len() - 1,
+            names.join(", ")
+        )
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +123,19 @@ mod tests {
         assert_eq!(find("7").unwrap().name, "GPT-175B");
         assert_eq!(find("1.7").unwrap().name, "GPT-1.7B");
         assert!(find("nonexistent").is_none());
+    }
+
+    #[test]
+    fn find_or_usage_lists_valid_options() {
+        assert_eq!(find_or_usage("175b").unwrap().name, "GPT-175B");
+        let err = find_or_usage("gpt-nonexistent").unwrap_err();
+        assert!(err.contains("unknown model 'gpt-nonexistent'"), "{err}");
+        // The error names the index range and every model, so a typo is
+        // immediately correctable.
+        assert!(err.contains("0..15"), "{err}");
+        for m in benchmarks() {
+            assert!(err.contains(&m.name), "missing {} in: {err}", m.name);
+        }
     }
 
     #[test]

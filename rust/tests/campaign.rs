@@ -1,0 +1,309 @@
+//! Campaign-engine integration suite: the determinism contract (same
+//! campaign seed ⇒ byte-identical serialized artifacts), scenario-failure
+//! isolation, the golden-pinned `paper_suite()` JSON schema, and the
+//! exit-1-with-usage CLI contract for unknown `--model` / `--explorer` /
+//! `--suite` keys. `THESEUS_TEST_FAST=1` shrinks the test campaign
+//! (fewer scenarios, 1-iteration budgets) so tier-1 stays fast.
+
+use std::process::Command;
+
+use theseus::coordinator::campaign::{
+    paper_suite, run_campaign, scenario_result_json, scenarios_from_json, suite_to_json,
+    summary_json, write_artifacts, Budget, CampaignConfig, Fidelity, Scenario, ScenarioPhase,
+};
+use theseus::coordinator::Explorer;
+use theseus::util::cli::env_flag;
+use theseus::util::json::Json;
+
+fn scenario(
+    phase: ScenarioPhase,
+    batch: usize,
+    wafers: Option<usize>,
+    explorer: Explorer,
+    fidelity: Fidelity,
+    budget: Budget,
+) -> Scenario {
+    Scenario {
+        model: "GPT-1.7B".to_string(),
+        phase,
+        batch,
+        wafers,
+        explorer,
+        fidelity,
+        budget,
+        tag: String::new(),
+    }
+}
+
+/// A miniature slice of the paper matrix — FAST-shrunk under
+/// `THESEUS_TEST_FAST=1` (the bench_check.sh default) so the determinism
+/// contract stays cheap enough for tier-1.
+fn test_campaign(seed: u64) -> CampaignConfig {
+    let fast = env_flag("THESEUS_TEST_FAST");
+    let b = Budget {
+        iters: if fast { 1 } else { 2 },
+        init: if fast { 1 } else { 2 },
+        pool: 8,
+        mc: 8,
+        n1: 1,
+        k: 1,
+    };
+    let mut scenarios = vec![
+        scenario(
+            ScenarioPhase::Training,
+            0,
+            None,
+            Explorer::Random,
+            Fidelity::Analytical,
+            b,
+        ),
+        scenario(
+            ScenarioPhase::Decode,
+            8,
+            None,
+            Explorer::Mobo,
+            Fidelity::Analytical,
+            b,
+        ),
+    ];
+    if !fast {
+        // A third scenario crossing explorer (MFMOBO's fidelity handoff)
+        // and a pinned wafer count.
+        scenarios.push(scenario(
+            ScenarioPhase::Training,
+            0,
+            Some(1),
+            Explorer::Mfmobo,
+            Fidelity::Analytical,
+            b,
+        ));
+    }
+    CampaignConfig {
+        scenarios,
+        seed,
+        jobs: 2,
+    }
+}
+
+#[test]
+fn same_seed_campaigns_are_byte_identical() {
+    let cfg = test_campaign(2024);
+    let r1 = run_campaign(&cfg).unwrap();
+    let r2 = run_campaign(&cfg).unwrap();
+
+    // Every scenario produced a real trace with a Pareto front and a
+    // hypervolume (no silent empty results).
+    for r in &r1.rows {
+        let trace = r
+            .outcome
+            .as_ref()
+            .unwrap_or_else(|e| panic!("scenario {} failed: {e}", r.scenario.key()));
+        assert!(!trace.points.is_empty(), "{}", r.scenario.key());
+        let doc = scenario_result_json(r);
+        assert!(doc.get("pareto").unwrap().as_arr().unwrap().len() >= 1);
+        assert!(doc.get("final_hv").unwrap().as_f64().unwrap() > 0.0);
+        assert!(doc.get("trace").unwrap().get("points").is_some());
+    }
+
+    // The determinism contract: both runs serialize byte-identically.
+    assert_eq!(
+        summary_json(&r1).to_pretty(),
+        summary_json(&r2).to_pretty()
+    );
+    for (a, b) in r1.rows.iter().zip(&r2.rows) {
+        assert_eq!(
+            scenario_result_json(a).to_pretty(),
+            scenario_result_json(b).to_pretty(),
+            "scenario {} diverged between same-seed runs",
+            a.scenario.key()
+        );
+    }
+
+    // And the artifacts dir holds exactly those bytes.
+    let dir = std::env::temp_dir().join(format!(
+        "theseus-campaign-determinism-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_artifacts(&r1, &dir).unwrap();
+    let on_disk = std::fs::read_to_string(dir.join("campaign.json")).unwrap();
+    assert_eq!(on_disk, summary_json(&r2).to_pretty() + "\n");
+    for r in &r2.rows {
+        let path = dir
+            .join("scenarios")
+            .join(format!("{}.json", r.scenario.key()));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing artifact {}: {e}", path.display()));
+        assert_eq!(text, scenario_result_json(r).to_pretty() + "\n");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn poisoned_scenarios_do_not_sink_the_campaign() {
+    let b = Budget {
+        iters: 1,
+        init: 1,
+        pool: 8,
+        mc: 8,
+        n1: 0,
+        k: 0,
+    };
+    let mut poisoned = scenario(
+        ScenarioPhase::Training,
+        0,
+        None,
+        Explorer::Random,
+        Fidelity::Analytical,
+        b,
+    );
+    poisoned.model = "no-such-model".to_string();
+    let cfg = CampaignConfig {
+        scenarios: vec![
+            scenario(
+                ScenarioPhase::Decode,
+                4,
+                None,
+                Explorer::Random,
+                Fidelity::Analytical,
+                b,
+            ),
+            poisoned,
+            // Unsupported fidelity for inference: a second failure mode.
+            scenario(
+                ScenarioPhase::Decode,
+                4,
+                None,
+                Explorer::Random,
+                Fidelity::CycleAccurate,
+                b,
+            ),
+        ],
+        seed: 7,
+        jobs: 2,
+    };
+    let result = run_campaign(&cfg).unwrap();
+    assert_eq!(result.rows.len(), 3);
+    assert_eq!(result.n_errors(), 2);
+    assert!(result.rows[0].outcome.is_ok(), "healthy scenario sunk");
+    let e = result.rows[1].outcome.as_ref().unwrap_err();
+    assert!(e.contains("unknown model 'no-such-model'"), "{e}");
+    let e = result.rows[2].outcome.as_ref().unwrap_err();
+    assert!(e.contains("analytical"), "{e}");
+
+    // The summary records per-row status instead of aborting.
+    let sj = summary_json(&result);
+    assert_eq!(sj.get("n_errors").unwrap().as_f64(), Some(2.0));
+    let rows = sj.get("scenarios").unwrap().as_arr().unwrap();
+    assert_eq!(rows[0].get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(rows[1].get("status").unwrap().as_str(), Some("error"));
+    assert!(rows[1].get("error").unwrap().as_str().is_some());
+}
+
+#[test]
+fn paper_suite_schema_is_golden_pinned() {
+    let golden_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/golden/campaign_suite.json"
+    );
+    let golden = std::fs::read_to_string(golden_path).unwrap();
+    let emitted = suite_to_json(&paper_suite()).to_pretty() + "\n";
+    assert_eq!(
+        emitted, golden,
+        "paper_suite() JSON schema drifted from tests/golden/campaign_suite.json — \
+         if the change is intentional, regenerate the golden file so the drift is a reviewed diff"
+    );
+    // decode → encode round-trips byte-identically...
+    let parsed = Json::parse(&golden).unwrap();
+    assert_eq!(parsed.to_pretty() + "\n", golden);
+    // ...including through the typed Scenario layer.
+    let scenarios = scenarios_from_json(&parsed).unwrap();
+    assert_eq!(scenarios, paper_suite());
+    assert_eq!(suite_to_json(&scenarios).to_pretty() + "\n", golden);
+}
+
+#[test]
+fn cli_unknown_keys_exit_1_listing_options() {
+    let bin = env!("CARGO_BIN_EXE_theseus");
+
+    let out = Command::new(bin)
+        .args(["dse", "--model", "gpt-nonexistent"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown model 'gpt-nonexistent'"), "{err}");
+    assert!(err.contains("GPT-175B"), "must list valid models: {err}");
+
+    let out = Command::new(bin)
+        .args(["dse", "--model", "1.7", "--explorer", "bogus"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown explorer 'bogus'"), "{err}");
+    assert!(err.contains("random, mobo, mfmobo"), "{err}");
+
+    let out = Command::new(bin)
+        .args(["eval", "--model", "nope"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown model 'nope'"));
+
+    let out = Command::new(bin)
+        .args(["campaign", "--suite", "imaginary"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown suite 'imaginary'"));
+}
+
+#[test]
+fn cli_campaign_scenarios_file_end_to_end() {
+    let bin = env!("CARGO_BIN_EXE_theseus");
+    let dir = std::env::temp_dir().join(format!("theseus-campaign-cli-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let scen_file = dir.join("scenarios.json");
+    std::fs::write(
+        &scen_file,
+        r#"{"scenarios": [{"model": "GPT-1.7B", "phase": "decode", "explorer": "random",
+            "batch": 4, "iters": 1, "init": 1, "pool": 8, "mc": 8, "n1": 0, "k": 0}]}"#,
+    )
+    .unwrap();
+    let out_dir = dir.join("out");
+    let out = Command::new(bin)
+        .args([
+            "campaign",
+            "--scenarios",
+            scen_file.to_str().unwrap(),
+            "--out",
+            out_dir.to_str().unwrap(),
+            "--seed",
+            "3",
+            "--jobs",
+            "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Campaign summary"));
+
+    let summary =
+        Json::parse(&std::fs::read_to_string(out_dir.join("campaign.json")).unwrap()).unwrap();
+    assert_eq!(summary.get("n_errors").unwrap().as_f64(), Some(0.0));
+    assert_eq!(summary.get("n_scenarios").unwrap().as_f64(), Some(1.0));
+    let key = "gpt-1.7b-decode-random-analytical-b4-wauto";
+    let scen_doc = Json::parse(
+        &std::fs::read_to_string(out_dir.join("scenarios").join(format!("{key}.json"))).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(scen_doc.get("status").unwrap().as_str(), Some("ok"));
+    assert!(scen_doc.get("trace").is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
