@@ -5,17 +5,24 @@
 //!     cargo run --release --example dse_gpt175b -- --iters 20 --n1 20
 //!
 //! Scale knobs: --iters (high-fidelity evals), --n1 (low-fidelity trials),
-//! --seed, --no-gnn.
+//! --seed, --fidelity (registry name for MFMOBO's high fidelity; the low
+//! fidelity is always analytical).
 
 use theseus::coordinator::{ref_power_for, run, DseRun, Explorer};
+use theseus::eval::engine::Fidelity;
 use theseus::explorer::BoConfig;
 use theseus::util::cli::Args;
 use theseus::util::table::Table;
-use theseus::workload::models;
+use theseus::workload::{models, Phase};
 
 fn main() {
     let args = Args::from_env();
     let spec = models::find("175b").unwrap();
+    let fidelity = Fidelity::parse_or_usage(&args.str("fidelity", "analytical"))
+        .unwrap_or_else(|e| {
+            eprintln!("dse_gpt175b: {e}");
+            std::process::exit(1);
+        });
     let cfg = BoConfig {
         iters: args.usize("iters", 16),
         init: 6,
@@ -27,16 +34,23 @@ fn main() {
     };
     let dse = DseRun {
         spec: spec.clone(),
+        phase: Phase::Training,
+        batch: 0,
+        mqa: false,
+        wafers: None,
+        fidelity,
         explorer: Explorer::Mfmobo,
         cfg,
         n1: args.usize("n1", 16),
         k: 4,
-        use_gnn: !args.bool("no-gnn", false),
     };
 
     println!("exploring WSC designs for {} training (MFMOBO)...", spec.name);
     let t0 = std::time::Instant::now();
-    let trace = run(&dse);
+    let trace = run(&dse).unwrap_or_else(|e| {
+        eprintln!("dse_gpt175b: {e}");
+        std::process::exit(1);
+    });
     println!(
         "{} evaluations in {:.1}s, hypervolume {:.3e}",
         trace.points.len(),

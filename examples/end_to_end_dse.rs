@@ -13,12 +13,13 @@
 //!     cargo run --release --example end_to_end_dse -- --iters 16 --n1 16
 
 use theseus::coordinator::{ref_power_for, run, DseRun, Explorer};
+use theseus::eval::engine::Fidelity;
 use theseus::eval::{eval_training, Analytical, SystemConfig};
 use theseus::explorer::BoConfig;
 use theseus::util::cli::Args;
 use theseus::util::json::Json;
 use theseus::util::table::Table;
-use theseus::workload::models;
+use theseus::workload::{models, Phase};
 
 fn main() {
     let args = Args::from_env();
@@ -26,17 +27,24 @@ fn main() {
     let iters = args.usize("iters", 16);
     let n1 = args.usize("n1", 16);
     let seed = args.u64("seed", 0);
-    let use_gnn = !args.bool("no-gnn", false);
+    // High fidelity from the registry; `gnn` degrades to analytical with
+    // a note (this driver should run artifact-less containers end to end).
+    let requested = Fidelity::parse_or_usage(&args.str("fidelity", "gnn")).unwrap_or_else(|e| {
+        eprintln!("end_to_end_dse: {e}");
+        std::process::exit(1);
+    });
+    let fidelity = match theseus::eval::engine::Engine::new(
+        theseus::eval::engine::EvalSpec::training(spec.clone()).with_fidelity(requested),
+    ) {
+        Ok(_) => requested,
+        Err(e) => {
+            println!("high fidelity {}: {e}; falling back to analytical", requested.name());
+            Fidelity::Analytical
+        }
+    };
 
     println!("=== Theseus end-to-end DSE: {} training ===", spec.name);
-    let gnn_status = theseus::runtime::GnnModel::load_default();
-    println!(
-        "GNN artifact: {}",
-        match &gnn_status {
-            Ok(_) => "loaded (high fidelity = GNN over PJRT)".to_string(),
-            Err(e) => format!("unavailable ({e}); high fidelity = analytical"),
-        }
-    );
+    println!("high fidelity: {}", fidelity.name());
 
     // --- explorers ---
     let mut results = Vec::new();
@@ -52,14 +60,21 @@ fn main() {
         };
         let dse = DseRun {
             spec: spec.clone(),
+            phase: Phase::Training,
+            batch: 0,
+            mqa: false,
+            wafers: None,
+            fidelity,
             explorer,
             cfg,
             n1,
             k: 4,
-            use_gnn,
         };
         let t0 = std::time::Instant::now();
-        let trace = run(&dse);
+        let trace = run(&dse).unwrap_or_else(|e| {
+            eprintln!("end_to_end_dse: {e}");
+            std::process::exit(1);
+        });
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "{:8}: {:3} evals in {:6.1}s -> hypervolume {:.4e}",

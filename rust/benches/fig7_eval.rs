@@ -5,18 +5,22 @@ use theseus::bench;
 
 fn main() {
     let scale = bench::scale();
-    // Per-chunk timing: prefer the --batch 1 sibling artifact so the
-    // Fig. 7 per-evaluation numbers don't pay the batched executable's
-    // full slot count per prediction.
-    let gnn = theseus::runtime::GnnModel::load_per_chunk_default().ok();
-    let gnn_ref: Option<&dyn theseus::eval::NocEstimator> =
-        gnn.as_ref().map(|g| g as &dyn theseus::eval::NocEstimator);
-    if gnn_ref.is_none() {
-        eprintln!("note: GNN artifact missing; run `make artifacts` for full Fig. 7");
-    }
-    let (table, _rows) =
-        theseus::figures::fig7_eval_comparison(3 * scale.min(2) + 1, 4 * scale, gnn_ref, 42)
-            .expect("CA simulation exceeded its cycle budget");
+    // The high-fidelity column comes from the Fidelity registry
+    // (THESEUS_FIG7_FIDELITY, default `gnn` — the per-chunk --batch 1
+    // artifact; `gnn-test` exercises the column without artifacts). An
+    // unavailable backend degrades to analytical-only rows with a note.
+    let name = std::env::var("THESEUS_FIG7_FIDELITY").unwrap_or_else(|_| "gnn".to_string());
+    let fidelity = theseus::eval::engine::Fidelity::parse_or_usage(&name).unwrap_or_else(|e| {
+        eprintln!("fig7: {e}");
+        std::process::exit(1);
+    });
+    let (table, _rows) = theseus::figures::fig7_eval_comparison(
+        3 * scale.min(2) + 1,
+        4 * scale,
+        Some(fidelity),
+        42,
+    )
+    .expect("CA simulation exceeded its cycle budget");
     table.print();
     bench::save_json("fig7_eval", &table.to_json());
 }

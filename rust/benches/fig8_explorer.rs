@@ -7,9 +7,16 @@ use theseus::util::cli::env_usize;
 fn main() {
     let iters = env_usize("THESEUS_BO_ITERS", 16 * bench::scale());
     let repeats = env_usize("THESEUS_BO_REPEATS", 2 * bench::scale());
+    // High fidelity from the registry (THESEUS_FIG8_FIDELITY, default
+    // `gnn`; falls back to analytical with a note when unavailable).
+    let name = std::env::var("THESEUS_FIG8_FIDELITY").unwrap_or_else(|_| "gnn".to_string());
+    let fidelity = theseus::eval::engine::Fidelity::parse_or_usage(&name).unwrap_or_else(|e| {
+        eprintln!("fig8: {e}");
+        std::process::exit(1);
+    });
     // Benchmarks 0/7/9 = GPT-1.7B / GPT-175B / GPT-529.6B (Fig. 8's trio).
     let (table, results) =
-        theseus::figures::fig8_explorer_comparison(&[0, 7, 9], iters, repeats, true);
+        theseus::figures::fig8_explorer_comparison(&[0, 7, 9], iters, repeats, fidelity);
     table.print();
     let speedups: Vec<f64> = results.iter().map(|r| r.convergence_speedup).collect();
     println!(

@@ -11,7 +11,8 @@ use theseus::bench;
 use theseus::compiler::cache::ChunkCache;
 use theseus::compiler::compile_chunk;
 use theseus::eval::op_level::{chunk_latency, chunk_latency_with_topo, ChunkTopology, NocModel};
-use theseus::eval::{eval_training, eval_training_par, Analytical, SystemConfig};
+use theseus::eval::engine::{Engine, EvalSpec};
+use theseus::eval::{eval_training, Analytical, SystemConfig};
 use theseus::noc_sim::{reference, CoreProgram, Instr, Simulator};
 use theseus::util::rng::Rng;
 use theseus::util::table::Table;
@@ -96,10 +97,13 @@ fn main() {
     t.row(&["eval_training_cold".into(), format!("{:.3}", cold.median_s * 1e3), "ms per design point (serial, cache cleared)".into()]);
     global.clear();
     let r_serial = eval_training(&full_spec, &sys, &Analytical); // prime cache
+    // The engine's analytical backend dispatches the pooled strategy
+    // sweep (the warm-path row measures that dispatch).
+    let engine = Engine::new(EvalSpec::training(full_spec.clone())).expect("analytical engine");
     let before = global.stats();
     let tiles_before = theseus::eval::tile::tile_cache_stats();
     let warm = bench::time("eval_training_warm_par", 1, 5, || {
-        std::hint::black_box(eval_training_par(&full_spec, &sys, &Analytical));
+        std::hint::black_box(engine.eval_train_system(&sys));
     });
     let after = global.stats();
     let tiles_after = theseus::eval::tile::tile_cache_stats();
@@ -121,7 +125,7 @@ fn main() {
     };
     t.row(&["tile_cache_hit_rate".into(), format!("{:.4}", tile_hit_rate), "fraction (warm strategy sweep)".into()]);
     // Equivalence guard: pooled + cached must match serial + cold.
-    let r_par = eval_training_par(&full_spec, &sys, &Analytical);
+    let r_par = engine.eval_train_system(&sys);
     let rel = match (&r_serial, &r_par) {
         (Some(a), Some(b)) => {
             (a.tokens_per_sec - b.tokens_per_sec).abs() / a.tokens_per_sec.abs().max(1e-300)

@@ -3,13 +3,20 @@
 //!
 //! A [`Scenario`] is a declarative spec — model × phase (training /
 //! prefill / decode) × inference batch × wafer count × explorer × fidelity
-//! × BO budget — serializable to/from JSON. [`paper_suite`] mirrors the
-//! §IX matrix (every Table II model × training + inference × {random,
-//! mobo, mfmobo}); [`run_campaign`] fans scenarios over the thread pool
-//! while the compile-chunk ([`crate::compiler::cache`]) and tile
-//! ([`crate::eval::tile`]) memo caches — process-wide singletons — stay
-//! shared across scenarios, so identical regions compiled by one scenario
-//! are cache hits for the next.
+//! × BO budget — serializable to/from JSON. Phases and fidelities parse
+//! through the same registries as every other entry point
+//! ([`crate::workload::Phase`], [`Fidelity`]); a scenario is just an
+//! [`EvalSpec`] plus an explorer and budget, and [`run_scenario`] drives
+//! it through the coordinator's single explorer-dispatch path
+//! ([`crate::coordinator::explore`]). Any (phase × fidelity) pair runs —
+//! decode scenarios ride the CA simulator or the (pseudo-)GNN exactly
+//! like training ones.
+//!
+//! [`paper_suite`] mirrors the §IX matrix (every Table II model ×
+//! training + inference × {random, mobo, mfmobo}); [`run_campaign`] fans
+//! scenarios over the thread pool while the compile-chunk
+//! ([`crate::compiler::cache`]) and tile ([`crate::eval::tile`]) memo
+//! caches — process-wide singletons — stay shared across scenarios.
 //!
 //! # Determinism contract
 //!
@@ -22,93 +29,44 @@
 //! artifacts (enforced by `rust/tests/campaign.rs`); adding or removing
 //! scenarios does not perturb the survivors.
 //!
+//! # Resume
+//!
+//! With [`CampaignConfig::resume_from`] set (CLI: `theseus campaign
+//! --resume`), a scenario whose `scenarios/<key>.json` already exists
+//! under the artifact dir is not re-evaluated: the parsed artifact stands
+//! in for the trace ([`Outcome::Resumed`]) and the summary records the
+//! row as `resumed`. Because per-scenario seeds are position-independent,
+//! a killed-then-resumed campaign writes byte-identical scenario
+//! artifacts to an uninterrupted one (the `resumed` status marker in
+//! `campaign.json` is the only difference — enforced by
+//! `rust/tests/campaign.rs`). Only **finished** work is skipped: a
+//! recorded error row is retried fresh (a failure is not a result — e.g.
+//! the `gnn` fidelity heals on resume once its artifacts are installed).
+//! An artifact that exists but cannot be trusted (unparseable, recorded
+//! under a different derived seed because `--seed` changed, or recording
+//! a different scenario spec — budgets are invisible in the key, so they
+//! are compared explicitly) records a loud error row instead of being
+//! silently re-run or silently reused, and [`write_artifacts`] leaves
+//! the untrusted file untouched on disk; delete it to re-run that
+//! scenario.
+//!
 //! # Failure isolation
 //!
-//! A failing scenario (unknown model key, unsupported fidelity, panic in
-//! the evaluation stack) records an error row instead of aborting the
-//! campaign; `campaign.json` reports per-row status.
+//! A failing scenario (unknown model key, unavailable fidelity backend,
+//! panic in the evaluation stack) records an error row instead of
+//! aborting the campaign; `campaign.json` reports per-row status.
 
 use std::panic::AssertUnwindSafe;
 
 use crate::baselines::{h100_infer_eval, h100_train_eval};
-use crate::coordinator::{ref_power_for, AnalyticalTraining, Explorer, TrainingObjective};
-use crate::design_space::Validated;
-use crate::eval::{self, Analytical};
-use crate::explorer::{
-    mfmobo, mobo, random_search, random_search_par, BoConfig, DesignEval, MfConfig, Objective,
-    Trace, TracePoint,
-};
+use crate::coordinator::{explore, ref_power_for, Explorer};
+use crate::eval::engine::EvalSpec;
+use crate::explorer::{BoConfig, Trace, TracePoint};
 use crate::util::json::Json;
 use crate::util::pool;
-use crate::workload::{models, LlmSpec};
+use crate::workload::{models, LlmSpec, Phase};
 
-use super::objective::system_for;
-
-/// Which workload phase a scenario optimizes for.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ScenarioPhase {
-    Training,
-    /// Inference prompt processing: throughput = prompt tokens/s.
-    Prefill,
-    /// Inference generation: throughput = generated tokens/s across the
-    /// batch (the §IX-D serving metric).
-    Decode,
-}
-
-impl ScenarioPhase {
-    pub fn parse(s: &str) -> Option<ScenarioPhase> {
-        match s {
-            "training" => Some(ScenarioPhase::Training),
-            "prefill" => Some(ScenarioPhase::Prefill),
-            "decode" => Some(ScenarioPhase::Decode),
-            _ => None,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            ScenarioPhase::Training => "training",
-            ScenarioPhase::Prefill => "prefill",
-            ScenarioPhase::Decode => "decode",
-        }
-    }
-
-    pub fn is_inference(&self) -> bool {
-        !matches!(self, ScenarioPhase::Training)
-    }
-}
-
-/// Evaluation fidelity of a scenario's objective.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Fidelity {
-    /// Closed-form NoC model (§VI-C, low fidelity).
-    Analytical,
-    /// Deterministic pseudo-GNN ([`crate::runtime::TestBackend`]) through
-    /// the batched inference path — the high-fidelity stage in builds
-    /// without PJRT artifacts.
-    GnnTest,
-    /// Cycle-accurate NoC simulation (ground truth; expensive).
-    CycleAccurate,
-}
-
-impl Fidelity {
-    pub fn parse(s: &str) -> Option<Fidelity> {
-        match s {
-            "analytical" => Some(Fidelity::Analytical),
-            "gnn-test" => Some(Fidelity::GnnTest),
-            "cycle-accurate" => Some(Fidelity::CycleAccurate),
-            _ => None,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Fidelity::Analytical => "analytical",
-            Fidelity::GnnTest => "gnn-test",
-            Fidelity::CycleAccurate => "cycle-accurate",
-        }
-    }
-}
+pub use crate::eval::engine::Fidelity;
 
 /// Explorer budget (the BO knobs of [`BoConfig`] plus MFMOBO's split).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -147,7 +105,7 @@ impl Default for Budget {
 pub struct Scenario {
     /// Model key for [`models::find`] (index or name fragment).
     pub model: String,
-    pub phase: ScenarioPhase,
+    pub phase: Phase,
     /// Inference batch (sequences in flight); 0 for training scenarios
     /// (the training batch comes from the model spec).
     pub batch: usize,
@@ -201,6 +159,19 @@ impl Scenario {
         key
     }
 
+    /// The engine spec this scenario evaluates (the explorer/budget are
+    /// the campaign's contribution on top).
+    pub fn eval_spec(&self, spec: &LlmSpec) -> EvalSpec {
+        EvalSpec {
+            model: spec.clone(),
+            phase: self.phase,
+            batch: self.batch,
+            mqa: false,
+            wafers: self.wafers,
+            fidelity: self.fidelity,
+        }
+    }
+
     /// Flat JSON form (the schema pinned by
     /// `rust/tests/golden/campaign_suite.json`).
     pub fn to_json(&self) -> Json {
@@ -238,7 +209,9 @@ impl Scenario {
     /// Decode one scenario object. `model`, `phase` and `explorer` are
     /// required; everything else defaults (fidelity analytical, batch 0 /
     /// 32 by phase, wafers auto, paper budget, empty tag). Unknown fields
-    /// are errors, not silent fallbacks.
+    /// are errors, not silent fallbacks; phase and fidelity values parse
+    /// through the shared registries, so the error lists exactly the
+    /// names every other entry point accepts.
     pub fn from_json(j: &Json) -> Result<Scenario, String> {
         let obj = j
             .as_obj()
@@ -267,19 +240,12 @@ impl Scenario {
                     .ok_or_else(|| format!("scenario field '{key}' must be a non-negative integer")),
             }
         };
-        let phase_s = str_field("phase")?;
-        let phase = ScenarioPhase::parse(&phase_s)
-            .ok_or_else(|| format!("unknown phase '{phase_s}' — valid: training, prefill, decode"))?;
-        let explorer_s = str_field("explorer")?;
-        let explorer = Explorer::parse(&explorer_s)
-            .ok_or_else(|| format!("unknown explorer '{explorer_s}' — valid: random, mobo, mfmobo"))?;
-        let fidelity_s = match j.get("fidelity") {
-            None | Some(Json::Null) => Fidelity::Analytical.name().to_string(),
-            Some(_) => str_field("fidelity")?,
+        let phase = Phase::parse_or_usage(&str_field("phase")?)?;
+        let explorer = Explorer::parse_or_usage(&str_field("explorer")?)?;
+        let fidelity = match j.get("fidelity") {
+            None | Some(Json::Null) => Fidelity::Analytical,
+            Some(_) => Fidelity::parse_or_usage(&str_field("fidelity")?)?,
         };
-        let fidelity = Fidelity::parse(&fidelity_s).ok_or_else(|| {
-            format!("unknown fidelity '{fidelity_s}' — valid: analytical, gnn-test, cycle-accurate")
-        })?;
         let default_budget = Budget::default();
         let scenario = Scenario {
             model: str_field("model")?,
@@ -347,7 +313,7 @@ pub fn paper_suite() -> Vec<Scenario> {
     let budget = Budget::default();
     let mut out = Vec::new();
     for m in models::benchmarks() {
-        for phase in [ScenarioPhase::Training, ScenarioPhase::Decode] {
+        for phase in [Phase::Training, Phase::Decode] {
             for explorer in [Explorer::Random, Explorer::Mobo, Explorer::Mfmobo] {
                 out.push(Scenario {
                     model: m.name.clone(),
@@ -383,7 +349,7 @@ pub fn scenario_seed(campaign_seed: u64, key: &str) -> u64 {
 }
 
 /// A campaign: scenarios + the seed every scenario seed derives from +
-/// the fan-out width.
+/// the fan-out width + the optional resume source.
 #[derive(Debug, Clone)]
 pub struct CampaignConfig {
     pub scenarios: Vec<Scenario>,
@@ -392,14 +358,60 @@ pub struct CampaignConfig {
     /// evaluation fans strategies over its own pool, so a small `jobs`
     /// bounds oversubscription.
     pub jobs: usize,
+    /// `Some(dir)`: skip scenarios whose `scenarios/<key>.json` already
+    /// exists under `dir`, recording them as resumed rows (the
+    /// `theseus campaign --resume` contract; see the module docs).
+    pub resume_from: Option<std::path::PathBuf>,
 }
 
-/// One scenario's outcome: the trace, or the error that isolated it.
+/// How a scenario's row came to be.
+#[derive(Debug)]
+pub enum Outcome {
+    /// Evaluated in this run: the trace, or the error that isolated it.
+    Done(Result<Trace, String>),
+    /// Skipped under `--resume`: the parsed pre-existing
+    /// `scenarios/<key>.json` artifact stands in for the trace
+    /// ([`resume_artifact`] guarantees its status is `ok`).
+    Resumed(Json),
+    /// `--resume` found an artifact it can neither stand in nor safely
+    /// overwrite (wrong seed, wrong spec, unparseable): a loud error row,
+    /// and [`write_artifacts`] leaves the pre-existing file untouched so
+    /// the user can inspect it before deleting.
+    ResumeConflict(String),
+}
+
+impl Outcome {
+    /// The in-memory trace, when this run evaluated the scenario.
+    pub fn trace(&self) -> Option<&Trace> {
+        match self {
+            Outcome::Done(Ok(t)) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// The isolating error of this row, if any.
+    pub fn error(&self) -> Option<String> {
+        match self {
+            Outcome::Done(Ok(_)) => None,
+            Outcome::Done(Err(e)) => Some(e.clone()),
+            // resume_artifact only stands in finished (status ok)
+            // artifacts; failures and conflicts take the other variants.
+            Outcome::Resumed(_) => None,
+            Outcome::ResumeConflict(e) => Some(e.clone()),
+        }
+    }
+
+    pub fn is_resumed(&self) -> bool {
+        matches!(self, Outcome::Resumed(_))
+    }
+}
+
+/// One scenario's outcome row.
 #[derive(Debug)]
 pub struct ScenarioResult {
     pub scenario: Scenario,
     pub seed: u64,
-    pub outcome: Result<Trace, String>,
+    pub outcome: Outcome,
 }
 
 #[derive(Debug)]
@@ -410,43 +422,11 @@ pub struct CampaignResult {
 
 impl CampaignResult {
     pub fn n_errors(&self) -> usize {
-        self.rows.iter().filter(|r| r.outcome.is_err()).count()
-    }
-}
-
-/// Phase-aware inference objective: throughput is the phase's serving
-/// metric (prompt tokens/s for prefill, generated tokens/s for decode),
-/// power the steady-state draw. Analytical fidelity only — `Sync`, so
-/// random search fans over the pool.
-struct PhaseInference {
-    spec: LlmSpec,
-    batch: usize,
-    phase: ScenarioPhase,
-    wafers: Option<usize>,
-}
-
-impl DesignEval for PhaseInference {
-    fn eval(&self, v: &Validated) -> Option<Objective> {
-        let sys = system_for(v, self.spec.gpu_num, self.wafers);
-        let r = eval::eval_inference(&self.spec, &sys, self.batch, false, &Analytical)?;
-        let throughput = match self.phase {
-            ScenarioPhase::Prefill => (self.batch * self.spec.seq_len) as f64 / r.prefill_s,
-            _ => self.batch as f64 / r.decode_step_s,
-        };
-        if !throughput.is_finite() {
-            return None;
-        }
-        Some(Objective {
-            throughput,
-            power_w: r.power_w,
-        })
+        self.rows.iter().filter(|r| r.outcome.error().is_some()).count()
     }
 
-    fn name(&self) -> &'static str {
-        match self.phase {
-            ScenarioPhase::Prefill => "inference-prefill",
-            _ => "inference-decode",
-        }
+    pub fn n_resumed(&self) -> usize {
+        self.rows.iter().filter(|r| r.outcome.is_resumed()).count()
     }
 }
 
@@ -462,77 +442,15 @@ fn bo_config(s: &Scenario, spec: &LlmSpec, seed: u64) -> BoConfig {
     }
 }
 
-fn mf_config(s: &Scenario, cfg: &BoConfig) -> MfConfig {
-    MfConfig {
-        base: cfg.clone(),
-        n1: s.budget.n1,
-        d0: cfg.init,
-        d1: cfg.init,
-        k: s.budget.k,
-    }
-}
-
-fn run_training(s: &Scenario, spec: &LlmSpec, cfg: &BoConfig) -> Trace {
-    let high: Box<dyn DesignEval> = match s.fidelity {
-        Fidelity::Analytical => {
-            Box::new(TrainingObjective::analytical(spec.clone()).with_wafers(s.wafers))
-        }
-        Fidelity::GnnTest => {
-            Box::new(TrainingObjective::pseudo_gnn(spec.clone()).with_wafers(s.wafers))
-        }
-        Fidelity::CycleAccurate => {
-            Box::new(TrainingObjective::cycle_accurate(spec.clone()).with_wafers(s.wafers))
-        }
-    };
-    match s.explorer {
-        // Analytical random search is Sync: fan evaluations over the pool
-        // (forked per-slot RNG streams keep it deterministic in the seed).
-        Explorer::Random if s.fidelity == Fidelity::Analytical => random_search_par(
-            &AnalyticalTraining {
-                spec: spec.clone(),
-                wafers: s.wafers,
-            },
-            cfg,
-        ),
-        Explorer::Random => random_search(high.as_ref(), cfg),
-        Explorer::Mobo => mobo(high.as_ref(), cfg),
-        Explorer::Mfmobo => {
-            let low = TrainingObjective::analytical(spec.clone()).with_wafers(s.wafers);
-            mfmobo(high.as_ref(), &low, &mf_config(s, cfg))
-        }
-    }
-}
-
-fn run_inference(s: &Scenario, spec: &LlmSpec, cfg: &BoConfig) -> Result<Trace, String> {
-    if s.fidelity != Fidelity::Analytical {
-        return Err(format!(
-            "inference scenarios support fidelity 'analytical' only (got '{}')",
-            s.fidelity.name()
-        ));
-    }
-    let obj = PhaseInference {
-        spec: spec.clone(),
-        batch: s.batch.max(1),
-        phase: s.phase,
-        wafers: s.wafers,
-    };
-    Ok(match s.explorer {
-        Explorer::Random => random_search_par(&obj, cfg),
-        Explorer::Mobo => mobo(&obj, cfg),
-        // Inference has a single fidelity; MFMOBO degenerates to the same
-        // objective at both levels (the budget split still applies).
-        Explorer::Mfmobo => mfmobo(&obj, &obj, &mf_config(s, cfg)),
-    })
-}
-
-/// Run one scenario at its derived seed.
+/// Run one scenario at its derived seed: resolve the model, build the
+/// engine spec, and drive the coordinator's shared explorer dispatch.
+/// Works for any (phase × fidelity) pair the engine supports; an
+/// unavailable backend (e.g. `gnn` without artifacts) is the isolating
+/// error of this row.
 pub fn run_scenario(s: &Scenario, seed: u64) -> Result<Trace, String> {
     let spec = models::find_or_usage(&s.model)?;
     let cfg = bo_config(s, &spec, seed);
-    match s.phase {
-        ScenarioPhase::Training => Ok(run_training(s, &spec, &cfg)),
-        _ => run_inference(s, &spec, &cfg),
-    }
+    explore(&s.eval_spec(&spec), s.explorer, &cfg, s.budget.n1, s.budget.k)
 }
 
 fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
@@ -545,8 +463,77 @@ fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
+/// Probe the resume dir for a scenario's artifact. `None` = no finished
+/// artifact, run fresh — including a recorded **error** row: a failure is
+/// not finished work, so resume retries it (e.g. the `gnn` fidelity after
+/// its artifacts were installed). `Some(Ok(doc))` = trustworthy finished
+/// artifact (parses, seed matches the derivation, and the recorded
+/// scenario spec — budgets included, which are invisible in the key —
+/// matches this campaign's), stand it in. `Some(Err(e))` = the artifact
+/// exists but cannot be trusted — a loud error row (never a silent
+/// re-run, which would mix seeds/specs in one artifact dir; never a
+/// silent reuse of wrong-seed or wrong-budget results).
+fn resume_artifact(dir: &std::path::Path, s: &Scenario, seed: u64) -> Option<Result<Json, String>> {
+    let path = dir.join("scenarios").join(format!("{}.json", s.key()));
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+        Err(e) => return Some(Err(format!("resume: cannot read {}: {e}", path.display()))),
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            return Some(Err(format!(
+                "resume: cannot parse {}: {e}; delete it to re-run",
+                path.display()
+            )))
+        }
+    };
+    match doc.get("status").and_then(Json::as_str) {
+        Some("ok") => {}
+        // A recorded failure did not finish: retry it fresh (the retry
+        // overwrites the error artifact with whatever happens this time).
+        Some("error") => return None,
+        _ => {
+            return Some(Err(format!(
+                "resume: {} has no status field; delete it to re-run",
+                path.display()
+            )))
+        }
+    }
+    match doc.get("seed").and_then(Json::as_str) {
+        Some(recorded) if recorded == seed.to_string() => {}
+        Some(recorded) => {
+            return Some(Err(format!(
+                "resume: {} was recorded at derived seed {recorded} but this campaign derives \
+                 {seed} (--seed changed?); delete it to re-run",
+                path.display()
+            )))
+        }
+        None => {
+            return Some(Err(format!(
+                "resume: {} has no seed field; delete it to re-run",
+                path.display()
+            )))
+        }
+    }
+    // The key (and so the seed) is blind to budget-only differences; the
+    // artifact records the full scenario, so compare the whole spec.
+    let expected = s.to_json();
+    if doc.get("scenario") != Some(&expected) {
+        return Some(Err(format!(
+            "resume: {} was produced by a different scenario spec (budget or tag \
+             changed?); delete it to re-run",
+            path.display()
+        )));
+    }
+    Some(Ok(doc))
+}
+
 /// Execute every scenario (fanned over the pool, `cfg.jobs` wide); a
-/// failing scenario records an error row instead of sinking the campaign.
+/// failing scenario records an error row instead of sinking the campaign,
+/// and with `resume_from` set, scenarios whose artifact already exists
+/// are stood in from disk instead of re-evaluated.
 ///
 /// Errors up front — before any evaluation — if two scenarios share a
 /// [`Scenario::key`]: colliding keys would derive the same RNG seed and
@@ -565,8 +552,18 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignResult, String> {
     }
     let rows = pool::par_map_workers(&cfg.scenarios, cfg.jobs, |s| {
         let seed = scenario_seed(cfg.seed, &s.key());
-        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| run_scenario(s, seed)))
-            .unwrap_or_else(|p| Err(panic_message(p)));
+        let outcome = match cfg
+            .resume_from
+            .as_deref()
+            .and_then(|dir| resume_artifact(dir, s, seed))
+        {
+            Some(Ok(doc)) => Outcome::Resumed(doc),
+            Some(Err(e)) => Outcome::ResumeConflict(e),
+            None => Outcome::Done(
+                std::panic::catch_unwind(AssertUnwindSafe(|| run_scenario(s, seed)))
+                    .unwrap_or_else(|p| Err(panic_message(p))),
+            ),
+        };
         ScenarioResult {
             scenario: s.clone(),
             seed,
@@ -598,24 +595,27 @@ pub fn sorted_front(trace: &Trace) -> Vec<&TracePoint> {
 /// metric: `(throughput, power_w)` of the area-matched H100 cluster.
 pub fn gpu_reference(s: &Scenario, spec: &LlmSpec) -> Option<(f64, f64)> {
     match s.phase {
-        ScenarioPhase::Training => {
+        Phase::Training => {
             h100_train_eval(spec, spec.gpu_num).map(|r| (r.tokens_per_sec, r.power_w))
         }
-        ScenarioPhase::Prefill => h100_infer_eval(spec, spec.gpu_num, s.batch.max(1), false)
+        Phase::Prefill => h100_infer_eval(spec, spec.gpu_num, s.batch.max(1), false)
             .map(|r| ((s.batch.max(1) * spec.seq_len) as f64 / r.prefill_s, r.power_w)),
-        ScenarioPhase::Decode => h100_infer_eval(spec, spec.gpu_num, s.batch.max(1), false)
+        Phase::Decode => h100_infer_eval(spec, spec.gpu_num, s.batch.max(1), false)
             .map(|r| (s.batch.max(1) as f64 / r.decode_step_s, r.power_w)),
     }
 }
 
-/// Per-row digest — the single source of truth for "best Pareto point"
-/// and the GPU comparison, shared by [`summary_json`] and the
-/// [`crate::figures::campaign`] table so the two renderings cannot drift.
+/// Per-row digest — the single source of truth for "best Pareto point",
+/// the GPU comparison and the row status, shared by [`summary_json`] and
+/// the [`crate::figures::campaign`] table so the two renderings cannot
+/// drift.
 #[derive(Debug, Clone)]
 pub struct RowSummary {
     pub key: String,
     /// `Some(message)` for error rows (all metric fields then empty).
     pub error: Option<String>,
+    /// Row stood in from a pre-existing artifact (`--resume`).
+    pub resumed: bool,
     pub points: usize,
     pub final_hv: f64,
     pub best_throughput: Option<f64>,
@@ -625,56 +625,110 @@ pub struct RowSummary {
     pub speedup_vs_gpu: Option<f64>,
 }
 
+impl RowSummary {
+    /// Row status string (`campaign.json` and the summary table).
+    pub fn status(&self) -> &'static str {
+        if self.error.is_some() {
+            "error"
+        } else if self.resumed {
+            "resumed"
+        } else {
+            "ok"
+        }
+    }
+}
+
+fn error_summary(key: String, e: String, resumed: bool) -> RowSummary {
+    RowSummary {
+        key,
+        error: Some(e),
+        resumed,
+        points: 0,
+        final_hv: 0.0,
+        best_throughput: None,
+        best_power_w: None,
+        gpu_throughput: None,
+        gpu_power_w: None,
+        speedup_vs_gpu: None,
+    }
+}
+
 pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
     let key = r.scenario.key();
-    match &r.outcome {
-        Err(e) => RowSummary {
-            key,
-            error: Some(e.clone()),
-            points: 0,
-            final_hv: 0.0,
-            best_throughput: None,
-            best_power_w: None,
-            gpu_throughput: None,
-            gpu_power_w: None,
-            speedup_vs_gpu: None,
-        },
-        Ok(trace) => {
+    if let Some(e) = r.outcome.error() {
+        return error_summary(key, e, r.outcome.is_resumed());
+    }
+    // The GPU reference is recomputed (deterministically) from the
+    // scenario spec, so resumed rows digest to the same bytes as fresh
+    // ones.
+    let gpu = models::find(&r.scenario.model).and_then(|spec| gpu_reference(&r.scenario, &spec));
+    let (points, final_hv, best) = match &r.outcome {
+        Outcome::Done(Ok(trace)) => {
             let front = sorted_front(trace);
-            let best = front
-                .first()
-                .map(|p| (p.objective.throughput, p.objective.power_w));
-            let gpu = models::find(&r.scenario.model)
-                .and_then(|spec| gpu_reference(&r.scenario, &spec));
-            RowSummary {
-                key,
-                error: None,
-                points: trace.points.len(),
-                final_hv: trace.final_hv(),
-                best_throughput: best.map(|b| b.0),
-                best_power_w: best.map(|b| b.1),
-                gpu_throughput: gpu.map(|g| g.0),
-                gpu_power_w: gpu.map(|g| g.1),
-                speedup_vs_gpu: match (best, gpu) {
-                    (Some(b), Some(g)) => Some(b.0 / g.0),
-                    _ => None,
-                },
-            }
+            (
+                trace.points.len(),
+                trace.final_hv(),
+                front
+                    .first()
+                    .map(|p| (p.objective.throughput, p.objective.power_w)),
+            )
         }
+        Outcome::Resumed(doc) => {
+            // The artifact stores exactly the digest fields summary rows
+            // need (sorted front first, hv, point count).
+            let best = doc
+                .get("pareto")
+                .and_then(Json::as_arr)
+                .and_then(|a| a.first())
+                .and_then(|p| {
+                    Some((
+                        p.get("throughput").and_then(Json::as_f64)?,
+                        p.get("power_w").and_then(Json::as_f64)?,
+                    ))
+                });
+            (
+                doc.get("points").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+                doc.get("final_hv").and_then(Json::as_f64).unwrap_or(0.0),
+                best,
+            )
+        }
+        Outcome::Done(Err(_)) | Outcome::ResumeConflict(_) => {
+            unreachable!("error rows returned above")
+        }
+    };
+    RowSummary {
+        key,
+        error: None,
+        resumed: r.outcome.is_resumed(),
+        points,
+        final_hv,
+        best_throughput: best.map(|b| b.0),
+        best_power_w: best.map(|b| b.1),
+        gpu_throughput: gpu.map(|g| g.0),
+        gpu_power_w: gpu.map(|g| g.1),
+        speedup_vs_gpu: match (best, gpu) {
+            (Some(b), Some(g)) => Some(b.0 / g.0),
+            _ => None,
+        },
     }
 }
 
 /// Per-scenario artifact: spec + seed + trace + Pareto front +
 /// hypervolume (or the error row). Excludes wall-clock so artifacts are
-/// byte-identical across same-seed runs.
+/// byte-identical across same-seed runs. Resumed rows re-emit their
+/// pre-existing artifact verbatim (parse → serialize is byte-stable).
 pub fn scenario_result_json(r: &ScenarioResult) -> Json {
+    if let Outcome::Resumed(artifact) = &r.outcome {
+        return artifact.clone();
+    }
     let mut doc = Json::obj();
     doc.set("key", Json::Str(r.scenario.key()))
         .set("scenario", r.scenario.to_json())
         // Seeds are full-width u64; JSON numbers are f64, so keep exact.
         .set("seed", Json::Str(r.seed.to_string()));
     match &r.outcome {
-        Ok(trace) => {
+        Outcome::Resumed(_) => unreachable!("returned above"),
+        Outcome::Done(Ok(trace)) => {
             let mut pareto = Vec::new();
             for p in sorted_front(trace) {
                 let mut o = Json::obj();
@@ -690,7 +744,7 @@ pub fn scenario_result_json(r: &ScenarioResult) -> Json {
                 .set("final_hv", Json::Num(trace.final_hv()))
                 .set("points", Json::Num(trace.points.len() as f64));
         }
-        Err(e) => {
+        Outcome::Done(Err(e)) | Outcome::ResumeConflict(e) => {
             doc.set("status", Json::Str("error".to_string()))
                 .set("error", Json::Str(e.clone()));
         }
@@ -707,17 +761,18 @@ pub fn summary_json(result: &CampaignResult) -> Json {
     let mut rows = Vec::new();
     for r in &result.rows {
         let s = summarize_row(r);
+        let status = s.status();
         let mut o = Json::obj();
         o.set("key", Json::Str(s.key))
             .set("model", Json::Str(r.scenario.model.clone()))
             .set("phase", Json::Str(r.scenario.phase.name().to_string()))
             .set("explorer", Json::Str(r.scenario.explorer.name().to_string()))
             .set("fidelity", Json::Str(r.scenario.fidelity.name().to_string()))
-            .set("seed", Json::Str(r.seed.to_string()));
+            .set("seed", Json::Str(r.seed.to_string()))
+            .set("status", Json::Str(status.to_string()));
         match s.error {
             None => {
-                o.set("status", Json::Str("ok".to_string()))
-                    .set("points", Json::Num(s.points as f64))
+                o.set("points", Json::Num(s.points as f64))
                     .set("final_hv", Json::Num(s.final_hv))
                     .set("best_throughput", opt_num(s.best_throughput))
                     .set("best_power_w", opt_num(s.best_power_w))
@@ -726,8 +781,7 @@ pub fn summary_json(result: &CampaignResult) -> Json {
                     .set("speedup_vs_gpu", opt_num(s.speedup_vs_gpu));
             }
             Some(e) => {
-                o.set("status", Json::Str("error".to_string()))
-                    .set("error", Json::Str(e));
+                o.set("error", Json::Str(e));
             }
         }
         rows.push(o);
@@ -743,11 +797,16 @@ pub fn summary_json(result: &CampaignResult) -> Json {
 /// Write the results store under `out`: `campaign.json` (cross-scenario
 /// summary) + `scenarios/<key>.json` (per-scenario trace / Pareto front /
 /// hypervolume or error row). All files are deterministic in the campaign
-/// seed.
+/// seed; resumed rows rewrite their pre-existing artifact byte-identically,
+/// and resume-conflict rows write **nothing** — the untrusted pre-existing
+/// artifact stays on disk for the user to inspect and delete.
 pub fn write_artifacts(result: &CampaignResult, out: &std::path::Path) -> std::io::Result<()> {
     let scen_dir = out.join("scenarios");
     std::fs::create_dir_all(&scen_dir)?;
     for r in &result.rows {
+        if matches!(r.outcome, Outcome::ResumeConflict(_)) {
+            continue;
+        }
         std::fs::write(
             scen_dir.join(format!("{}.json", r.scenario.key())),
             scenario_result_json(r).to_pretty() + "\n",
@@ -764,6 +823,15 @@ pub fn write_artifacts(result: &CampaignResult, out: &std::path::Path) -> std::i
 mod tests {
     use super::*;
 
+    fn fresh_cfg(scenarios: Vec<Scenario>, seed: u64, jobs: usize) -> CampaignConfig {
+        CampaignConfig {
+            scenarios,
+            seed,
+            jobs,
+            resume_from: None,
+        }
+    }
+
     #[test]
     fn paper_suite_shape() {
         let suite = paper_suite();
@@ -776,7 +844,7 @@ mod tests {
         assert!(suite.iter().all(|s| s.fidelity == Fidelity::Analytical));
         assert!(suite
             .iter()
-            .filter(|s| s.phase == ScenarioPhase::Training)
+            .filter(|s| s.phase == Phase::Training)
             .all(|s| s.batch == 0));
         assert!(suite
             .iter()
@@ -790,7 +858,7 @@ mod tests {
             paper_suite()[0].clone(),
             Scenario {
                 model: "GPT-175B".to_string(),
-                phase: ScenarioPhase::Prefill,
+                phase: Phase::Prefill,
                 batch: 8,
                 wafers: Some(4),
                 explorer: Explorer::Mobo,
@@ -838,12 +906,25 @@ mod tests {
         let e = Scenario::from_json(&bad_explorer).unwrap_err();
         assert!(e.contains("random, mobo, mfmobo"), "{e}");
 
+        // The fidelity error lists the registry names — the same list
+        // `theseus dse --fidelity` prints.
         let bad_fidelity = Json::parse(
             r#"{"model": "1.7", "phase": "training", "explorer": "mobo", "fidelity": "oracle"}"#,
         )
         .unwrap();
         let e = Scenario::from_json(&bad_fidelity).unwrap_err();
-        assert!(e.contains("analytical, gnn-test, cycle-accurate"), "{e}");
+        assert!(e.contains("analytical, ca, gnn, gnn-test"), "{e}");
+
+        // The legacy "cycle-accurate" alias still parses to the CA entry.
+        let legacy = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "mobo",
+                "fidelity": "cycle-accurate"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            Scenario::from_json(&legacy).unwrap().fidelity,
+            Fidelity::CycleAccurate
+        );
 
         let zero_batch = Json::parse(
             r#"{"model": "1.7", "phase": "decode", "explorer": "random", "batch": 0}"#,
@@ -896,11 +977,7 @@ mod tests {
         let mut b = a.clone();
         b.budget.iters = 10; // budget-only difference: invisible in the key
         assert_eq!(a.key(), b.key());
-        let cfg = CampaignConfig {
-            scenarios: vec![a.clone(), b.clone()],
-            seed: 1,
-            jobs: 1,
-        };
+        let cfg = fresh_cfg(vec![a.clone(), b.clone()], 1, 1);
         let e = run_campaign(&cfg).unwrap_err();
         assert!(e.contains("duplicate scenario key"), "{e}");
         assert!(e.contains(&a.key()), "{e}");
@@ -929,7 +1006,7 @@ mod tests {
     fn unknown_model_scenario_is_an_error_not_a_fallback() {
         let s = Scenario {
             model: "no-such-model".to_string(),
-            phase: ScenarioPhase::Training,
+            phase: Phase::Training,
             batch: 0,
             wafers: None,
             explorer: Explorer::Random,
@@ -943,18 +1020,30 @@ mod tests {
     }
 
     #[test]
-    fn inference_rejects_non_analytical_fidelity() {
+    fn decode_scenarios_run_at_any_registry_fidelity() {
+        // The engine API removed the inference = analytical-only
+        // restriction: a gnn-test decode scenario runs end to end and its
+        // trace points carry the gnn-test fidelity label (ISSUE 5
+        // acceptance).
         let s = Scenario {
-            model: "1.7".to_string(),
-            phase: ScenarioPhase::Decode,
-            batch: 8,
+            model: "GPT-1.7B".to_string(),
+            phase: Phase::Decode,
+            batch: 4,
             wafers: None,
             explorer: Explorer::Random,
-            fidelity: Fidelity::CycleAccurate,
-            budget: Budget::default(),
+            fidelity: Fidelity::GnnTest,
+            budget: Budget {
+                iters: 1,
+                init: 1,
+                pool: 8,
+                mc: 8,
+                n1: 0,
+                k: 0,
+            },
             tag: String::new(),
         };
-        let e = run_scenario(&s, 1).unwrap_err();
-        assert!(e.contains("analytical"), "{e}");
+        let trace = run_scenario(&s, 11).expect("gnn-test decode scenario runs");
+        assert!(!trace.points.is_empty());
+        assert!(trace.points.iter().all(|p| p.fidelity == "gnn-test"));
     }
 }

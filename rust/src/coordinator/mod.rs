@@ -1,20 +1,34 @@
-//! DSE coordinator (paper Fig. 2): wires the design space, evaluation
-//! engine (at the explorer-requested fidelity) and Space Explorer into the
-//! iterative loop; owns result persistence and reporting.
+//! DSE coordinator (paper Fig. 2): wires the design space, the unified
+//! evaluation engine ([`crate::eval::engine`]) and the Space Explorer into
+//! the iterative loop; owns result persistence and reporting.
 //!
-//! This is Layer 3's event loop: evaluations fan out over the thread pool,
-//! traces checkpoint to JSON, and the Pareto set prints as a table.
+//! This is Layer 3's event loop. A [`DseRun`] names one (model × phase ×
+//! fidelity × explorer) tuple; [`run`] builds the [`Engine`] for it (plus
+//! the analytical low-fidelity twin for MFMOBO's Algo. 1 pair) and drives
+//! the explorer through [`explore`] — the single explorer-dispatch path
+//! shared with the campaign runner. Whether evaluations fan out over the
+//! thread pool is the *engine backend's* capability ([`Engine::to_sync`]),
+//! not a coordinator decision: pooled explorers get the `Sync` view when
+//! the backend supports it and fall back to the serial drive otherwise
+//! (the thread-confined PJRT GNN batches link-wait inference instead).
+//!
+//! Fidelity names (`analytical`, `ca`, `gnn`, `gnn-test`) come from the
+//! [`Fidelity`] registry — `theseus dse --fidelity`, campaign scenario
+//! JSON and MFMOBO's pair all parse through the same list, and unknown
+//! names exit 1 listing it.
 //!
 //! # Scenario campaigns ([`campaign`])
 //!
-//! One `theseus dse` invocation runs a single `(model, phase, explorer)`
-//! tuple; the [`campaign`] subsystem batches the paper's whole §IX matrix:
+//! One `theseus dse` invocation runs a single scenario; the [`campaign`]
+//! subsystem batches the paper's whole §IX matrix:
 //!
 //! ```text
 //! # the built-in §IX suite (96 scenarios), 4 at a time:
 //! theseus campaign --suite paper --out artifacts/campaign --seed 2024 --jobs 4
 //! # or a custom matrix from a JSON file (see campaign::scenarios_from_json):
 //! theseus campaign --scenarios my_sweep.json --out artifacts/sweep
+//! # skip scenarios whose artifact already exists under --out:
+//! theseus campaign --suite paper --out artifacts/campaign --resume
 //! ```
 //!
 //! Each scenario's RNG seed derives as `scenario_seed(campaign_seed,
@@ -25,17 +39,15 @@
 //! artifacts (`campaign.json` + `scenarios/<key>.json`).
 
 pub mod campaign;
-pub mod objective;
 
-use std::sync::Arc;
-
+use crate::eval::engine::{Engine, EvalSpec, Fidelity};
 use crate::explorer::{self, BoConfig, MfConfig, Trace};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::table::Table;
-use crate::workload::models;
+use crate::workload::{models, Phase};
 
-pub use objective::{ref_power_for, AnalyticalTraining, InferenceObjective, TrainingObjective};
+pub use crate::eval::engine::ref_power_for;
 
 /// Which explorer to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,63 +84,85 @@ impl Explorer {
     }
 }
 
-/// A full DSE run description.
+/// A full DSE run description: one evaluation spec plus the explorer and
+/// its budget.
 pub struct DseRun {
     pub spec: crate::workload::LlmSpec,
+    /// Workload phase under optimization (training / prefill / decode).
+    pub phase: Phase,
+    /// Inference batch (ignored for training).
+    pub batch: usize,
+    /// Multi-query attention for the inference phases.
+    pub mqa: bool,
+    /// Fixed wafer count; `None` = area-matched (§VIII-A).
+    pub wafers: Option<usize>,
+    /// Evaluation fidelity ([`Fidelity`] registry). For MFMOBO this is
+    /// the *high* fidelity; the low fidelity is always analytical.
+    pub fidelity: Fidelity,
     pub explorer: Explorer,
     pub cfg: BoConfig,
     /// Low-fidelity trials for MFMOBO (paper: 100).
     pub n1: usize,
+    /// MFMOBO guided-handoff iterations.
     pub k: usize,
-    /// Use the GNN runtime as the high fidelity when available.
-    pub use_gnn: bool,
 }
 
-/// Execute a DSE run; returns the trace.
-pub fn run(run: &DseRun) -> Trace {
-    let gnn: Option<Arc<crate::runtime::GnnModel>> = if run.use_gnn {
-        match crate::runtime::GnnModel::load_default() {
-            Ok(m) => Some(Arc::new(m)),
-            Err(e) => {
-                eprintln!("note: GNN unavailable ({e}); high fidelity = analytical");
-                None
-            }
+impl DseRun {
+    fn eval_spec(&self) -> EvalSpec {
+        EvalSpec {
+            model: self.spec.clone(),
+            phase: self.phase,
+            batch: self.batch,
+            mqa: self.mqa,
+            wafers: self.wafers,
+            fidelity: self.fidelity,
         }
-    } else {
-        None
-    };
-
-    let low = TrainingObjective::analytical(run.spec.clone());
-    let high: Box<dyn explorer::DesignEval> = match &gnn {
-        Some(m) => Box::new(TrainingObjective::gnn(run.spec.clone(), m.clone())),
-        None => Box::new(TrainingObjective::analytical(run.spec.clone())),
-    };
-
-    match run.explorer {
-        // Without the GNN, random search fans design-point evaluations out
-        // over the thread pool (the GNN's PJRT handle is thread-confined,
-        // so that fidelity keeps the serial path).
-        Explorer::Random if gnn.is_none() => explorer::random_search_par(
-            &AnalyticalTraining {
-                spec: run.spec.clone(),
-                wafers: None,
-            },
-            &run.cfg,
-        ),
-        Explorer::Random => explorer::random_search(high.as_ref(), &run.cfg),
-        Explorer::Mobo => explorer::mobo(high.as_ref(), &run.cfg),
-        Explorer::Mfmobo => explorer::mfmobo(
-            high.as_ref(),
-            &low,
-            &MfConfig {
-                base: run.cfg.clone(),
-                n1: run.n1,
-                d0: run.cfg.init,
-                d1: run.cfg.init,
-                k: run.k,
-            },
-        ),
     }
+}
+
+/// Drive one explorer over an evaluation spec — the single dispatch path
+/// behind `theseus dse` and every campaign scenario. Errors when the
+/// spec's fidelity backend is unavailable (e.g. `gnn` without artifacts)
+/// instead of silently substituting another fidelity.
+pub fn explore(
+    spec: &EvalSpec,
+    explorer: Explorer,
+    cfg: &BoConfig,
+    n1: usize,
+    k: usize,
+) -> Result<Trace, String> {
+    let engine = Engine::new(spec.clone())?;
+    Ok(match explorer {
+        // Random search fans whole design points over the pool when the
+        // backend is Sync; the thread-confined GNN keeps the serial drive
+        // (its sweep already batches inference).
+        Explorer::Random => match engine.to_sync() {
+            Some(sync) => explorer::random_search_par(&sync, cfg),
+            None => explorer::random_search(&engine, cfg),
+        },
+        Explorer::Mobo => explorer::mobo(&engine, cfg),
+        Explorer::Mfmobo => {
+            let low = Engine::new(spec.clone().with_fidelity(Fidelity::Analytical))
+                .expect("analytical backend is always available");
+            explorer::mfmobo(
+                &engine,
+                &low,
+                &MfConfig {
+                    base: cfg.clone(),
+                    n1,
+                    d0: cfg.init,
+                    d1: cfg.init,
+                    k,
+                },
+            )
+        }
+    })
+}
+
+/// Execute a DSE run; returns the trace (or the engine-construction
+/// error, e.g. an unavailable fidelity backend).
+pub fn run(run: &DseRun) -> Result<Trace, String> {
+    explore(&run.eval_spec(), run.explorer, &run.cfg, run.n1, run.k)
 }
 
 /// Serialize a trace (checkpoint / bench consumption).
@@ -153,18 +187,22 @@ pub fn trace_to_json(trace: &Trace) -> Json {
 }
 
 /// CLI entry (the `theseus dse` subcommand). Unknown `--model` /
-/// `--explorer` keys exit 1 listing the valid options (never a silent
-/// fallback to a default).
+/// `--phase` / `--fidelity` / `--explorer` keys exit 1 listing the valid
+/// options from their registries (never a silent fallback to a default),
+/// and an unwritable `--out` path exits 1 instead of panicking.
 pub fn run_from_cli(args: &Args) {
+    fn usage_exit(e: String) -> ! {
+        eprintln!("dse: {e}");
+        std::process::exit(1);
+    }
     let model = args.str("model", "175b");
-    let spec = models::find_or_usage(&model).unwrap_or_else(|e| {
-        eprintln!("dse: {e}");
-        std::process::exit(1);
-    });
-    let explorer = Explorer::parse_or_usage(&args.str("explorer", "mfmobo")).unwrap_or_else(|e| {
-        eprintln!("dse: {e}");
-        std::process::exit(1);
-    });
+    let spec = models::find_or_usage(&model).unwrap_or_else(|e| usage_exit(e));
+    let phase =
+        Phase::parse_or_usage(&args.str("phase", "training")).unwrap_or_else(|e| usage_exit(e));
+    let fidelity = Fidelity::parse_or_usage(&args.str("fidelity", "analytical"))
+        .unwrap_or_else(|e| usage_exit(e));
+    let explorer = Explorer::parse_or_usage(&args.str("explorer", "mfmobo"))
+        .unwrap_or_else(|e| usage_exit(e));
     let cfg = BoConfig {
         iters: args.usize("iters", 40),
         init: args.usize("init", 6),
@@ -176,21 +214,31 @@ pub fn run_from_cli(args: &Args) {
     };
     let dse = DseRun {
         spec: spec.clone(),
+        phase,
+        batch: args.usize("batch", if phase.is_inference() { 32 } else { 0 }),
+        mqa: args.bool("mqa", false),
+        wafers: if args.has("wafers") {
+            Some(args.usize("wafers", 1))
+        } else {
+            None
+        },
+        fidelity,
         explorer,
         cfg,
         n1: args.usize("n1", 40),
         k: args.usize("k", 8),
-        use_gnn: !args.bool("no-gnn", false),
     };
     eprintln!(
-        "DSE: {} on {} ({} iters, seed {})",
+        "DSE: {} on {} {} at fidelity {} ({} iters, seed {})",
         explorer.name(),
         spec.name,
+        phase.name(),
+        fidelity.name(),
         dse.cfg.iters,
         dse.cfg.seed
     );
     let t0 = std::time::Instant::now();
-    let trace = run(&dse);
+    let trace = run(&dse).unwrap_or_else(|e| usage_exit(e));
     eprintln!(
         "explored {} points in {:.1}s; final hypervolume {:.4e}",
         trace.points.len(),
@@ -199,7 +247,7 @@ pub fn run_from_cli(args: &Args) {
     );
 
     let mut table = Table::new(
-        &format!("Pareto set — {} training", spec.name),
+        &format!("Pareto set — {} {}", spec.name, phase.name()),
         &["tokens/s", "power(kW)", "fidelity", "config"],
     );
     let mut front = trace.pareto();
@@ -215,8 +263,15 @@ pub fn run_from_cli(args: &Args) {
     table.print();
 
     if let Some(out) = args.opt_str("out") {
-        std::fs::write(&out, trace_to_json(&trace).to_pretty()).expect("write trace");
-        eprintln!("trace written to {out}");
+        // The loud-exit CLI contract: an unwritable --out is a user
+        // error, not a panic.
+        match std::fs::write(&out, trace_to_json(&trace).to_pretty()) {
+            Ok(()) => eprintln!("trace written to {out}"),
+            Err(e) => {
+                eprintln!("dse: cannot write trace to {out}: {e}");
+                std::process::exit(1);
+            }
+        }
     }
 }
 
@@ -244,6 +299,11 @@ mod tests {
         let spec = benchmarks()[0].clone();
         let run_cfg = DseRun {
             spec: spec.clone(),
+            phase: Phase::Training,
+            batch: 0,
+            mqa: false,
+            wafers: None,
+            fidelity: Fidelity::Analytical,
             explorer: Explorer::Random,
             cfg: BoConfig {
                 iters: 2,
@@ -256,14 +316,43 @@ mod tests {
             },
             n1: 0,
             k: 0,
-            use_gnn: false,
         };
-        let trace = run(&run_cfg);
+        let trace = run(&run_cfg).expect("analytical run never fails to build");
         assert!(!trace.points.is_empty());
         let json = trace_to_json(&trace);
         assert!(json.get("points").unwrap().as_arr().unwrap().len() >= 1);
         // Round-trips through the JSON substrate.
         let parsed = crate::util::json::Json::parse(&json.to_string()).unwrap();
         assert_eq!(parsed, json);
+    }
+
+    #[cfg(not(theseus_pjrt))]
+    #[test]
+    fn gnn_fidelity_run_errors_loudly_offline() {
+        // `--fidelity gnn` without artifacts must be a loud error from
+        // the engine registry, not a silent analytical substitution.
+        let spec = benchmarks()[0].clone();
+        let run_cfg = DseRun {
+            spec: spec.clone(),
+            phase: Phase::Training,
+            batch: 0,
+            mqa: false,
+            wafers: None,
+            fidelity: Fidelity::Gnn,
+            explorer: Explorer::Random,
+            cfg: BoConfig {
+                iters: 1,
+                init: 1,
+                pool: 4,
+                mc_samples: 4,
+                ref_power: ref_power_for(&spec),
+                seed: 1,
+                sample_tries: 100,
+            },
+            n1: 0,
+            k: 0,
+        };
+        let e = run(&run_cfg).unwrap_err();
+        assert!(e.contains("fidelity 'gnn' unavailable"), "{e}");
     }
 }

@@ -8,13 +8,10 @@ use std::sync::Arc;
 use crate::arch::constants as k;
 use crate::arch::{HeteroGranularity, MemoryKind};
 use crate::compiler::cache::{compile_chunk_cached, CachedChunk};
-use crate::compiler::routing::NUM_DIRS;
-use crate::compiler::CompiledChunk;
 use crate::design_space::Validated;
 use crate::eval::op_level::{chunk_latency_with_topo, NocModel, OpLevelResult};
 use crate::eval::power::EnergyLedger;
 use crate::eval::NocEstimator;
-use crate::runtime::batch::{GnnBackend, GnnBatcher};
 use crate::workload::parallel::{enumerate_strategies, train_chunk_bytes, SystemMemory};
 use crate::workload::{LlmSpec, OpGraph, ParallelStrategy, Phase};
 
@@ -114,9 +111,10 @@ fn strategy_cap() -> usize {
 }
 
 /// Rank feasible strategies by the cheap heuristic and keep the best few
-/// (shared by the serial and pooled evaluation paths so both sweep the
-/// exact same candidate list).
-fn ranked_strategies(spec: &LlmSpec, sys: &SystemConfig) -> Vec<ParallelStrategy> {
+/// (shared by the serial, pooled and batched evaluation paths —
+/// [`crate::eval::engine`] — so every dispatch sweeps the exact same
+/// candidate list).
+pub(crate) fn ranked_strategies(spec: &LlmSpec, sys: &SystemConfig) -> Vec<ParallelStrategy> {
     let mem = sys.memory();
     let mut strategies = enumerate_strategies(spec, &mem);
     // Heuristic rank: chunks close to the reticle count (one chunk per
@@ -135,7 +133,7 @@ fn ranked_strategies(spec: &LlmSpec, sys: &SystemConfig) -> Vec<ParallelStrategy
     strategies
 }
 
-fn best_eval(evals: impl Iterator<Item = Option<TrainEval>>) -> Option<TrainEval> {
+pub(crate) fn best_eval(evals: impl Iterator<Item = Option<TrainEval>>) -> Option<TrainEval> {
     evals
         .flatten()
         .max_by(|a, b| a.tokens_per_sec.partial_cmp(&b.tokens_per_sec).unwrap())
@@ -143,9 +141,13 @@ fn best_eval(evals: impl Iterator<Item = Option<TrainEval>>) -> Option<TrainEval
 
 /// Compile (cache-served) the representative region of one strategy — the
 /// §VI hierarchical-evaluation slice that `eval_training_with` scores.
-/// Shared by the serial sweep and the batched GNN sweep so both evaluate
-/// byte-identical chunks.
-fn strategy_region(spec: &LlmSpec, sys: &SystemConfig, s: ParallelStrategy) -> Arc<CachedChunk> {
+/// Shared by the serial sweep and the engine's batched GNN sweep so both
+/// evaluate byte-identical chunks.
+pub(crate) fn strategy_region(
+    spec: &LlmSpec,
+    sys: &SystemConfig,
+    s: ParallelStrategy,
+) -> Arc<CachedChunk> {
     let wsc = &sys.validated.point.wsc;
     let chunks = s.num_chunks() as f64;
     let cores_per_chunk = (sys.total_cores() as f64 / chunks).max(1.0);
@@ -156,69 +158,10 @@ fn strategy_region(spec: &LlmSpec, sys: &SystemConfig, s: ParallelStrategy) -> A
     compile_chunk_cached(&graph, rh, rw, &wsc.reticle.core)
 }
 
-/// Fixed per-strategy link-wait table produced by the batched GNN pass.
-/// `None` (chunk exceeded padding, or the backend is unavailable) selects
-/// the analytical model — the same per-chunk fallback contract as direct
-/// GNN inference. The dimension guard keeps a stale table from leaking
-/// into a chunk it was not predicted for.
-struct PrecomputedWaits(Option<Vec<f64>>);
-
-impl NocEstimator for PrecomputedWaits {
-    fn link_waits(&self, chunk: &CompiledChunk, _core: &crate::arch::CoreConfig) -> Option<Vec<f64>> {
-        match &self.0 {
-            Some(w) if w.len() == chunk.region_h * chunk.region_w * NUM_DIRS => Some(w.clone()),
-            _ => None,
-        }
-    }
-
-    fn name(&self) -> &'static str {
-        "gnn-batched"
-    }
-}
-
-/// [`eval_training`] at the GNN fidelity with **batched** link-wait
-/// inference: the representative chunk of every ranked strategy is
-/// compiled (cache-served) up front, their padded features are packed
-/// `batch` chunks per execute call through [`GnnBatcher`], and the sweep
-/// then scores each strategy against its precomputed link waits.
-///
-/// The PJRT executable handle is thread-confined, so unlike the analytical
-/// fidelity ([`eval_training_par`]) the win here is amortizing per-call
-/// dispatch across the sweep, not thread fan-out. Strategies whose region
-/// exceeds the GNN padding fall back to the analytical model individually
-/// (hierarchical scale reduction per §VI), and an unavailable backend
-/// degrades the whole sweep to the analytical model — both exactly as with
-/// per-chunk inference. For a deterministic backend the sweep is
-/// bit-identical to the serial per-chunk GNN sweep (proven on the
-/// [`crate::runtime::TestBackend`]); the PJRT batch executable may differ
-/// in the last float bit where XLA reassociates reductions under `vmap`.
-pub fn eval_training_gnn_batched(
-    spec: &LlmSpec,
-    sys: &SystemConfig,
-    backend: &dyn GnnBackend,
-    batch: usize,
-) -> Option<TrainEval> {
-    let strategies = ranked_strategies(spec, sys);
-    if strategies.is_empty() {
-        return None;
-    }
-    let core = sys.validated.point.wsc.reticle.core;
-    let regions: Vec<Arc<CachedChunk>> = strategies
-        .iter()
-        .map(|s| strategy_region(spec, sys, *s))
-        .collect();
-    let reqs: Vec<(&CompiledChunk, &crate::arch::CoreConfig)> =
-        regions.iter().map(|r| (&r.chunk, &core)).collect();
-    let waits = GnnBatcher::new(backend, batch).link_waits_many(&reqs);
-    best_eval(
-        strategies
-            .iter()
-            .zip(waits)
-            .map(|(s, w)| eval_training_with(spec, sys, *s, &PrecomputedWaits(w))),
-    )
-}
-
-/// Evaluate LLM training on the system (§VI-D + §VI-A strategy search).
+/// Evaluate LLM training on the system (§VI-D + §VI-A strategy search),
+/// serially, with any per-chunk estimator. This is the reference sweep;
+/// the engine's pooled and batched dispatches
+/// ([`crate::eval::engine::Engine`]) are proven equivalent against it.
 /// Returns `None` when no parallel strategy fits memory.
 pub fn eval_training(
     spec: &LlmSpec,
@@ -227,29 +170,6 @@ pub fn eval_training(
 ) -> Option<TrainEval> {
     let strategies = ranked_strategies(spec, sys);
     best_eval(strategies.iter().map(|s| eval_training_with(spec, sys, *s, noc)))
-}
-
-/// [`eval_training`] with the per-strategy sweep fanned out over the
-/// scoped thread pool ([`crate::util::pool::par_map`]). Requires a `Sync`
-/// NoC estimator — the analytical and cycle-accurate fidelities qualify;
-/// the GNN runtime stays on [`eval_training`] because its PJRT executable
-/// handle is thread-confined (see [`crate::eval::NocEstimator`]).
-///
-/// Numerically identical to the serial path: the same ranked strategy
-/// list is evaluated (each strategy's evaluation is deterministic and
-/// independent) and ties resolve by the same last-max rule.
-pub fn eval_training_par(
-    spec: &LlmSpec,
-    sys: &SystemConfig,
-    noc: &(dyn NocEstimator + Sync),
-) -> Option<TrainEval> {
-    let strategies = ranked_strategies(spec, sys);
-    if strategies.is_empty() {
-        return None;
-    }
-    let evals =
-        crate::util::pool::par_map(&strategies, |s| eval_training_with(spec, sys, *s, noc));
-    best_eval(evals.into_iter())
 }
 
 /// Evaluate one specific strategy.
@@ -604,33 +524,6 @@ mod tests {
     }
 
     #[test]
-    fn parallel_training_eval_matches_serial() {
-        // Pooled + cached evaluation must agree with the serial path to
-        // strict tolerance (the per-strategy math is deterministic, so in
-        // practice the results are bit-identical).
-        let spec = &benchmarks()[0];
-        let s = sys(2);
-        let serial = eval_training(spec, &s, &Analytical);
-        let par = eval_training_par(spec, &s, &Analytical);
-        match (serial, par) {
-            (Some(a), Some(b)) => {
-                assert_eq!(a.strategy, b.strategy);
-                let rel = |x: f64, y: f64| (x - y).abs() / x.abs().max(1e-300);
-                assert!(rel(a.tokens_per_sec, b.tokens_per_sec) <= 1e-9);
-                assert!(rel(a.step_time_s, b.step_time_s) <= 1e-9);
-                assert!(rel(a.power_w, b.power_w) <= 1e-9);
-                assert!(rel(a.energy_per_token_j, b.energy_per_token_j) <= 1e-9);
-            }
-            (None, None) => {}
-            (a, b) => panic!(
-                "serial/parallel feasibility disagree: {:?} vs {:?}",
-                a.map(|r| r.tokens_per_sec),
-                b.map(|r| r.tokens_per_sec)
-            ),
-        }
-    }
-
-    #[test]
     fn warm_cache_reproduces_cold_results() {
         // Two identical evaluations — the second fully cache-served —
         // must produce identical numbers.
@@ -666,49 +559,15 @@ mod tests {
     }
 
     #[test]
-    fn batched_gnn_sweep_matches_per_chunk_sweep() {
-        // The batched strategy sweep must select the same strategy and
-        // produce bit-identical numbers as (a) the per-chunk batcher and
-        // (b) the plain serial sweep driving the TestBackend as a
-        // per-chunk NocEstimator — the batching is a pure amortization.
-        use crate::runtime::TestBackend;
-        let spec = &benchmarks()[0];
-        let s = sys(2);
-        let backend = TestBackend::new();
-        let batched = eval_training_gnn_batched(spec, &s, &backend, 8);
-        let per_chunk = eval_training_gnn_batched(spec, &s, &backend, 1);
-        let serial = eval_training(spec, &s, &backend);
-        match (batched, per_chunk, serial) {
-            (Some(a), Some(b), Some(c)) => {
-                assert_eq!(a.strategy, c.strategy);
-                assert_eq!(a.tokens_per_sec, c.tokens_per_sec);
-                assert_eq!(a.step_time_s, c.step_time_s);
-                assert_eq!(a.power_w, c.power_w);
-                assert_eq!(a.energy_per_token_j, c.energy_per_token_j);
-                assert_eq!(b.strategy, c.strategy);
-                assert_eq!(b.tokens_per_sec, c.tokens_per_sec);
-            }
-            (None, None, None) => {}
-            (a, b, c) => panic!(
-                "feasibility disagrees: batched={:?} per_chunk={:?} serial={:?}",
-                a.map(|r| r.tokens_per_sec),
-                b.map(|r| r.tokens_per_sec),
-                c.map(|r| r.tokens_per_sec)
-            ),
-        }
-    }
-
-    #[test]
-    fn batched_gnn_sweep_produces_valid_objective() {
-        // The GNN fidelity flows through the whole sweep and yields a
-        // finite, positive objective alongside the analytical one (the two
-        // models may or may not agree on the argmax — only validity is
-        // asserted here; equivalence is pinned by the test above).
+    fn serial_sweep_rides_the_pseudo_gnn_estimator() {
+        // The serial reference sweep accepts any estimator: the pseudo-GNN
+        // drives it per chunk and yields a finite, positive result
+        // alongside the analytical one (equivalence with the batched
+        // dispatch is pinned in eval::engine's tests).
         use crate::runtime::TestBackend;
         let spec = &benchmarks()[0];
         let s = sys(1);
-        let backend = TestBackend::new();
-        let gnn = eval_training_gnn_batched(spec, &s, &backend, 8).expect("evaluates");
+        let gnn = eval_training(spec, &s, &TestBackend::new()).expect("evaluates");
         let ana = eval_training(spec, &s, &Analytical).expect("evaluates");
         assert!(gnn.tokens_per_sec > 0.0 && gnn.tokens_per_sec.is_finite());
         assert!(gnn.power_w > 0.0);

@@ -1,17 +1,31 @@
-//! Hierarchical evaluation engine (paper §VI, Fig. 6): tile-level
-//! ([`tile`]), op-level ([`op_level`] — analytical or GNN-backed), and
-//! chunk-level ([`chunk`]) evaluation, with Aladdin-style power accounting
-//! ([`power`]).
+//! Hierarchical evaluation (paper §VI, Fig. 6): tile-level ([`tile`]),
+//! op-level ([`op_level`] — analytical or GNN-backed), and chunk-level
+//! ([`chunk`]) evaluation, with Aladdin-style power accounting
+//! ([`power`]) — unified behind the [`engine`] subsystem.
+//!
+//! [`engine`] is the one entry point every consumer goes through: an
+//! [`engine::EvalSpec`] (model × phase × batch × mqa × wafers ×
+//! fidelity) builds an [`engine::Engine`] implementing
+//! [`crate::explorer::DesignEval`] for **any** (phase × fidelity) pair.
+//! The [`engine::Fidelity`] registry (`analytical`, `ca`, `gnn`,
+//! `gnn-test`) is the single source of truth for fidelity names across
+//! `theseus dse --fidelity`, campaign scenario JSON, and `mfmobo`'s
+//! low/high pair; see the engine docs for the Sync-vs-batched dispatch
+//! rule and the checklist for adding a fidelity.
+//!
+//! The layers below the engine stay independently usable:
+//! [`eval_training`] is the serial reference sweep any [`NocEstimator`]
+//! can drive, and [`eval_inference`] evaluates one prefill/decode
+//! configuration at any fidelity.
 
 pub mod chunk;
+pub mod engine;
 pub mod op_level;
 pub mod power;
 pub mod tile;
 
-pub use chunk::{
-    eval_inference, eval_training, eval_training_gnn_batched, eval_training_par, InferEval,
-    SystemConfig, TrainEval,
-};
+pub use chunk::{eval_inference, eval_training, InferEval, SystemConfig, TrainEval};
+pub use engine::{Engine, EvalSpec, Fidelity, SyncEngine};
 pub use op_level::{
     chunk_latency, chunk_latency_with_topo, ChunkTopology, NocModel, OpLevelResult,
 };
@@ -26,8 +40,10 @@ use crate::compiler::CompiledChunk;
 /// * The GNN runtime ([`crate::runtime`]) returns Eq. 5 predictions
 ///   (high fidelity, §VI-C "GNN-based Evaluation").
 ///
-/// Not `Sync`: the PJRT executable handle is thread-confined; the
-/// coordinator keeps GNN-backed evaluation on the explorer thread.
+/// Not `Sync`: the PJRT executable handle is thread-confined. The
+/// evaluation engine ([`engine`]) turns that distinction into its
+/// dispatch rule — `Sync` estimators fan the strategy sweep over the
+/// thread pool, thread-confined ones batch link-wait inference instead.
 pub trait NocEstimator {
     fn link_waits(&self, chunk: &CompiledChunk, core: &CoreConfig) -> Option<Vec<f64>>;
 
@@ -53,7 +69,8 @@ impl NocEstimator for Analytical {
 
 /// Ground-truth estimator: runs the cycle-accurate simulator and feeds the
 /// measured per-link waits back through Eq. 6 (used for Fig. 7 validation
-/// and optionally as the highest-fidelity DSE stage).
+/// and as the `ca` fidelity of the evaluation engine).
+#[derive(Debug, Clone)]
 pub struct CycleAccurate {
     /// Simulation budget per chunk.
     pub max_cycles: u64,
@@ -63,6 +80,21 @@ impl Default for CycleAccurate {
     fn default() -> Self {
         CycleAccurate {
             max_cycles: 300_000_000,
+        }
+    }
+}
+
+impl CycleAccurate {
+    /// Budget from the `THESEUS_CA_BUDGET` env knob (cycles per chunk),
+    /// else the default. The engine's `ca` fidelity reads this so long
+    /// campaigns (and fast CI smokes) can tune the simulation budget
+    /// without a rebuild.
+    pub fn from_env() -> CycleAccurate {
+        CycleAccurate {
+            max_cycles: crate::util::cli::env_u64(
+                "THESEUS_CA_BUDGET",
+                CycleAccurate::default().max_cycles,
+            ),
         }
     }
 }

@@ -9,14 +9,8 @@
 use crate::design_space::{self, encode, DesignPoint, Validated, DIMS};
 use crate::explorer::gp::Gp;
 use crate::explorer::pareto::{hypervolume, pareto_indices, EhviEstimator, Objective};
+use crate::explorer::traits::{DesignEval, Trace};
 use crate::util::rng::Rng;
-
-/// A design evaluation function (one fidelity level). Not `Sync` — GNN
-/// fidelities hold a thread-confined PJRT handle.
-pub trait DesignEval {
-    fn eval(&self, v: &Validated) -> Option<Objective>;
-    fn name(&self) -> &'static str;
-}
 
 /// Explorer configuration.
 #[derive(Debug, Clone)]
@@ -47,51 +41,6 @@ impl Default for BoConfig {
             seed: 0,
             sample_tries: 4000,
         }
-    }
-}
-
-/// One evaluated point in an exploration trace.
-#[derive(Debug, Clone)]
-pub struct TracePoint {
-    pub point: DesignPoint,
-    pub objective: Objective,
-    /// Which fidelity produced the objective ("analytical", "gnn", ...).
-    pub fidelity: &'static str,
-}
-
-/// Full exploration trace with per-evaluation hypervolume history.
-#[derive(Debug, Clone, Default)]
-pub struct Trace {
-    pub points: Vec<TracePoint>,
-    pub hv_history: Vec<f64>,
-}
-
-impl Trace {
-    fn push(&mut self, point: DesignPoint, objective: Objective, fidelity: &'static str, ref_power: f64) {
-        self.points.push(TracePoint {
-            point,
-            objective,
-            fidelity,
-        });
-        let objs: Vec<Objective> = self.points.iter().map(|p| p.objective).collect();
-        self.hv_history.push(hypervolume(&objs, ref_power));
-    }
-
-    pub fn pareto(&self) -> Vec<&TracePoint> {
-        let objs: Vec<Objective> = self.points.iter().map(|p| p.objective).collect();
-        pareto_indices(&objs)
-            .into_iter()
-            .map(|i| &self.points[i])
-            .collect()
-    }
-
-    pub fn final_hv(&self) -> f64 {
-        self.hv_history.last().copied().unwrap_or(0.0)
-    }
-
-    /// Evaluations needed to first reach `target` hypervolume.
-    pub fn iters_to_hv(&self, target: f64) -> Option<usize> {
-        self.hv_history.iter().position(|&h| h >= target).map(|i| i + 1)
     }
 }
 

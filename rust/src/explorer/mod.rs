@@ -1,13 +1,17 @@
 //! Space Explorer (paper §VII): Gaussian-process surrogates ([`gp`]),
-//! Pareto/hypervolume/EHVI machinery ([`pareto`]), and the explorers —
-//! random search, MOBO, and the paper's multi-fidelity MFMOBO ([`mobo`]).
+//! Pareto/hypervolume/EHVI machinery ([`pareto`]), the evaluation contract
+//! explorers drive ([`traits`]), and the explorers themselves — random
+//! search, MOBO, and the paper's multi-fidelity MFMOBO ([`mobo`]).
+//!
+//! Explorers are fidelity-agnostic: they see design evaluation only
+//! through [`DesignEval`], implemented for any (phase × fidelity) pair by
+//! [`crate::eval::engine::Engine`].
 
 pub mod gp;
 pub mod mobo;
 pub mod pareto;
+pub mod traits;
 
-pub use mobo::{
-    mfmobo, mobo, random_search, random_search_par, BoConfig, DesignEval, MfConfig, Trace,
-    TracePoint,
-};
+pub use mobo::{mfmobo, mobo, random_search, random_search_par, BoConfig, MfConfig};
 pub use pareto::{hypervolume, pareto_indices, Objective};
+pub use traits::{DesignEval, Trace, TracePoint};

@@ -1,0 +1,79 @@
+//! Explorer-facing evaluation contract: the [`DesignEval`] trait every
+//! evaluation engine implements, and the [`Trace`]/[`TracePoint`] record
+//! of an exploration run.
+//!
+//! This is the seam between Layer 3's Space Explorer and the evaluation
+//! engine: explorers see *only* this trait — one call per design point,
+//! one `(throughput, power)` objective back, a fidelity label for the
+//! trace. The canonical implementation is [`crate::eval::engine::Engine`],
+//! which builds the trait for any (phase × fidelity) pair; tests supply
+//! synthetic evaluators.
+
+use crate::design_space::{DesignPoint, Validated};
+use crate::explorer::pareto::{hypervolume, pareto_indices};
+
+pub use crate::explorer::pareto::Objective;
+
+/// A design evaluation function (one workload phase at one fidelity).
+///
+/// Deliberately not `Sync`: GNN-backed engines hold a thread-confined
+/// PJRT executable. Explorers that fan design-point evaluations over the
+/// thread pool require `DesignEval + Sync` explicitly
+/// ([`crate::explorer::random_search_par`]) and obtain it from the
+/// engine's capability query ([`crate::eval::engine::Engine::to_sync`]).
+pub trait DesignEval {
+    fn eval(&self, v: &Validated) -> Option<Objective>;
+    /// Fidelity label recorded in the trace ("analytical", "ca", ...).
+    fn name(&self) -> &'static str;
+}
+
+/// One evaluated point in an exploration trace.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub point: DesignPoint,
+    pub objective: Objective,
+    /// Which fidelity produced the objective ("analytical", "gnn", ...).
+    pub fidelity: &'static str,
+}
+
+/// Full exploration trace with per-evaluation hypervolume history.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+    pub hv_history: Vec<f64>,
+}
+
+impl Trace {
+    pub(crate) fn push(
+        &mut self,
+        point: DesignPoint,
+        objective: Objective,
+        fidelity: &'static str,
+        ref_power: f64,
+    ) {
+        self.points.push(TracePoint {
+            point,
+            objective,
+            fidelity,
+        });
+        let objs: Vec<Objective> = self.points.iter().map(|p| p.objective).collect();
+        self.hv_history.push(hypervolume(&objs, ref_power));
+    }
+
+    pub fn pareto(&self) -> Vec<&TracePoint> {
+        let objs: Vec<Objective> = self.points.iter().map(|p| p.objective).collect();
+        pareto_indices(&objs)
+            .into_iter()
+            .map(|i| &self.points[i])
+            .collect()
+    }
+
+    pub fn final_hv(&self) -> f64 {
+        self.hv_history.last().copied().unwrap_or(0.0)
+    }
+
+    /// Evaluations needed to first reach `target` hypervolume.
+    pub fn iters_to_hv(&self, target: f64) -> Option<usize> {
+        self.hv_history.iter().position(|&h| h >= target).map(|i| i + 1)
+    }
+}

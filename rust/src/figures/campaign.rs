@@ -1,9 +1,10 @@
 //! Campaign summary emitter: the cross-scenario table a `theseus
-//! campaign` run prints — per-scenario final hypervolume, best Pareto
-//! point, and the throughput/power comparison against the GPU-cluster
-//! reference, in the spirit of the paper's Fig. 11–13 cross-workload
-//! comparisons. Rendered from [`summarize_row`], the same digest
-//! `campaign.json` serializes, so table and artifact cannot drift.
+//! campaign` run prints — per-scenario status (`ok` / `resumed` /
+//! `error`), final hypervolume, best Pareto point, and the
+//! throughput/power comparison against the GPU-cluster reference, in the
+//! spirit of the paper's Fig. 11–13 cross-workload comparisons. Rendered
+//! from [`summarize_row`], the same digest `campaign.json` serializes, so
+//! table and artifact cannot drift.
 
 use crate::coordinator::campaign::{summarize_row, CampaignResult};
 use crate::util::table::Table;
@@ -13,10 +14,11 @@ use crate::util::table::Table;
 pub fn campaign_summary(result: &CampaignResult) -> Table {
     let mut t = Table::new(
         &format!(
-            "Campaign summary — {} scenarios, seed {} ({} error rows)",
+            "Campaign summary — {} scenarios, seed {} ({} error rows, {} resumed)",
             result.rows.len(),
             result.campaign_seed,
-            result.n_errors()
+            result.n_errors(),
+            result.n_resumed()
         ),
         &[
             "scenario",
@@ -31,11 +33,12 @@ pub fn campaign_summary(result: &CampaignResult) -> Table {
     let dash = || "-".to_string();
     for r in &result.rows {
         let s = summarize_row(r);
+        let status = s.status().to_string();
         match s.error {
             None => {
                 t.row(&[
                     s.key,
-                    "ok".to_string(),
+                    status,
                     s.points.to_string(),
                     format!("{:.3e}", s.final_hv),
                     s.best_throughput.map_or_else(dash, |x| format!("{x:.1}")),
@@ -44,7 +47,7 @@ pub fn campaign_summary(result: &CampaignResult) -> Table {
                 ]);
             }
             Some(e) => {
-                t.row(&[s.key, "error".to_string(), dash(), dash(), dash(), dash(), e]);
+                t.row(&[s.key, status, dash(), dash(), dash(), dash(), e]);
             }
         }
     }
@@ -55,9 +58,10 @@ pub fn campaign_summary(result: &CampaignResult) -> Table {
 mod tests {
     use super::*;
     use crate::coordinator::campaign::{
-        run_campaign, Budget, CampaignConfig, Fidelity, Scenario, ScenarioPhase,
+        run_campaign, Budget, CampaignConfig, Fidelity, Scenario,
     };
     use crate::coordinator::Explorer;
+    use crate::workload::Phase;
 
     #[test]
     fn campaign_summary_smoke_tiny() {
@@ -73,7 +77,7 @@ mod tests {
             scenarios: vec![
                 Scenario {
                     model: "1.7".to_string(),
-                    phase: ScenarioPhase::Decode,
+                    phase: Phase::Decode,
                     batch: 8,
                     wafers: None,
                     explorer: Explorer::Random,
@@ -83,7 +87,7 @@ mod tests {
                 },
                 Scenario {
                     model: "no-such-model".to_string(),
-                    phase: ScenarioPhase::Training,
+                    phase: Phase::Training,
                     batch: 0,
                     wafers: None,
                     explorer: Explorer::Random,
@@ -94,11 +98,13 @@ mod tests {
             ],
             seed: 5,
             jobs: 1,
+            resume_from: None,
         };
         let result = run_campaign(&cfg).unwrap();
         let rendered = campaign_summary(&result).render();
         assert!(rendered.contains("Campaign summary"), "{rendered}");
         assert!(rendered.contains("1 error rows"), "{rendered}");
+        assert!(rendered.contains("0 resumed"), "{rendered}");
         assert!(rendered.contains("unknown model"), "{rendered}");
     }
 }

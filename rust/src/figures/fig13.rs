@@ -5,7 +5,7 @@
 
 use crate::arch::MemoryKind;
 use crate::baselines;
-use crate::coordinator::{ref_power_for, TrainingObjective};
+use crate::coordinator::ref_power_for;
 use crate::design_space;
 use crate::eval::{eval_training, Analytical, SystemConfig};
 use crate::explorer::{hypervolume, pareto_indices, Objective};
@@ -52,7 +52,7 @@ pub fn fig13_design_space(bi: usize, samples: usize, seed: u64) -> (Table, Fig13
     }
     // ...plus explorer-refined points (the paper's Pareto set comes from
     // the iterative search, not raw sampling).
-    let obj = TrainingObjective::analytical(spec.clone());
+    let obj = crate::eval::engine::Engine::analytical_training(spec.clone());
     let trace = crate::explorer::mobo(
         &obj,
         &crate::explorer::BoConfig {

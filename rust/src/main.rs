@@ -5,8 +5,11 @@
 //!   models            print the Table II benchmark LLMs
 //!   space             design-space summary (cardinality, sample validity)
 //!   eval              evaluate one design point on one benchmark
-//!   dse               run the explorer (random | mobo | mfmobo)
-//!   campaign          run a scenario matrix (--suite paper | --scenarios f.json)
+//!   dse               run the explorer (random | mobo | mfmobo) on one
+//!                     phase (--phase training|prefill|decode) at one
+//!                     fidelity (--fidelity analytical|ca|gnn|gnn-test)
+//!   campaign          run a scenario matrix (--suite paper | --scenarios
+//!                     f.json), resumable with --resume
 //!   baselines         characterize H100/WSE2/Dojo reference designs
 
 use theseus::util::cli::Args;
@@ -58,7 +61,12 @@ fn cmd_gen_dataset(args: &Args) {
             std::process::exit(1);
         }
     };
-    std::fs::write(&out, doc.to_string()).expect("write dataset");
+    // Loud-exit CLI contract: an unwritable --out is a user error, not a
+    // panic (the generation work is already done at this point — say so).
+    if let Err(e) = std::fs::write(&out, doc.to_string()) {
+        eprintln!("gen-noc-dataset: cannot write {out}: {e}");
+        std::process::exit(1);
+    }
     eprintln!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());
 }
 
@@ -174,7 +182,9 @@ fn cmd_dse(args: &Args) {
 /// `theseus campaign`: batch-run a scenario matrix (the paper's §IX
 /// evaluation matrix via `--suite paper`, or a custom JSON file via
 /// `--scenarios`), with per-scenario seeds derived deterministically from
-/// `--seed` and artifacts under `--out`.
+/// `--seed` and artifacts under `--out`. `--resume` skips scenarios whose
+/// `scenarios/<key>.json` already exists under `--out` (long CA-fidelity
+/// campaigns survive kills without redoing finished work).
 fn cmd_campaign(args: &Args) {
     use theseus::coordinator::campaign;
 
@@ -205,19 +215,28 @@ fn cmd_campaign(args: &Args) {
         eprintln!("campaign: no scenarios to run");
         std::process::exit(1);
     }
+    let out = args.str("out", "artifacts/campaign");
     let cfg = campaign::CampaignConfig {
         scenarios,
         seed: args.u64("seed", 2024),
         jobs: args.usize("jobs", 0),
+        resume_from: args
+            .bool("resume", false)
+            .then(|| std::path::PathBuf::from(&out)),
     };
     eprintln!(
-        "campaign: {} scenarios (seed {}, jobs {})",
+        "campaign: {} scenarios (seed {}, jobs {}{})",
         cfg.scenarios.len(),
         cfg.seed,
         if cfg.jobs == 0 {
             "auto".to_string()
         } else {
             cfg.jobs.to_string()
+        },
+        if cfg.resume_from.is_some() {
+            ", resuming"
+        } else {
+            ""
         }
     );
     let t0 = std::time::Instant::now();
@@ -227,14 +246,14 @@ fn cmd_campaign(args: &Args) {
     });
     theseus::figures::campaign_summary(&result).print();
 
-    let out = args.str("out", "artifacts/campaign");
     campaign::write_artifacts(&result, std::path::Path::new(&out)).unwrap_or_else(|e| {
         eprintln!("campaign: writing artifacts under {out} failed: {e}");
         std::process::exit(1);
     });
     let errors = result.n_errors();
+    let resumed = result.n_resumed();
     eprintln!(
-        "campaign: {} ok / {errors} error rows in {:.1}s; artifacts under {out}",
+        "campaign: {} ok ({resumed} resumed) / {errors} error rows in {:.1}s; artifacts under {out}",
         result.rows.len() - errors,
         t0.elapsed().as_secs_f64()
     );

@@ -2,7 +2,8 @@
 //!
 //! The PJRT executable handle is thread-confined, so the GNN fidelity
 //! cannot use the thread fan-out that accelerates the analytical strategy
-//! sweep (`eval::eval_training_par`). The win here is *batching*: the
+//! sweep (the evaluation engine's pooled dispatch — see
+//! `eval::engine`). The win here is *batching*: the
 //! [`GnnBatcher`] collects the per-chunk [`features::GnnInputs`] of a whole
 //! sweep, packs them into `[B, N_MAX, F_N]` / `[B, E_MAX, F_E]` tensors
 //! ([`features::build_batch`]) and runs **one execute call per batch**,

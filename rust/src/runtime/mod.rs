@@ -18,8 +18,9 @@
 //! fan-out: [`batch::GnnBatcher`] packs several chunks' padded features
 //! into `[B, N_MAX, F_N]` / `[B, E_MAX, F_E]` tensors
 //! ([`features::build_batch`]) and runs one execute call per batch — the
-//! strategy sweep (`eval::eval_training_gnn_batched`) and the `mfmobo`
-//! high-fidelity stage ride on it. `python -m compile.aot --batch B` bakes
+//! evaluation engine's batched sweep dispatch (`eval::engine`, the `gnn`
+//! and `gnn-test` fidelities) and thus the `mfmobo` high-fidelity stage
+//! ride on it. `python -m compile.aot --batch B` bakes
 //! the leading batch dimension into the HLO export and records it in the
 //! `gnn_noc.meta.json` sidecar ([`GnnMeta::batch`]); artifacts exported
 //! with `--batch 1` keep the legacy per-chunk signature and the batcher

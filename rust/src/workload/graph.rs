@@ -10,7 +10,10 @@ use crate::arch::constants as k;
 
 use super::LlmSpec;
 
-/// Which execution phase a graph models.
+/// Which execution phase a graph models. Also the phase axis of the
+/// evaluation engine ([`crate::eval::engine::EvalSpec`]) and of campaign
+/// scenarios — `parse`/`name` below are the single source of truth for
+/// the phase strings accepted by `theseus dse --phase` and scenario JSON.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     /// Training fwd+bwd of one microbatch through one pipeline stage.
@@ -19,6 +22,36 @@ pub enum Phase {
     Prefill,
     /// Inference decode (one token per sequence, KV-cache reads).
     Decode,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 3] = [Phase::Training, Phase::Prefill, Phase::Decode];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Training => "training",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        Phase::ALL.into_iter().find(|p| p.name() == s)
+    }
+
+    /// [`Phase::parse`] with a human-oriented error naming the valid
+    /// phases — CLI and scenario-JSON call sites print this and exit 1
+    /// instead of silently falling back.
+    pub fn parse_or_usage(s: &str) -> Result<Phase, String> {
+        Phase::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = Phase::ALL.iter().map(Phase::name).collect();
+            format!("unknown phase '{s}' — valid: {}", names.join(", "))
+        })
+    }
+
+    pub fn is_inference(&self) -> bool {
+        !matches!(self, Phase::Training)
+    }
 }
 
 /// Operator kinds with their shard-local shapes.

@@ -5,10 +5,11 @@
 use theseus::coordinator::{ref_power_for, run, DseRun, Explorer};
 use theseus::design_space::{reference_point, validate};
 use theseus::eval::chunk::eval_training_with;
+use theseus::eval::engine::Fidelity;
 use theseus::eval::{eval_training, Analytical, CycleAccurate, SystemConfig};
 use theseus::explorer::BoConfig;
 use theseus::workload::models::benchmarks;
-use theseus::workload::ParallelStrategy;
+use theseus::workload::{ParallelStrategy, Phase};
 
 #[test]
 fn validator_to_evaluator_to_explorer() {
@@ -16,6 +17,11 @@ fn validator_to_evaluator_to_explorer() {
     let spec = benchmarks()[0].clone();
     let dse = DseRun {
         spec: spec.clone(),
+        phase: Phase::Training,
+        batch: 0,
+        mqa: false,
+        wafers: None,
+        fidelity: Fidelity::Analytical,
         explorer: Explorer::Random,
         cfg: BoConfig {
             iters: 3,
@@ -28,9 +34,8 @@ fn validator_to_evaluator_to_explorer() {
         },
         n1: 0,
         k: 0,
-        use_gnn: false,
     };
-    let trace = run(&dse);
+    let trace = run(&dse).expect("analytical run builds");
     assert!(trace.points.len() >= 3);
     assert!(trace.final_hv() > 0.0);
     // Every trace point re-validates (the explorer never leaks invalid
@@ -52,7 +57,7 @@ fn mobo_improves_over_iterations() {
         seed: 5,
         sample_tries: 2000,
     };
-    let obj = theseus::coordinator::TrainingObjective::analytical(spec);
+    let obj = theseus::eval::engine::Engine::analytical_training(spec);
     let trace = theseus::explorer::mobo(&obj, &cfg);
     assert!(trace.points.len() >= 6);
     // HV after all iterations >= HV after init (monotone by construction,

@@ -4,10 +4,13 @@
 #   scripts/ci_check.sh
 #
 # Always runs the Python test suite (pytest). When a Rust toolchain is
-# present it additionally runs tier-1 (`THESEUS_TEST_FAST=1 cargo test -q`)
-# and the perf gate (`scripts/bench_check.sh`); otherwise those steps are
-# skipped with a loud note — some build containers ship no cargo/rustc
-# (see CHANGES.md), and a silent skip would read as a pass.
+# present it additionally runs tier-1 (`THESEUS_TEST_FAST=1 cargo test -q`),
+# the perf gate (`scripts/bench_check.sh`), a 2-scenario `theseus campaign`
+# smoke leg (custom JSON through the fidelity registry, incl. a gnn-test
+# decode scenario), and `cargo fmt --check` when rustfmt is installed;
+# otherwise those steps are skipped with a loud note — some build
+# containers ship no cargo/rustc (see CHANGES.md), and a silent skip would
+# read as a pass.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -22,9 +25,40 @@ if command -v cargo >/dev/null 2>&1; then
     THESEUS_TEST_FAST="${THESEUS_TEST_FAST:-1}" cargo test -q
     echo "== ci_check: perf gate =="
     scripts/bench_check.sh
+
+    echo "== ci_check: campaign smoke (2 scenarios, THESEUS_TEST_FAST=1) =="
+    SMOKE_DIR="$(mktemp -d "${TMPDIR:-/tmp}/theseus-ci-campaign.XXXXXX")"
+    trap 'rm -rf "$SMOKE_DIR"' EXIT
+    cat > "$SMOKE_DIR/scenarios.json" <<'EOF'
+{"scenarios": [
+  {"model": "GPT-1.7B", "phase": "training", "explorer": "random",
+   "iters": 1, "init": 1, "pool": 8, "mc": 8, "n1": 0, "k": 0},
+  {"model": "GPT-1.7B", "phase": "decode", "explorer": "mobo",
+   "fidelity": "gnn-test", "batch": 4,
+   "iters": 1, "init": 1, "pool": 8, "mc": 8, "n1": 0, "k": 0}
+]}
+EOF
+    THESEUS_TEST_FAST=1 cargo run -q --release --bin theseus -- campaign \
+        --scenarios "$SMOKE_DIR/scenarios.json" \
+        --out "$SMOKE_DIR/out" --seed 1 --jobs 2
+    for f in "$SMOKE_DIR/out/campaign.json"; do
+        [ -s "$f" ] || { echo "ci_check: campaign smoke wrote no $f" >&2; exit 1; }
+    done
+    if grep -q '"status": "error"' "$SMOKE_DIR/out/campaign.json"; then
+        echo "ci_check: campaign smoke recorded error rows:" >&2
+        cat "$SMOKE_DIR/out/campaign.json" >&2
+        exit 1
+    fi
+
+    if command -v rustfmt >/dev/null 2>&1; then
+        echo "== ci_check: cargo fmt --check =="
+        cargo fmt --check
+    else
+        echo "ci_check: *** SKIPPED cargo fmt --check — no rustfmt on this machine ***" >&2
+    fi
 else
-    echo "ci_check: *** SKIPPED rust tier-1 + perf gate — no cargo toolchain on this machine ***" >&2
-    echo "ci_check: run 'cargo test -q' and scripts/bench_check.sh on a toolchain-equipped host before merging" >&2
+    echo "ci_check: *** SKIPPED rust tier-1 + perf gate + campaign smoke + fmt — no cargo toolchain on this machine ***" >&2
+    echo "ci_check: run 'cargo test -q', scripts/bench_check.sh and the campaign smoke on a toolchain-equipped host before merging" >&2
 fi
 
 echo "ci_check: done"
