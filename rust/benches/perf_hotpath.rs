@@ -88,7 +88,7 @@ fn main() {
     //    hit rate of a steady-state sweep.
     let v = theseus::design_space::validate(&theseus::design_space::reference_point()).unwrap();
     let full_spec = benchmarks()[0].clone();
-    let sys = SystemConfig { validated: v.clone(), n_wafers: 1 };
+    let sys = SystemConfig { validated: v.clone(), n_wafers: 1, faults: None };
     let global = theseus::compiler::cache::global();
     let cold = bench::time("eval_training_cold", 0, 5, || {
         global.clear();

@@ -42,6 +42,12 @@ impl HeteroGranularity {
             HeteroGranularity::Wafer => "wafer",
         }
     }
+
+    /// Inverse of [`Self::name`] — the parser campaign scenario JSON and
+    /// CLI flags share.
+    pub fn parse(s: &str) -> Option<HeteroGranularity> {
+        HeteroGranularity::ALL.into_iter().find(|g| g.name() == s)
+    }
 }
 
 /// Heterogeneity configuration attached to a [`WscConfig`] for inference
@@ -247,6 +253,14 @@ mod tests {
             decode_stack_bw: 2.0,
         };
         assert!(s.kv_transfer_bw > hw.split(&wsc()).kv_transfer_bw);
+    }
+
+    #[test]
+    fn granularity_names_round_trip() {
+        for g in HeteroGranularity::ALL {
+            assert_eq!(HeteroGranularity::parse(g.name()), Some(g));
+        }
+        assert_eq!(HeteroGranularity::parse("chiplet"), None);
     }
 
     #[test]

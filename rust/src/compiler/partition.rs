@@ -2,8 +2,14 @@
 //! chunk's core region each operator runs on, balancing intra-op
 //! parallelism against operand granularity (prior-work methodology the
 //! paper cites: Tangram/Timeloop-style even partitioning).
+//!
+//! On degraded meshes, [`CoreMap`] extracts the largest regular logical
+//! grid from the surviving cores (Cerebras-style row remap: each kept row
+//! contributes its leftmost live cores), so the partitioner keeps placing
+//! on a dense rectangle while the placement skips dead cores physically.
 
 use crate::workload::OpKind;
+use crate::yield_model::faults::FaultMap;
 
 /// Placement of one op on a rectangular sub-grid anchored at `(off_h, off_w)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -23,6 +29,73 @@ impl OpPlacement {
     /// logical→physical mapping is a direct block embedding.
     pub fn physical(&self, r: usize, c: usize) -> (usize, usize) {
         (self.off_h + r, self.off_w + c)
+    }
+}
+
+/// Dense logical grid over the live cores of a faulty mesh.
+///
+/// Construction keeps every physical row with enough live cores and packs
+/// each kept row's leftmost live cores into logical columns. The logical
+/// width is chosen to maximize usable cores (`width × #rows-with-≥width
+/// -live`, ties to the wider grid) — a deterministic rule that is monotone
+/// in the live set: reviving cores can only grow the usable-core count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreMap {
+    h: usize,
+    w: usize,
+    /// Physical coordinates per logical core, row-major.
+    phys: Vec<(usize, usize)>,
+}
+
+impl CoreMap {
+    /// `None` when the map has no live cores at all.
+    pub fn build(map: &FaultMap) -> Option<CoreMap> {
+        let (ph, pw) = map.dims();
+        let live: Vec<Vec<usize>> = (0..ph)
+            .map(|r| (0..pw).filter(|&c| map.core_ok(r, c)).collect())
+            .collect();
+        let mut best_used = 0usize;
+        let mut best_w = 0usize;
+        for cand_w in 1..=pw {
+            let rows = live.iter().filter(|cols| cols.len() >= cand_w).count();
+            let used = cand_w * rows;
+            if used > best_used || (used == best_used && cand_w > best_w) {
+                best_used = used;
+                best_w = cand_w;
+            }
+        }
+        if best_used == 0 {
+            return None;
+        }
+        let w = best_w;
+        let mut phys = Vec::with_capacity(best_used);
+        let mut h = 0usize;
+        for (r, cols) in live.iter().enumerate() {
+            if cols.len() < w {
+                continue;
+            }
+            phys.extend(cols[..w].iter().map(|&c| (r, c)));
+            h += 1;
+        }
+        Some(CoreMap { h, w, phys })
+    }
+
+    pub fn logical_dims(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.h * self.w
+    }
+
+    /// Physical coordinates of logical core (r, c).
+    pub fn physical(&self, r: usize, c: usize) -> (usize, usize) {
+        self.phys[r * self.w + c]
+    }
+
+    /// All mapped physical cores, logical row-major order.
+    pub fn physical_cores(&self) -> &[(usize, usize)] {
+        &self.phys
     }
 }
 
@@ -102,6 +175,51 @@ mod tests {
             let p = grid_for_op(&kind, 16, 16);
             assert!(p.num_cores() >= 1);
         }
+    }
+
+    #[test]
+    fn core_map_pristine_is_identity() {
+        let map = FaultMap::pristine(4, 6);
+        let cm = CoreMap::build(&map).unwrap();
+        assert_eq!(cm.logical_dims(), (4, 6));
+        for r in 0..4 {
+            for c in 0..6 {
+                assert_eq!(cm.physical(r, c), (r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn core_map_skips_dead_cores_and_keeps_rows_dense() {
+        let mut map = FaultMap::pristine(3, 4);
+        map.kill_core(1, 1); // row 1 has 3 live cores
+        map.kill_core(2, 0);
+        map.kill_core(2, 3); // row 2 has 2 live cores
+        let cm = CoreMap::build(&map).unwrap();
+        // Width 3 keeps rows 0 and 1 (6 cores); width 2 keeps all rows
+        // (6 cores); tie resolves to the wider grid.
+        assert_eq!(cm.logical_dims(), (2, 3));
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..2 {
+            for c in 0..3 {
+                let (pr, pc) = cm.physical(r, c);
+                assert!(map.core_ok(pr, pc), "mapped a dead core ({pr}, {pc})");
+                assert!(seen.insert((pr, pc)), "duplicate physical core");
+            }
+        }
+        // Row 1 skips the dead column 1.
+        assert_eq!(cm.physical(1, 1), (1, 2));
+    }
+
+    #[test]
+    fn core_map_none_when_everything_dead() {
+        let mut map = FaultMap::pristine(2, 2);
+        for r in 0..2 {
+            for c in 0..2 {
+                map.kill_core(r, c);
+            }
+        }
+        assert!(CoreMap::build(&map).is_none());
     }
 
     #[test]

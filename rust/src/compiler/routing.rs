@@ -1,8 +1,20 @@
-//! Dimension-order (XY) routing on the 2-D core mesh (paper §VI-A step 4).
+//! Dimension-order (XY) routing on the 2-D core mesh (paper §VI-A step 4),
+//! plus fault-aware table routing for degraded meshes.
 //!
 //! Links are identified by their *upstream* router and direction, giving a
 //! dense index space `core_count × 4` shared by the analytical model, the
 //! GNN feature builder and the CA simulator.
+//!
+//! Pristine meshes route XY ([`for_each_link_xy`]). When a
+//! [`FaultMap`](crate::yield_model::faults::FaultMap) kills routers or
+//! links, a precomputed [`RouteTable`] supplies deterministic shortest
+//! paths over the live subgraph (reverse BFS per destination, fixed
+//! direction-order tie-break), detouring around faults; disconnected pairs
+//! surface as a loud [`RouteError`] instead of silently wrong routes.
+
+use std::collections::VecDeque;
+
+use crate::yield_model::faults::FaultMap;
 
 /// Link direction out of a router.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -71,6 +83,177 @@ pub fn hops(src: (usize, usize), dst: (usize, usize)) -> usize {
     src.0.abs_diff(dst.0) + src.1.abs_diff(dst.1)
 }
 
+/// Routing failure on a degraded mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteError {
+    /// No live path connects `src` to `dst` — the fault map partitioned
+    /// the mesh (or an endpoint is itself dead).
+    Disconnected {
+        src: (usize, usize),
+        dst: (usize, usize),
+    },
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            RouteError::Disconnected { src, dst } => write!(
+                f,
+                "no live route from core ({}, {}) to core ({}, {}): the fault map \
+                 disconnects the mesh",
+                src.0, src.1, dst.0, dst.1
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Port code: the packet has arrived (maps onto the simulator's LOCAL port).
+const PORT_ARRIVED: u8 = 4;
+/// Port code: destination unreachable from this node.
+const PORT_NONE: u8 = u8::MAX;
+
+/// Deterministic fault-aware routing table for one `h × w` mesh.
+///
+/// Built once per fault map by a reverse BFS from every live destination
+/// over the live subgraph (a link is usable iff the link itself and both
+/// endpoint routers are alive). BFS explores upstream neighbors in fixed
+/// [`Dir`] order, so ties between equal-length detours resolve identically
+/// on every run — the bit-identical `SimStats` contract extends to
+/// irregular meshes. Lookup is O(1) per hop: `next[dst * n + at]` holds
+/// the output direction at router `at` for packets bound for `dst`.
+pub struct RouteTable {
+    h: usize,
+    w: usize,
+    next: Vec<u8>,
+    dist: Vec<u32>,
+}
+
+impl RouteTable {
+    /// Build the table for a fault map (O(n²) space, O(n²) time).
+    pub fn build(map: &FaultMap) -> RouteTable {
+        let (h, w) = map.dims();
+        let n = h * w;
+        let mut next = vec![PORT_NONE; n * n];
+        let mut dist = vec![u32::MAX; n * n];
+        let mut queue = VecDeque::new();
+        for dst in 0..n {
+            if !map.core_ok(dst / w, dst % w) {
+                continue;
+            }
+            let base = dst * n;
+            next[base + dst] = PORT_ARRIVED;
+            dist[base + dst] = 0;
+            queue.clear();
+            queue.push_back(dst);
+            while let Some(u) = queue.pop_front() {
+                let (ur, uc) = (u / w, u % w);
+                let du = dist[base + u];
+                // Upstream neighbors v whose link v --dir--> u is usable,
+                // explored in fixed Dir order (deterministic tie-break).
+                for dir in [Dir::East, Dir::West, Dir::South, Dir::North] {
+                    // v sits opposite `dir` relative to u.
+                    let (vr, vc) = match dir {
+                        Dir::East if uc > 0 => (ur, uc - 1),
+                        Dir::West if uc + 1 < w => (ur, uc + 1),
+                        Dir::South if ur > 0 => (ur - 1, uc),
+                        Dir::North if ur + 1 < h => (ur + 1, uc),
+                        _ => continue,
+                    };
+                    if !map.core_ok(vr, vc) || !map.link_intact(vr, vc, dir as usize) {
+                        continue;
+                    }
+                    let v = vr * w + vc;
+                    if dist[base + v] == u32::MAX {
+                        dist[base + v] = du + 1;
+                        next[base + v] = dir as u8;
+                        queue.push_back(v);
+                    }
+                }
+            }
+        }
+        RouteTable { h, w, next, dist }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    /// Output port index at `at` for a packet bound for `dst`: a `Dir`
+    /// value in 0..4, or 4 ("local", matches the simulators' LOCAL port)
+    /// when `at == dst`. Must only be called on reachable pairs.
+    #[inline]
+    pub fn port_index(&self, at: (usize, usize), dst: (usize, usize)) -> usize {
+        let n = self.h * self.w;
+        let code = self.next[(dst.0 * self.w + dst.1) * n + at.0 * self.w + at.1];
+        debug_assert_ne!(code, PORT_NONE, "routing toward unreachable dst {dst:?}");
+        code as usize
+    }
+
+    pub fn reachable(&self, src: (usize, usize), dst: (usize, usize)) -> bool {
+        let n = self.h * self.w;
+        self.dist[(dst.0 * self.w + dst.1) * n + src.0 * self.w + src.1] != u32::MAX
+    }
+
+    /// Path length in hops, `None` when disconnected.
+    pub fn hops(&self, src: (usize, usize), dst: (usize, usize)) -> Option<usize> {
+        let n = self.h * self.w;
+        match self.dist[(dst.0 * self.w + dst.1) * n + src.0 * self.w + src.1] {
+            u32::MAX => None,
+            d => Some(d as usize),
+        }
+    }
+
+    /// Allocation-free traversal of the table route (the fault-path
+    /// counterpart of [`for_each_link_xy`]).
+    pub fn for_each_link(
+        &self,
+        src: (usize, usize),
+        dst: (usize, usize),
+        mut f: impl FnMut(LinkId),
+    ) -> Result<(), RouteError> {
+        if !self.reachable(src, dst) {
+            return Err(RouteError::Disconnected { src, dst });
+        }
+        let mut cur = src;
+        while cur != dst {
+            let dir = match self.port_index(cur, dst) {
+                0 => Dir::East,
+                1 => Dir::West,
+                2 => Dir::South,
+                3 => Dir::North,
+                p => unreachable!("non-mesh port {p} mid-route"),
+            };
+            let l = LinkId {
+                row: cur.0,
+                col: cur.1,
+                dir,
+            };
+            f(l);
+            cur = l.downstream();
+        }
+        Ok(())
+    }
+
+    /// Materialized route (convenience; hot paths use [`Self::for_each_link`]).
+    pub fn route(
+        &self,
+        src: (usize, usize),
+        dst: (usize, usize),
+    ) -> Result<Vec<LinkId>, RouteError> {
+        let mut links = Vec::new();
+        self.for_each_link(src, dst, |l| links.push(l))?;
+        Ok(links)
+    }
+}
+
+impl std::fmt::Debug for RouteTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RouteTable({}x{})", self.h, self.w)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +303,123 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn table_matches_xy_lengths_on_pristine_mesh() {
+        let map = FaultMap::pristine(5, 7);
+        let t = RouteTable::build(&map);
+        for src in [(0, 0), (2, 3), (4, 6)] {
+            for dst in [(0, 0), (4, 0), (1, 5)] {
+                assert_eq!(t.hops(src, dst), Some(hops(src, dst)));
+                let path = t.route(src, dst).unwrap();
+                assert_eq!(path.len(), hops(src, dst));
+            }
+        }
+    }
+
+    #[test]
+    fn table_detours_around_dead_router() {
+        // Kill the single middle core of a 3x3 mesh: corner-to-corner
+        // routes must detour (same length — Manhattan is preserved on a
+        // mesh with one interior hole) and never touch the dead router.
+        let mut map = FaultMap::pristine(3, 3);
+        map.kill_core(1, 1);
+        let t = RouteTable::build(&map);
+        let path = t.route((0, 0), (2, 2)).unwrap();
+        assert_eq!(path.len(), 4);
+        for l in &path {
+            assert_ne!((l.row, l.col), (1, 1));
+            assert_ne!(l.downstream(), (1, 1));
+        }
+    }
+
+    #[test]
+    fn disconnected_pair_is_a_loud_error() {
+        // Sever column 0 from the rest of a 2x2 mesh in both directions.
+        let mut map = FaultMap::pristine(2, 2);
+        for r in 0..2 {
+            map.kill_link(r, 0, Dir::East as usize);
+            map.kill_link(r, 1, Dir::West as usize);
+        }
+        map.kill_link(0, 0, Dir::South as usize);
+        map.kill_link(1, 0, Dir::North as usize);
+        map.kill_link(0, 1, Dir::South as usize);
+        map.kill_link(1, 1, Dir::North as usize);
+        // (0,0)-(1,0) still connected? No: their vertical links are dead
+        // too, so (0,0) is isolated.
+        let t = RouteTable::build(&map);
+        assert!(!t.reachable((0, 0), (0, 1)));
+        let err = t.route((0, 0), (0, 1)).unwrap_err();
+        assert_eq!(
+            err,
+            RouteError::Disconnected {
+                src: (0, 0),
+                dst: (0, 1)
+            }
+        );
+        assert!(format!("{err}").contains("disconnects the mesh"), "{err}");
+    }
+
+    #[test]
+    fn prop_fault_routes_avoid_faults_and_stay_contiguous() {
+        // ISSUE 6 satellite: fault-aware routes never traverse a dead link
+        // or dead router, stay contiguous, and match the table's distance.
+        crate::util::prop::check(
+            "fault-aware routes avoid faults",
+            |rng| {
+                let h = rng.range(2, 8);
+                let w = rng.range(2, 8);
+                let grid = vec![vec![rng.uniform(0.7, 0.98); w]; h];
+                let map = FaultMap::sample(&grid, rng.uniform(0.0, 2.0), rng.next_u64());
+                let src = (rng.below(h), rng.below(w));
+                let dst = (rng.below(h), rng.below(w));
+                (map, src, dst)
+            },
+            |(map, src, dst)| {
+                let t = RouteTable::build(map);
+                let path = match t.route(*src, *dst) {
+                    Ok(p) => p,
+                    Err(RouteError::Disconnected { .. }) => {
+                        // Disconnection must be consistent with the map: a
+                        // dead endpoint always disconnects.
+                        if map.core_ok(src.0, src.1)
+                            && map.core_ok(dst.0, dst.1)
+                            && src == dst
+                        {
+                            return Err("self-route on a live core cannot disconnect".into());
+                        }
+                        return Ok(());
+                    }
+                };
+                if path.len() != t.hops(*src, *dst).unwrap() {
+                    return Err("route length != table distance".into());
+                }
+                if path.len() < hops(*src, *dst) {
+                    return Err("shorter than Manhattan".into());
+                }
+                let mut cur = *src;
+                for l in &path {
+                    if (l.row, l.col) != cur {
+                        return Err("discontiguous".into());
+                    }
+                    if !map.core_ok(l.row, l.col) {
+                        return Err(format!("route through dead router ({}, {})", l.row, l.col));
+                    }
+                    if !map.link_intact(l.row, l.col, l.dir as usize) {
+                        return Err(format!("route over dead link {l:?}"));
+                    }
+                    cur = l.downstream();
+                    if !map.core_ok(cur.0, cur.1) {
+                        return Err(format!("route into dead router {cur:?}"));
+                    }
+                }
+                if cur != *dst {
+                    return Err("wrong endpoint".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

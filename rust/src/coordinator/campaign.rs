@@ -13,7 +13,12 @@
 //! like training ones.
 //!
 //! [`paper_suite`] mirrors the §IX matrix (every Table II model ×
-//! training + inference × {random, mobo, mfmobo}); [`run_campaign`] fans
+//! training + inference × {random, mobo, mfmobo}); [`fault_suite`]
+//! sweeps the fault-injection degradation matrix (defect-rate multiplier
+//! × spare-row redundancy, digesting retained-throughput fraction and
+//! perf/W per good-wafer cost per row); [`hetero_suite`] runs the
+//! heterogeneous-wafer decode rows across every
+//! [`HeteroGranularity`]. [`run_campaign`] fans
 //! scenarios over the thread pool while the compile-chunk
 //! ([`crate::compiler::cache`]) and tile ([`crate::eval::tile`]) memo
 //! caches — process-wide singletons — stay shared across scenarios.
@@ -58,13 +63,16 @@
 
 use std::panic::AssertUnwindSafe;
 
+use crate::arch::{HeteroConfig, HeteroGranularity};
 use crate::baselines::{h100_infer_eval, h100_train_eval};
 use crate::coordinator::{explore, ref_power_for, Explorer};
-use crate::eval::engine::EvalSpec;
-use crate::explorer::{BoConfig, Trace, TracePoint};
+use crate::design_space::validate;
+use crate::eval::engine::{Engine, EvalSpec};
+use crate::explorer::{BoConfig, DesignEval, Trace, TracePoint};
 use crate::util::json::Json;
 use crate::util::pool;
 use crate::workload::{models, LlmSpec, Phase};
+use crate::yield_model::faults::FaultSpec;
 
 pub use crate::eval::engine::Fidelity;
 
@@ -115,6 +123,20 @@ pub struct Scenario {
     pub explorer: Explorer,
     pub fidelity: Fidelity,
     pub budget: Budget,
+    /// Fault injection: defect-rate multiplier over the yield model's
+    /// baseline (1.0 = nominal process, 0.0 = pristine sampling that
+    /// still exercises the fault path). `None` disables injection
+    /// entirely — the evaluation stays byte-identical to a pre-fault
+    /// campaign. The fault sampling seed is the scenario's derived seed,
+    /// so degradation rows inherit the campaign determinism contract.
+    pub fault_defect: Option<f64>,
+    /// Spare-row override for fault scenarios (Cerebras-style row
+    /// redundancy); `None` = each design's own converged per-row
+    /// allocation. Only meaningful with `fault_defect`.
+    pub fault_spares: Option<usize>,
+    /// Prefill/decode heterogeneity override applied to every design
+    /// point (§V-B); `None` keeps each point's own setting.
+    pub hetero: Option<HeteroConfig>,
     /// Free-form disambiguator, appended to [`Scenario::key`] when
     /// non-empty. Budget-only variations (e.g. an iteration-count sweep)
     /// don't show up in the key, so give each variant a distinct tag —
@@ -152,6 +174,16 @@ impl Scenario {
             self.batch,
             wafers
         );
+        if let Some(m) = self.fault_defect {
+            key.push_str(&format!("-fd{m}"));
+            match self.fault_spares {
+                Some(n) => key.push_str(&format!("-fs{n}")),
+                None => key.push_str("-fsauto"),
+            }
+        }
+        if let Some(h) = self.hetero {
+            key.push_str(&format!("-h{}", h.granularity.name()));
+        }
         if !self.tag.is_empty() {
             key.push('-');
             key.push_str(&slugify(&self.tag));
@@ -160,8 +192,10 @@ impl Scenario {
     }
 
     /// The engine spec this scenario evaluates (the explorer/budget are
-    /// the campaign's contribution on top).
-    pub fn eval_spec(&self, spec: &LlmSpec) -> EvalSpec {
+    /// the campaign's contribution on top). `seed` is the scenario's
+    /// derived seed — it doubles as the fault-map sampling seed so two
+    /// same-seed campaigns inject identical defects.
+    pub fn eval_spec(&self, spec: &LlmSpec, seed: u64) -> EvalSpec {
         EvalSpec {
             model: spec.clone(),
             phase: self.phase,
@@ -169,6 +203,12 @@ impl Scenario {
             mqa: false,
             wafers: self.wafers,
             fidelity: self.fidelity,
+            faults: self.fault_defect.map(|m| FaultSpec {
+                defect_multiplier: m,
+                spares: self.fault_spares,
+                seed,
+            }),
+            hetero: self.hetero,
         }
     }
 
@@ -195,15 +235,44 @@ impl Scenario {
             .set("n1", Json::Num(self.budget.n1 as f64))
             .set("k", Json::Num(self.budget.k as f64))
             .set("tag", Json::Str(self.tag.clone()));
+        // Robustness/heterogeneity knobs are emitted only when set, so
+        // pre-fault campaign files and goldens keep their exact bytes.
+        if let Some(m) = self.fault_defect {
+            o.set("fault_defect", Json::Num(m));
+            if let Some(n) = self.fault_spares {
+                o.set("fault_spares", Json::Num(n as f64));
+            }
+        }
+        if let Some(h) = self.hetero {
+            o.set("hetero", Json::Str(h.granularity.name().to_string()))
+                .set("hetero_ratio", Json::Num(h.prefill_ratio))
+                .set("hetero_decode_bw", Json::Num(h.decode_stack_bw));
+        }
         o
     }
 
     /// Every field [`Scenario::from_json`] accepts — anything else is
     /// rejected (a typo like `iter` silently falling back to the
     /// 40-iteration paper budget would burn hours across a matrix).
-    pub const FIELDS: [&'static str; 13] = [
-        "batch", "explorer", "fidelity", "init", "iters", "k", "mc", "model", "n1", "phase",
-        "pool", "tag", "wafers",
+    pub const FIELDS: [&'static str; 18] = [
+        "batch",
+        "explorer",
+        "fault_defect",
+        "fault_spares",
+        "fidelity",
+        "hetero",
+        "hetero_decode_bw",
+        "hetero_ratio",
+        "init",
+        "iters",
+        "k",
+        "mc",
+        "model",
+        "n1",
+        "phase",
+        "pool",
+        "tag",
+        "wafers",
     ];
 
     /// Decode one scenario object. `model`, `phase` and `explorer` are
@@ -240,11 +309,63 @@ impl Scenario {
                     .ok_or_else(|| format!("scenario field '{key}' must be a non-negative integer")),
             }
         };
+        let f64_field = |key: &str| -> Result<Option<f64>, String> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|x| x.is_finite() && *x >= 0.0)
+                    .map(Some)
+                    .ok_or_else(|| {
+                        format!("scenario field '{key}' must be a non-negative number")
+                    }),
+            }
+        };
         let phase = Phase::parse_or_usage(&str_field("phase")?)?;
         let explorer = Explorer::parse_or_usage(&str_field("explorer")?)?;
         let fidelity = match j.get("fidelity") {
             None | Some(Json::Null) => Fidelity::Analytical,
             Some(_) => Fidelity::parse_or_usage(&str_field("fidelity")?)?,
+        };
+        let fault_defect = f64_field("fault_defect")?;
+        let fault_spares = match j.get("fault_spares") {
+            None | Some(Json::Null) => None,
+            Some(_) => Some(usize_field("fault_spares", 0)?),
+        };
+        if fault_spares.is_some() && fault_defect.is_none() {
+            return Err(
+                "scenario field 'fault_spares' needs 'fault_defect' (nothing to repair on a \
+                 fault-free evaluation)"
+                    .to_string(),
+            );
+        }
+        let hetero = match j.get("hetero") {
+            None | Some(Json::Null) => {
+                for k in ["hetero_ratio", "hetero_decode_bw"] {
+                    if !matches!(j.get(k), None | Some(Json::Null)) {
+                        return Err(format!(
+                            "scenario field '{k}' needs 'hetero' (the granularity name)"
+                        ));
+                    }
+                }
+                None
+            }
+            Some(_) => {
+                let name = str_field("hetero")?;
+                let granularity = HeteroGranularity::parse(&name).ok_or_else(|| {
+                    let names: Vec<&str> =
+                        HeteroGranularity::ALL.iter().map(|g| g.name()).collect();
+                    format!(
+                        "unknown hetero granularity '{name}' — valid: {}",
+                        names.join(", ")
+                    )
+                })?;
+                Some(HeteroConfig {
+                    granularity,
+                    prefill_ratio: f64_field("hetero_ratio")?.unwrap_or(0.5),
+                    decode_stack_bw: f64_field("hetero_decode_bw")?.unwrap_or(0.0),
+                })
+            }
         };
         let default_budget = Budget::default();
         let scenario = Scenario {
@@ -265,6 +386,9 @@ impl Scenario {
                 n1: usize_field("n1", default_budget.n1)?,
                 k: usize_field("k", default_budget.k)?,
             },
+            fault_defect,
+            fault_spares,
+            hetero,
             tag: match j.get("tag") {
                 None | Some(Json::Null) => String::new(),
                 Some(_) => str_field("tag")?,
@@ -323,12 +447,92 @@ pub fn paper_suite() -> Vec<Scenario> {
                     explorer,
                     fidelity: Fidelity::Analytical,
                     budget,
+                    fault_defect: None,
+                    fault_spares: None,
+                    hetero: None,
                     tag: String::new(),
                 });
             }
         }
     }
     out
+}
+
+/// Fault-injection degradation matrix: one representative model ×
+/// training at a defect-rate-multiplier × spare-row grid. Each row
+/// evaluates every candidate design on a yield-realistic defective wafer
+/// sampled at the row's defect rate; the per-row artifact carries the
+/// `fault` digest (throughput retained vs the same design fault-free, and
+/// perf/W per good-wafer cost), so the matrix reads out directly as the
+/// degradation curve and the value of row redundancy under worsening
+/// process assumptions.
+pub fn fault_suite() -> Vec<Scenario> {
+    // Random search at a reduced budget: the degradation curve compares
+    // rows against each other, not against the paper's full BO budget.
+    let budget = Budget {
+        iters: 8,
+        init: 4,
+        pool: 48,
+        mc: 32,
+        n1: 0,
+        k: 0,
+    };
+    let mut out = Vec::new();
+    for defect in [0.0, 1.0, 2.0, 4.0, 8.0] {
+        // Spares 0 = no redundancy; auto = the design's own converged
+        // per-row allocation — the pairing isolates what redundancy buys.
+        for spares in [Some(0), None] {
+            out.push(Scenario {
+                model: "GPT-1.7B".to_string(),
+                phase: Phase::Training,
+                batch: 0,
+                wafers: None,
+                explorer: Explorer::Random,
+                fidelity: Fidelity::Analytical,
+                budget,
+                fault_defect: Some(defect),
+                fault_spares: spares,
+                hetero: None,
+                tag: String::new(),
+            });
+        }
+    }
+    out
+}
+
+/// Heterogeneous-inference matrix (§V-B / Fig. 4): decode serving on one
+/// representative model across every heterogeneity granularity, exercising
+/// [`crate::arch::hetero`] end to end through the campaign path (the
+/// tested successor of `examples/inference_hetero.rs`).
+pub fn hetero_suite() -> Vec<Scenario> {
+    let budget = Budget {
+        iters: 8,
+        init: 4,
+        pool: 48,
+        mc: 32,
+        n1: 0,
+        k: 0,
+    };
+    HeteroGranularity::ALL
+        .into_iter()
+        .map(|granularity| Scenario {
+            model: "GPT-1.7B".to_string(),
+            phase: Phase::Decode,
+            batch: 32,
+            wafers: None,
+            explorer: Explorer::Random,
+            fidelity: Fidelity::Analytical,
+            budget,
+            fault_defect: None,
+            fault_spares: None,
+            hetero: Some(HeteroConfig {
+                granularity,
+                prefill_ratio: 0.5,
+                decode_stack_bw: 2.0,
+            }),
+            tag: String::new(),
+        })
+        .collect()
 }
 
 /// Derive a scenario's RNG seed from the campaign seed and the scenario
@@ -450,7 +654,66 @@ fn bo_config(s: &Scenario, spec: &LlmSpec, seed: u64) -> BoConfig {
 pub fn run_scenario(s: &Scenario, seed: u64) -> Result<Trace, String> {
     let spec = models::find_or_usage(&s.model)?;
     let cfg = bo_config(s, &spec, seed);
-    explore(&s.eval_spec(&spec), s.explorer, &cfg, s.budget.n1, s.budget.k)
+    let trace = explore(
+        &s.eval_spec(&spec, seed),
+        s.explorer,
+        &cfg,
+        s.budget.n1,
+        s.budget.k,
+    )?;
+    // A fault row where no candidate survived is a finding about the
+    // defect rate (every sampled region disconnected / no viable
+    // strategy), but an empty trace would silently digest to zero metrics
+    // — record it as the loud error the resume contract retries.
+    if s.fault_defect.is_some() && trace.points.is_empty() {
+        return Err(format!(
+            "fault scenario '{}': no design evaluated successfully at defect multiplier \
+             {:?} — every sampled wafer region was disconnected or infeasible",
+            s.key(),
+            s.fault_defect.unwrap()
+        ));
+    }
+    Ok(trace)
+}
+
+/// Degradation digest of a fault-injection row: re-evaluate the row's
+/// best Pareto design **fault-free** at the same fidelity/seed and report
+/// the throughput fraction the defective wafer retains, plus perf/W per
+/// good-wafer cost (wafers bought per working system: `n_wafers /
+/// wafer_yield`). Deterministic in (scenario, seed), so resumed rows
+/// reading this digest back from their artifact match fresh rows byte for
+/// byte. `None` for non-fault rows and for rows whose best point cannot
+/// be re-validated.
+pub fn fault_row_metrics(s: &Scenario, seed: u64, trace: &Trace) -> Option<Json> {
+    s.fault_defect?;
+    let spec = models::find(&s.model)?;
+    let best = sorted_front(trace).into_iter().next()?.clone();
+    let v = validate(&best.point).ok()?;
+    let free_spec = {
+        let mut e = s.eval_spec(&spec, seed);
+        e.faults = None;
+        e
+    };
+    let baseline = Engine::new(free_spec.clone()).ok()?.eval(&v)?;
+    let retained = if baseline.throughput > 0.0 {
+        best.objective.throughput / baseline.throughput
+    } else {
+        0.0
+    };
+    // Wafer sizing is fault-blind (faults degrade a bought wafer, they
+    // don't change how many are bought), so the fault-free spec sizes it.
+    let sys = free_spec.system(&v);
+    let wafer_cost = sys.n_wafers as f64 / v.phys.wafer_yield.max(1e-12);
+    let perf_per_watt = best.objective.throughput / best.objective.power_w;
+    let mut o = Json::obj();
+    o.set("fault_free_throughput", Json::Num(baseline.throughput))
+        .set("retained_fraction", Json::Num(retained))
+        .set("wafer_cost", Json::Num(wafer_cost))
+        .set(
+            "perf_per_watt_per_wafer",
+            Json::Num(perf_per_watt / wafer_cost),
+        );
+    Some(o)
 }
 
 fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
@@ -623,6 +886,12 @@ pub struct RowSummary {
     pub gpu_throughput: Option<f64>,
     pub gpu_power_w: Option<f64>,
     pub speedup_vs_gpu: Option<f64>,
+    /// Fault-injection rows only: throughput fraction the defective wafer
+    /// retains vs the same best design fault-free.
+    pub retained_fraction: Option<f64>,
+    /// Fault-injection rows only: perf/W divided by the good-wafer cost
+    /// (`n_wafers / wafer_yield`).
+    pub perf_per_watt_per_wafer: Option<f64>,
 }
 
 impl RowSummary {
@@ -650,6 +919,8 @@ fn error_summary(key: String, e: String, resumed: bool) -> RowSummary {
         gpu_throughput: None,
         gpu_power_w: None,
         speedup_vs_gpu: None,
+        retained_fraction: None,
+        perf_per_watt_per_wafer: None,
     }
 }
 
@@ -662,20 +933,22 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
     // scenario spec, so resumed rows digest to the same bytes as fresh
     // ones.
     let gpu = models::find(&r.scenario.model).and_then(|spec| gpu_reference(&r.scenario, &spec));
-    let (points, final_hv, best) = match &r.outcome {
+    let (points, final_hv, best, fault) = match &r.outcome {
         Outcome::Done(Ok(trace)) => {
             let front = sorted_front(trace);
+            let best = front
+                .first()
+                .map(|p| (p.objective.throughput, p.objective.power_w));
             (
                 trace.points.len(),
                 trace.final_hv(),
-                front
-                    .first()
-                    .map(|p| (p.objective.throughput, p.objective.power_w)),
+                best,
+                fault_row_metrics(&r.scenario, r.seed, trace),
             )
         }
         Outcome::Resumed(doc) => {
             // The artifact stores exactly the digest fields summary rows
-            // need (sorted front first, hv, point count).
+            // need (sorted front first, hv, point count, fault digest).
             let best = doc
                 .get("pareto")
                 .and_then(Json::as_arr)
@@ -690,11 +963,18 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
                 doc.get("points").and_then(Json::as_f64).unwrap_or(0.0) as usize,
                 doc.get("final_hv").and_then(Json::as_f64).unwrap_or(0.0),
                 best,
+                doc.get("fault").cloned(),
             )
         }
         Outcome::Done(Err(_)) | Outcome::ResumeConflict(_) => {
             unreachable!("error rows returned above")
         }
+    };
+    let fault_f64 = |field: &str| {
+        fault
+            .as_ref()
+            .and_then(|f| f.get(field))
+            .and_then(Json::as_f64)
     };
     RowSummary {
         key,
@@ -710,6 +990,8 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
             (Some(b), Some(g)) => Some(b.0 / g.0),
             _ => None,
         },
+        retained_fraction: fault_f64("retained_fraction"),
+        perf_per_watt_per_wafer: fault_f64("perf_per_watt_per_wafer"),
     }
 }
 
@@ -743,6 +1025,11 @@ pub fn scenario_result_json(r: &ScenarioResult) -> Json {
                 .set("pareto", Json::Arr(pareto))
                 .set("final_hv", Json::Num(trace.final_hv()))
                 .set("points", Json::Num(trace.points.len() as f64));
+            // Fault rows carry their degradation digest so resumed rows
+            // (which never re-run the engine) summarize identically.
+            if let Some(f) = fault_row_metrics(&r.scenario, r.seed, trace) {
+                doc.set("fault", f);
+            }
         }
         Outcome::Done(Err(e)) | Outcome::ResumeConflict(e) => {
             doc.set("status", Json::Str("error".to_string()))
@@ -779,6 +1066,14 @@ pub fn summary_json(result: &CampaignResult) -> Json {
                     .set("gpu_throughput", opt_num(s.gpu_throughput))
                     .set("gpu_power_w", opt_num(s.gpu_power_w))
                     .set("speedup_vs_gpu", opt_num(s.speedup_vs_gpu));
+                // Emitted only for fault rows: non-fault campaigns keep
+                // their exact pre-fault summary bytes.
+                if let Some(rf) = s.retained_fraction {
+                    o.set("retained_fraction", Json::Num(rf));
+                }
+                if let Some(p) = s.perf_per_watt_per_wafer {
+                    o.set("perf_per_watt_per_wafer", Json::Num(p));
+                }
             }
             Some(e) => {
                 o.set("error", Json::Str(e));
@@ -871,8 +1166,13 @@ mod tests {
                     n1: 2,
                     k: 1,
                 },
+                fault_defect: None,
+                fault_spares: None,
+                hetero: None,
                 tag: "Budget Sweep A".to_string(),
             },
+            fault_suite()[3].clone(),
+            hetero_suite()[2].clone(),
         ] {
             let j = s.to_json();
             let back = Scenario::from_json(&j).unwrap();
@@ -1012,6 +1312,9 @@ mod tests {
             explorer: Explorer::Random,
             fidelity: Fidelity::Analytical,
             budget: Budget::default(),
+            fault_defect: None,
+            fault_spares: None,
+            hetero: None,
             tag: String::new(),
         };
         let e = run_scenario(&s, 1).unwrap_err();
@@ -1040,10 +1343,143 @@ mod tests {
                 n1: 0,
                 k: 0,
             },
+            fault_defect: None,
+            fault_spares: None,
+            hetero: None,
             tag: String::new(),
         };
         let trace = run_scenario(&s, 11).expect("gnn-test decode scenario runs");
         assert!(!trace.points.is_empty());
         assert!(trace.points.iter().all(|p| p.fidelity == "gnn-test"));
+    }
+
+    #[test]
+    fn fault_and_hetero_suites_shape() {
+        let faults = fault_suite();
+        assert_eq!(faults.len(), 10); // 5 defect multipliers × {0, auto} spares
+        assert!(faults.iter().all(|s| s.fault_defect.is_some()));
+        let het = hetero_suite();
+        assert_eq!(het.len(), HeteroGranularity::ALL.len());
+        assert!(het.iter().all(|s| s.hetero.is_some()));
+        // Keys stay unique without tags — the fd/fs/h suffixes carry the
+        // distinction (and so distinct derived seeds + artifact files).
+        let mut keys: Vec<String> = faults
+            .iter()
+            .chain(het.iter())
+            .map(Scenario::key)
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), faults.len() + het.len());
+        // The suffix grammar is part of the artifact-file contract.
+        assert!(faults[0].key().ends_with("-fd0-fs0"), "{}", faults[0].key());
+        assert!(faults[1].key().ends_with("-fd0-fsauto"), "{}", faults[1].key());
+        assert!(het[0].key().ends_with("-hnone"), "{}", het[0].key());
+    }
+
+    #[test]
+    fn from_json_rejects_orphan_fault_and_hetero_fields() {
+        let orphan_spares = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "random", "fault_spares": 2}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&orphan_spares).unwrap_err();
+        assert!(e.contains("'fault_spares' needs 'fault_defect'"), "{e}");
+
+        let orphan_ratio = Json::parse(
+            r#"{"model": "1.7", "phase": "decode", "explorer": "random", "hetero_ratio": 0.5}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&orphan_ratio).unwrap_err();
+        assert!(e.contains("'hetero_ratio' needs 'hetero'"), "{e}");
+
+        let bad_gran = Json::parse(
+            r#"{"model": "1.7", "phase": "decode", "explorer": "random", "hetero": "chiplet"}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&bad_gran).unwrap_err();
+        assert!(e.contains("none, core, reticle, wafer"), "{e}");
+
+        let negative = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "random", "fault_defect": -1}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&negative)
+            .unwrap_err()
+            .contains("non-negative"));
+    }
+
+    #[test]
+    fn fault_scenario_runs_and_digests_degradation() {
+        // A small fault row end to end: the trace evaluates under
+        // injected faults, and the artifact carries the degradation
+        // digest with a sane retained fraction.
+        let mut s = fault_suite()[0].clone();
+        s.fault_defect = Some(2.0);
+        s.fault_spares = Some(0);
+        s.budget = Budget {
+            iters: 1,
+            init: 2,
+            pool: 8,
+            mc: 8,
+            n1: 0,
+            k: 0,
+        };
+        let seed = scenario_seed(2024, &s.key());
+        let trace = run_scenario(&s, seed).expect("fault scenario runs");
+        assert!(!trace.points.is_empty());
+        let digest = fault_row_metrics(&s, seed, &trace).expect("fault rows digest");
+        let retained = digest
+            .get("retained_fraction")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(
+            retained > 0.0 && retained <= 1.0 + 1e-9,
+            "retained fraction {retained} out of range"
+        );
+        assert!(
+            digest
+                .get("perf_per_watt_per_wafer")
+                .and_then(Json::as_f64)
+                .unwrap()
+                > 0.0
+        );
+        assert!(digest.get("wafer_cost").and_then(Json::as_f64).unwrap() >= 1.0);
+        // Same seed → byte-identical digest (the determinism contract
+        // extends through the fault sampler and the re-evaluation).
+        let trace2 = run_scenario(&s, seed).expect("rerun");
+        assert_eq!(
+            fault_row_metrics(&s, seed, &trace2).unwrap().to_string(),
+            digest.to_string()
+        );
+        // Non-fault rows never grow a digest.
+        assert!(fault_row_metrics(&paper_suite()[0], seed, &trace).is_none());
+    }
+
+    #[test]
+    fn hetero_scenario_runs_through_campaign_path() {
+        // The tested successor of `examples/inference_hetero.rs`: a
+        // reticle-granularity decode row drives arch::hetero through the
+        // same dispatch as every other scenario.
+        let mut s = hetero_suite()[2].clone();
+        assert_eq!(
+            s.hetero.unwrap().granularity,
+            HeteroGranularity::Reticle
+        );
+        s.budget = Budget {
+            iters: 1,
+            init: 2,
+            pool: 8,
+            mc: 8,
+            n1: 0,
+            k: 0,
+        };
+        let seed = scenario_seed(7, &s.key());
+        let trace = run_scenario(&s, seed).expect("hetero decode scenario runs");
+        assert!(!trace.points.is_empty());
+        assert!(trace
+            .points
+            .iter()
+            .all(|p| p.objective.throughput > 0.0 && p.objective.power_w > 0.0));
     }
 }

@@ -105,6 +105,10 @@ pub struct DseRun {
     pub n1: usize,
     /// MFMOBO guided-handoff iterations.
     pub k: usize,
+    /// Fault injection ([`crate::yield_model::faults`]): evaluate every
+    /// candidate on a yield-realistic defective wafer. `None` keeps the
+    /// bit-identical fault-free path.
+    pub faults: Option<crate::yield_model::faults::FaultSpec>,
 }
 
 impl DseRun {
@@ -116,6 +120,8 @@ impl DseRun {
             mqa: self.mqa,
             wafers: self.wafers,
             fidelity: self.fidelity,
+            faults: self.faults,
+            hetero: None,
         }
     }
 }
@@ -227,6 +233,23 @@ pub fn run_from_cli(args: &Args) {
         cfg,
         n1: args.usize("n1", 40),
         k: args.usize("k", 8),
+        // --fault-defect enables fault injection at a defect-rate
+        // multiplier; --fault-spares overrides the per-row redundancy
+        // (default: the design's own converged allocation);
+        // --fault-seed decouples the wafer sample from the search seed.
+        faults: if args.has("fault-defect") {
+            Some(crate::yield_model::faults::FaultSpec {
+                defect_multiplier: args.f64("fault-defect", 1.0),
+                spares: if args.has("fault-spares") {
+                    Some(args.usize("fault-spares", 0))
+                } else {
+                    None
+                },
+                seed: args.u64("fault-seed", args.u64("seed", 0)),
+            })
+        } else {
+            None
+        },
     };
     eprintln!(
         "DSE: {} on {} {} at fidelity {} ({} iters, seed {})",
@@ -237,6 +260,14 @@ pub fn run_from_cli(args: &Args) {
         dse.cfg.iters,
         dse.cfg.seed
     );
+    if let Some(f) = &dse.faults {
+        eprintln!(
+            "fault injection: defect multiplier {} / spares {} / seed {}",
+            f.defect_multiplier,
+            f.spares.map_or("auto".to_string(), |n| n.to_string()),
+            f.seed
+        );
+    }
     let t0 = std::time::Instant::now();
     let trace = run(&dse).unwrap_or_else(|e| usage_exit(e));
     eprintln!(
@@ -316,6 +347,7 @@ mod tests {
             },
             n1: 0,
             k: 0,
+            faults: None,
         };
         let trace = run(&run_cfg).expect("analytical run never fails to build");
         assert!(!trace.points.is_empty());
@@ -351,6 +383,7 @@ mod tests {
             },
             n1: 0,
             k: 0,
+            faults: None,
         };
         let e = run(&run_cfg).unwrap_err();
         assert!(e.contains("fidelity 'gnn' unavailable"), "{e}");

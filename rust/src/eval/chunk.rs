@@ -8,12 +8,15 @@ use std::sync::Arc;
 use crate::arch::constants as k;
 use crate::arch::{HeteroGranularity, MemoryKind};
 use crate::compiler::cache::{compile_chunk_cached, CachedChunk};
+use crate::compiler::{compile_chunk_faulted, FaultTopo, RouteError};
 use crate::design_space::Validated;
-use crate::eval::op_level::{chunk_latency_with_topo, NocModel, OpLevelResult};
+use crate::eval::op_level::{chunk_latency_with_topo, ChunkTopology, NocModel, OpLevelResult};
 use crate::eval::power::EnergyLedger;
 use crate::eval::NocEstimator;
 use crate::workload::parallel::{enumerate_strategies, train_chunk_bytes, SystemMemory};
 use crate::workload::{LlmSpec, OpGraph, ParallelStrategy, Phase};
+use crate::yield_model::faults::{region_seed, FaultMap, FaultSpec};
+use crate::yield_model::{yield_grid, YieldInputs};
 
 /// The system under evaluation: one validated WSC design replicated over
 /// `n_wafers` wafers (§VIII-A: WSC area matched to the GPU-cluster area).
@@ -21,6 +24,11 @@ use crate::workload::{LlmSpec, OpGraph, ParallelStrategy, Phase};
 pub struct SystemConfig {
     pub validated: Validated,
     pub n_wafers: usize,
+    /// Optional fault injection: evaluate the design on a yield-realistic
+    /// defective wafer instead of the ideal one. `None` (and a spec whose
+    /// sampled map is pristine, e.g. defect multiplier 0) takes the
+    /// bit-identical fault-free path.
+    pub faults: Option<FaultSpec>,
 }
 
 impl SystemConfig {
@@ -31,6 +39,7 @@ impl SystemConfig {
         SystemConfig {
             validated,
             n_wafers: n,
+            faults: None,
         }
     }
 
@@ -139,15 +148,77 @@ pub(crate) fn best_eval(evals: impl Iterator<Item = Option<TrainEval>>) -> Optio
         .max_by(|a, b| a.tokens_per_sec.partial_cmp(&b.tokens_per_sec).unwrap())
 }
 
+/// Sample the full-array fault map for this system: per-core yield grid
+/// reconstructed from the converged physical reticle (the same
+/// [`YieldInputs`] the redundancy search used), threshold-sampled at the
+/// spec's defect multiplier, then spare-row-repaired (`spares` from the
+/// spec, defaulting to the per-row allocation the design's own redundancy
+/// plan converged on).
+fn sampled_array_map(sys: &SystemConfig, spec: &FaultSpec) -> FaultMap {
+    let ret = &sys.validated.phys.reticle;
+    let inp = YieldInputs {
+        array_h: ret.array_h,
+        array_w: ret.array_w,
+        core_w_mm: ret.core.width_mm,
+        core_h_mm: ret.core.height_mm,
+        core_area_cm2: ret.core.area_mm2 / 100.0,
+        reticle_w_mm: ret.width_mm,
+        reticle_h_mm: ret.height_mm,
+        tsv_stress_utilization: ret.tsv.stress_utilization,
+    };
+    let grid = yield_grid(&inp);
+    let seed = region_seed(spec.seed, ret.array_h, ret.array_w);
+    let mut map = FaultMap::sample(&grid, spec.defect_multiplier, seed);
+    map.repair_rows(spec.spares.unwrap_or(ret.red_per_row));
+    map
+}
+
+/// Fraction of operational cores that survive fault sampling + spare-row
+/// repair across the full array. Exactly `1.0` when no fault spec is set,
+/// so multiplying capacities/bandwidths by it keeps the fault-free path
+/// bit-identical.
+pub(crate) fn system_live_fraction(sys: &SystemConfig) -> f64 {
+    let Some(spec) = sys.faults else {
+        return 1.0;
+    };
+    let ret = &sys.validated.phys.reticle;
+    let map = sampled_array_map(sys, &spec);
+    map.live_cores() as f64 / (ret.array_h * ret.array_w).max(1) as f64
+}
+
+/// Degraded topology for an `rh × rw` evaluation region of this system:
+/// `Ok(None)` on the bit-identical fault-free path (no spec, or the sampled
+/// + repaired map is pristine over the region), `Err` — loudly — when the
+/// sampled faults disconnect the region's mesh.
+pub(crate) fn fault_topo_for_region(
+    sys: &SystemConfig,
+    rh: usize,
+    rw: usize,
+) -> Result<Option<Arc<FaultTopo>>, RouteError> {
+    let Some(spec) = sys.faults else {
+        return Ok(None);
+    };
+    let map = sampled_array_map(sys, &spec);
+    let (ah, aw) = map.dims();
+    let map = map.crop(rh.min(ah), rw.min(aw));
+    if map.is_pristine() {
+        return Ok(None);
+    }
+    FaultTopo::new(map).map(|t| Some(Arc::new(t)))
+}
+
 /// Compile (cache-served) the representative region of one strategy — the
 /// §VI hierarchical-evaluation slice that `eval_training_with` scores.
 /// Shared by the serial sweep and the engine's batched GNN sweep so both
-/// evaluate byte-identical chunks.
+/// evaluate byte-identical chunks. Under a fault spec the region compiles
+/// onto the degraded mesh (bypassing the memo, whose signature does not
+/// cover fault maps); `None` means the sampled faults disconnect the
+/// region — the design is infeasible on this defective wafer.
 pub(crate) fn strategy_region(
     spec: &LlmSpec,
     sys: &SystemConfig,
     s: ParallelStrategy,
-) -> Arc<CachedChunk> {
+) -> Option<Arc<CachedChunk>> {
     let wsc = &sys.validated.point.wsc;
     let chunks = s.num_chunks() as f64;
     let cores_per_chunk = (sys.total_cores() as f64 / chunks).max(1.0);
@@ -155,7 +226,15 @@ pub(crate) fn strategy_region(
     let graph =
         OpGraph::transformer_chunk(spec, graph_layers, s.microbatch, s.tp, Phase::Training, false);
     let (rh, rw) = region_dims(cores_per_chunk, wsc.reticle.array_h, wsc.reticle.array_w);
-    compile_chunk_cached(&graph, rh, rw, &wsc.reticle.core)
+    match fault_topo_for_region(sys, rh, rw) {
+        Ok(None) => Some(compile_chunk_cached(&graph, rh, rw, &wsc.reticle.core)),
+        Ok(Some(topo)) => {
+            let chunk = compile_chunk_faulted(&graph, &wsc.reticle.core, topo);
+            let topo = ChunkTopology::new(&chunk);
+            Some(Arc::new(CachedChunk { chunk, topo }))
+        }
+        Err(_) => None,
+    }
 }
 
 /// Evaluate LLM training on the system (§VI-D + §VI-A strategy search),
@@ -188,7 +267,10 @@ pub fn eval_training_with(
     // --- op level on a representative region ([`strategy_region`]) ---
     let graph_layers = s.layers_per_stage(spec).min(2).max(1);
     let layer_scale = s.layers_per_stage(spec) as f64 / graph_layers as f64;
-    let cached = strategy_region(spec, sys, s);
+    // None: the sampled fault map disconnects the region (infeasible on
+    // this defective wafer). Degradation within a connected region shows
+    // up through the compile itself — fewer logical cores, longer routes.
+    let cached = strategy_region(spec, sys, s)?;
     let region_cores = (cached.chunk.region_h * cached.chunk.region_w) as f64;
     let scale = (cores_per_chunk / region_cores).max(1.0);
     let op = op_result(&cached, core_cfg, scale, noc);
@@ -229,7 +311,9 @@ pub fn eval_training_with(
     };
 
     // DRAM: weight streaming when the chunk state exceeds its SRAM share.
-    let sram_per_chunk = mem_share(sys.memory().sram_bytes, chunks);
+    // Dead cores take their SRAM with them (× 1.0 exactly when fault-free).
+    let live_frac = system_live_fraction(sys);
+    let sram_per_chunk = mem_share(sys.memory().sram_bytes * live_frac, chunks);
     let state_bytes = train_chunk_bytes(spec, &s);
     let stage_weights = spec.param_bytes() / (s.tp * s.pp) as f64;
     let (wafer_dram_bw, stacked) = sys.wafer_dram_bw();
@@ -376,15 +460,21 @@ pub fn eval_inference(
     let phys = &sys.validated.phys;
     let hetero = sys.validated.point.hetero;
     let split = hetero.split(wsc);
+    // Fault derating for the analytic decode path: dead cores surrender
+    // their SRAM capacity and bandwidth, and their compute. (The compiled
+    // prefill region degrades through the compile instead; × 1.0 exactly
+    // on the fault-free path.)
+    let live_frac = system_live_fraction(sys);
 
     // Memory residency for weights + KV cache.
-    let mem = sys.memory();
+    let mut mem = sys.memory();
+    mem.sram_bytes *= live_frac;
     let weights = spec.param_bytes();
     let kv = spec.kv_cache_bytes_per_seq(mqa) * batch as f64;
     let need = weights + kv;
     let (residency, mem_bw_total, stacked) = if need <= mem.sram_bytes {
         // SRAM-resident: aggregate on-core SRAM bandwidth.
-        let bw = sys.total_cores() as f64 * wsc.reticle.core.sram_bytes_per_sec();
+        let bw = sys.total_cores() as f64 * live_frac * wsc.reticle.core.sram_bytes_per_sec();
         ("sram", bw, false)
     } else if need <= mem.sram_bytes + mem.stacking_bytes && mem.stacking_bytes > 0.0 {
         let decode_bw_scale = if split.shared {
@@ -415,7 +505,10 @@ pub fn eval_inference(
     let tp = pick_infer_tp(spec, sys);
     let decode_flops = spec.fwd_flops_per_token() * batch as f64;
     let prefill_frac = if split.shared { 1.0 } else { hetero.prefill_ratio };
-    let decode_cores = (sys.total_cores() as f64 * if split.shared { 1.0 } else { 1.0 - prefill_frac }).max(1.0);
+    let decode_cores = (sys.total_cores() as f64
+        * live_frac
+        * if split.shared { 1.0 } else { 1.0 - prefill_frac })
+    .max(1.0);
     let decode_compute_s = decode_flops
         / (decode_cores * wsc.reticle.core.peak_flops() * 0.3); // GEMV ~30 % util
     let decode_mem_bytes = weights + spec.kv_cache_bytes_per_seq(mqa) * batch as f64;
@@ -430,7 +523,16 @@ pub fn eval_inference(
         wsc.reticle.array_h,
         wsc.reticle.array_w,
     );
-    let cached = compile_chunk_cached(&graph, rh, rw, &wsc.reticle.core);
+    let cached = match fault_topo_for_region(sys, rh, rw) {
+        Ok(None) => compile_chunk_cached(&graph, rh, rw, &wsc.reticle.core),
+        Ok(Some(topo)) => {
+            let chunk = compile_chunk_faulted(&graph, &wsc.reticle.core, topo);
+            let topo = ChunkTopology::new(&chunk);
+            Arc::new(CachedChunk { chunk, topo })
+        }
+        // Faults disconnect the prefill region: infeasible on this wafer.
+        Err(_) => return None,
+    };
     let scale = (prefill_cores / spec.layers as f64 / (rh * rw) as f64).max(1.0);
     let op = op_result(&cached, &wsc.reticle.core, scale, noc);
     // One layer evaluated at batch min(4): scale to full batch × layers
@@ -520,6 +622,19 @@ mod tests {
         SystemConfig {
             validated: validate(&reference_point()).unwrap(),
             n_wafers,
+            faults: None,
+        }
+    }
+
+    fn sys_faulted(n_wafers: usize, mult: f64, spares: Option<usize>) -> SystemConfig {
+        SystemConfig {
+            validated: validate(&reference_point()).unwrap(),
+            n_wafers,
+            faults: Some(FaultSpec {
+                defect_multiplier: mult,
+                spares,
+                seed: 11,
+            }),
         }
     }
 
@@ -636,6 +751,79 @@ mod tests {
             mqa.decode_step_s,
             full.decode_step_s
         );
+    }
+
+    #[test]
+    fn fault_free_spec_is_bit_identical_to_no_spec() {
+        // The graceful-degradation contract: faults: None and a fault spec
+        // whose sampled map is pristine (defect multiplier 0) must take the
+        // exact same code path — every output bit equal.
+        let spec = &benchmarks()[0];
+        let base = eval_training(spec, &sys(1), &Analytical).expect("evaluates");
+        let zero = eval_training(spec, &sys_faulted(1, 0.0, None), &Analytical).expect("evaluates");
+        assert_eq!(base.strategy, zero.strategy);
+        assert_eq!(base.tokens_per_sec.to_bits(), zero.tokens_per_sec.to_bits());
+        assert_eq!(base.power_w.to_bits(), zero.power_w.to_bits());
+        assert_eq!(base.energy_per_token_j.to_bits(), zero.energy_per_token_j.to_bits());
+        let ib = eval_inference(spec, &sys(4), 32, false, &Analytical).expect("evaluates");
+        let iz = eval_inference(spec, &sys_faulted(4, 0.0, None), 32, false, &Analytical)
+            .expect("evaluates");
+        assert_eq!(ib.tokens_per_sec.to_bits(), iz.tokens_per_sec.to_bits());
+        assert_eq!(ib.power_w.to_bits(), iz.power_w.to_bits());
+    }
+
+    #[test]
+    fn degradation_is_monotone_in_defect_rate() {
+        // Threshold sampling nests the dead sets across multipliers at a
+        // fixed seed, so throughput must be non-increasing in the defect
+        // rate (a disconnected wafer counts as zero throughput).
+        let spec = &benchmarks()[0];
+        let tps = |mult: f64| {
+            eval_training(spec, &sys_faulted(1, mult, Some(0)), &Analytical)
+                .map_or(0.0, |r| r.tokens_per_sec)
+        };
+        let t0 = tps(0.0);
+        let t1 = tps(2.0);
+        let t2 = tps(6.0);
+        assert!(t0 > 0.0);
+        assert!(t1 <= t0, "defects must not improve throughput: {t1} vs {t0}");
+        assert!(t2 <= t1, "higher defect rate must not outperform: {t2} vs {t1}");
+        // And the sampling is real: at a high multiplier with no spares,
+        // some cores must actually be dead.
+        assert!(system_live_fraction(&sys_faulted(1, 25.0, Some(0))) < 1.0);
+        // Same seed, same spec: byte-identical reruns.
+        assert_eq!(tps(2.0).to_bits(), t1.to_bits());
+    }
+
+    #[test]
+    fn spare_rows_recover_throughput() {
+        let spec = &benchmarks()[0];
+        let tps = |spares: usize| {
+            eval_training(spec, &sys_faulted(1, 6.0, Some(spares)), &Analytical)
+                .map_or(0.0, |r| r.tokens_per_sec)
+        };
+        assert!(tps(4) >= tps(0), "spare rows must not hurt throughput");
+        // Repair only ever revives cores.
+        let lf0 = system_live_fraction(&sys_faulted(1, 6.0, Some(0)));
+        let lf4 = system_live_fraction(&sys_faulted(1, 6.0, Some(4)));
+        assert!(lf4 >= lf0, "live fraction {lf4} < {lf0} with more spares");
+    }
+
+    #[test]
+    fn inference_on_defective_wafer_degrades_gracefully() {
+        let spec = &benchmarks()[0];
+        let base = eval_inference(spec, &sys(4), 32, false, &Analytical).expect("evaluates");
+        if let Some(f) =
+            eval_inference(spec, &sys_faulted(4, 6.0, Some(0)), 32, false, &Analytical)
+        {
+            assert!(f.tokens_per_sec > 0.0 && f.tokens_per_sec.is_finite());
+            assert!(
+                f.tokens_per_sec <= base.tokens_per_sec * (1.0 + 1e-9),
+                "faulted {} vs pristine {}",
+                f.tokens_per_sec,
+                base.tokens_per_sec
+            );
+        } // None = disconnected region: acceptable graceful failure.
     }
 
     #[test]

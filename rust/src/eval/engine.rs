@@ -47,6 +47,7 @@
 
 use std::sync::Arc;
 
+use crate::arch::HeteroConfig;
 use crate::design_space::Validated;
 use crate::eval::chunk::{
     best_eval, eval_inference, eval_training, eval_training_with, ranked_strategies,
@@ -57,6 +58,7 @@ use crate::explorer::{DesignEval, Objective};
 use crate::runtime::batch::{gnn_batch_size, GnnBackend, GnnBatcher};
 use crate::runtime::{GnnModel, TestBackend};
 use crate::workload::{LlmSpec, Phase};
+use crate::yield_model::faults::FaultSpec;
 
 /// Evaluation fidelity registry — the single source of truth for the
 /// fidelity names accepted by `theseus dse --fidelity`, campaign scenario
@@ -157,6 +159,7 @@ pub fn system_for(v: &Validated, gpu_num: usize, wafers: Option<usize>) -> Syste
         Some(n) => SystemConfig {
             validated: v.clone(),
             n_wafers: n.max(1),
+            faults: None,
         },
         None => SystemConfig::area_matched(v.clone(), gpu_num),
     }
@@ -175,6 +178,13 @@ pub struct EvalSpec {
     /// Fixed wafer count; `None` = area-matched (§VIII-A).
     pub wafers: Option<usize>,
     pub fidelity: Fidelity,
+    /// Fault injection: evaluate every design on a yield-realistic
+    /// defective wafer ([`crate::yield_model::faults`]). `None` keeps the
+    /// bit-identical pristine path.
+    pub faults: Option<FaultSpec>,
+    /// Prefill/decode heterogeneity override (§V-B) applied to every
+    /// design point; `None` keeps each point's own setting.
+    pub hetero: Option<HeteroConfig>,
 }
 
 impl EvalSpec {
@@ -188,6 +198,8 @@ impl EvalSpec {
             mqa: false,
             wafers: None,
             fidelity: Fidelity::Analytical,
+            faults: None,
+            hetero: None,
         }
     }
 
@@ -200,6 +212,8 @@ impl EvalSpec {
             mqa: false,
             wafers: None,
             fidelity: Fidelity::Analytical,
+            faults: None,
+            hetero: None,
         }
     }
 
@@ -216,6 +230,28 @@ impl EvalSpec {
     pub fn with_mqa(mut self, mqa: bool) -> EvalSpec {
         self.mqa = mqa;
         self
+    }
+
+    pub fn with_faults(mut self, faults: Option<FaultSpec>) -> EvalSpec {
+        self.faults = faults;
+        self
+    }
+
+    pub fn with_hetero(mut self, hetero: Option<HeteroConfig>) -> EvalSpec {
+        self.hetero = hetero;
+        self
+    }
+
+    /// Size and configure the system for one design point: the wafer
+    /// policy via [`system_for`], then the spec's fault-injection and
+    /// heterogeneity overrides (both no-ops when `None`).
+    pub(crate) fn system(&self, v: &Validated) -> SystemConfig {
+        let mut sys = system_for(v, self.model.gpu_num, self.wafers);
+        sys.faults = self.faults;
+        if let Some(h) = self.hetero {
+            sys.validated.point.hetero = h;
+        }
+        sys
     }
 }
 
@@ -281,9 +317,10 @@ impl Engine {
         self.spec.fidelity
     }
 
-    /// Size the system for a design point per the spec's wafer policy.
+    /// Size the system for a design point per the spec's wafer policy,
+    /// with the spec's fault/heterogeneity overrides applied.
     pub fn system_for(&self, v: &Validated) -> SystemConfig {
-        system_for(v, self.spec.model.gpu_num, self.spec.wafers)
+        self.spec.system(v)
     }
 
     /// Capability query: a `Sync` view of this engine for explorers that
@@ -374,7 +411,7 @@ pub struct SyncEngine {
 
 impl DesignEval for SyncEngine {
     fn eval(&self, v: &Validated) -> Option<Objective> {
-        let sys = system_for(v, self.spec.model.gpu_num, self.spec.wafers);
+        let sys = self.spec.system(v);
         match self.spec.phase {
             Phase::Training => {
                 let r = match &self.backend {
@@ -508,18 +545,24 @@ pub(crate) fn eval_training_batched(
         return None;
     }
     let core = sys.validated.point.wsc.reticle.core;
-    let regions: Vec<_> = strategies
+    // Strategies whose region the fault map disconnects have no chunk to
+    // predict on — they drop out of the sweep here, exactly as the serial
+    // path's per-strategy `None` drops them.
+    let viable: Vec<_> = strategies
         .iter()
-        .map(|s| strategy_region(spec, sys, *s))
+        .filter_map(|s| strategy_region(spec, sys, *s).map(|r| (*s, r)))
         .collect();
+    if viable.is_empty() {
+        return None;
+    }
     let reqs: Vec<(&crate::compiler::CompiledChunk, &crate::arch::CoreConfig)> =
-        regions.iter().map(|r| (&r.chunk, &core)).collect();
+        viable.iter().map(|(_, r)| (&r.chunk, &core)).collect();
     let waits = GnnBatcher::new(backend, batch).link_waits_many(&reqs);
     best_eval(
-        strategies
+        viable
             .iter()
             .zip(waits)
-            .map(|(s, w)| eval_training_with(spec, sys, *s, &PrecomputedWaits(w))),
+            .map(|((s, _), w)| eval_training_with(spec, sys, *s, &PrecomputedWaits(w))),
     )
 }
 
@@ -617,6 +660,7 @@ mod tests {
         let sys = SystemConfig {
             validated: v,
             n_wafers: 2,
+            faults: None,
         };
         let engine = Engine::analytical_training(spec.clone());
         let serial = eval_training(spec, &sys, &Analytical);
@@ -650,6 +694,7 @@ mod tests {
         let sys = SystemConfig {
             validated: v,
             n_wafers: 2,
+            faults: None,
         };
         let backend = TestBackend::new();
         let batched = eval_training_batched(spec, &sys, &backend, 8);
@@ -691,6 +736,8 @@ mod tests {
                     mqa: false,
                     wafers: Some(2),
                     fidelity,
+                    faults: None,
+                    hetero: None,
                 };
                 let engine = Engine::new(es).unwrap();
                 let sync = engine.to_sync().expect("Sync backend has a sync view");
@@ -756,6 +803,69 @@ mod tests {
         assert!(o.throughput > 0.0 && o.throughput.is_finite());
         assert!(o.power_w > 0.0);
         assert_eq!(engine.name(), "gnn-test");
+    }
+
+    #[test]
+    fn fault_spec_threads_through_every_dispatch() {
+        // Faults on the EvalSpec must reach the evaluation (degraded or
+        // equal objective, never better), identically through the pooled
+        // Engine, the Sync view, and the batched GNN sweep.
+        use crate::yield_model::faults::FaultSpec;
+        let spec = benchmarks()[0].clone();
+        let v = validate(&reference_point()).unwrap();
+        let faults = Some(FaultSpec {
+            defect_multiplier: 6.0,
+            spares: Some(0),
+            seed: 11,
+        });
+        for fidelity in [Fidelity::Analytical, Fidelity::GnnTest] {
+            let base = Engine::new(
+                EvalSpec::training(spec.clone())
+                    .with_fidelity(fidelity)
+                    .with_wafers(Some(1)),
+            )
+            .unwrap();
+            let faulted = Engine::new(
+                EvalSpec::training(spec.clone())
+                    .with_fidelity(fidelity)
+                    .with_wafers(Some(1))
+                    .with_faults(faults),
+            )
+            .unwrap();
+            let ob = base.eval(&v).expect("pristine point evaluable");
+            let of = faulted.eval(&v).map_or(0.0, |o| o.throughput);
+            assert!(
+                of <= ob.throughput,
+                "{fidelity:?}: faults improved throughput ({of} vs {})",
+                ob.throughput
+            );
+            // Sync view sees the identical faulted system.
+            if let Some(sync) = faulted.to_sync() {
+                let os = sync.eval(&v).map_or(0.0, |o| o.throughput);
+                assert_eq!(os.to_bits(), of.to_bits(), "{fidelity:?} sync/pooled drift");
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_override_reaches_inference() {
+        use crate::arch::{HeteroConfig, HeteroGranularity};
+        let spec = benchmarks()[0].clone();
+        let v = validate(&reference_point()).unwrap();
+        let hetero = HeteroConfig {
+            granularity: HeteroGranularity::Reticle,
+            prefill_ratio: 0.5,
+            decode_stack_bw: 2.0,
+        };
+        let engine = Engine::new(
+            EvalSpec::inference(spec, Phase::Decode, 8)
+                .with_wafers(Some(4))
+                .with_hetero(Some(hetero)),
+        )
+        .unwrap();
+        assert_eq!(engine.system_for(&v).validated.point.hetero, hetero);
+        let o = engine.eval(&v).expect("hetero decode evaluates");
+        assert!(o.throughput > 0.0 && o.power_w > 0.0);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use std::collections::HashMap;
 
 use crate::arch::CoreConfig;
-use crate::compiler::routing::{for_each_link_xy, hops, link_index};
+use crate::compiler::routing::link_index;
 use crate::compiler::CompiledChunk;
 use crate::eval::tile::eval_tile_cached;
 use crate::noc_sim::MAX_PACKET_FLITS;
@@ -187,10 +187,11 @@ pub fn chunk_latency_with_topo(
             while i < order.len() && chunk.flows[order[i] as usize].dst_op == phase {
                 i += 1;
             }
-            // Count sharers on each link for this phase.
+            // Count sharers on each link for this phase (fault-aware
+            // dispatch: table detours on degraded meshes, XY otherwise).
             for &fi in &order[start..i] {
                 let f = &chunk.flows[fi as usize];
-                for_each_link_xy(f.src, f.dst, |l| {
+                chunk.for_each_route_link(f.src, f.dst, |l| {
                     share[link_index(l, chunk.region_w)] += 1;
                 });
             }
@@ -198,14 +199,14 @@ pub fn chunk_latency_with_topo(
             for &fi in &order[start..i] {
                 let f = &chunk.flows[fi as usize];
                 let mut m = 1u32;
-                for_each_link_xy(f.src, f.dst, |l| {
+                chunk.for_each_route_link(f.src, f.dst, |l| {
                     m = m.max(share[link_index(l, chunk.region_w)]);
                 });
                 flow_share[fi as usize] = m;
             }
             for &fi in &order[start..i] {
                 let f = &chunk.flows[fi as usize];
-                for_each_link_xy(f.src, f.dst, |l| {
+                chunk.for_each_route_link(f.src, f.dst, |l| {
                     share[link_index(l, chunk.region_w)] = 0;
                 });
             }
@@ -218,7 +219,7 @@ pub fn chunk_latency_with_topo(
     let mut intra_delay = vec![0.0f64; n_ops];
     let mut byte_hops = 0.0;
     for (fi, f) in chunk.flows.iter().enumerate() {
-        let h = hops(f.src, f.dst) as f64;
+        let h = chunk.route_hops(f.src, f.dst) as f64;
         byte_hops += f.bytes * h;
         let flits = (f.bytes / flit_bytes).max(1.0);
         let t = match model {
@@ -231,7 +232,7 @@ pub fn chunk_latency_with_topo(
                 // packet pays k + Σŷ; packets pipeline, so the flow pays
                 // serialization once plus per-packet queueing on the path.
                 let mut path_wait = 0.0;
-                for_each_link_xy(f.src, f.dst, |l| {
+                chunk.for_each_route_link(f.src, f.dst, |l| {
                     path_wait += waits
                         .get(link_index(l, chunk.region_w))
                         .copied()

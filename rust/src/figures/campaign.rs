@@ -28,6 +28,7 @@ pub fn campaign_summary(result: &CampaignResult) -> Table {
             "best tok/s",
             "power(kW)",
             "vs GPU",
+            "retained",
         ],
     );
     let dash = || "-".to_string();
@@ -44,10 +45,14 @@ pub fn campaign_summary(result: &CampaignResult) -> Table {
                     s.best_throughput.map_or_else(dash, |x| format!("{x:.1}")),
                     s.best_power_w.map_or_else(dash, |x| format!("{:.1}", x / 1e3)),
                     s.speedup_vs_gpu.map_or_else(dash, |x| format!("{x:.2}x")),
+                    // Fault-injection rows: throughput fraction retained
+                    // on the defective wafer vs the same design pristine.
+                    s.retained_fraction
+                        .map_or_else(dash, |x| format!("{:.1}%", 100.0 * x)),
                 ]);
             }
             Some(e) => {
-                t.row(&[s.key, status, dash(), dash(), dash(), dash(), e]);
+                t.row(&[s.key, status, dash(), dash(), dash(), dash(), dash(), e]);
             }
         }
     }
@@ -83,6 +88,9 @@ mod tests {
                     explorer: Explorer::Random,
                     fidelity: Fidelity::Analytical,
                     budget,
+                    fault_defect: None,
+                    fault_spares: None,
+                    hetero: None,
                     tag: String::new(),
                 },
                 Scenario {
@@ -93,6 +101,9 @@ mod tests {
                     explorer: Explorer::Random,
                     fidelity: Fidelity::Analytical,
                     budget,
+                    fault_defect: None,
+                    fault_spares: None,
+                    hetero: None,
                     tag: String::new(),
                 },
             ],

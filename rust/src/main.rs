@@ -7,9 +7,13 @@
 //!   eval              evaluate one design point on one benchmark
 //!   dse               run the explorer (random | mobo | mfmobo) on one
 //!                     phase (--phase training|prefill|decode) at one
-//!                     fidelity (--fidelity analytical|ca|gnn|gnn-test)
-//!   campaign          run a scenario matrix (--suite paper | --scenarios
-//!                     f.json), resumable with --resume
+//!                     fidelity (--fidelity analytical|ca|gnn|gnn-test);
+//!                     --fault-defect M evaluates candidates on defective
+//!                     wafers (--fault-spares N, --fault-seed S)
+//!   campaign          run a scenario matrix (--suite paper|fault|hetero
+//!                     | --scenarios f.json), resumable with --resume;
+//!                     the fault suite sweeps defect rate × spare rows
+//!                     and digests the degradation curve per row
 //!   baselines         characterize H100/WSE2/Dojo reference designs
 
 use theseus::util::cli::Args;
@@ -138,6 +142,7 @@ fn cmd_eval(args: &Args) {
         theseus::eval::SystemConfig {
             validated: v,
             n_wafers: args.usize("wafers", 1),
+            faults: None,
         }
     } else {
         theseus::eval::SystemConfig::area_matched(v, spec.gpu_num)
@@ -205,8 +210,10 @@ fn cmd_campaign(args: &Args) {
         let suite = args.str("suite", "paper");
         match suite.as_str() {
             "paper" => campaign::paper_suite(),
+            "fault" => campaign::fault_suite(),
+            "hetero" => campaign::hetero_suite(),
             _ => {
-                eprintln!("campaign: unknown suite '{suite}' — valid: paper");
+                eprintln!("campaign: unknown suite '{suite}' — valid: paper, fault, hetero");
                 std::process::exit(1);
             }
         }

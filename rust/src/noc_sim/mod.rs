@@ -67,9 +67,10 @@ pub mod reference;
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 use crate::arch::constants as k;
-use crate::compiler::routing::{Dir, LinkId, NUM_DIRS};
+use crate::compiler::routing::{Dir, LinkId, RouteTable, NUM_DIRS};
 
 pub use program::{build_programs, CoreProgram, Instr};
 
@@ -159,6 +160,18 @@ fn route_port(at: (usize, usize), dst: (usize, usize)) -> usize {
         Dir::North as usize
     } else {
         LOCAL
+    }
+}
+
+/// Output port under an optional fault-aware routing table: table lookup on
+/// degraded meshes (the table's arrived code equals [`LOCAL`]), XY
+/// otherwise. Both engines call this from their single route-computation
+/// site, so a shared table keeps them on identical irregular-mesh routes —
+/// the bit-identical [`SimStats`] contract extends structurally.
+fn route_port_with(table: Option<&RouteTable>, at: (usize, usize), dst: (usize, usize)) -> usize {
+    match table {
+        Some(t) => t.port_index(at, dst),
+        None => route_port(at, dst),
     }
 }
 
@@ -306,13 +319,30 @@ pub struct Simulator {
     nic_pending: usize,
     /// Scratch for the switch pass (reused allocation).
     moves: Vec<(usize, usize, usize, usize, Flit)>,
+    /// Fault-aware routing table (None = pristine XY mesh).
+    table: Option<Arc<RouteTable>>,
 }
 
 impl Simulator {
     /// Build a simulator for an `height × width` mesh running `programs`
     /// (one per core, row-major; see [`program::build_programs`]).
     pub fn new(height: usize, width: usize, programs: Vec<CoreProgram>) -> Simulator {
+        Simulator::with_table(height, width, programs, None)
+    }
+
+    /// Like [`Simulator::new`] but routing through a fault-aware table
+    /// (dead cores simply run empty programs; dead links are avoided by
+    /// the table's detours).
+    pub fn with_table(
+        height: usize,
+        width: usize,
+        programs: Vec<CoreProgram>,
+        table: Option<Arc<RouteTable>>,
+    ) -> Simulator {
         assert_eq!(programs.len(), height * width);
+        if let Some(t) = &table {
+            assert_eq!(t.dims(), (height, width), "route table/mesh shape mismatch");
+        }
         let n = height * width;
         let max_tag = programs
             .iter()
@@ -357,6 +387,7 @@ impl Simulator {
             flits_in_network: 0,
             nic_pending: 0,
             moves: Vec::new(),
+            table,
         }
     }
 
@@ -675,7 +706,11 @@ impl Simulator {
                 let s = self.routers[node].vc(port, vc);
                 let Some(f) = s.buf.front() else { continue };
                 let out = if f.is_head {
-                    route_port(at, self.packets[f.packet as usize].dst)
+                    route_port_with(
+                        self.table.as_deref(),
+                        at,
+                        self.packets[f.packet as usize].dst,
+                    )
                 } else {
                     match s.out_port {
                         Some(p) => p as usize,
@@ -883,7 +918,10 @@ pub fn simulate_chunk_result(
     max_cycles: u64,
 ) -> Result<SimStats, SimError> {
     let programs = build_programs(chunk, noc_bw_bits, cycles_for);
-    Simulator::new(chunk.region_h, chunk.region_w, programs).try_run(max_cycles)
+    // Faulted compiles ship their routing table into the simulator, so the
+    // CA fidelity runs on the same irregular topology the compile saw.
+    let table = chunk.fault.as_ref().map(|t| t.table.clone());
+    Simulator::with_table(chunk.region_h, chunk.region_w, programs, table).try_run(max_cycles)
 }
 
 /// Mean waiting time keyed by [`LinkId`] (GNN dataset convenience).

@@ -119,7 +119,10 @@ pub fn build_programs(
         let cycles = cycles_for(op).max(1);
         for r in 0..a.placement.grid_h {
             for c in 0..a.placement.grid_w {
-                let core = node(a.placement.physical(r, c));
+                // Placement coordinates are logical on faulted compiles —
+                // core_node maps them onto the physical mesh (identity on
+                // the pristine path). Flow endpoints are already physical.
+                let core = chunk.core_node(a.placement.physical(r, c));
                 let prog = &mut programs[core];
                 // 1. Intra-op systolic feeds (sent eagerly, non-blocking).
                 if let Some(flow_ids) = sends.get(&(core, op)) {

@@ -11,12 +11,13 @@
 //! module — change the event-driven engine and prove it against this one.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use super::{
-    neighbor_of, route_port, CoreProgram, Flit, Instr, Packet, Router, SimStats, LOCAL,
+    neighbor_of, route_port_with, CoreProgram, Flit, Instr, Packet, Router, SimStats, LOCAL,
     MAX_PACKET_FLITS, PORTS, VCS, VC_DEPTH,
 };
-use crate::compiler::routing::NUM_DIRS;
+use crate::compiler::routing::{RouteTable, NUM_DIRS};
 
 /// The original per-cycle instruction-driven mesh simulator (oracle).
 pub struct Simulator {
@@ -33,13 +34,32 @@ pub struct Simulator {
     inject_vc: Vec<usize>,
     stats: SimStats,
     cycle: u64,
+    /// Fault-aware routing table (None = pristine XY mesh). The table is
+    /// the one extension the frozen oracle accepts — route *computation*
+    /// swaps from XY to a precomputed lookup at the single
+    /// `route_port_with` call site; every other semantic stays frozen.
+    table: Option<Arc<RouteTable>>,
 }
 
 impl Simulator {
     /// Build an oracle simulator for an `height × width` mesh running
     /// `programs` (one per core, row-major).
     pub fn new(height: usize, width: usize, programs: Vec<CoreProgram>) -> Simulator {
+        Simulator::with_table(height, width, programs, None)
+    }
+
+    /// Like [`Simulator::new`] but routing through a fault-aware table
+    /// (irregular-mesh oracle runs).
+    pub fn with_table(
+        height: usize,
+        width: usize,
+        programs: Vec<CoreProgram>,
+        table: Option<Arc<RouteTable>>,
+    ) -> Simulator {
         assert_eq!(programs.len(), height * width);
+        if let Some(t) = &table {
+            assert_eq!(t.dims(), (height, width), "route table/mesh shape mismatch");
+        }
         let n = height * width;
         let max_tag = programs
             .iter()
@@ -70,6 +90,7 @@ impl Simulator {
                 ..Default::default()
             },
             cycle: 0,
+            table,
         }
     }
 
@@ -270,7 +291,11 @@ impl Simulator {
                     let s = self.routers[node].vc(port, vc);
                     let Some(f) = s.buf.front() else { continue };
                     let out = if f.is_head {
-                        route_port(at, self.packets[f.packet as usize].dst)
+                        route_port_with(
+                            self.table.as_deref(),
+                            at,
+                            self.packets[f.packet as usize].dst,
+                        )
                     } else {
                         match s.out_port {
                             Some(p) => p as usize,

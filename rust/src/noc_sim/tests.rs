@@ -305,6 +305,126 @@ mod equivalence {
     }
 
     #[test]
+    fn randomized_equivalence_on_faulty_meshes() {
+        // The reference-oracle contract extends to irregular (faulty)
+        // meshes: random dead cores + dead links, random flows between
+        // live cores routed through the shared fault-aware table — both
+        // engines must stay bit-identical. Disconnected samples are
+        // skipped (FaultTopo::new rejects them loudly by design).
+        use crate::compiler::FaultTopo;
+        use crate::yield_model::faults::FaultMap;
+        let mut done = 0u32;
+        let mut attempt = 0u64;
+        while done < 12 {
+            attempt += 1;
+            assert!(attempt < 200, "too many disconnected samples");
+            let mut rng = Rng::new(7000 + attempt);
+            let h = rng.range(3, 7);
+            let w = rng.range(3, 7);
+            let mut map = FaultMap::pristine(h, w);
+            for _ in 0..rng.range(1, 4) {
+                map.kill_core(rng.below(h), rng.below(w));
+            }
+            for _ in 0..rng.range(1, 4) {
+                map.kill_link(rng.below(h), rng.below(w), rng.below(4));
+            }
+            let Ok(topo) = FaultTopo::new(map) else {
+                continue; // partitioned sample — covered by routing tests
+            };
+            let live: Vec<usize> = topo
+                .core_map
+                .physical_cores()
+                .iter()
+                .map(|&(r, c)| r * w + c)
+                .collect();
+            if live.len() < 2 {
+                continue;
+            }
+            let n = h * w;
+            let mut progs: Vec<Vec<Instr>> = vec![Vec::new(); n];
+            let mut expected: HashMap<(usize, u32), u32> = HashMap::new();
+            let n_flows = rng.range(3, 2 * live.len());
+            for fi in 0..n_flows {
+                let src = live[rng.below(live.len())];
+                let dst = live[rng.below(live.len())];
+                if src == dst {
+                    continue;
+                }
+                let bytes = rng.uniform(1.0, 64.0 * 24.0);
+                let tag = (fi % 3) as u32;
+                progs[src].push(Instr::Send {
+                    dst: (dst / w, dst % w),
+                    bytes,
+                    tag,
+                });
+                *expected.entry((dst, tag)).or_default() += packets_for(bytes, 64.0);
+            }
+            let mut by_core: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n];
+            for (&(core, tag), &pkts) in &expected {
+                by_core[core].push((tag, pkts));
+            }
+            for core in 0..n {
+                by_core[core].sort_unstable();
+                for &(tag, pkts) in &by_core[core] {
+                    progs[core].push(Instr::Recv { tag, packets: pkts });
+                }
+            }
+            let ev = Simulator::with_table(h, w, programs_of(&progs), Some(topo.table.clone()))
+                .try_run(2_000_000)
+                .expect("event engine completes within budget");
+            let rf = reference::Simulator::with_table(
+                h,
+                w,
+                programs_of(&progs),
+                Some(topo.table.clone()),
+            )
+            .run(2_000_000);
+            assert_eq!(ev, rf, "attempt {attempt} ({h}x{w} faulty mesh)");
+            done += 1;
+        }
+    }
+
+    #[test]
+    fn faulted_compiled_chunk_equivalence() {
+        // End-to-end on the production path: a chunk compiled onto a
+        // degraded mesh, simulated by both engines through the table the
+        // chunk carries — and simulate_chunk_result must pick that table
+        // up by itself.
+        use crate::arch::{CoreConfig, Dataflow};
+        use crate::compiler::{compile_chunk_faulted, FaultTopo};
+        use crate::workload::models::benchmarks;
+        use crate::workload::{OpGraph, Phase};
+        use crate::yield_model::faults::FaultMap;
+        use std::sync::Arc;
+        let mut spec = benchmarks()[0].clone();
+        spec.seq_len = 32;
+        let g = OpGraph::transformer_chunk(&spec, 1, 1, 8, Phase::Prefill, false);
+        let core = CoreConfig {
+            dataflow: Dataflow::WS,
+            mac_num: 512,
+            buffer_kb: 128,
+            buffer_bw_bits: 256,
+            noc_bw_bits: 512,
+        };
+        let mut map = FaultMap::pristine(4, 4);
+        map.kill_core(1, 2);
+        map.kill_link(2, 1, 0); // East
+        let topo = Arc::new(FaultTopo::new(map).expect("mesh stays connected"));
+        let chunk = compile_chunk_faulted(&g, &core, topo.clone());
+        let cycles = |op: usize| naive_compute_cycles(chunk.assignments[op].flops_per_core, 512);
+        let programs = build_programs(&chunk, 512, &cycles);
+        let ev = Simulator::with_table(4, 4, programs.clone(), Some(topo.table.clone()))
+            .try_run(200_000_000)
+            .expect("completes within budget");
+        let rf = reference::Simulator::with_table(4, 4, programs, Some(topo.table.clone()))
+            .run(200_000_000);
+        assert_eq!(ev, rf, "faulted chunk diverged from the oracle");
+        let via_chunk = simulate_chunk_result(&chunk, 512, &cycles, 200_000_000)
+            .expect("completes within budget");
+        assert_eq!(via_chunk, ev, "simulate_chunk_result must ride the chunk's table");
+    }
+
+    #[test]
     fn pipeline_chain_equivalence() {
         // Recv-then-send forwarding chain along a row: exercises dormant
         // cores woken by ejections, with computes between hops. This is the

@@ -1,0 +1,275 @@
+//! Fault injection: deterministic dead-core/dead-link maps sampled from the
+//! per-core yield grid (§V-C), plus Cerebras-style spare-row repair.
+//!
+//! # Sampling & determinism contract
+//!
+//! A [`FaultMap`] is sampled by drawing one uniform *u-value* per core and
+//! per outgoing link, in a fixed order (nodes row-major; per node: the core
+//! first, then its four links in [`Dir`](crate::compiler::routing::Dir)
+//! order), from a [`Rng`] seeded with the spec's seed. An element is dead
+//! iff `u < p_dead`, where `p_dead = clamp((1 - yield) * defect_multiplier)`
+//! for cores and `p_dead * LINK_FAULT_FRACTION` for links. Because the
+//! u-values depend only on the seed and the draw order — never on the
+//! multiplier — the dead sets are *nested*: at a fixed seed, raising the
+//! defect multiplier only ever adds faults, which makes degradation curves
+//! structurally monotone. A multiplier of 0 yields a pristine map and the
+//! evaluation layer takes the bit-identical fault-free path.
+//!
+//! # Spare-row repair
+//!
+//! [`FaultMap::repair_rows`] models the row-redundancy scheme that
+//! [`redundancy::RedundancyPlan`](super::redundancy::RedundancyPlan) costs
+//! out: each row carries `spares` spare cores that can be remapped in place
+//! of dead ones (left-to-right, a fixed order that preserves nesting).
+//! Dead *links* are not repairable — spare cores reuse the mesh wiring.
+//!
+//! The evaluation layer builds fault maps via
+//! [`eval::chunk`](crate::eval::chunk)'s fault plumbing; campaign scenarios
+//! add a fault spec per row (see `coordinator::campaign::fault_suite`).
+
+use crate::util::rng::Rng;
+
+/// Number of outgoing link directions per node (matches
+/// [`crate::compiler::routing::NUM_DIRS`]; duplicated to keep this module
+/// below the compiler in the dependency order).
+const NUM_DIRS: usize = 4;
+
+/// Fraction of a core's defect probability attributed to each of its
+/// outgoing mesh links (wires + repeaters are far smaller than the core).
+pub const LINK_FAULT_FRACTION: f64 = 0.25;
+
+/// Declarative fault-injection request, threaded through `EvalSpec`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Scales each core's defect probability `1 - yield`; 0 = pristine,
+    /// 1 = the yield model's nominal defect rate.
+    pub defect_multiplier: f64,
+    /// Spare cores available per row for repair; `None` uses the design's
+    /// own `RedundancyPlan::per_row`.
+    pub spares: Option<usize>,
+    /// Sampling seed (see the module docs for the determinism contract).
+    pub seed: u64,
+}
+
+/// Mix a base seed with the sampled grid's dimensions, so maps of different
+/// region shapes decorrelate while staying reproducible (SplitMix64 over
+/// the packed inputs — no ambient randomness).
+pub fn region_seed(seed: u64, h: usize, w: usize) -> u64 {
+    let mut z = seed
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add((h as u64) << 32 | w as u64);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Sampled fault state of an `h × w` core mesh: per-core and per-directed-
+/// link death flags (links indexed like [`crate::compiler::routing::link_index`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultMap {
+    h: usize,
+    w: usize,
+    dead_core: Vec<bool>,
+    dead_link: Vec<bool>,
+}
+
+impl FaultMap {
+    /// Sample a map from the per-core yield grid (`grid[r][c]` ∈ (0, 1]).
+    /// See the module docs for the draw order and nesting guarantee.
+    pub fn sample(grid: &[Vec<f64>], defect_multiplier: f64, seed: u64) -> FaultMap {
+        let h = grid.len();
+        let w = grid.first().map_or(0, |r| r.len());
+        let mut rng = Rng::new(seed);
+        let mut dead_core = vec![false; h * w];
+        let mut dead_link = vec![false; h * w * NUM_DIRS];
+        for r in 0..h {
+            for c in 0..w {
+                let p_core = ((1.0 - grid[r][c]) * defect_multiplier).clamp(0.0, 1.0);
+                let p_link = (p_core * LINK_FAULT_FRACTION).clamp(0.0, 1.0);
+                // Threshold sampling: the u-values never depend on the
+                // multiplier, so higher rates strictly grow the dead set.
+                dead_core[r * w + c] = rng.f64() < p_core;
+                for d in 0..NUM_DIRS {
+                    dead_link[(r * w + c) * NUM_DIRS + d] = rng.f64() < p_link;
+                }
+            }
+        }
+        FaultMap {
+            h,
+            w,
+            dead_core,
+            dead_link,
+        }
+    }
+
+    /// An all-alive map (defect rate 0).
+    pub fn pristine(h: usize, w: usize) -> FaultMap {
+        FaultMap {
+            h,
+            w,
+            dead_core: vec![false; h * w],
+            dead_link: vec![false; h * w * NUM_DIRS],
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    /// Spare-row repair: revive up to `spares` dead cores per row, left to
+    /// right (fixed order — preserves dead-set nesting across multipliers
+    /// and spare counts). Dead links stay dead.
+    pub fn repair_rows(&mut self, spares: usize) {
+        for r in 0..self.h {
+            let mut left = spares;
+            for c in 0..self.w {
+                if left == 0 {
+                    break;
+                }
+                if self.dead_core[r * self.w + c] {
+                    self.dead_core[r * self.w + c] = false;
+                    left -= 1;
+                }
+            }
+        }
+    }
+
+    /// Restrict to the top-left `h × w` sub-mesh (evaluation regions are
+    /// slices of the physical array; a crop of nested maps stays nested).
+    pub fn crop(&self, h: usize, w: usize) -> FaultMap {
+        assert!(h <= self.h && w <= self.w, "crop larger than map");
+        let mut out = FaultMap::pristine(h, w);
+        for r in 0..h {
+            for c in 0..w {
+                out.dead_core[r * w + c] = self.dead_core[r * self.w + c];
+                for d in 0..NUM_DIRS {
+                    out.dead_link[(r * w + c) * NUM_DIRS + d] =
+                        self.dead_link[(r * self.w + c) * NUM_DIRS + d];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn core_ok(&self, r: usize, c: usize) -> bool {
+        !self.dead_core[r * self.w + c]
+    }
+
+    /// Is the directed link out of `(r, c)` toward direction `dir`
+    /// physically intact? (Endpoint liveness is the router's concern —
+    /// routing additionally refuses links into or out of dead cores.)
+    pub fn link_intact(&self, r: usize, c: usize, dir: usize) -> bool {
+        !self.dead_link[(r * self.w + c) * NUM_DIRS + dir]
+    }
+
+    pub fn is_pristine(&self) -> bool {
+        self.dead_core.iter().all(|&d| !d) && self.dead_link.iter().all(|&d| !d)
+    }
+
+    pub fn live_cores(&self) -> usize {
+        self.dead_core.iter().filter(|&&d| !d).count()
+    }
+
+    pub fn dead_links(&self) -> usize {
+        self.dead_link.iter().filter(|&&d| d).count()
+    }
+
+    /// Kill one core (test / what-if hook).
+    pub fn kill_core(&mut self, r: usize, c: usize) {
+        self.dead_core[r * self.w + c] = true;
+    }
+
+    /// Kill one directed link (test / what-if hook).
+    pub fn kill_link(&mut self, r: usize, c: usize, dir: usize) {
+        self.dead_link[(r * self.w + c) * NUM_DIRS + dir] = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(h: usize, w: usize, y: f64) -> Vec<Vec<f64>> {
+        vec![vec![y; w]; h]
+    }
+
+    #[test]
+    fn zero_multiplier_is_pristine() {
+        let m = FaultMap::sample(&grid(8, 8, 0.9), 0.0, 7);
+        assert!(m.is_pristine());
+        assert_eq!(m.live_cores(), 64);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let g = grid(10, 10, 0.92);
+        let a = FaultMap::sample(&g, 1.5, 42);
+        let b = FaultMap::sample(&g, 1.5, 42);
+        assert_eq!(a, b);
+        let c = FaultMap::sample(&g, 1.5, 43);
+        assert_ne!(a, c, "different seeds should differ at this defect rate");
+    }
+
+    #[test]
+    fn dead_sets_nest_across_multipliers() {
+        // Threshold sampling: at a fixed seed, every fault present at a low
+        // multiplier must also be present at any higher multiplier.
+        let g = grid(12, 12, 0.9);
+        for seed in [1u64, 9, 77] {
+            let lo = FaultMap::sample(&g, 0.5, seed);
+            let hi = FaultMap::sample(&g, 2.0, seed);
+            for i in 0..lo.dead_core.len() {
+                assert!(!lo.dead_core[i] || hi.dead_core[i], "core nesting violated");
+            }
+            for i in 0..lo.dead_link.len() {
+                assert!(!lo.dead_link[i] || hi.dead_link[i], "link nesting violated");
+            }
+            assert!(hi.live_cores() <= lo.live_cores());
+        }
+    }
+
+    #[test]
+    fn repair_revives_per_row_and_nests() {
+        let g = grid(10, 10, 0.7);
+        let base = FaultMap::sample(&g, 1.0, 5);
+        assert!(base.live_cores() < 100, "want some faults at yield 0.7");
+        let mut r1 = base.clone();
+        r1.repair_rows(1);
+        let mut r3 = base.clone();
+        r3.repair_rows(3);
+        assert!(r1.live_cores() >= base.live_cores());
+        assert!(r3.live_cores() >= r1.live_cores());
+        // More spares revive a superset of cores.
+        for i in 0..base.dead_core.len() {
+            assert!(!r1.dead_core[i] || r3.dead_core[i] || !r3.dead_core[i]);
+            if !r1.dead_core[i] {
+                assert!(!r3.dead_core[i], "spare nesting violated");
+            }
+        }
+        // Links are untouched by repair.
+        assert_eq!(base.dead_link, r1.dead_link);
+    }
+
+    #[test]
+    fn crop_preserves_flags() {
+        let g = grid(9, 9, 0.8);
+        let m = FaultMap::sample(&g, 1.0, 11);
+        let c = m.crop(5, 6);
+        assert_eq!(c.dims(), (5, 6));
+        for r in 0..5 {
+            for col in 0..6 {
+                assert_eq!(c.core_ok(r, col), m.core_ok(r, col));
+                for d in 0..NUM_DIRS {
+                    assert_eq!(c.link_intact(r, col, d), m.link_intact(r, col, d));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn region_seed_is_stable_and_shape_sensitive() {
+        assert_eq!(region_seed(42, 8, 8), region_seed(42, 8, 8));
+        assert_ne!(region_seed(42, 8, 8), region_seed(42, 8, 9));
+        assert_ne!(region_seed(42, 8, 8), region_seed(43, 8, 8));
+    }
+}

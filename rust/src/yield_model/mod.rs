@@ -10,6 +10,7 @@
 //!
 //! [`redundancy`] lifts per-core yields to reticle/wafer level (Eq. 4).
 
+pub mod faults;
 pub mod redundancy;
 
 use crate::arch::constants as k;
@@ -165,11 +166,29 @@ mod tests {
         let g = yield_grid(&inp);
         assert_eq!(g.len(), 10);
         assert_eq!(g[0].len(), 10);
-        // Left-right symmetry of hole placement for a symmetric grid.
-        assert!((g[0][0] - g[0][9]).abs() < 1e-9 || g[0][0] > 0.0);
         for row in &g {
             for &y in row {
                 assert!(y > 0.0 && y <= 1.0);
+            }
+        }
+        // Left-right symmetry of hole placement: when the reticle width
+        // equals the array span (10 cores × 2 mm), the corner holes mirror
+        // exactly, so every row must read the same left-to-right as
+        // right-to-left. (The default fixture's 26 mm reticle offsets the
+        // right-hand holes past the array, which is *not* symmetric — the
+        // old assertion `sym || g[0][0] > 0.0` was vacuously true.)
+        let mut sym = inputs();
+        sym.reticle_w_mm = 10.0 * sym.core_w_mm;
+        let g = yield_grid(&sym);
+        for (r, row) in g.iter().enumerate() {
+            for c in 0..row.len() {
+                let mirrored = row[row.len() - 1 - c];
+                assert!(
+                    (row[c] - mirrored).abs() < 1e-9,
+                    "row {r} col {c}: {} vs {}",
+                    row[c],
+                    mirrored
+                );
             }
         }
     }

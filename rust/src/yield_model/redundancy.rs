@@ -17,6 +17,14 @@ use crate::util::rng::Rng;
 /// P(at most `max_defects` failures) among independent cores with the given
 /// per-core yields — exact Poisson-binomial tail via DP over defect counts.
 pub fn prob_at_most_defects(yields: &[f64], max_defects: usize) -> f64 {
+    prob_at_most_defects_with_overflow(yields, max_defects).0
+}
+
+/// Same tail plus the tracked overflow mass (probability of *more than*
+/// `max_defects` failures). The two must partition the probability space:
+/// `tail + overflow == 1` up to float error — pinned by
+/// `tail_and_overflow_partition_unity`.
+pub fn prob_at_most_defects_with_overflow(yields: &[f64], max_defects: usize) -> (f64, f64) {
     // dp[d] = probability of exactly d defects so far.
     let cap = max_defects.min(yields.len());
     let mut dp = vec![0.0f64; cap + 2];
@@ -31,8 +39,7 @@ pub fn prob_at_most_defects(yields: &[f64], max_defects: usize) -> f64 {
         dp[0] *= y;
         overflow = overflow + spill; // mass that exceeded cap stays failed
     }
-    let _ = overflow;
-    dp[..=cap].iter().sum()
+    (dp[..=cap].iter().sum(), overflow)
 }
 
 /// Reticle yield with `n_red` redundant cores per row (Eq. 4 applied
@@ -200,6 +207,27 @@ mod tests {
             Some(vec![vec![0.5; 8 + n]; 8])
         });
         assert!(got.is_none());
+    }
+
+    #[test]
+    fn tail_and_overflow_partition_unity() {
+        // The DP's overflow accumulator is real bookkeeping, not dead code:
+        // tail + overflow must partition the probability space exactly.
+        let cases: &[(Vec<f64>, usize)] = &[
+            (vec![0.9; 12], 0),
+            (vec![0.9; 12], 2),
+            (vec![0.5, 0.7, 0.99, 0.8], 1),
+            (vec![0.97; 20], 5),
+            (vec![0.6; 3], 10), // cap > len
+        ];
+        for (ys, n) in cases {
+            let (tail, overflow) = prob_at_most_defects_with_overflow(ys, *n);
+            assert!(
+                (tail + overflow - 1.0).abs() < 1e-12,
+                "tail={tail} overflow={overflow} for n={n}"
+            );
+            assert_eq!(tail, prob_at_most_defects(ys, *n));
+        }
     }
 
     #[test]

@@ -33,6 +33,9 @@ fn scenario(
         explorer,
         fidelity,
         budget,
+        fault_defect: None,
+        fault_spares: None,
+        hetero: None,
         tag: String::new(),
     }
 }
@@ -333,6 +336,127 @@ fn poisoned_scenarios_do_not_sink_the_campaign() {
     assert_eq!(rows[0].get("status").unwrap().as_str(), Some("ok"));
     assert_eq!(rows[1].get("status").unwrap().as_str(), Some("error"));
     assert!(rows[1].get("error").unwrap().as_str().is_some());
+}
+
+#[test]
+fn fault_rows_digest_degradation_and_resume_byte_identically() {
+    // ISSUE 6 acceptance: fault-injection scenarios are first-class
+    // campaign rows — deterministic, resume-safe, and carrying the
+    // degradation digest (retained throughput fraction, perf/W per
+    // good-wafer cost) in both the per-scenario artifact and the summary.
+    let b = Budget {
+        iters: 1,
+        init: 2,
+        pool: 8,
+        mc: 8,
+        n1: 0,
+        k: 0,
+    };
+    let mut pristine = scenario(Phase::Training, 0, None, Explorer::Random, Fidelity::Analytical, b);
+    pristine.fault_defect = Some(0.0); // fault path on, zero defects
+    pristine.fault_spares = Some(0);
+    let mut defective = pristine.clone();
+    defective.fault_defect = Some(2.0);
+    let cfg = fresh_cfg(vec![pristine.clone(), defective.clone()], 41, 1);
+    let result = run_campaign(&cfg).unwrap();
+    assert_eq!(result.n_errors(), 0, "fault rows must evaluate cleanly");
+
+    // Per-scenario artifacts carry the fault digest.
+    let docs: Vec<Json> = result.rows.iter().map(scenario_result_json).collect();
+    for doc in &docs {
+        assert!(doc.get("fault").is_some(), "fault rows must digest");
+    }
+    let retained = |doc: &Json| {
+        doc.get("fault")
+            .and_then(|f| f.get("retained_fraction"))
+            .and_then(Json::as_f64)
+            .unwrap()
+    };
+    // Zero-defect sampling exercises the fault path but injects nothing:
+    // the design retains its full fault-free throughput.
+    assert!(
+        (retained(&docs[0]) - 1.0).abs() < 1e-12,
+        "zero-defect retained fraction {} != 1",
+        retained(&docs[0])
+    );
+    let r2 = retained(&docs[1]);
+    assert!(
+        r2 > 0.0 && r2 <= 1.0 + 1e-9,
+        "defective retained fraction {r2} out of range"
+    );
+    assert!(
+        docs[1]
+            .get("fault")
+            .and_then(|f| f.get("perf_per_watt_per_wafer"))
+            .and_then(Json::as_f64)
+            .unwrap()
+            > 0.0
+    );
+
+    // The summary surfaces the digest per row.
+    let rows = summary_json(&result);
+    let rows = rows.get("scenarios").unwrap().as_arr().unwrap();
+    assert!(rows
+        .iter()
+        .all(|r| r.get("retained_fraction").and_then(Json::as_f64).is_some()));
+
+    // Resume contract: a resumed fault campaign reads the digest back
+    // from disk and serializes byte-identically (modulo the status
+    // marker), without re-running the engine.
+    let dir = std::env::temp_dir().join(format!("theseus-campaign-fault-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_artifacts(&result, &dir).unwrap();
+    let resumed = run_campaign(&CampaignConfig {
+        scenarios: vec![pristine, defective],
+        seed: 41,
+        jobs: 1,
+        resume_from: Some(dir.clone()),
+    })
+    .unwrap();
+    assert_eq!(resumed.n_resumed(), 2);
+    for (a, b) in result.rows.iter().zip(&resumed.rows) {
+        assert_eq!(
+            scenario_result_json(a).to_pretty(),
+            scenario_result_json(b).to_pretty(),
+            "fault artifact for {} diverged through resume",
+            a.scenario.key()
+        );
+    }
+    let a = summary_json(&result).to_pretty();
+    let b = summary_json(&resumed).to_pretty();
+    assert_eq!(a, b.replace("\"status\": \"resumed\"", "\"status\": \"ok\""));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hetero_scenario_is_a_first_class_campaign_row() {
+    // Satellite of ISSUE 6: the tested successor of
+    // examples/inference_hetero.rs — a heterogeneous decode scenario runs
+    // through the campaign path and round-trips its spec through the
+    // scenario JSON schema.
+    let b = Budget {
+        iters: 1,
+        init: 1,
+        pool: 8,
+        mc: 8,
+        n1: 0,
+        k: 0,
+    };
+    let mut s = scenario(Phase::Decode, 8, None, Explorer::Random, Fidelity::Analytical, b);
+    s.hetero = Some(theseus::arch::HeteroConfig {
+        granularity: theseus::arch::HeteroGranularity::Reticle,
+        prefill_ratio: 0.5,
+        decode_stack_bw: 2.0,
+    });
+    assert!(s.key().ends_with("-hreticle"), "{}", s.key());
+    let back = Scenario::from_json(&s.to_json()).unwrap();
+    assert_eq!(back, s);
+    let result = run_campaign(&fresh_cfg(vec![s], 13, 1)).unwrap();
+    assert_eq!(result.n_errors(), 0);
+    let trace = result.rows[0].outcome.trace().unwrap();
+    assert!(!trace.points.is_empty());
+    // Hetero rows are not fault rows: no degradation digest.
+    assert!(scenario_result_json(&result.rows[0]).get("fault").is_none());
 }
 
 #[test]

@@ -34,6 +34,7 @@ fn validator_to_evaluator_to_explorer() {
         },
         n1: 0,
         k: 0,
+        faults: None,
     };
     let trace = run(&dse).expect("analytical run builds");
     assert!(trace.points.len() >= 3);
@@ -102,6 +103,7 @@ fn analytical_and_ca_fidelities_agree_on_ordering() {
         &SystemConfig {
             validated: good.clone(),
             n_wafers: 1,
+            faults: None,
         },
         strat,
         &Analytical,
@@ -113,6 +115,7 @@ fn analytical_and_ca_fidelities_agree_on_ordering() {
         &SystemConfig {
             validated: weak.clone(),
             n_wafers: 1,
+            faults: None,
         },
         strat,
         &Analytical,
@@ -129,6 +132,7 @@ fn analytical_and_ca_fidelities_agree_on_ordering() {
         &SystemConfig {
             validated: good,
             n_wafers: 1,
+            faults: None,
         },
         strat,
         &ca,
@@ -140,6 +144,7 @@ fn analytical_and_ca_fidelities_agree_on_ordering() {
         &SystemConfig {
             validated: weak,
             n_wafers: 1,
+            faults: None,
         },
         strat,
         &ca,

@@ -5,9 +5,10 @@
 #
 # Always runs the Python test suite (pytest). When a Rust toolchain is
 # present it additionally runs tier-1 (`THESEUS_TEST_FAST=1 cargo test -q`),
-# the perf gate (`scripts/bench_check.sh`), a 2-scenario `theseus campaign`
+# the perf gate (`scripts/bench_check.sh`), a 3-scenario `theseus campaign`
 # smoke leg (custom JSON through the fidelity registry, incl. a gnn-test
-# decode scenario), and `cargo fmt --check` when rustfmt is installed;
+# decode scenario and a fault-injection row exercising the degradation
+# digest), and `cargo fmt --check` when rustfmt is installed;
 # otherwise those steps are skipped with a loud note — some build
 # containers ship no cargo/rustc (see CHANGES.md), and a silent skip would
 # read as a pass.
@@ -26,7 +27,7 @@ if command -v cargo >/dev/null 2>&1; then
     echo "== ci_check: perf gate =="
     scripts/bench_check.sh
 
-    echo "== ci_check: campaign smoke (2 scenarios, THESEUS_TEST_FAST=1) =="
+    echo "== ci_check: campaign smoke (3 scenarios, THESEUS_TEST_FAST=1) =="
     SMOKE_DIR="$(mktemp -d "${TMPDIR:-/tmp}/theseus-ci-campaign.XXXXXX")"
     trap 'rm -rf "$SMOKE_DIR"' EXIT
     cat > "$SMOKE_DIR/scenarios.json" <<'EOF'
@@ -35,6 +36,9 @@ if command -v cargo >/dev/null 2>&1; then
    "iters": 1, "init": 1, "pool": 8, "mc": 8, "n1": 0, "k": 0},
   {"model": "GPT-1.7B", "phase": "decode", "explorer": "mobo",
    "fidelity": "gnn-test", "batch": 4,
+   "iters": 1, "init": 1, "pool": 8, "mc": 8, "n1": 0, "k": 0},
+  {"model": "GPT-1.7B", "phase": "training", "explorer": "random",
+   "fault_defect": 2.0, "fault_spares": 0,
    "iters": 1, "init": 1, "pool": 8, "mc": 8, "n1": 0, "k": 0}
 ]}
 EOF
@@ -46,6 +50,14 @@ EOF
     done
     if grep -q '"status": "error"' "$SMOKE_DIR/out/campaign.json"; then
         echo "ci_check: campaign smoke recorded error rows:" >&2
+        cat "$SMOKE_DIR/out/campaign.json" >&2
+        exit 1
+    fi
+    # The fault-injection row must digest a degradation curve (retained
+    # throughput fraction) into the summary — its absence means the fault
+    # path silently fell back to the pristine evaluation.
+    if ! grep -q '"retained_fraction"' "$SMOKE_DIR/out/campaign.json"; then
+        echo "ci_check: campaign smoke fault row produced no degradation digest:" >&2
         cat "$SMOKE_DIR/out/campaign.json" >&2
         exit 1
     fi
