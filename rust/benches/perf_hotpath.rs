@@ -1,7 +1,8 @@
 //! Bench: hot-path microbenchmarks for the §Perf optimization pass —
 //! op-level evaluation throughput, compile-cache behavior, cold-vs-warm
-//! design-point evaluation, CA-sim cycle rate, GP fit/incremental-update,
-//! validator throughput and (if built) GNN inference latency.
+//! design-point evaluation, the batched analytical sweep and incremental
+//! (delta-cache) re-evaluation, CA-sim cycle rate, GP fit/incremental-
+//! update, validator throughput and (if built) GNN inference latency.
 //!
 //! The `median` column is numeric (unit in the `unit` column) so
 //! `scripts/bench_check.sh` can diff this run against the committed
@@ -135,6 +136,84 @@ fn main() {
     };
     assert!(rel <= 1e-9, "parallel/cached evaluation diverged: rel={rel}");
     t.row(&["eval_match_rel_err".into(), format!("{rel:.2e}"), "serial vs pooled relative diff".into()]);
+
+    // 3b. Batched analytical sweep (ISSUE 7): a candidate slice through
+    //     one fused cross-point strategy sweep (`eval_batch`) vs the
+    //     per-point pooled loop, plus the incremental (delta-cache)
+    //     re-evaluation of an already-seen point. Both optimizations are
+    //     gated on bit-identity right here, not just in the test suite.
+    {
+        use theseus::eval::{delta_cache_clear, delta_cache_stats};
+        use theseus::explorer::DesignEval;
+        let mut rng = Rng::new(7);
+        let mut pts = vec![v.clone()];
+        for _ in 0..500 {
+            if pts.len() >= 6 {
+                break;
+            }
+            if let Some(p) = theseus::design_space::sample_valid(&mut rng, 64) {
+                pts.push(p);
+            }
+        }
+        assert!(pts.len() >= 2, "could not sample a candidate slice");
+        let serial = bench::time("analytical_batch_sweep_serial", 1, 5, || {
+            delta_cache_clear();
+            for p in &pts {
+                std::hint::black_box(engine.eval(p));
+            }
+        });
+        let batched = bench::time("analytical_batch_sweep_batched", 1, 5, || {
+            delta_cache_clear();
+            std::hint::black_box(engine.eval_batch(&pts));
+        });
+        t.row(&["analytical_batch_sweep_serial".into(), format!("{:.3}", serial.median_s * 1e3), format!("ms per {}-point slice (per-point pooled loop)", pts.len())]);
+        t.row(&["analytical_batch_sweep_batched".into(), format!("{:.3}", batched.median_s * 1e3), "ms per slice (fused cross-point sweep)".into()]);
+        t.row(&["analytical_batch_sweep_speedup".into(), format!("{:.2}", serial.median_s / batched.median_s.max(1e-12)), "x per-point / batched".into()]);
+        delta_cache_clear();
+        let per_point: Vec<_> = pts.iter().map(|p| engine.eval(p)).collect();
+        delta_cache_clear();
+        let in_batch = engine.eval_batch(&pts);
+        for (i, (a, b)) in per_point.iter().zip(&in_batch).enumerate() {
+            match (a, b) {
+                (Some(a), Some(b)) => assert!(
+                    a.throughput.to_bits() == b.throughput.to_bits()
+                        && a.power_w.to_bits() == b.power_w.to_bits(),
+                    "batched sweep diverged from per-point eval at point {i}"
+                ),
+                (None, None) => {}
+                _ => panic!("batched sweep feasibility diverged at point {i}"),
+            }
+        }
+
+        let target = &pts[1];
+        let cold = bench::time("incremental_reeval_cold", 1, 5, || {
+            delta_cache_clear();
+            std::hint::black_box(engine.eval(target));
+        });
+        delta_cache_clear();
+        let r_cold = engine.eval(target); // prime the delta cache
+        let before = delta_cache_stats();
+        let warm = bench::time("incremental_reeval_warm", 1, 10, || {
+            std::hint::black_box(engine.eval(target));
+        });
+        let after = delta_cache_stats();
+        if before.capacity > 0 {
+            assert!(after.hits > before.hits, "warm re-evaluation must hit the delta cache");
+        }
+        let r_warm = engine.eval(target);
+        match (&r_cold, &r_warm) {
+            (Some(a), Some(b)) => assert!(
+                a.throughput.to_bits() == b.throughput.to_bits()
+                    && a.power_w.to_bits() == b.power_w.to_bits(),
+                "incremental re-evaluation diverged from cold"
+            ),
+            (None, None) => {}
+            _ => panic!("incremental re-evaluation feasibility diverged from cold"),
+        }
+        t.row(&["incremental_reeval_cold".into(), format!("{:.3}", cold.median_s * 1e3), "ms per design point (delta cache cleared)".into()]);
+        t.row(&["incremental_reeval_warm".into(), format!("{:.3}", warm.median_s * 1e3), "ms per design point (delta-cache hits)".into()]);
+        t.row(&["incremental_reeval_speedup".into(), format!("{:.2}", cold.median_s / warm.median_s.max(1e-12)), "x cold / warm re-evaluation".into()]);
+    }
 
     // 4. Design point validation (yield + floorplan + power).
     let mut rng = Rng::new(1);

@@ -47,14 +47,31 @@ use crate::workload::{OpGraph, OpKind};
 pub struct CachedChunk {
     pub chunk: CompiledChunk,
     pub topo: ChunkTopology,
+    /// Structural signature of the compile input ([`chunk_signature`]) —
+    /// the key the batched sweep dedupes on and the delta cache
+    /// ([`crate::eval::chunk`]) memoizes per-chunk estimator results
+    /// under. `0` = unkeyed: a compile whose inputs the signature does
+    /// not cover (fault-injected regions carry a sampled fault map), so
+    /// it must never be deduped against or delta-cached.
+    pub sig: u64,
 }
 
 impl CachedChunk {
     /// Compile + index a chunk without touching any cache.
     pub fn build(graph: &OpGraph, region_h: usize, region_w: usize, core: &CoreConfig) -> CachedChunk {
+        let sig = chunk_signature(graph, region_h, region_w, core);
         let chunk = compile_chunk(graph, region_h, region_w, core);
         let topo = ChunkTopology::new(&chunk);
-        CachedChunk { chunk, topo }
+        CachedChunk { chunk, topo, sig }
+    }
+
+    /// Bundle an already-compiled chunk as **unkeyed** (`sig` 0): for
+    /// compiles the structural signature cannot represent, e.g.
+    /// fault-injected regions. Unkeyed chunks are never signature-deduped
+    /// or delta-cached.
+    pub fn unkeyed(chunk: CompiledChunk) -> CachedChunk {
+        let topo = ChunkTopology::new(&chunk);
+        CachedChunk { chunk, topo, sig: 0 }
     }
 }
 

@@ -55,6 +55,28 @@
 //! the untrusted file untouched on disk; delete it to re-run that
 //! scenario.
 //!
+//! # Sharding & merge
+//!
+//! [`CampaignConfig::shard`] (CLI: `theseus campaign --shard K/N`) runs
+//! the deterministic subset of scenarios whose index in the full matrix
+//! satisfies `i % N == K - 1`; duplicate-key validation still runs over
+//! the **full** list so every shard rejects a broken spec identically.
+//! Because per-scenario seeds are position-independent, a shard's
+//! artifacts are byte-identical to the same scenarios' artifacts from an
+//! unsharded run. A shard's `campaign.json` records `"shard": "K/N"` so
+//! merge can detect the same shard supplied twice.
+//!
+//! [`merge_campaign`] (CLI: `--merge DIR,DIR,...`) fuses shard output
+//! dirs into one campaign over the full scenario list: each scenario is
+//! probed in every dir; exactly one finished artifact → reused verbatim
+//! (`resumed` row); found in **more than one** dir → loud
+//! `overlapping shards` error (the split was not a partition); found in
+//! none, recorded as an error row, or recorded under a **changed spec**
+//! (`spec_hash` + full-spec compare) → evaluated fresh. The merged
+//! `campaign.json` is byte-identical to the unsharded campaign's modulo
+//! the `resumed` status markers (enforced by `rust/tests/campaign.rs`
+//! and the `scripts/ci_check.sh` shard smoke leg).
+//!
 //! # Failure isolation
 //!
 //! A failing scenario (unknown model key, unavailable fidelity backend,
@@ -117,6 +139,11 @@ pub struct Scenario {
     /// Inference batch (sequences in flight); 0 for training scenarios
     /// (the training batch comes from the model spec).
     pub batch: usize,
+    /// Multi-query attention for inference scenarios (§IX-D: one KV head
+    /// shared across the query heads, shrinking the decode KV cache).
+    /// Rejected on training scenarios — MQA here is a serving-time
+    /// optimization, not a training-time architecture change.
+    pub mqa: bool,
     /// Fixed wafer count; `None` = area-matched to the model's GPU
     /// cluster (§VIII-A).
     pub wafers: Option<usize>,
@@ -174,6 +201,11 @@ impl Scenario {
             self.batch,
             wafers
         );
+        // Suffix only when set, so every pre-mqa key (and its derived
+        // seed, and its artifact filename) keeps its exact value.
+        if self.mqa {
+            key.push_str("-mqa");
+        }
         if let Some(m) = self.fault_defect {
             key.push_str(&format!("-fd{m}"));
             match self.fault_spares {
@@ -191,6 +223,22 @@ impl Scenario {
         key
     }
 
+    /// Hash of the **full** scenario spec — FNV-1a over the canonical JSON
+    /// text, so it covers the budget and every other field the key is
+    /// blind to. Recorded in each artifact (`spec_hash`); shard-merge and
+    /// resume probes use it (plus a full-spec comparison as the collision
+    /// guard) to decide whether an on-disk artifact still matches this
+    /// campaign's spec, so only scenarios whose spec actually changed
+    /// re-execute.
+    pub fn spec_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self.to_json().to_string().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
     /// The engine spec this scenario evaluates (the explorer/budget are
     /// the campaign's contribution on top). `seed` is the scenario's
     /// derived seed — it doubles as the fault-map sampling seed so two
@@ -200,7 +248,7 @@ impl Scenario {
             model: spec.clone(),
             phase: self.phase,
             batch: self.batch,
-            mqa: false,
+            mqa: self.mqa,
             wafers: self.wafers,
             fidelity: self.fidelity,
             faults: self.fault_defect.map(|m| FaultSpec {
@@ -219,6 +267,7 @@ impl Scenario {
         o.set("model", Json::Str(self.model.clone()))
             .set("phase", Json::Str(self.phase.name().to_string()))
             .set("batch", Json::Num(self.batch as f64))
+            .set("mqa", Json::Bool(self.mqa))
             .set(
                 "wafers",
                 match self.wafers {
@@ -254,7 +303,7 @@ impl Scenario {
     /// Every field [`Scenario::from_json`] accepts — anything else is
     /// rejected (a typo like `iter` silently falling back to the
     /// 40-iteration paper budget would burn hours across a matrix).
-    pub const FIELDS: [&'static str; 18] = [
+    pub const FIELDS: [&'static str; 19] = [
         "batch",
         "explorer",
         "fault_defect",
@@ -268,6 +317,7 @@ impl Scenario {
         "k",
         "mc",
         "model",
+        "mqa",
         "n1",
         "phase",
         "pool",
@@ -367,11 +417,25 @@ impl Scenario {
                 })
             }
         };
+        let mqa = match j.get("mqa") {
+            None | Some(Json::Null) => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| "scenario field 'mqa' must be a boolean".to_string())?,
+        };
+        if mqa && !phase.is_inference() {
+            return Err(
+                "scenario field 'mqa' needs an inference phase (multi-query attention is a \
+                 serving-time KV-cache optimization)"
+                    .to_string(),
+            );
+        }
         let default_budget = Budget::default();
         let scenario = Scenario {
             model: str_field("model")?,
             phase,
             batch: usize_field("batch", if phase.is_inference() { 32 } else { 0 })?,
+            mqa,
             wafers: match j.get("wafers") {
                 None | Some(Json::Null) => None,
                 Some(_) => Some(usize_field("wafers", 1)?),
@@ -443,6 +507,7 @@ pub fn paper_suite() -> Vec<Scenario> {
                     model: m.name.clone(),
                     phase,
                     batch: if phase.is_inference() { 32 } else { 0 },
+                    mqa: false,
                     wafers: None,
                     explorer,
                     fidelity: Fidelity::Analytical,
@@ -486,6 +551,7 @@ pub fn fault_suite() -> Vec<Scenario> {
                 model: "GPT-1.7B".to_string(),
                 phase: Phase::Training,
                 batch: 0,
+                mqa: false,
                 wafers: None,
                 explorer: Explorer::Random,
                 fidelity: Fidelity::Analytical,
@@ -519,6 +585,7 @@ pub fn hetero_suite() -> Vec<Scenario> {
             model: "GPT-1.7B".to_string(),
             phase: Phase::Decode,
             batch: 32,
+            mqa: false,
             wafers: None,
             explorer: Explorer::Random,
             fidelity: Fidelity::Analytical,
@@ -553,7 +620,7 @@ pub fn scenario_seed(campaign_seed: u64, key: &str) -> u64 {
 }
 
 /// A campaign: scenarios + the seed every scenario seed derives from +
-/// the fan-out width + the optional resume source.
+/// the fan-out width + the optional resume source + the optional shard.
 #[derive(Debug, Clone)]
 pub struct CampaignConfig {
     pub scenarios: Vec<Scenario>,
@@ -566,6 +633,50 @@ pub struct CampaignConfig {
     /// exists under `dir`, recording them as resumed rows (the
     /// `theseus campaign --resume` contract; see the module docs).
     pub resume_from: Option<std::path::PathBuf>,
+    /// `Some((k, n))` — CLI `--shard k/n` — runs only the scenarios at
+    /// 0-based index `i` with `i % n == k - 1` (1-based `k`), a
+    /// deterministic round-robin slice of the full list. Because derived
+    /// seeds are position-independent, shard artifacts are byte-identical
+    /// to the same scenarios' artifacts in an unsharded run, and
+    /// [`merge_campaign`] fuses disjoint shard outputs back into one
+    /// campaign. The shard's `campaign.json` records `"shard": "k/n"`.
+    pub shard: Option<(usize, usize)>,
+}
+
+impl CampaignConfig {
+    /// The deterministic subset this config runs: the full scenario list,
+    /// or its `--shard k/n` round-robin slice (see
+    /// [`CampaignConfig::shard`]). The slices for `k = 1..=n` partition
+    /// the full list exactly.
+    pub fn sharded_scenarios(&self) -> Result<Vec<Scenario>, String> {
+        match self.shard {
+            Some((k, n)) => {
+                if k == 0 || n == 0 || k > n {
+                    return Err(format!("invalid shard {k}/{n} — need 1 <= K <= N"));
+                }
+                Ok(self
+                    .scenarios
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % n == k - 1)
+                    .map(|(_, s)| s.clone())
+                    .collect())
+            }
+            None => Ok(self.scenarios.clone()),
+        }
+    }
+}
+
+/// Parse a `--shard k/n` spec (1-based `k`, `1 <= k <= n`).
+pub fn parse_shard(s: &str) -> Result<(usize, usize), String> {
+    let usage = || format!("invalid shard '{s}' — expected K/N with 1 <= K <= N (e.g. 2/4)");
+    let (k, n) = s.split_once('/').ok_or_else(usage)?;
+    let k: usize = k.trim().parse().map_err(|_| usage())?;
+    let n: usize = n.trim().parse().map_err(|_| usage())?;
+    if k == 0 || n == 0 || k > n {
+        return Err(usage());
+    }
+    Ok((k, n))
 }
 
 /// How a scenario's row came to be.
@@ -621,6 +732,10 @@ pub struct ScenarioResult {
 #[derive(Debug)]
 pub struct CampaignResult {
     pub campaign_seed: u64,
+    /// The shard this result covers (recorded in `campaign.json` so
+    /// [`merge_campaign`] can detect two dirs claiming the same shard);
+    /// `None` for unsharded and merged campaigns.
+    pub shard: Option<(usize, usize)>,
     pub rows: Vec<ScenarioResult>,
 }
 
@@ -737,60 +852,96 @@ fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
 /// re-run, which would mix seeds/specs in one artifact dir; never a
 /// silent reuse of wrong-seed or wrong-budget results).
 fn resume_artifact(dir: &std::path::Path, s: &Scenario, seed: u64) -> Option<Result<Json, String>> {
+    match probe_artifact(dir, s, seed) {
+        Probe::Missing | Probe::Retry => None,
+        // Under --resume (one dir holding this exact campaign) a changed
+        // spec is a conflict, not an implicit re-run: silently mixing
+        // specs in one artifact dir is the failure mode the guard exists
+        // for. merge_campaign treats the same probe as "stale, run fresh"
+        // because the merged output dir is distinct from the probed ones.
+        Probe::SpecChanged(e) | Probe::Conflict(e) => Some(Err(e)),
+        Probe::Finished(doc) => Some(Ok(doc)),
+    }
+}
+
+/// What the artifact dir holds for one scenario (shared by the `--resume`
+/// and `--merge` probes, which map these states to outcomes differently —
+/// see [`resume_artifact`] and [`merge_campaign`]).
+enum Probe {
+    /// No artifact on disk.
+    Missing,
+    /// A recorded **error** row: not finished work, run it fresh (the
+    /// retry overwrites the error artifact with whatever happens now).
+    Retry,
+    /// A finished artifact recording a different scenario spec
+    /// (`spec_hash` and/or the full recorded spec differ).
+    SpecChanged(String),
+    /// An artifact that exists but cannot be trusted: unreadable,
+    /// unparseable, missing fields, or recorded at a different derived
+    /// seed.
+    Conflict(String),
+    /// A trustworthy finished artifact (status ok, seed and spec match).
+    Finished(Json),
+}
+
+fn probe_artifact(dir: &std::path::Path, s: &Scenario, seed: u64) -> Probe {
     let path = dir.join("scenarios").join(format!("{}.json", s.key()));
     let text = match std::fs::read_to_string(&path) {
         Ok(t) => t,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
-        Err(e) => return Some(Err(format!("resume: cannot read {}: {e}", path.display()))),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Probe::Missing,
+        Err(e) => return Probe::Conflict(format!("resume: cannot read {}: {e}", path.display())),
     };
     let doc = match Json::parse(&text) {
         Ok(d) => d,
         Err(e) => {
-            return Some(Err(format!(
+            return Probe::Conflict(format!(
                 "resume: cannot parse {}: {e}; delete it to re-run",
                 path.display()
-            )))
+            ))
         }
     };
     match doc.get("status").and_then(Json::as_str) {
         Some("ok") => {}
-        // A recorded failure did not finish: retry it fresh (the retry
-        // overwrites the error artifact with whatever happens this time).
-        Some("error") => return None,
+        Some("error") => return Probe::Retry,
         _ => {
-            return Some(Err(format!(
+            return Probe::Conflict(format!(
                 "resume: {} has no status field; delete it to re-run",
                 path.display()
-            )))
+            ))
         }
     }
     match doc.get("seed").and_then(Json::as_str) {
         Some(recorded) if recorded == seed.to_string() => {}
         Some(recorded) => {
-            return Some(Err(format!(
+            return Probe::Conflict(format!(
                 "resume: {} was recorded at derived seed {recorded} but this campaign derives \
                  {seed} (--seed changed?); delete it to re-run",
                 path.display()
-            )))
+            ))
         }
         None => {
-            return Some(Err(format!(
+            return Probe::Conflict(format!(
                 "resume: {} has no seed field; delete it to re-run",
                 path.display()
-            )))
+            ))
         }
     }
-    // The key (and so the seed) is blind to budget-only differences; the
-    // artifact records the full scenario, so compare the whole spec.
-    let expected = s.to_json();
-    if doc.get("scenario") != Some(&expected) {
-        return Some(Err(format!(
+    // The key (and so the seed) is blind to budget-only differences. The
+    // recorded spec_hash is the fast check; the full recorded scenario is
+    // the collision guard (and covers pre-spec_hash artifacts, which
+    // simply lack the field).
+    let hash_differs = match doc.get("spec_hash").and_then(Json::as_str) {
+        Some(recorded) => recorded != format!("{:016x}", s.spec_hash()),
+        None => false,
+    };
+    if hash_differs || doc.get("scenario") != Some(&s.to_json()) {
+        return Probe::SpecChanged(format!(
             "resume: {} was produced by a different scenario spec (budget or tag \
              changed?); delete it to re-run",
             path.display()
-        )));
+        ));
     }
-    Some(Ok(doc))
+    Probe::Finished(doc)
 }
 
 /// Execute every scenario (fanned over the pool, `cfg.jobs` wide); a
@@ -803,17 +954,14 @@ fn resume_artifact(dir: &std::path::Path, s: &Scenario, seed: u64) -> Option<Res
 /// overwrite each other's `scenarios/<key>.json` artifact. Give
 /// budget-only variants distinct `tag`s.
 pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignResult, String> {
-    let mut seen: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
-    for (i, s) in cfg.scenarios.iter().enumerate() {
-        if let Some(first) = seen.insert(s.key(), i) {
-            return Err(format!(
-                "duplicate scenario key '{}' (scenarios {first} and {i}) — keys must be \
-                 unique (shared derived seed + artifact overwrite); set a distinct \"tag\"",
-                s.key()
-            ));
-        }
-    }
-    let rows = pool::par_map_workers(&cfg.scenarios, cfg.jobs, |s| {
+    check_unique_keys(&cfg.scenarios)?;
+    // The duplicate-key guard above runs on the FULL list — a collision is
+    // a campaign-spec bug even when the colliding pair lands in different
+    // shards. The shard filter is a deterministic round-robin over list
+    // position; derived seeds are position-independent, so the subset's
+    // artifacts match the unsharded run's byte for byte.
+    let selected = cfg.sharded_scenarios()?;
+    let rows = pool::par_map_workers(&selected, cfg.jobs, |s| {
         let seed = scenario_seed(cfg.seed, &s.key());
         let outcome = match cfg
             .resume_from
@@ -835,6 +983,136 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignResult, String> {
     });
     Ok(CampaignResult {
         campaign_seed: cfg.seed,
+        shard: cfg.shard,
+        rows,
+    })
+}
+
+fn check_unique_keys(scenarios: &[Scenario]) -> Result<(), String> {
+    let mut seen: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    for (i, s) in scenarios.iter().enumerate() {
+        if let Some(first) = seen.insert(s.key(), i) {
+            return Err(format!(
+                "duplicate scenario key '{}' (scenarios {first} and {i}) — keys must be \
+                 unique (shared derived seed + artifact overwrite); set a distinct \"tag\"",
+                s.key()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Fuse disjoint shard outputs (plus any pre-existing artifacts) back
+/// into one campaign over the **full** scenario list — the
+/// `theseus campaign --merge DIR,DIR,...` contract:
+///
+/// * Two merge dirs whose `campaign.json` declares the same `"shard"`
+///   string are a loud **duplicate-shard** error (a copy-paste that would
+///   otherwise masquerade as clean coverage).
+/// * A scenario whose artifact exists in two or more dirs is a loud
+///   **overlapping-shards** error — shards are disjoint by construction,
+///   so overlap means the dirs don't come from one consistent split.
+/// * A trustworthy finished artifact in exactly one dir stands in
+///   ([`Outcome::Resumed`]), byte-identically re-emitted.
+/// * A scenario missing everywhere, recorded as an error row, or recorded
+///   under a **changed spec** (detected by `spec_hash` + full-spec
+///   comparison) runs fresh here — the incremental re-run contract: only
+///   work that is absent, failed, or stale re-executes.
+/// * An artifact that exists but cannot be trusted (unparseable, wrong
+///   derived seed) stays a loud conflict row, exactly as under
+///   `--resume`.
+///
+/// The merged result carries no shard marker; modulo `"resumed"` status
+/// markers its `campaign.json` is byte-identical to an unsharded run's.
+pub fn merge_campaign(
+    cfg: &CampaignConfig,
+    dirs: &[std::path::PathBuf],
+) -> Result<CampaignResult, String> {
+    if dirs.is_empty() {
+        return Err("--merge needs at least one shard directory".to_string());
+    }
+    check_unique_keys(&cfg.scenarios)?;
+    // Duplicate-shard guard over the dirs' own campaign.json declarations.
+    let mut shards_seen: std::collections::BTreeMap<String, &std::path::Path> =
+        std::collections::BTreeMap::new();
+    for d in dirs {
+        let Ok(text) = std::fs::read_to_string(d.join("campaign.json")) else {
+            continue; // a partial shard (killed before its summary) is fine
+        };
+        let Ok(doc) = Json::parse(&text) else {
+            continue;
+        };
+        if let Some(sh) = doc.get("shard").and_then(Json::as_str) {
+            if let Some(prev) = shards_seen.insert(sh.to_string(), d) {
+                return Err(format!(
+                    "duplicate shard {sh}: both {} and {} declare it — merge dirs must come \
+                     from distinct shards",
+                    prev.display(),
+                    d.display()
+                ));
+            }
+        }
+    }
+    // Plan serially (cheap disk probes + loud overlap errors), run the
+    // fresh remainder over the pool.
+    enum Plan {
+        Resumed(Json),
+        Conflict(String),
+        Fresh,
+    }
+    let mut plans: Vec<Plan> = Vec::with_capacity(cfg.scenarios.len());
+    for s in &cfg.scenarios {
+        let seed = scenario_seed(cfg.seed, &s.key());
+        let mut hits: Vec<(&std::path::Path, Probe)> = Vec::new();
+        for d in dirs {
+            match probe_artifact(d, s, seed) {
+                Probe::Missing => {}
+                p => hits.push((d, p)),
+            }
+        }
+        if hits.len() > 1 {
+            let where_ = hits
+                .iter()
+                .map(|(d, _)| d.display().to_string())
+                .collect::<Vec<_>>()
+                .join(", ");
+            return Err(format!(
+                "overlapping shards: scenario '{}' has artifacts in {} merge dirs ({where_}) — \
+                 shard outputs must be disjoint",
+                s.key(),
+                hits.len()
+            ));
+        }
+        plans.push(match hits.pop() {
+            Some((_, Probe::Finished(doc))) => Plan::Resumed(doc),
+            Some((_, Probe::Conflict(e))) => Plan::Conflict(e),
+            // Stale spec or recorded failure: run fresh (incremental
+            // re-run). Missing everywhere: run fresh too.
+            Some((_, Probe::SpecChanged(_) | Probe::Retry)) | None => Plan::Fresh,
+            Some((_, Probe::Missing)) => unreachable!("Missing is filtered above"),
+        });
+    }
+    let indexed: Vec<usize> = (0..cfg.scenarios.len()).collect();
+    let rows = pool::par_map_workers(&indexed, cfg.jobs, |&i| {
+        let s = &cfg.scenarios[i];
+        let seed = scenario_seed(cfg.seed, &s.key());
+        let outcome = match &plans[i] {
+            Plan::Resumed(doc) => Outcome::Resumed(doc.clone()),
+            Plan::Conflict(e) => Outcome::ResumeConflict(e.clone()),
+            Plan::Fresh => Outcome::Done(
+                std::panic::catch_unwind(AssertUnwindSafe(|| run_scenario(s, seed)))
+                    .unwrap_or_else(|p| Err(panic_message(p))),
+            ),
+        };
+        ScenarioResult {
+            scenario: s.clone(),
+            seed,
+            outcome,
+        }
+    });
+    Ok(CampaignResult {
+        campaign_seed: cfg.seed,
+        shard: None,
         rows,
     })
 }
@@ -1007,7 +1285,13 @@ pub fn scenario_result_json(r: &ScenarioResult) -> Json {
     doc.set("key", Json::Str(r.scenario.key()))
         .set("scenario", r.scenario.to_json())
         // Seeds are full-width u64; JSON numbers are f64, so keep exact.
-        .set("seed", Json::Str(r.seed.to_string()));
+        .set("seed", Json::Str(r.seed.to_string()))
+        // Fast spec-equality probe for --resume / --merge; the recorded
+        // full scenario above remains the collision guard.
+        .set(
+            "spec_hash",
+            Json::Str(format!("{:016x}", r.scenario.spec_hash())),
+        );
     match &r.outcome {
         Outcome::Resumed(_) => unreachable!("returned above"),
         Outcome::Done(Ok(trace)) => {
@@ -1086,6 +1370,12 @@ pub fn summary_json(result: &CampaignResult) -> Json {
         .set("n_scenarios", Json::Num(result.rows.len() as f64))
         .set("n_errors", Json::Num(result.n_errors() as f64))
         .set("scenarios", Json::Arr(rows));
+    // Only shard runs declare themselves; unsharded and merged campaigns
+    // keep their exact pre-shard summary bytes (this is what makes the
+    // merged campaign.json byte-comparable to the unsharded one).
+    if let Some((k, n)) = result.shard {
+        doc.set("shard", Json::Str(format!("{k}/{n}")));
+    }
     doc
 }
 
@@ -1124,6 +1414,7 @@ mod tests {
             seed,
             jobs,
             resume_from: None,
+            shard: None,
         }
     }
 
@@ -1155,6 +1446,7 @@ mod tests {
                 model: "GPT-175B".to_string(),
                 phase: Phase::Prefill,
                 batch: 8,
+                mqa: true,
                 wafers: Some(4),
                 explorer: Explorer::Mobo,
                 fidelity: Fidelity::GnnTest,
@@ -1308,6 +1600,7 @@ mod tests {
             model: "no-such-model".to_string(),
             phase: Phase::Training,
             batch: 0,
+            mqa: false,
             wafers: None,
             explorer: Explorer::Random,
             fidelity: Fidelity::Analytical,
@@ -1332,6 +1625,7 @@ mod tests {
             model: "GPT-1.7B".to_string(),
             phase: Phase::Decode,
             batch: 4,
+            mqa: false,
             wafers: None,
             explorer: Explorer::Random,
             fidelity: Fidelity::GnnTest,
@@ -1481,5 +1775,93 @@ mod tests {
             .points
             .iter()
             .all(|p| p.objective.throughput > 0.0 && p.objective.power_w > 0.0));
+    }
+
+    #[test]
+    fn mqa_axis_keys_parses_and_rejects_training() {
+        // The suffix sits between the base and the fault/hetero/tag
+        // suffixes; pre-mqa scenario keys keep their exact values.
+        let mut s = paper_suite()
+            .into_iter()
+            .find(|s| s.phase == Phase::Decode)
+            .unwrap();
+        let base = s.key();
+        assert!(!base.contains("-mqa"));
+        s.mqa = true;
+        assert_eq!(s.key(), format!("{base}-mqa"));
+        assert_ne!(
+            scenario_seed(2024, &s.key()),
+            scenario_seed(2024, &base),
+            "mqa rows get their own seed stream"
+        );
+
+        // JSON: defaults to false, parses as a boolean, survives roundtrip.
+        let parsed = Scenario::from_json(
+            &Json::parse(r#"{"model": "1.7", "phase": "decode", "explorer": "random", "mqa": true}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(parsed.mqa);
+        assert_eq!(Scenario::from_json(&parsed.to_json()).unwrap(), parsed);
+        let e = Scenario::from_json(
+            &Json::parse(r#"{"model": "1.7", "phase": "decode", "explorer": "random", "mqa": 1}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.contains("must be a boolean"), "{e}");
+
+        // Training rejects the serving-time axis loudly.
+        let e = Scenario::from_json(
+            &Json::parse(r#"{"model": "1.7", "phase": "training", "explorer": "random", "mqa": true}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.contains("inference phase"), "{e}");
+    }
+
+    #[test]
+    fn parse_shard_accepts_k_of_n_and_rejects_nonsense() {
+        assert_eq!(parse_shard("1/1").unwrap(), (1, 1));
+        assert_eq!(parse_shard(" 2/4 ").unwrap(), (2, 4));
+        for bad in ["", "3", "0/2", "3/2", "2/0", "a/b", "1/2/3", "-1/2"] {
+            let e = parse_shard(bad).unwrap_err();
+            assert!(e.contains("expected K/N"), "{bad:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_scenario_matrix() {
+        // Union of 1/3 + 2/3 + 3/3 covers the suite exactly once, in a
+        // deterministic index-stride split.
+        let suite = paper_suite();
+        let mut seen: Vec<String> = Vec::new();
+        for k in 1..=3usize {
+            let cfg = CampaignConfig {
+                shard: Some((k, 3)),
+                ..fresh_cfg(suite.clone(), 5, 1)
+            };
+            seen.extend(cfg.sharded_scenarios().unwrap().iter().map(Scenario::key));
+        }
+        seen.sort();
+        let mut all: Vec<String> = suite.iter().map(Scenario::key).collect();
+        all.sort();
+        assert_eq!(seen, all);
+    }
+
+    #[test]
+    fn spec_hash_tracks_budget_and_mqa() {
+        let a = paper_suite()[0].clone();
+        assert_eq!(a.spec_hash(), a.clone().spec_hash());
+        let mut b = a.clone();
+        b.budget.iters += 1; // invisible in the key, visible in the hash
+        assert_eq!(a.key(), b.key());
+        assert_ne!(a.spec_hash(), b.spec_hash());
+        let mut c = paper_suite()
+            .into_iter()
+            .find(|s| s.phase == Phase::Decode)
+            .unwrap();
+        let before = c.spec_hash();
+        c.mqa = true;
+        assert_ne!(before, c.spec_hash());
     }
 }

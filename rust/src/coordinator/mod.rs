@@ -6,11 +6,17 @@
 //! fidelity × explorer) tuple; [`run`] builds the [`Engine`] for it (plus
 //! the analytical low-fidelity twin for MFMOBO's Algo. 1 pair) and drives
 //! the explorer through [`explore`] — the single explorer-dispatch path
-//! shared with the campaign runner. Whether evaluations fan out over the
-//! thread pool is the *engine backend's* capability ([`Engine::to_sync`]),
-//! not a coordinator decision: pooled explorers get the `Sync` view when
-//! the backend supports it and fall back to the serial drive otherwise
-//! (the thread-confined PJRT GNN batches link-wait inference instead).
+//! shared with the campaign runner. How evaluations are dispatched is the
+//! *engine backend's* capability, never a coordinator decision, at three
+//! levels (the dispatch rule in `eval::engine`): **serial** per-point
+//! `eval` when the backend is thread-confined (the PJRT GNN batches
+//! link-wait inference instead), **pooled** strategy fan-out via the
+//! `Sync` view ([`Engine::to_sync`]), and **batched** `eval_batch` — one
+//! fused cross-candidate strategy sweep with compile dedup — which
+//! explorers hand whole candidate slices to
+//! ([`crate::explorer::random_search_par`] rounds, MOBO proposals). All
+//! three produce bit-identical objectives; a fallback from batched to
+//! serial warns once, never silently.
 //!
 //! Fidelity names (`analytical`, `ca`, `gnn`, `gnn-test`) come from the
 //! [`Fidelity`] registry — `theseus dse --fidelity`, campaign scenario
@@ -29,6 +35,11 @@
 //! theseus campaign --scenarios my_sweep.json --out artifacts/sweep
 //! # skip scenarios whose artifact already exists under --out:
 //! theseus campaign --suite paper --out artifacts/campaign --resume
+//! # split the matrix across machines, then fuse the outputs:
+//! theseus campaign --suite paper --shard 1/2 --out artifacts/shard1
+//! theseus campaign --suite paper --shard 2/2 --out artifacts/shard2
+//! theseus campaign --suite paper --merge artifacts/shard1,artifacts/shard2 \
+//!     --out artifacts/campaign
 //! ```
 //!
 //! Each scenario's RNG seed derives as `scenario_seed(campaign_seed,

@@ -10,7 +10,7 @@ use crate::arch::{HeteroGranularity, MemoryKind};
 use crate::compiler::cache::{compile_chunk_cached, CachedChunk};
 use crate::compiler::{compile_chunk_faulted, FaultTopo, RouteError};
 use crate::design_space::Validated;
-use crate::eval::op_level::{chunk_latency_with_topo, ChunkTopology, NocModel, OpLevelResult};
+use crate::eval::op_level::{chunk_latency_with_topo, NocModel, OpLevelResult};
 use crate::eval::power::EnergyLedger;
 use crate::eval::NocEstimator;
 use crate::workload::parallel::{enumerate_strategies, train_chunk_bytes, SystemMemory};
@@ -207,18 +207,16 @@ pub(crate) fn fault_topo_for_region(
     FaultTopo::new(map).map(|t| Some(Arc::new(t)))
 }
 
-/// Compile (cache-served) the representative region of one strategy — the
-/// §VI hierarchical-evaluation slice that `eval_training_with` scores.
-/// Shared by the serial sweep and the engine's batched GNN sweep so both
-/// evaluate byte-identical chunks. Under a fault spec the region compiles
-/// onto the degraded mesh (bypassing the memo, whose signature does not
-/// cover fault maps); `None` means the sampled faults disconnect the
-/// region — the design is infeasible on this defective wafer.
-pub(crate) fn strategy_region(
+/// The compile input of one strategy's representative region: the op
+/// graph plus region dims. Split out of [`strategy_region`] so the fused
+/// batched sweep ([`crate::eval::engine`]) can signature the input and
+/// dedupe structurally identical compiles across a whole candidate batch
+/// before fanning the evaluations out.
+pub(crate) fn region_input(
     spec: &LlmSpec,
     sys: &SystemConfig,
     s: ParallelStrategy,
-) -> Option<Arc<CachedChunk>> {
+) -> (OpGraph, usize, usize) {
     let wsc = &sys.validated.point.wsc;
     let chunks = s.num_chunks() as f64;
     let cores_per_chunk = (sys.total_cores() as f64 / chunks).max(1.0);
@@ -226,12 +224,29 @@ pub(crate) fn strategy_region(
     let graph =
         OpGraph::transformer_chunk(spec, graph_layers, s.microbatch, s.tp, Phase::Training, false);
     let (rh, rw) = region_dims(cores_per_chunk, wsc.reticle.array_h, wsc.reticle.array_w);
+    (graph, rh, rw)
+}
+
+/// Compile (cache-served) the representative region of one strategy — the
+/// §VI hierarchical-evaluation slice that `eval_training_with` scores.
+/// Shared by the serial sweep and the engine's batched GNN sweep so both
+/// evaluate byte-identical chunks. Under a fault spec the region compiles
+/// onto the degraded mesh (bypassing the memo, whose signature does not
+/// cover fault maps — the chunk stays unkeyed, so the delta cache skips
+/// it too); `None` means the sampled faults disconnect the region — the
+/// design is infeasible on this defective wafer.
+pub(crate) fn strategy_region(
+    spec: &LlmSpec,
+    sys: &SystemConfig,
+    s: ParallelStrategy,
+) -> Option<Arc<CachedChunk>> {
+    let wsc = &sys.validated.point.wsc;
+    let (graph, rh, rw) = region_input(spec, sys, s);
     match fault_topo_for_region(sys, rh, rw) {
         Ok(None) => Some(compile_chunk_cached(&graph, rh, rw, &wsc.reticle.core)),
         Ok(Some(topo)) => {
             let chunk = compile_chunk_faulted(&graph, &wsc.reticle.core, topo);
-            let topo = ChunkTopology::new(&chunk);
-            Some(Arc::new(CachedChunk { chunk, topo }))
+            Some(Arc::new(CachedChunk::unkeyed(chunk)))
         }
         Err(_) => None,
     }
@@ -258,6 +273,24 @@ pub fn eval_training_with(
     s: ParallelStrategy,
     noc: &dyn NocEstimator,
 ) -> Option<TrainEval> {
+    // None: the sampled fault map disconnects the region (infeasible on
+    // this defective wafer). Degradation within a connected region shows
+    // up through the compile itself — fewer logical cores, longer routes.
+    let cached = strategy_region(spec, sys, s)?;
+    eval_training_on_region(spec, sys, s, &cached, noc)
+}
+
+/// Score one strategy on its already-compiled representative region. The
+/// tail of [`eval_training_with`], split out so the fused batched sweep
+/// can hand in a signature-deduped chunk shared across the batch; pure in
+/// its inputs, so both entry points are bit-identical by construction.
+pub(crate) fn eval_training_on_region(
+    spec: &LlmSpec,
+    sys: &SystemConfig,
+    s: ParallelStrategy,
+    cached: &CachedChunk,
+    noc: &dyn NocEstimator,
+) -> Option<TrainEval> {
     let wsc = &sys.validated.point.wsc;
     let phys = &sys.validated.phys;
     let core_cfg = &wsc.reticle.core;
@@ -267,10 +300,6 @@ pub fn eval_training_with(
     // --- op level on a representative region ([`strategy_region`]) ---
     let graph_layers = s.layers_per_stage(spec).min(2).max(1);
     let layer_scale = s.layers_per_stage(spec) as f64 / graph_layers as f64;
-    // None: the sampled fault map disconnects the region (infeasible on
-    // this defective wafer). Degradation within a connected region shows
-    // up through the compile itself — fewer logical cores, longer routes.
-    let cached = strategy_region(spec, sys, s)?;
     let region_cores = (cached.chunk.region_h * cached.chunk.region_w) as f64;
     let scale = (cores_per_chunk / region_cores).max(1.0);
     let op = op_result(&cached, core_cfg, scale, noc);
@@ -416,16 +445,60 @@ fn total_static_w(sys: &SystemConfig) -> f64 {
         * sys.validated.phys.reticle.leak_w
 }
 
+/// Delta cache (incremental neighbor re-evaluation): per-chunk estimator
+/// results memoized under `(chunk signature, scale bits, estimator cache
+/// key)`. When a BO proposal differs from an already-evaluated neighbor in
+/// a subset of design genes, the strategies whose representative regions
+/// are structurally unchanged re-serve their [`OpLevelResult`] instead of
+/// re-running the critical-path sweep (or the CA simulator). Exactness:
+/// the chunk signature covers every compile input, `scale` is keyed by
+/// IEEE bits, and [`NocEstimator::cache_key`] is only `Some` for
+/// estimators that are pure functions of `(chunk, core)` — so a hit
+/// returns the bit-identical result a cold evaluation would compute
+/// (asserted in `eval::engine` tests and `benches/perf_hotpath.rs`).
+/// Unkeyed chunks (`sig` 0: fault-injected regions) always miss through
+/// to a fresh computation. Bounded by `THESEUS_DELTA_CACHE` (entries,
+/// default 4096; 0 disables).
+fn delta_cache() -> &'static crate::util::memo::Memo<(u64, u64, u64), OpLevelResult> {
+    static CACHE: std::sync::OnceLock<crate::util::memo::Memo<(u64, u64, u64), OpLevelResult>> =
+        std::sync::OnceLock::new();
+    CACHE.get_or_init(|| {
+        crate::util::memo::Memo::new(crate::util::cli::env_usize("THESEUS_DELTA_CACHE", 4096))
+    })
+}
+
+/// Point-in-time delta-cache counters (benches and tests).
+pub fn delta_cache_stats() -> crate::util::memo::MemoStats {
+    delta_cache().stats()
+}
+
+/// Drop all delta-cache entries and zero the counters (bench isolation).
+pub fn delta_cache_clear() {
+    delta_cache().clear()
+}
+
 fn op_result(
     cached: &CachedChunk,
     core: &crate::arch::CoreConfig,
     scale: f64,
     noc: &dyn NocEstimator,
 ) -> OpLevelResult {
-    let (chunk, topo) = (&cached.chunk, &cached.topo);
-    match noc.link_waits(chunk, core) {
-        Some(waits) => chunk_latency_with_topo(chunk, topo, core, scale, NocModel::LinkWaits(&waits)),
-        None => chunk_latency_with_topo(chunk, topo, core, scale, NocModel::Analytical),
+    let compute = || {
+        let (chunk, topo) = (&cached.chunk, &cached.topo);
+        match noc.link_waits(chunk, core) {
+            Some(waits) => {
+                chunk_latency_with_topo(chunk, topo, core, scale, NocModel::LinkWaits(&waits))
+            }
+            None => chunk_latency_with_topo(chunk, topo, core, scale, NocModel::Analytical),
+        }
+    };
+    // The signature covers (graph, region, core) — `core` is always the
+    // compile core — so (sig, scale, estimator) determines the result.
+    match (cached.sig, noc.cache_key()) {
+        (0, _) | (_, None) => compute(),
+        (sig, Some(noc_key)) => {
+            delta_cache().get_or_insert_with((sig, scale.to_bits(), noc_key), compute)
+        }
     }
 }
 
@@ -527,8 +600,7 @@ pub fn eval_inference(
         Ok(None) => compile_chunk_cached(&graph, rh, rw, &wsc.reticle.core),
         Ok(Some(topo)) => {
             let chunk = compile_chunk_faulted(&graph, &wsc.reticle.core, topo);
-            let topo = ChunkTopology::new(&chunk);
-            Arc::new(CachedChunk { chunk, topo })
+            Arc::new(CachedChunk::unkeyed(chunk))
         }
         // Faults disconnect the prefill region: infeasible on this wafer.
         Err(_) => return None,

@@ -8,31 +8,40 @@
 //! hands it to [`Engine::new`]. Fidelity selection, estimator
 //! construction, and sweep dispatch live here and nowhere else.
 //!
-//! # Dispatch rule (Sync vs batched)
+//! # Dispatch rule (serial / pooled / batched)
 //!
-//! How a training evaluation fans its §VI-A strategy sweep out is a
-//! *capability of the backend*, not a property of the call site:
+//! How an evaluation fans out is a *capability of the backend*, decided
+//! here and nowhere else, at three levels:
 //!
-//! * **`Sync` per-chunk estimators** (analytical, cycle-accurate) fan
-//!   the sweep over the scoped thread pool ([`crate::util::pool`]).
-//! * **GNN-shaped backends** (`gnn`, `gnn-test`) amortize per-call
-//!   dispatch by *batching* link-wait inference across the whole sweep
+//! * **Serial** — [`SyncEngine::eval`] sweeps one point's §VI-A strategy
+//!   list serially. This is the per-point view for callers that already
+//!   fan whole design points over the pool, so parallelism never nests.
+//! * **Pooled** — [`Engine::eval`] with a `Sync` per-chunk estimator
+//!   (analytical, cycle-accurate) fans one point's strategy sweep over
+//!   the scoped thread pool ([`crate::util::pool`]).
+//! * **Batched** — [`DesignEval::eval_batch`] over a whole candidate
+//!   slice. `Sync` training backends run **one fused sweep** over the
+//!   flattened (point × strategy) work list
+//!   ([`eval_training_batch_fused`]), first deduping structurally
+//!   identical region compiles across the batch by
+//!   [`crate::compiler::cache::chunk_signature`]; inference and
+//!   pseudo-GNN batches fan whole points over the pool. GNN-shaped
+//!   backends (`gnn`, `gnn-test`) additionally amortize per-call
+//!   dispatch by batching link-wait inference across each point's sweep
 //!   ([`crate::runtime::batch::GnnBatcher`]) — forced for the PJRT GNN,
-//!   whose executable handle cannot cross threads, and deliberately
-//!   shared by the pseudo-GNN so `gnn-test` exercises the exact sweep
-//!   path the real `gnn` fidelity takes. (The pseudo-GNN *is* `Sync`,
-//!   so pooled explorers still get its [`SyncEngine`] view and fan
-//!   whole design points out.)
+//!   whose executable handle cannot cross threads.
 //!
-//! The sweep parallelism lives at exactly one level. Explorers that fan
-//! whole design points over the pool ([`crate::explorer::random_search_par`])
-//! obtain a [`SyncEngine`] via the capability query [`Engine::to_sync`];
-//! its per-point sweep is serial, so the fan-out is never nested. Serial
-//! explorers (`mobo`, `mfmobo`, the random fallback) drive [`Engine`]
-//! directly, whose per-point sweep is pooled (or batched). Both paths
-//! produce bit-identical numbers (each strategy's evaluation is
-//! deterministic and independent; ties resolve by the same last-max rule
-//! — pinned by the tests below).
+//! Parallelism lives at exactly one level: explorers either fan points
+//! out themselves over a [`SyncEngine`] (whose per-point sweep is
+//! serial) or hand the whole batch to `eval_batch` (which owns the
+//! fan-out). All three levels produce bit-identical numbers — each
+//! strategy's evaluation is deterministic and independent, region
+//! compiles are deterministic in their structural signature, and ties
+//! resolve by the same last-max rule (pinned by the tests below and by
+//! `benches/perf_hotpath.rs`). A backend that cannot take a batched
+//! path degrades to the per-point serial loop and reports it through
+//! [`crate::util::warn::warn_once`] — never silently (the same
+//! contract as the [`GnnBatcher`] fallback).
 //!
 //! # Adding a fidelity
 //!
@@ -44,15 +53,20 @@
 //!    `Sync` (pooled sweep) or leave it confined (batched sweep).
 //! 3. Add a [`Fidelity::per_chunk_estimator`] arm so figure/bench code
 //!    (Fig. 7) can drive it chunk-at-a-time.
+//! 4. If the estimator is a pure function of `(chunk, core)`, give it a
+//!    [`crate::eval::NocEstimator::cache_key`] so neighbor re-evaluation
+//!    can reuse its per-chunk results through the delta cache.
 
 use std::sync::Arc;
 
 use crate::arch::HeteroConfig;
+use crate::compiler::cache::{chunk_signature, compile_chunk_cached, CachedChunk};
 use crate::design_space::Validated;
 use crate::eval::chunk::{
-    best_eval, eval_inference, eval_training, eval_training_with, ranked_strategies,
-    strategy_region, InferEval, SystemConfig, TrainEval,
+    best_eval, eval_inference, eval_training, eval_training_on_region, eval_training_with,
+    ranked_strategies, region_input, strategy_region, InferEval, SystemConfig, TrainEval,
 };
+use crate::workload::{OpGraph, ParallelStrategy};
 use crate::eval::{Analytical, CycleAccurate as CaEstimator, NocEstimator};
 use crate::explorer::{DesignEval, Objective};
 use crate::runtime::batch::{gnn_batch_size, GnnBackend, GnnBatcher};
@@ -389,6 +403,29 @@ impl DesignEval for Engine {
         }
     }
 
+    fn eval_batch(&self, vs: &[Validated]) -> Vec<Option<Objective>> {
+        // Sync backends hand the batch to the Sync view's fused/pooled
+        // dispatch (same spec, bit-identical numbers).
+        if let Some(sync) = self.to_sync() {
+            return sync.eval_batch(vs);
+        }
+        // Thread-confined backend (the PJRT GNN): neither the fused
+        // analytical sweep nor a pool fan-out applies — degrade to the
+        // per-point loop (each point still batches link-wait inference
+        // internally) and say so once, per the dispatch-failure contract.
+        if vs.len() > 1 {
+            crate::util::warn::warn_once(
+                "engine-batch-serial",
+                &format!(
+                    "batched evaluation unavailable at fidelity '{}' \
+                     (thread-confined backend); falling back to the per-point serial loop",
+                    self.spec.fidelity.name()
+                ),
+            );
+        }
+        vs.iter().map(|v| self.eval(v)).collect()
+    }
+
     fn name(&self) -> &'static str {
         self.spec.fidelity.name()
     }
@@ -407,6 +444,23 @@ enum SyncBackend {
 pub struct SyncEngine {
     spec: EvalSpec,
     backend: SyncBackend,
+}
+
+impl SyncEngine {
+    /// The batched training dispatch for a `Sync` per-chunk estimator:
+    /// size every candidate's system, then run one fused sweep over the
+    /// whole batch ([`eval_training_batch_fused`]).
+    fn batch_training(
+        &self,
+        vs: &[Validated],
+        noc: &(dyn NocEstimator + Sync),
+    ) -> Vec<Option<Objective>> {
+        let systems: Vec<SystemConfig> = vs.iter().map(|v| self.spec.system(v)).collect();
+        eval_training_batch_fused(&self.spec.model, &systems, noc)
+            .into_iter()
+            .map(|r| r.map(|r| train_objective(&r)))
+            .collect()
+    }
 }
 
 impl DesignEval for SyncEngine {
@@ -438,6 +492,20 @@ impl DesignEval for SyncEngine {
                 )
                 .and_then(|r| infer_objective(&self.spec, &r))
             }
+        }
+    }
+
+    fn eval_batch(&self, vs: &[Validated]) -> Vec<Option<Objective>> {
+        match (&self.backend, self.spec.phase) {
+            // The fused batched analytical sweep (and its CA twin).
+            (SyncBackend::Analytical(a), Phase::Training) => self.batch_training(vs, a),
+            (SyncBackend::CycleAccurate(ca), Phase::Training) => self.batch_training(vs, ca),
+            // No cross-point strategy sweep to fuse (inference evaluates
+            // one configuration per point; the pseudo-GNN sweep batches
+            // link-wait inference internally): fan whole points over the
+            // pool instead — still one level of parallelism, and each
+            // point takes exactly the per-point serial path.
+            _ => crate::util::pool::par_map(vs, |v| self.eval(v)),
         }
     }
 
@@ -564,6 +632,114 @@ pub(crate) fn eval_training_batched(
             .zip(waits)
             .map(|((s, _), w)| eval_training_with(spec, sys, *s, &PrecomputedWaits(w))),
     )
+}
+
+/// The fused batched analytical sweep: evaluate a whole slice of candidate
+/// systems with **one** flattened (point × strategy) fan-out over the
+/// thread pool, deduping structurally identical region compiles across the
+/// batch first.
+///
+/// Neighboring design points (a BO proposal pool, a random-search round)
+/// frequently rank strategies whose representative regions compile to the
+/// same chunk — same graph, same region dims, same core. Per-point
+/// dispatch ([`eval_training_pooled`]) rediscovers that only through the
+/// LRU chunk cache, point by point; here every job is signatured up front
+/// ([`chunk_signature`]) so each unique compile runs exactly once and its
+/// `Arc` is shared by every job that needs it, and the pool sees one long
+/// work list instead of `|vs|` short ones (no fork/join barrier per
+/// point).
+///
+/// Bit-identical to mapping [`eval_training_pooled`] over the slice: region
+/// compiles are deterministic in their signature, each job's evaluation
+/// ([`eval_training_on_region`]) is pure, jobs regroup in ranked-strategy
+/// order, and per-point selection uses the same last-max tie rule
+/// ([`best_eval`]). Fault-injected systems are excluded from the dedup —
+/// their sampled fault maps are invisible to the signature — and take the
+/// full per-job path ([`eval_training_with`]), reported once through the
+/// shared dispatch-failure helper since the batch loses its compile
+/// sharing there.
+pub(crate) fn eval_training_batch_fused(
+    spec: &LlmSpec,
+    systems: &[SystemConfig],
+    noc: &(dyn NocEstimator + Sync),
+) -> Vec<Option<TrainEval>> {
+    use std::collections::HashMap;
+
+    let ranked: Vec<Vec<ParallelStrategy>> = systems
+        .iter()
+        .map(|sys| ranked_strategies(spec, sys))
+        .collect();
+    // One job per (candidate, ranked strategy), in per-point sweep order.
+    let jobs: Vec<(usize, ParallelStrategy)> = ranked
+        .iter()
+        .enumerate()
+        .flat_map(|(i, ss)| ss.iter().map(move |s| (i, *s)))
+        .collect();
+
+    // Stage 1: compile inputs + structural signatures, fault-free systems
+    // only. A fault-injected system's compile depends on its sampled
+    // fault map, which the signature does not cover — those jobs stay
+    // `None` here and compile per job in stage 3.
+    if systems.iter().any(|sys| sys.faults.is_some()) {
+        crate::util::warn::warn_once(
+            "batch-fused-faults",
+            "batched sweep: fault-injected candidates compile per job \
+             (fault maps are invisible to the dedup signature)",
+        );
+    }
+    let inputs: Vec<Option<(OpGraph, usize, usize, u64)>> =
+        crate::util::pool::par_map(&jobs, |(i, s)| {
+            let sys = &systems[*i];
+            if sys.faults.is_some() {
+                return None;
+            }
+            let (graph, rh, rw) = region_input(spec, sys, *s);
+            let sig = chunk_signature(&graph, rh, rw, &sys.validated.point.wsc.reticle.core);
+            Some((graph, rh, rw, sig))
+        });
+
+    // Stage 2: compile each unique signature exactly once, through the
+    // shared LRU chunk cache (so repeats across *batches* still hit).
+    let mut first_of_sig: HashMap<u64, usize> = HashMap::new();
+    for (j, inp) in inputs.iter().enumerate() {
+        if let Some((_, _, _, sig)) = inp {
+            first_of_sig.entry(*sig).or_insert(j);
+        }
+    }
+    let unique: Vec<usize> = {
+        let mut u: Vec<usize> = first_of_sig.into_values().collect();
+        u.sort_unstable();
+        u
+    };
+    let compiled: Vec<(u64, Arc<CachedChunk>)> = crate::util::pool::par_map(&unique, |&j| {
+        let (graph, rh, rw, sig) = inputs[j].as_ref().expect("unique job is signatured");
+        let core = &systems[jobs[j].0].validated.point.wsc.reticle.core;
+        (*sig, compile_chunk_cached(graph, *rh, *rw, core))
+    });
+    let chunk_of: HashMap<u64, Arc<CachedChunk>> = compiled.into_iter().collect();
+
+    // Stage 3: one fused fan-out over the whole work list.
+    let evals: Vec<Option<TrainEval>> = crate::util::pool::par_map_idx(jobs.len(), |j| {
+        let (i, s) = jobs[j];
+        let sys = &systems[i];
+        match &inputs[j] {
+            Some((_, _, _, sig)) => {
+                eval_training_on_region(spec, sys, s, &chunk_of[sig], noc)
+            }
+            None => eval_training_with(spec, sys, s, noc),
+        }
+    });
+
+    // Stage 4: regroup per candidate in ranked order — the same last-max
+    // tie rule as every per-point sweep.
+    let mut out: Vec<Option<TrainEval>> = Vec::with_capacity(systems.len());
+    let mut cursor = 0;
+    for ss in &ranked {
+        let point_evals = evals[cursor..cursor + ss.len()].iter().cloned();
+        cursor += ss.len();
+        out.push(best_eval(point_evals));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -899,5 +1075,137 @@ mod tests {
             "no high-fidelity (batched GNN) evaluations in the trace"
         );
         assert!(t.points.iter().any(|p| p.fidelity == "analytical"));
+    }
+
+    /// Reference point plus randomized valid design points — the batch
+    /// shape every bit-identity contract below is pinned on.
+    fn random_points(seed: u64, n: usize) -> Vec<Validated> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut vs = vec![validate(&reference_point()).unwrap()];
+        for _ in 0..500 {
+            if vs.len() >= n {
+                break;
+            }
+            if let Some(v) = crate::design_space::sample_valid(&mut rng, 64) {
+                vs.push(v);
+            }
+        }
+        assert!(vs.len() >= 2, "need at least two valid sampled points");
+        vs
+    }
+
+    fn assert_bitwise(a: &Option<Objective>, b: &Option<Objective>, ctx: &str) {
+        match (a, b) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{ctx}");
+                assert_eq!(a.power_w.to_bits(), b.power_w.to_bits(), "{ctx}");
+            }
+            (None, None) => {}
+            (a, b) => panic!("{ctx}: feasibility disagrees ({a:?} vs {b:?})"),
+        }
+    }
+
+    #[test]
+    fn batched_analytical_sweep_is_bit_identical_to_pooled() {
+        // The tentpole contract: one fused eval_batch over randomized
+        // design points (including an exact duplicate, exercising the
+        // cross-candidate compile dedup) must reproduce the per-point
+        // pooled path bit for bit.
+        let spec = benchmarks()[0].clone();
+        let engine = Engine::analytical_training(spec);
+        let mut vs = random_points(42, 5);
+        vs.push(vs[0].clone()); // duplicate: shares every compile via dedup
+        let batched = engine.eval_batch(&vs);
+        assert_eq!(batched.len(), vs.len());
+        for (i, v) in vs.iter().enumerate() {
+            assert_bitwise(&batched[i], &engine.eval(v), &format!("point {i}"));
+        }
+        // The duplicate's result is the first point's, exactly.
+        assert_bitwise(&batched[vs.len() - 1], &batched[0], "duplicate point");
+    }
+
+    #[test]
+    fn eval_batch_matches_eval_across_phases_and_fidelities() {
+        // Every (phase × Sync fidelity) pair: the batched dispatch — fused
+        // sweep for analytical training, pool fan-out otherwise — must be
+        // bit-identical to the per-point path.
+        let spec = benchmarks()[0].clone();
+        let vs = random_points(7, 4);
+        for fidelity in [Fidelity::Analytical, Fidelity::GnnTest] {
+            for (phase, batch) in [(Phase::Training, 0), (Phase::Prefill, 8), (Phase::Decode, 8)] {
+                let es = EvalSpec {
+                    model: spec.clone(),
+                    phase,
+                    batch,
+                    mqa: false,
+                    wafers: Some(2),
+                    fidelity,
+                    faults: None,
+                    hetero: None,
+                };
+                let engine = Engine::new(es).unwrap();
+                let batched = engine.eval_batch(&vs);
+                assert_eq!(batched.len(), vs.len());
+                for (i, v) in vs.iter().enumerate() {
+                    assert_bitwise(
+                        &batched[i],
+                        &engine.eval(v),
+                        &format!("{fidelity:?} {phase:?} point {i}"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn faulted_batch_takes_the_per_job_path_bit_identically() {
+        // Fault-injected candidates are excluded from the compile dedup
+        // (their sampled maps are invisible to the signature) and must
+        // still match the per-point path exactly.
+        use crate::yield_model::faults::FaultSpec;
+        let spec = benchmarks()[0].clone();
+        let engine = Engine::new(
+            EvalSpec::training(spec)
+                .with_wafers(Some(1))
+                .with_faults(Some(FaultSpec {
+                    defect_multiplier: 6.0,
+                    spares: Some(0),
+                    seed: 11,
+                })),
+        )
+        .unwrap();
+        let vs = random_points(13, 3);
+        let batched = engine.eval_batch(&vs);
+        for (i, v) in vs.iter().enumerate() {
+            assert_bitwise(&batched[i], &engine.eval(v), &format!("faulted point {i}"));
+        }
+    }
+
+    #[test]
+    fn incremental_reevaluation_is_exact() {
+        // The delta-cache contract: re-evaluating a design point (or a
+        // neighbor sharing its compiled chunks) serves memoized per-chunk
+        // estimator results that are *exactly* the cold computation.
+        use crate::eval::chunk::{delta_cache_clear, delta_cache_stats};
+        let mut spec = benchmarks()[0].clone();
+        spec.seq_len = 1234; // unique shape: entries cannot pre-exist
+        let engine = Engine::analytical_training(spec);
+        let v = validate(&reference_point()).unwrap();
+        delta_cache_clear();
+        let cold = engine.eval(&v).expect("reference point evaluable");
+        let s0 = delta_cache_stats();
+        let warm = engine.eval(&v).expect("reference point evaluable");
+        let s1 = delta_cache_stats();
+        assert_eq!(cold.throughput.to_bits(), warm.throughput.to_bits());
+        assert_eq!(cold.power_w.to_bits(), warm.power_w.to_bits());
+        if s1.capacity > 0 {
+            assert!(
+                s1.hits > s0.hits,
+                "warm re-evaluation must hit the delta cache ({s0:?} -> {s1:?})"
+            );
+        }
+        // And the batched path rides the same cache to the same bits.
+        let batched = engine.eval_batch(std::slice::from_ref(&v));
+        assert_bitwise(&batched[0], &Some(warm), "warm batched vs per-point");
     }
 }

@@ -10,8 +10,8 @@
 //! The [`engine::Fidelity`] registry (`analytical`, `ca`, `gnn`,
 //! `gnn-test`) is the single source of truth for fidelity names across
 //! `theseus dse --fidelity`, campaign scenario JSON, and `mfmobo`'s
-//! low/high pair; see the engine docs for the Sync-vs-batched dispatch
-//! rule and the checklist for adding a fidelity.
+//! low/high pair; see the engine docs for the three-level dispatch rule
+//! (serial / pooled / batched) and the checklist for adding a fidelity.
 //!
 //! The layers below the engine stay independently usable:
 //! [`eval_training`] is the serial reference sweep any [`NocEstimator`]
@@ -24,7 +24,10 @@ pub mod op_level;
 pub mod power;
 pub mod tile;
 
-pub use chunk::{eval_inference, eval_training, InferEval, SystemConfig, TrainEval};
+pub use chunk::{
+    delta_cache_clear, delta_cache_stats, eval_inference, eval_training, InferEval, SystemConfig,
+    TrainEval,
+};
 pub use engine::{Engine, EvalSpec, Fidelity, SyncEngine};
 pub use op_level::{
     chunk_latency, chunk_latency_with_topo, ChunkTopology, NocModel, OpLevelResult,
@@ -51,6 +54,19 @@ pub trait NocEstimator {
     fn name(&self) -> &'static str {
         "noc-estimator"
     }
+
+    /// Identity for the delta cache ([`chunk::delta_cache_stats`]):
+    /// `Some(k)` promises `link_waits` is a **pure function** of
+    /// `(chunk, core)` — two calls on structurally identical inputs
+    /// return identical waits — with `k` distinguishing this estimator
+    /// (and its configuration) from every other cacheable one. Per-chunk
+    /// results may then be memoized across evaluations of neighboring
+    /// design points. The default is `None` (uncacheable); estimators
+    /// whose output varies per call — e.g. the engine's precomputed-waits
+    /// adapter over batched GNN output — must keep it that way.
+    fn cache_key(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// The low-fidelity analytical estimator (link-sharing equivalent
@@ -64,6 +80,11 @@ impl NocEstimator for Analytical {
 
     fn name(&self) -> &'static str {
         "analytical"
+    }
+
+    fn cache_key(&self) -> Option<u64> {
+        // Stateless and closed-form: one process-wide identity.
+        Some(0xA7A1_0000_0000_0001)
     }
 }
 
@@ -117,13 +138,10 @@ impl NocEstimator for CycleAccurate {
         ) {
             Ok(stats) => Some(stats.link_wait_mean()),
             Err(e) => {
-                static OVERRUN_WARNED: std::sync::Once = std::sync::Once::new();
-                OVERRUN_WARNED.call_once(|| {
-                    eprintln!(
-                        "cycle-accurate estimator: {e}; analytical fallback \
-                         (further overruns fall back silently)"
-                    );
-                });
+                crate::util::warn::warn_once(
+                    "ca-overrun",
+                    &format!("cycle-accurate estimator: {e}; analytical fallback"),
+                );
                 None
             }
         }
@@ -131,6 +149,12 @@ impl NocEstimator for CycleAccurate {
 
     fn name(&self) -> &'static str {
         "cycle-accurate"
+    }
+
+    fn cache_key(&self) -> Option<u64> {
+        // The simulation is deterministic in (chunk, core) at a fixed
+        // budget; a different budget can change the waits, so it keys.
+        Some(0xCA00_0000_0000_0000 ^ self.max_cycles)
     }
 }
 

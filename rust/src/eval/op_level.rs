@@ -13,6 +13,17 @@
 //! ([`crate::compiler::cache`]) stores it alongside the compiled chunk and
 //! repeated evaluations (strategy sweeps, BO probes, NoC-model swaps) skip
 //! the build entirely.
+//!
+//! **Purity contract.** [`chunk_latency_with_topo`] is a pure function of
+//! `(chunk, topo, core, scale, model)`: no hidden state, no randomness,
+//! deterministic float evaluation order. The delta cache
+//! ([`crate::eval::chunk::delta_cache_stats`]) leans on this — it memoizes
+//! whole [`OpLevelResult`]s under `(chunk signature, scale bits, estimator
+//! cache key)` and replays them across evaluations of neighboring design
+//! points, which is sound only because re-running this sweep on the same
+//! inputs reproduces the same bits. Keep any future nondeterminism (e.g. a
+//! parallel traversal with order-dependent float accumulation) off this
+//! path, or gate it behind a `None` estimator cache key.
 
 use std::collections::HashMap;
 

@@ -74,21 +74,59 @@ pub fn random_search(eval: &dyn DesignEval, cfg: &BoConfig) -> Trace {
     trace
 }
 
-/// [`random_search`] with evaluations fanned out over the thread pool.
-/// Each evaluation slot gets an independent forked RNG stream, so the
-/// trace is deterministic in `cfg.seed` regardless of worker interleaving
-/// (though it differs from the serial stream). Requires a `Sync`
-/// evaluator — analytical fidelities qualify; the GNN-backed one stays on
+/// [`random_search`] driven through the engine's batched dispatch
+/// ([`DesignEval::eval_batch`]). Each evaluation slot gets an independent
+/// forked RNG stream, so the trace is deterministic in `cfg.seed`
+/// regardless of worker interleaving (though it differs from the serial
+/// stream). Sampling runs round-based: every live slot advances its own
+/// stream to its next valid candidate — consuming the stream exactly as
+/// the per-slot sample-eval loop would — then one `eval_batch` call
+/// evaluates the whole round (the fused cross-candidate sweep for `Sync`
+/// training backends). Slots whose candidate the evaluator rejects retry
+/// on their remaining tries budget in the next round, so the per-slot
+/// results are bit-identical to the former per-slot pool fan-out.
+/// Requires a `Sync` evaluator — the GNN-backed one stays on
 /// [`random_search`].
 pub fn random_search_par(eval: &(dyn DesignEval + Sync), cfg: &BoConfig) -> Trace {
     let mut rng = Rng::new(cfg.seed);
-    let streams: Vec<Rng> = (0..(cfg.init + cfg.iters))
-        .map(|i| rng.fork(i as u64))
-        .collect();
-    let results = crate::util::pool::par_map(&streams, |stream| {
-        let mut r = stream.clone();
-        sample_evaluated(&mut r, eval, cfg.sample_tries)
-    });
+    let n = cfg.init + cfg.iters;
+    let mut streams: Vec<Rng> = (0..n).map(|i| rng.fork(i as u64)).collect();
+    let mut tries_left: Vec<usize> = vec![cfg.sample_tries; n];
+    let mut results: Vec<Option<(Validated, Objective)>> = vec![None; n];
+    let mut live: Vec<usize> = (0..n).collect();
+    while !live.is_empty() {
+        let mut round: Vec<(usize, Validated)> = Vec::new();
+        for &slot in &live {
+            let stream = &mut streams[slot];
+            let mut cand = None;
+            while tries_left[slot] > 0 {
+                tries_left[slot] -= 1;
+                if let Some(v) = design_space::sample_valid(stream, 64) {
+                    cand = Some(v);
+                    break;
+                }
+            }
+            // Slots that exhaust their budget without a valid candidate
+            // drop out here, exactly as `sample_evaluated` returns None.
+            if let Some(v) = cand {
+                round.push((slot, v));
+            }
+        }
+        if round.is_empty() {
+            break;
+        }
+        let vs: Vec<Validated> = round.iter().map(|(_, v)| v.clone()).collect();
+        let objs = eval.eval_batch(&vs);
+        let mut next_live = Vec::new();
+        for ((slot, v), o) in round.into_iter().zip(objs) {
+            match o {
+                Some(o) => results[slot] = Some((v, o)),
+                None if tries_left[slot] > 0 => next_live.push(slot),
+                None => {}
+            }
+        }
+        live = next_live;
+    }
     let mut trace = Trace::default();
     for (v, o) in results.into_iter().flatten() {
         trace.push(v.point, o, eval.name(), cfg.ref_power);
@@ -200,7 +238,10 @@ pub fn mobo(eval: &dyn DesignEval, cfg: &BoConfig) -> Trace {
             None => design_space::sample_valid(&mut rng, cfg.sample_tries),
         };
         let Some(v) = proposal else { continue };
-        if let Some(o) = eval.eval(&v) {
+        // One-element batch: the engine's batched dispatch (and thereby
+        // the compile/delta caches warmed by earlier iterations — BO
+        // proposals are neighbors) — bit-identical to `eval.eval(&v)`.
+        if let Some(o) = eval.eval_batch(std::slice::from_ref(&v)).pop().flatten() {
             data.add(&v.point, o);
             trace.push(v.point, o, eval.name(), cfg.ref_power);
         }
@@ -270,7 +311,7 @@ pub fn mfmobo(f0: &dyn DesignEval, f1: &dyn DesignEval, cfg: &MfConfig) -> Trace
         } else {
             (f0, &mut d0)
         };
-        if let Some(o) = eval.eval(&v) {
+        if let Some(o) = eval.eval_batch(std::slice::from_ref(&v)).pop().flatten() {
             dst.add(&v.point, o);
             trace.push(v.point, o, eval.name(), cfg.base.ref_power);
         }

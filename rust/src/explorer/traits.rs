@@ -23,6 +23,19 @@ pub use crate::explorer::pareto::Objective;
 /// engine's capability query ([`crate::eval::engine::Engine::to_sync`]).
 pub trait DesignEval {
     fn eval(&self, v: &Validated) -> Option<Objective>;
+
+    /// Evaluate a whole candidate slice, one entry per input in order.
+    ///
+    /// The default maps [`DesignEval::eval`] serially — correct for any
+    /// implementation. Engines with a batched dispatch override it to
+    /// own the fan-out (one fused strategy sweep with cross-candidate
+    /// compile dedup, or a pool fan-out over whole points — see the
+    /// dispatch rule in `eval::engine`); the contract either way is
+    /// bit-identical results to calling `eval` per point.
+    fn eval_batch(&self, vs: &[Validated]) -> Vec<Option<Objective>> {
+        vs.iter().map(|v| self.eval(v)).collect()
+    }
+
     /// Fidelity label recorded in the trace ("analytical", "ca", ...).
     fn name(&self) -> &'static str;
 }

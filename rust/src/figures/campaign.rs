@@ -84,6 +84,7 @@ mod tests {
                     model: "1.7".to_string(),
                     phase: Phase::Decode,
                     batch: 8,
+                    mqa: false,
                     wafers: None,
                     explorer: Explorer::Random,
                     fidelity: Fidelity::Analytical,
@@ -97,6 +98,7 @@ mod tests {
                     model: "no-such-model".to_string(),
                     phase: Phase::Training,
                     batch: 0,
+                    mqa: false,
                     wafers: None,
                     explorer: Explorer::Random,
                     fidelity: Fidelity::Analytical,
@@ -110,6 +112,7 @@ mod tests {
             seed: 5,
             jobs: 1,
             resume_from: None,
+            shard: None,
         };
         let result = run_campaign(&cfg).unwrap();
         let rendered = campaign_summary(&result).render();

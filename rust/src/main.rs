@@ -11,9 +11,11 @@
 //!                     --fault-defect M evaluates candidates on defective
 //!                     wafers (--fault-spares N, --fault-seed S)
 //!   campaign          run a scenario matrix (--suite paper|fault|hetero
-//!                     | --scenarios f.json), resumable with --resume;
-//!                     the fault suite sweeps defect rate × spare rows
-//!                     and digests the degradation curve per row
+//!                     | --scenarios f.json), resumable with --resume,
+//!                     shardable with --shard K/N and fusable with
+//!                     --merge DIR,DIR,...; the fault suite sweeps defect
+//!                     rate × spare rows and digests the degradation
+//!                     curve per row
 //!   baselines         characterize H100/WSE2/Dojo reference designs
 
 use theseus::util::cli::Args;
@@ -189,7 +191,11 @@ fn cmd_dse(args: &Args) {
 /// `--scenarios`), with per-scenario seeds derived deterministically from
 /// `--seed` and artifacts under `--out`. `--resume` skips scenarios whose
 /// `scenarios/<key>.json` already exists under `--out` (long CA-fidelity
-/// campaigns survive kills without redoing finished work).
+/// campaigns survive kills without redoing finished work). `--shard K/N`
+/// runs the deterministic 1-of-N slice of the matrix (scale-out across
+/// machines); `--merge DIR,DIR,...` fuses shard output dirs back into one
+/// campaign under `--out`, re-running only scenarios that are missing,
+/// failed, or recorded under a changed spec.
 fn cmd_campaign(args: &Args) {
     use theseus::coordinator::campaign;
 
@@ -223,6 +229,25 @@ fn cmd_campaign(args: &Args) {
         std::process::exit(1);
     }
     let out = args.str("out", "artifacts/campaign");
+    let shard = args.opt_str("shard").map(|s| {
+        campaign::parse_shard(&s).unwrap_or_else(|e| {
+            eprintln!("campaign: {e}");
+            std::process::exit(1);
+        })
+    });
+    let merge_dirs: Option<Vec<std::path::PathBuf>> = args.opt_str("merge").map(|list| {
+        list.split(',')
+            .map(str::trim)
+            .filter(|d| !d.is_empty())
+            .map(std::path::PathBuf::from)
+            .collect()
+    });
+    if merge_dirs.is_some() && (shard.is_some() || args.bool("resume", false)) {
+        // Merge probes its DIR list; a shard filter or an implicit --out
+        // probe on top of that would silently change which scenarios run.
+        eprintln!("campaign: --merge cannot be combined with --shard or --resume");
+        std::process::exit(1);
+    }
     let cfg = campaign::CampaignConfig {
         scenarios,
         seed: args.u64("seed", 2024),
@@ -230,9 +255,10 @@ fn cmd_campaign(args: &Args) {
         resume_from: args
             .bool("resume", false)
             .then(|| std::path::PathBuf::from(&out)),
+        shard,
     };
     eprintln!(
-        "campaign: {} scenarios (seed {}, jobs {}{})",
+        "campaign: {} scenarios (seed {}, jobs {}{}{}{})",
         cfg.scenarios.len(),
         cfg.seed,
         if cfg.jobs == 0 {
@@ -244,10 +270,22 @@ fn cmd_campaign(args: &Args) {
             ", resuming"
         } else {
             ""
+        },
+        match cfg.shard {
+            Some((k, n)) => format!(", shard {k}/{n}"),
+            None => String::new(),
+        },
+        match &merge_dirs {
+            Some(dirs) => format!(", merging {} dirs", dirs.len()),
+            None => String::new(),
         }
     );
     let t0 = std::time::Instant::now();
-    let result = campaign::run_campaign(&cfg).unwrap_or_else(|e| {
+    let result = match &merge_dirs {
+        Some(dirs) => campaign::merge_campaign(&cfg, dirs),
+        None => campaign::run_campaign(&cfg),
+    }
+    .unwrap_or_else(|e| {
         eprintln!("campaign: {e}");
         std::process::exit(1);
     });

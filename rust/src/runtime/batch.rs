@@ -99,21 +99,18 @@ impl<'a> GnnBatcher<'a> {
                 // or a persistent PJRT failure would silently relabel
                 // analytical numbers as GNN fidelity for the whole run.
                 res => {
-                    static FALLBACK_WARNED: std::sync::Once = std::sync::Once::new();
-                    FALLBACK_WARNED.call_once(|| {
-                        let why = match res {
-                            Err(e) => e,
-                            Ok(y) => format!(
-                                "short output: {} values for {} slots",
-                                y.len(),
-                                packed.batch
-                            ),
-                        };
-                        eprintln!(
-                            "gnn batch predict failed ({why}); analytical fallback \
-                             (further failures fall back silently)"
-                        );
-                    });
+                    let why = match res {
+                        Err(e) => e,
+                        Ok(y) => format!(
+                            "short output: {} values for {} slots",
+                            y.len(),
+                            packed.batch
+                        ),
+                    };
+                    crate::util::warn::warn_once(
+                        "gnn-batch-fallback",
+                        &format!("gnn batch predict failed ({why}); analytical fallback"),
+                    );
                     continue;
                 }
             };

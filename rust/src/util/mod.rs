@@ -11,3 +11,4 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod warn;

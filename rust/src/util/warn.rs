@@ -1,0 +1,43 @@
+//! Process-wide warn-once registry for dispatch-fallback reporting.
+//!
+//! Hot evaluation paths degrade gracefully (batched GNN inference falls
+//! back to the analytical NoC model, the batched analytical sweep falls
+//! back to the per-point pooled path, the CA simulator falls back on
+//! budget overrun), and each degradation must be reported **loudly but
+//! once**: per-call warnings would flood a campaign's stderr, while a
+//! local `static Once` per call site means every new fallback path
+//! reinvents — or forgets — the reporting. [`warn_once`] is the single
+//! shared helper: the first message per `key` prints to stderr (tagged
+//! so later occurrences are known to be silent), subsequent ones are
+//! dropped.
+
+/// Keys that already warned, so each fallback path reports at most once
+/// per process (mirrors `util::cli`'s malformed-env registry).
+fn warned_keys() -> &'static std::sync::Mutex<std::collections::BTreeSet<String>> {
+    static WARNED: std::sync::OnceLock<std::sync::Mutex<std::collections::BTreeSet<String>>> =
+        std::sync::OnceLock::new();
+    WARNED.get_or_init(|| std::sync::Mutex::new(std::collections::BTreeSet::new()))
+}
+
+/// Print `msg` to stderr the first time `key` is seen; drop repeats.
+/// Returns whether this call was the one that printed (so callers can
+/// attach extra diagnostics to the first occurrence only).
+pub fn warn_once(key: &str, msg: &str) -> bool {
+    let first = warned_keys().lock().unwrap().insert(key.to_string());
+    if first {
+        eprintln!("{msg} (further occurrences are silent)");
+    }
+    first
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warns_exactly_once_per_key() {
+        assert!(warn_once("test-key-a", "first"));
+        assert!(!warn_once("test-key-a", "second"));
+        assert!(warn_once("test-key-b", "other key still warns"));
+    }
+}

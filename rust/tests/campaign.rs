@@ -9,8 +9,8 @@
 use std::process::Command;
 
 use theseus::coordinator::campaign::{
-    paper_suite, run_campaign, scenario_result_json, scenarios_from_json, suite_to_json,
-    summary_json, write_artifacts, Budget, CampaignConfig, Fidelity, Scenario,
+    merge_campaign, paper_suite, run_campaign, scenario_result_json, scenarios_from_json,
+    suite_to_json, summary_json, write_artifacts, Budget, CampaignConfig, Fidelity, Scenario,
 };
 use theseus::coordinator::Explorer;
 use theseus::util::cli::env_flag;
@@ -29,6 +29,7 @@ fn scenario(
         model: "GPT-1.7B".to_string(),
         phase,
         batch,
+        mqa: false,
         wafers,
         explorer,
         fidelity,
@@ -46,6 +47,7 @@ fn fresh_cfg(scenarios: Vec<Scenario>, seed: u64, jobs: usize) -> CampaignConfig
         seed,
         jobs,
         resume_from: None,
+        shard: None,
     }
 }
 
@@ -172,6 +174,7 @@ fn killed_then_resumed_campaign_is_byte_identical() {
         seed,
         jobs: 2,
         resume_from: Some(dir_resumed.clone()),
+        shard: None,
     })
     .unwrap();
     assert!(resumed.rows[0].outcome.is_resumed(), "existing artifact must be skipped");
@@ -227,6 +230,7 @@ fn resume_refuses_wrong_seed_artifacts() {
         seed: 2, // different campaign seed ⇒ different derived seed
         jobs: 1,
         resume_from: Some(dir.clone()),
+        shard: None,
     })
     .unwrap();
     let e = resumed.rows[0].outcome.error().expect("must be an error row");
@@ -267,6 +271,7 @@ fn resume_retries_error_rows_and_guards_the_spec() {
         seed: 9,
         jobs: 1,
         resume_from: Some(dir.clone()),
+        shard: None,
     })
     .unwrap();
     assert!(
@@ -288,6 +293,7 @@ fn resume_retries_error_rows_and_guards_the_spec() {
         seed: 9,
         jobs: 1,
         resume_from: Some(dir.clone()),
+        shard: None,
     })
     .unwrap();
     let e = resumed.rows[0].outcome.error().expect("spec mismatch must be loud");
@@ -411,6 +417,7 @@ fn fault_rows_digest_degradation_and_resume_byte_identically() {
         seed: 41,
         jobs: 1,
         resume_from: Some(dir.clone()),
+        shard: None,
     })
     .unwrap();
     assert_eq!(resumed.n_resumed(), 2);
@@ -457,6 +464,199 @@ fn hetero_scenario_is_a_first_class_campaign_row() {
     assert!(!trace.points.is_empty());
     // Hetero rows are not fault rows: no degradation digest.
     assert!(scenario_result_json(&result.rows[0]).get("fault").is_none());
+}
+
+/// Three cheap scenarios so 2-way sharding leaves an uneven split
+/// (shard 1/2 gets indices 0 and 2, shard 2/2 gets index 1).
+fn shardable_scenarios() -> Vec<Scenario> {
+    let b = Budget {
+        iters: 1,
+        init: 1,
+        pool: 8,
+        mc: 8,
+        n1: 0,
+        k: 0,
+    };
+    vec![
+        scenario(Phase::Training, 0, None, Explorer::Random, Fidelity::Analytical, b),
+        scenario(Phase::Decode, 4, None, Explorer::Random, Fidelity::Analytical, b),
+        scenario(Phase::Decode, 8, None, Explorer::Mobo, Fidelity::Analytical, b),
+    ]
+}
+
+#[test]
+fn sharded_then_merged_campaign_is_byte_identical_to_unsharded() {
+    // The scale-out contract (ISSUE 7): run the matrix as two shards on
+    // "two machines", merge the artifact dirs, and get byte-identical
+    // scenario artifacts — and a campaign.json identical modulo the
+    // resumed status markers — to a single unsharded run.
+    let seed = 2024;
+    let scenarios = shardable_scenarios();
+    let root = std::env::temp_dir().join(format!("theseus-campaign-shard-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    let full = run_campaign(&fresh_cfg(scenarios.clone(), seed, 1)).unwrap();
+    assert_eq!(full.n_errors(), 0);
+    let dir_full = root.join("full");
+    write_artifacts(&full, &dir_full).unwrap();
+
+    let mut shard_dirs = Vec::new();
+    for k in 1..=2usize {
+        let cfg = CampaignConfig {
+            shard: Some((k, 2)),
+            ..fresh_cfg(scenarios.clone(), seed, 1)
+        };
+        let part = run_campaign(&cfg).unwrap();
+        assert_eq!(part.rows.len(), if k == 1 { 2 } else { 1 });
+        let dir = root.join(format!("shard{k}"));
+        write_artifacts(&part, &dir).unwrap();
+        // Shard runs declare themselves in their own campaign.json.
+        let sj = std::fs::read_to_string(dir.join("campaign.json")).unwrap();
+        assert!(sj.contains(&format!("\"shard\": \"{k}/2\"")), "{sj}");
+        shard_dirs.push(dir);
+    }
+
+    let merged = merge_campaign(&fresh_cfg(scenarios.clone(), seed, 1), &shard_dirs).unwrap();
+    assert_eq!(merged.rows.len(), scenarios.len());
+    assert_eq!(merged.n_resumed(), scenarios.len(), "all work came from the shards");
+    let dir_merged = root.join("merged");
+    write_artifacts(&merged, &dir_merged).unwrap();
+
+    for s in &scenarios {
+        let name = format!("{}.json", s.key());
+        let a = std::fs::read_to_string(dir_full.join("scenarios").join(&name)).unwrap();
+        let b = std::fs::read_to_string(dir_merged.join("scenarios").join(&name)).unwrap();
+        assert_eq!(a, b, "scenario artifact {name} diverged through shard+merge");
+    }
+    let a = std::fs::read_to_string(dir_full.join("campaign.json")).unwrap();
+    let b = std::fs::read_to_string(dir_merged.join("campaign.json")).unwrap();
+    assert_eq!(a, b.replace("\"status\": \"resumed\"", "\"status\": \"ok\""));
+
+    // Interleaved kill/resume leg: shard 1 died before finishing its
+    // second scenario (no campaign.json, one artifact missing). Merge
+    // re-runs exactly the missing scenario and the bytes still match.
+    let dir_killed = root.join("shard1-killed");
+    std::fs::create_dir_all(dir_killed.join("scenarios")).unwrap();
+    let survivor = format!("{}.json", scenarios[0].key());
+    std::fs::copy(
+        shard_dirs[0].join("scenarios").join(&survivor),
+        dir_killed.join("scenarios").join(&survivor),
+    )
+    .unwrap();
+    let merged2 = merge_campaign(
+        &fresh_cfg(scenarios.clone(), seed, 1),
+        &[dir_killed, shard_dirs[1].clone()],
+    )
+    .unwrap();
+    assert_eq!(merged2.n_errors(), 0);
+    assert_eq!(merged2.n_resumed(), 2, "one scenario must re-run fresh");
+    let dir_merged2 = root.join("merged2");
+    write_artifacts(&merged2, &dir_merged2).unwrap();
+    for s in &scenarios {
+        let name = format!("{}.json", s.key());
+        let a = std::fs::read_to_string(dir_full.join("scenarios").join(&name)).unwrap();
+        let b = std::fs::read_to_string(dir_merged2.join("scenarios").join(&name)).unwrap();
+        assert_eq!(a, b, "scenario artifact {name} diverged through kill+merge");
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn merge_rejects_duplicate_and_overlapping_shards() {
+    let seed = 5;
+    let scenarios = shardable_scenarios();
+    let root = std::env::temp_dir().join(format!(
+        "theseus-campaign-shard-guards-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+
+    let cfg1 = CampaignConfig {
+        shard: Some((1, 2)),
+        ..fresh_cfg(scenarios.clone(), seed, 1)
+    };
+    let part = run_campaign(&cfg1).unwrap();
+    let dir_a = root.join("a");
+    let dir_b = root.join("b");
+    write_artifacts(&part, &dir_a).unwrap();
+    write_artifacts(&part, &dir_b).unwrap();
+
+    // The same shard supplied twice: caught by the campaign.json shard
+    // declaration before any scenario-level probing.
+    let e = merge_campaign(&fresh_cfg(scenarios.clone(), seed, 1), &[dir_a.clone(), dir_b.clone()])
+        .unwrap_err();
+    assert!(e.contains("duplicate shard 1/2"), "{e}");
+
+    // Same overlap with the declaration gone: caught per scenario as
+    // overlapping artifacts.
+    std::fs::remove_file(dir_b.join("campaign.json")).unwrap();
+    let e = merge_campaign(&fresh_cfg(scenarios.clone(), seed, 1), &[dir_a, dir_b]).unwrap_err();
+    assert!(e.contains("overlapping shards"), "{e}");
+    assert!(e.contains(&scenarios[0].key()), "{e}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn merge_reruns_stale_spec_artifacts_fresh() {
+    // Incremental re-run: a shard artifact recorded under an older budget
+    // (invisible in the key, visible in spec_hash + the recorded spec) is
+    // not an error under --merge — it is stale work, re-run fresh.
+    let seed = 17;
+    let mut scenarios = shardable_scenarios();
+    let root = std::env::temp_dir().join(format!(
+        "theseus-campaign-shard-stale-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let dir = root.join("old");
+    let old = run_campaign(&fresh_cfg(scenarios.clone(), seed, 1)).unwrap();
+    write_artifacts(&old, &dir).unwrap();
+
+    scenarios[0].budget.iters += 1; // same key, different spec
+    let merged = merge_campaign(&fresh_cfg(scenarios.clone(), seed, 1), &[dir]).unwrap();
+    assert_eq!(merged.n_errors(), 0);
+    assert_eq!(merged.n_resumed(), scenarios.len() - 1);
+    assert!(
+        !merged.rows[0].outcome.is_resumed(),
+        "stale-spec artifact must re-run fresh under --merge"
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn mqa_scenario_is_a_first_class_campaign_row() {
+    // The mqa axis rides the campaign path end to end: its own key (and
+    // so artifact file + derived seed), clean evaluation, and a JSON
+    // roundtrip through the scenario schema.
+    let b = Budget {
+        iters: 1,
+        init: 1,
+        pool: 8,
+        mc: 8,
+        n1: 0,
+        k: 0,
+    };
+    let mut s = scenario(Phase::Decode, 8, None, Explorer::Random, Fidelity::Analytical, b);
+    s.mqa = true;
+    assert!(s.key().ends_with("-mqa"), "{}", s.key());
+    assert_eq!(Scenario::from_json(&s.to_json()).unwrap(), s);
+    let mut base = s.clone();
+    base.mqa = false;
+    let result = run_campaign(&fresh_cfg(vec![base, s], 23, 1)).unwrap();
+    assert_eq!(result.n_errors(), 0);
+    let docs: Vec<Json> = result.rows.iter().map(scenario_result_json).collect();
+    for doc in &docs {
+        assert!(doc.get("trace").is_some());
+        assert!(doc.get("spec_hash").and_then(Json::as_str).is_some());
+    }
+    assert_ne!(
+        docs[0].get("spec_hash"),
+        docs[1].get("spec_hash"),
+        "mqa must be part of the spec identity"
+    );
 }
 
 #[test]

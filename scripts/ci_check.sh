@@ -8,7 +8,10 @@
 # the perf gate (`scripts/bench_check.sh`), a 3-scenario `theseus campaign`
 # smoke leg (custom JSON through the fidelity registry, incl. a gnn-test
 # decode scenario and a fault-injection row exercising the degradation
-# digest), and `cargo fmt --check` when rustfmt is installed;
+# digest), a 2-shard campaign leg (--shard 1/2 + --shard 2/2 + --merge,
+# gated on the merged campaign.json matching the unsharded run's bytes
+# modulo resumed markers), and `cargo fmt --check` when rustfmt is
+# installed;
 # otherwise those steps are skipped with a loud note — some build
 # containers ship no cargo/rustc (see CHANGES.md), and a silent skip would
 # read as a pass.
@@ -61,6 +64,33 @@ EOF
         cat "$SMOKE_DIR/out/campaign.json" >&2
         exit 1
     fi
+
+    echo "== ci_check: campaign shard+merge smoke (--shard 1/2 + 2/2 + --merge) =="
+    for k in 1 2; do
+        THESEUS_TEST_FAST=1 cargo run -q --release --bin theseus -- campaign \
+            --scenarios "$SMOKE_DIR/scenarios.json" \
+            --out "$SMOKE_DIR/shard$k" --seed 1 --jobs 2 --shard "$k/2"
+    done
+    THESEUS_TEST_FAST=1 cargo run -q --release --bin theseus -- campaign \
+        --scenarios "$SMOKE_DIR/scenarios.json" \
+        --out "$SMOKE_DIR/merged" --seed 1 --jobs 2 \
+        --merge "$SMOKE_DIR/shard1,$SMOKE_DIR/shard2"
+    # The merge contract: modulo the "resumed" status markers, the merged
+    # campaign.json is byte-identical to the unsharded run's.
+    sed 's/"status": "resumed"/"status": "ok"/' "$SMOKE_DIR/merged/campaign.json" \
+        > "$SMOKE_DIR/merged-normalized.json"
+    if ! cmp -s "$SMOKE_DIR/out/campaign.json" "$SMOKE_DIR/merged-normalized.json"; then
+        echo "ci_check: merged campaign.json diverged from the unsharded run:" >&2
+        diff "$SMOKE_DIR/out/campaign.json" "$SMOKE_DIR/merged-normalized.json" >&2 || true
+        exit 1
+    fi
+    # And every scenario artifact matches byte for byte.
+    for f in "$SMOKE_DIR"/out/scenarios/*.json; do
+        if ! cmp -s "$f" "$SMOKE_DIR/merged/scenarios/$(basename "$f")"; then
+            echo "ci_check: merged scenario artifact $(basename "$f") diverged" >&2
+            exit 1
+        fi
+    done
 
     if command -v rustfmt >/dev/null 2>&1; then
         echo "== ci_check: cargo fmt --check =="
