@@ -1,0 +1,332 @@
+"""theseus-lint test suite: tokenizer fidelity, per-rule fixtures, the
+suppression contract, the ratchet baseline, and an end-to-end run over
+the real repository against the committed baseline.
+"""
+
+import json
+import os
+
+from theseus_lint import RULES, check_all, mask_source, scan_file
+from theseus_lint import baseline as bl
+from theseus_lint.cli import run, scan_tree
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+LIB = "rust/src/eval/foo.rs"  # a non-exempt library path for fixtures
+
+
+def violations(text, path=LIB):
+    f = scan_file(path, text, set(RULES))
+    return check_all({path: f})
+
+
+def rules_hit(text, path=LIB):
+    return sorted({v.rule for v in violations(text, path)})
+
+
+# ---------------------------------------------------------------- tokenizer
+
+
+def test_mask_blanks_strings_and_comments_preserving_shape():
+    src = 'let s = "call .unwrap() now"; // also .unwrap()\nlet x = 1;\n'
+    masked = mask_source(src)
+    assert len(masked) == len(src)
+    assert masked.count("\n") == src.count("\n")
+    assert ".unwrap()" not in masked
+    assert "let x = 1;" in masked
+
+
+def test_string_and_comment_tokens_do_not_trip_rules():
+    assert violations('fn f() { let s = "x.unwrap()"; }\n') == []
+    assert violations("fn f() {} // panic! is documented here\n") == []
+    assert violations("/* block comment: thread_rng() /* nested */ still */ fn f() {}\n") == []
+
+
+def test_raw_strings_masked_at_any_hash_depth():
+    assert violations('fn f() { let s = r"a.unwrap()"; }\n') == []
+    assert violations('fn f() { let s = r#"a.unwrap() "quoted" more"#; }\n') == []
+    assert violations('fn f() { let b = br#"bytes.unwrap()"#; }\n') == []
+
+
+def test_char_literals_masked_lifetimes_untouched():
+    # '"' must not open a string; 'a> must parse as a lifetime.
+    src = "fn g<'a>(x: &'a str) -> char { let q = '\"'; let s = \"x.unwrap()\"; q }\n"
+    assert violations(src) == []
+
+
+def test_real_tokens_still_found_next_to_masked_ones():
+    src = 'fn f() { let s = "safe.unwrap()"; s.parse().unwrap(); }\n'
+    vs = violations(src)
+    assert [v.rule for v in vs] == ["panic"]
+    assert vs[0].line == 1
+
+
+# -------------------------------------------------------------- test regions
+
+
+def test_cfg_test_mod_is_exempt_but_code_outside_is_not():
+    src = (
+        "pub fn lib() { x.unwrap(); }\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    #[test]\n"
+        "    fn t() { y.unwrap(); z.expect(\"ok\"); panic!(\"boom\"); }\n"
+        "}\n"
+    )
+    vs = violations(src)
+    assert len(vs) == 1 and vs[0].line == 1
+
+
+def test_test_attr_fn_is_exempt_even_outside_mod_tests():
+    src = "#[test]\nfn t() { x.unwrap(); }\npub fn lib() { y.unwrap(); }\n"
+    vs = violations(src)
+    assert len(vs) == 1 and vs[0].line == 3
+
+
+def test_braces_inside_test_strings_do_not_desync_the_region():
+    src = (
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        '    fn t() { let s = "}}}"; x.unwrap(); }\n'
+        "}\n"
+        "pub fn lib() { y.unwrap(); }\n"
+    )
+    vs = violations(src)
+    assert len(vs) == 1 and vs[0].line == 5
+
+
+def test_cfg_test_out_of_line_mod_marks_nothing():
+    # `#[cfg(test)] mod tests;` — the file itself is exempt by path.
+    src = "#[cfg(test)]\nmod tests;\npub fn lib() { x.unwrap(); }\n"
+    vs = violations(src)
+    assert len(vs) == 1 and vs[0].line == 3
+
+
+# -------------------------------------------------------------------- rules
+
+
+def test_panic_rule_catches_the_whole_family():
+    src = (
+        "pub fn f() {\n"
+        "    a.unwrap();\n"
+        '    b.expect("m");\n'
+        '    panic!("x");\n'
+        '    unreachable!("y");\n'
+        "    todo!();\n"
+        "    unimplemented!();\n"
+        "}\n"
+    )
+    vs = violations(src)
+    assert [v.line for v in vs] == [2, 3, 4, 5, 6, 7]
+    assert {v.rule for v in vs} == {"panic"}
+
+
+def test_panic_rule_exempts_main_and_frozen_oracle():
+    src = "pub fn f() { x.unwrap(); }\n"
+    assert violations(src, "rust/src/main.rs") == []
+    assert violations(src, "rust/src/noc_sim/reference.rs") == []
+
+
+def test_determinism_rule_flags_clocks_and_nondeterministic_rng():
+    assert rules_hit("fn f() { let t = Instant::now(); }\n") == ["determinism"]
+    assert rules_hit("fn f() { let t = SystemTime::now(); }\n") == ["determinism"]
+    assert rules_hit("fn f() { let mut r = thread_rng(); }\n") == ["determinism"]
+    # Seeded in-tree Rng stays legal everywhere.
+    assert violations("fn f() { let mut r = Rng::new(seed); }\n") == []
+
+
+def test_hashmap_banned_only_in_artifact_modules():
+    src = "use std::collections::HashMap;\npub fn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n"
+    assert violations(src, "rust/src/eval/foo.rs") == []
+    vs = violations(src, "rust/src/coordinator/foo.rs")
+    assert vs and all(v.rule == "determinism" for v in vs)
+    assert violations(src, "rust/src/util/json.rs")
+    assert violations(src, "rust/src/figures/fig99.rs")
+
+
+def test_loud_failure_flags_env_var_and_eprintln_outside_owners():
+    src = 'fn f() { let v = env::var("X"); eprintln!("fallback"); }\n'
+    vs = violations(src)
+    assert [v.rule for v in vs] == ["loud-failure", "loud-failure"]
+    assert violations(src, "rust/src/util/cli.rs") == []
+
+
+# ------------------------------------------------------------- suppressions
+
+
+def test_same_line_suppression_with_reason_is_honored():
+    src = "pub fn f() { x.unwrap() } // lint: allow(panic) guarded by is_some above\n"
+    assert violations(src) == []
+
+
+def test_standalone_suppression_covers_next_line_only():
+    src = (
+        "// lint: allow(panic) slot written by exactly one worker\n"
+        "pub fn f() { x.unwrap(); }\n"
+        "pub fn g() { y.unwrap(); }\n"
+    )
+    vs = violations(src)
+    assert len(vs) == 1 and vs[0].line == 3
+
+
+def test_suppression_is_rule_scoped():
+    src = "// lint: allow(panic) a panic proof, not a clock proof\nfn f() { let t = Instant::now(); }\n"
+    assert rules_hit(src) == ["determinism"]
+
+
+def test_suppression_without_reason_is_a_fatal_error():
+    src = "pub fn f() { x.unwrap() } // lint: allow(panic)\n"
+    vs = violations(src)
+    assert any(v.rule == "suppression" and "no reason" in v.message for v in vs)
+
+
+def test_suppression_with_unknown_rule_is_a_fatal_error():
+    src = "pub fn f() {} // lint: allow(speed) because\n"
+    vs = violations(src)
+    assert any(v.rule == "suppression" and "unknown rule" in v.message for v in vs)
+
+
+# ------------------------------------------------------------ stub coverage
+
+
+PJRT_FIXTURE = (
+    "pub struct GnnModel;\n"
+    "impl GnnModel {\n"
+    "    pub fn load() {}\n"
+    "    pub fn predict_padded_batch() {}\n"
+    "}\n"
+)
+STUB_MISSING_BATCH = "pub struct GnnModel;\nimpl GnnModel {\n    pub fn load() {}\n}\n"
+
+
+def scan_pair(stub_text):
+    files = {
+        "rust/src/runtime/pjrt.rs": scan_file("rust/src/runtime/pjrt.rs", PJRT_FIXTURE, set(RULES)),
+        "rust/src/runtime/stub.rs": scan_file("rust/src/runtime/stub.rs", stub_text, set(RULES)),
+    }
+    return [v for v in check_all(files) if v.rule == "stub-coverage"]
+
+
+def test_stub_coverage_flags_missing_counterpart():
+    vs = scan_pair(STUB_MISSING_BATCH)
+    assert len(vs) == 1 and "predict_padded_batch" in vs[0].message
+
+
+def test_stub_coverage_clean_when_api_parallel():
+    assert scan_pair(PJRT_FIXTURE) == []
+
+
+def test_positive_cfg_gate_requires_not_sibling():
+    lone = "#[cfg(theseus_pjrt)]\npub fn only_online() {}\n"
+    vs = violations(lone)
+    assert any(v.rule == "stub-coverage" for v in vs)
+    paired = lone + "#[cfg(not(theseus_pjrt))]\npub fn only_offline() {}\n"
+    assert violations(paired) == []
+
+
+# ----------------------------------------------------------------- baseline
+
+
+def test_baseline_compare_flags_growth_and_unlocked_shrink():
+    vs = violations("pub fn f() { x.unwrap(); y.unwrap(); }\n")
+    current = bl.counts_of(vs)
+    assert bl.compare(current, current, vs) == []
+    above = bl.compare(current, {"panic": {LIB: 1}}, vs)
+    assert any("new debt" in p for p in above)
+    below = bl.compare(current, {"panic": {LIB: 3}}, vs)
+    assert any("not locked in" in p for p in below)
+
+
+def test_check_no_growth_reports_grown_entries_only():
+    assert bl.check_no_growth({"panic": {LIB: 2}}, {"panic": {LIB: 2}}) == []
+    assert bl.check_no_growth({"panic": {LIB: 3}}, {"panic": {LIB: 2}}) != []
+    assert bl.check_no_growth({"panic": {}}, {"panic": {LIB: 2}}) == []
+
+
+# -------------------------------------------------------------- end to end
+
+
+def write_tree(root, files):
+    for rel, text in files.items():
+        p = root / "rust" / "src" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+
+
+def test_e2e_repo_scan_matches_committed_baseline():
+    """The gate ci_check.sh runs: the real tree against the real baseline."""
+    assert os.path.isfile(os.path.join(REPO, "scripts", "lint_baseline.json"))
+    assert run(["--root", REPO]) == 0
+
+
+def test_e2e_committed_baseline_is_strictly_below_initial_scan():
+    with open(os.path.join(REPO, "scripts", "lint_baseline.json")) as fh:
+        doc = json.load(fh)
+    initial = doc["_meta"]["initial_scan"]
+    accepted = bl.totals(doc["rules"])
+    assert sum(accepted.values()) < sum(initial.values())
+    assert accepted["panic"] < initial["panic"]
+
+
+def test_e2e_injected_violation_fails(tmp_path):
+    write_tree(tmp_path, {"eval/ok.rs": "pub fn f() -> u32 { 1 }\n"})
+    base = tmp_path / "baseline.json"
+    argv = ["--root", str(tmp_path), "--baseline", str(base)]
+    assert run(argv + ["--update-baseline"]) == 0
+    assert run(argv) == 0
+    write_tree(tmp_path, {"eval/bad.rs": "pub fn f() { x.unwrap(); }\n"})
+    assert run(argv) == 1
+
+
+def test_e2e_no_baseline_requires_clean_tree(tmp_path):
+    write_tree(tmp_path, {"eval/bad.rs": "pub fn f() { x.unwrap(); }\n"})
+    assert run(["--root", str(tmp_path), "--baseline", str(tmp_path / "nope.json")]) == 1
+    write_tree(tmp_path, {"eval/bad.rs": "pub fn f() -> u32 { 1 }\n"})
+    assert run(["--root", str(tmp_path), "--baseline", str(tmp_path / "nope.json")]) == 0
+
+
+def test_e2e_stale_baseline_fails_until_update(tmp_path):
+    write_tree(tmp_path, {"eval/f.rs": "pub fn f() { x.unwrap(); }\n"})
+    base = tmp_path / "baseline.json"
+    argv = ["--root", str(tmp_path), "--baseline", str(base)]
+    assert run(argv + ["--update-baseline"]) == 0
+    # Fix the violation: the stale (now too-large) baseline must fail loudly.
+    write_tree(tmp_path, {"eval/f.rs": "pub fn f() -> u32 { 1 }\n"})
+    assert run(argv) == 1
+    assert run(argv + ["--update-baseline"]) == 0
+    assert run(argv) == 0
+
+
+def test_e2e_update_refuses_growth_and_preserves_initial_scan(tmp_path):
+    write_tree(tmp_path, {"eval/f.rs": "pub fn f() { x.unwrap(); }\n"})
+    base = tmp_path / "baseline.json"
+    argv = ["--root", str(tmp_path), "--baseline", str(base)]
+    assert run(argv + ["--update-baseline"]) == 0
+    initial = json.loads(base.read_text())["_meta"]["initial_scan"]
+    assert initial["panic"] == 1
+    write_tree(tmp_path, {"eval/f.rs": "pub fn f() { x.unwrap(); y.unwrap(); }\n"})
+    assert run(argv + ["--update-baseline"]) == 1  # growth refused
+    assert run(argv + ["--update-baseline", "--allow-baseline-growth"]) == 0
+    doc = json.loads(base.read_text())
+    assert doc["rules"]["panic"]["rust/src/eval/f.rs"] == 2
+    assert doc["_meta"]["initial_scan"] == initial  # first scan survives resets
+
+
+def test_e2e_malformed_suppression_fails_even_with_baseline_headroom(tmp_path):
+    write_tree(
+        tmp_path,
+        {"eval/f.rs": "pub fn f() { x.unwrap() } // lint: allow(panic)\n"},
+    )
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps({"rules": {"panic": {"rust/src/eval/f.rs": 5}}}))
+    assert run(["--root", str(tmp_path), "--baseline", str(base)]) == 1
+
+
+def test_scan_tree_sees_every_rs_file_under_rust_src(tmp_path):
+    write_tree(
+        tmp_path,
+        {"a.rs": "pub fn a() {}\n", "deep/nested/b.rs": "pub fn b() {}\n"},
+    )
+    (tmp_path / "rust" / "src" / "notes.txt").write_text("x.unwrap()")
+    files = scan_tree(str(tmp_path))
+    assert sorted(files) == ["rust/src/a.rs", "rust/src/deep/nested/b.rs"]

@@ -1,0 +1,24 @@
+"""theseus-lint: toolchain-free static analysis for the Theseus Rust tree.
+
+The only correctness gate that executes in every build container (some
+ship no cargo/rustc — see CHANGES.md): a Rust-aware scanner enforcing the
+panic-freedom, determinism, loud-failure and stub-coverage contracts as
+named rules behind a shrink-only baseline ratchet. Entry point:
+``scripts/lint_theseus.py`` (or ``python -m theseus_lint.cli`` logic via
+:func:`theseus_lint.cli.run`).
+"""
+
+from .cli import run, scan_tree
+from .rules import RULES, Violation, check_all
+from .tokenizer import ScannedFile, mask_source, scan_file
+
+__all__ = [
+    "RULES",
+    "ScannedFile",
+    "Violation",
+    "check_all",
+    "mask_source",
+    "run",
+    "scan_file",
+    "scan_tree",
+]

@@ -1,0 +1,94 @@
+"""Ratchet baseline: accepted per-rule, per-file violation counts.
+
+The repo predates the linter (238 `unwrap`/`expect` sites at the initial
+scan), so the pass ships with a checked-in baseline
+(`scripts/lint_baseline.json`) of accepted counts. The contract:
+
+* A count **above** baseline fails immediately, listing the violations —
+  new debt never lands.
+* A count **below** baseline also fails, telling you to run
+  ``--update-baseline`` — improvements must be locked in, or the slack
+  would let new debt hide under old headroom.
+* ``--update-baseline`` regenerates the file from the current scan. It
+  refuses to *grow* any (rule, file) entry (fix the violation instead);
+  ``--allow-baseline-growth`` overrides for genuine resets.
+* ``_meta.initial_scan`` preserves the per-rule totals of the very first
+  scan, so the ratchet's progress is visible in the file itself.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+
+from .rules import RULES, Violation
+
+
+def counts_of(violations: list[Violation]) -> dict[str, dict[str, int]]:
+    per: dict[str, Counter] = {rule: Counter() for rule in RULES}
+    for v in violations:
+        if v.rule in per:
+            per[v.rule][v.path] += 1
+    return {
+        rule: {path: n for path, n in sorted(files.items())}
+        for rule, files in per.items()
+    }
+
+
+def load(path: str) -> dict:
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    if "rules" not in doc or not isinstance(doc["rules"], dict):
+        raise ValueError(f"{path}: malformed baseline — no 'rules' object")
+    return doc
+
+
+def render(counts: dict[str, dict[str, int]], meta: dict) -> str:
+    doc = {"_meta": meta, "rules": counts}
+    return json.dumps(doc, indent=2, sort_keys=True) + "\n"
+
+
+def totals(counts: dict[str, dict[str, int]]) -> dict[str, int]:
+    return {rule: sum(files.values()) for rule, files in counts.items()}
+
+
+def compare(
+    current: dict[str, dict[str, int]],
+    baseline: dict[str, dict[str, int]],
+    violations: list[Violation],
+) -> list[str]:
+    """Human-readable failures; empty means the scan matches the baseline."""
+    problems: list[str] = []
+    for rule in RULES:
+        cur = current.get(rule, {})
+        base = baseline.get(rule, {})
+        for path in sorted(set(cur) | set(base)):
+            c, b = cur.get(path, 0), base.get(path, 0)
+            if c > b:
+                listing = "\n".join(
+                    "    " + v.render()
+                    for v in violations
+                    if v.rule == rule and v.path == path
+                )
+                problems.append(
+                    f"[{rule}] {path}: {c} violation(s), baseline accepts {b} — new debt:\n{listing}"
+                )
+            elif c < b:
+                problems.append(
+                    f"[{rule}] {path}: {c} violation(s), baseline still records {b} — "
+                    "improvement not locked in; run scripts/lint_theseus.py --update-baseline"
+                )
+    return problems
+
+
+def check_no_growth(
+    new: dict[str, dict[str, int]], old: dict[str, dict[str, int]]
+) -> list[str]:
+    grew: list[str] = []
+    for rule in RULES:
+        for path, n in new.get(rule, {}).items():
+            if n > old.get(rule, {}).get(path, 0):
+                grew.append(
+                    f"[{rule}] {path}: {old.get(rule, {}).get(path, 0)} -> {n}"
+                )
+    return grew

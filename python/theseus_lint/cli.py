@@ -1,0 +1,198 @@
+"""theseus-lint driver: scan rust/src, apply rules, enforce the baseline.
+
+See ``scripts/lint_theseus.py --help`` for the user-facing contract; this
+module is the implementation so `python/tests/test_lint.py` can drive it
+in-process against fixture trees.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import baseline as bl
+from .rules import RULES, check_all
+from .tokenizer import scan_file
+
+HELP_EPILOG = """\
+rules:
+  panic          unwrap()/expect()/panic!/unreachable!/todo!/unimplemented!
+                 banned in non-test library code (propagate Result instead).
+                 Exempt: main.rs (CLI exit paths), noc_sim/reference.rs
+                 (frozen oracle), noc_sim/tests.rs, test code. assert! stays
+                 allowed — contract assertions are loud by design.
+  determinism    Instant::now/SystemTime/UNIX_EPOCH and nondeterministic RNG
+                 sources (thread_rng/OsRng/from_entropy/getrandom/RandomState)
+                 banned in library code; HashMap/HashSet banned in the
+                 artifact-writing modules (util/json.rs, coordinator/,
+                 figures/) — iteration order must never reach serialized
+                 output. Exempt: bench.rs, main.rs (stderr-only timing).
+  loud-failure   raw env::var banned outside util/cli.rs (typed env_* helpers
+                 warn once on malformed values); bare eprintln! banned in
+                 library code outside util/warn.rs (use warn_once).
+  stub-coverage  every pub fn / pub type of runtime/pjrt.rs needs a
+                 runtime/stub.rs counterpart; a #[cfg(theseus_pjrt)] gate
+                 needs a #[cfg(not(theseus_pjrt))] sibling in the same file.
+
+suppressions:
+  // lint: allow(<rule>) <reason>
+                 on the offending line, or alone on the line above. The
+                 reason is mandatory (an unexplained allow is itself an
+                 error); use it to record the infallibility proof or why
+                 the site cannot reach an artifact.
+
+baseline ratchet (scripts/lint_baseline.json):
+  The repo predates the linter, so per-(rule, file) counts of accepted
+  legacy violations are checked in. Counts above baseline fail with the
+  new violations listed; counts below baseline fail too, telling you to
+  lock the improvement in. After burning down violations (or adding a
+  justified suppression), run:
+
+      scripts/lint_theseus.py --update-baseline
+
+  and commit the shrunken file. --update-baseline refuses to grow any
+  entry (fix the code instead); --allow-baseline-growth overrides for
+  genuine resets. The baseline's _meta.initial_scan records the very
+  first scan's totals so progress stays visible.
+"""
+
+
+def scan_tree(root: str) -> dict:
+    """Scan every .rs file under <root>/rust/src."""
+    src = os.path.join(root, "rust", "src")
+    files = {}
+    for dirpath, _, names in sorted(os.walk(src)):
+        for name in sorted(names):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as fh:
+                files[rel] = scan_file(rel, fh.read(), set(RULES))
+    return files
+
+
+def run(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="lint_theseus.py",
+        description=(
+            "theseus-lint: toolchain-free static analysis enforcing the "
+            "determinism and loud-failure contracts over rust/src."
+        ),
+        epilog=HELP_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    parser.add_argument(
+        "--root",
+        default=None,
+        help="repo root (default: the directory containing scripts/)",
+    )
+    parser.add_argument(
+        "--baseline",
+        default=None,
+        help="baseline file (default: <root>/scripts/lint_baseline.json)",
+    )
+    parser.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="regenerate the baseline from the current scan (shrink-only)",
+    )
+    parser.add_argument(
+        "--allow-baseline-growth",
+        action="store_true",
+        help="let --update-baseline grow entries (genuine resets only)",
+    )
+    parser.add_argument(
+        "--list",
+        action="store_true",
+        help="print every current violation, including baselined ones",
+    )
+    args = parser.parse_args(argv)
+
+    # Default root: scripts/lint_theseus.py lives one level below the repo
+    # root; in-process callers (tests) pass --root explicitly.
+    root = args.root or os.path.dirname(os.path.dirname(os.path.abspath(sys.argv[0])))
+    src = os.path.join(root, "rust", "src")
+    if not os.path.isdir(src):
+        print(f"lint: no rust/src under {root} — wrong --root?", file=sys.stderr)
+        return 2
+    baseline_path = args.baseline or os.path.join(root, "scripts", "lint_baseline.json")
+
+    files = scan_tree(root)
+    violations = check_all(files)
+
+    # Suppression-syntax errors are config bugs: never baselineable.
+    config_errors = [v for v in violations if v.rule == "suppression"]
+    if config_errors:
+        for v in config_errors:
+            print(v.render(), file=sys.stderr)
+        print(f"lint: {len(config_errors)} malformed suppression(s)", file=sys.stderr)
+        return 1
+    current = bl.counts_of(violations)
+
+    if args.list:
+        for v in violations:
+            print(v.render())
+        for rule, total in sorted(bl.totals(current).items()):
+            print(f"lint: [{rule}] {total} violation(s) across rust/src")
+
+    if args.update_baseline:
+        meta = {
+            "generated_by": "scripts/lint_theseus.py --update-baseline",
+            "initial_scan": bl.totals(current),
+        }
+        if os.path.exists(baseline_path):
+            old = bl.load(baseline_path)
+            meta["initial_scan"] = old.get("_meta", {}).get(
+                "initial_scan", bl.totals(current)
+            )
+            grew = bl.check_no_growth(current, old["rules"])
+            if grew and not args.allow_baseline_growth:
+                for g in grew:
+                    print(f"lint: baseline would grow: {g}", file=sys.stderr)
+                print(
+                    "lint: the baseline may only shrink — fix the new violations, "
+                    "or pass --allow-baseline-growth for a genuine reset",
+                    file=sys.stderr,
+                )
+                return 1
+        with open(baseline_path, "w", encoding="utf-8") as fh:
+            fh.write(bl.render(current, meta))
+        print(f"lint: baseline written to {baseline_path}")
+        for rule, total in sorted(bl.totals(current).items()):
+            print(f"lint:   [{rule}] {total} accepted violation(s)")
+        return 0
+
+    if not os.path.exists(baseline_path):
+        # No baseline at all: only a fully clean tree passes. Anything else
+        # needs an explicit decision (--update-baseline), never a silent one.
+        if violations:
+            for v in violations:
+                print(v.render(), file=sys.stderr)
+            print(
+                f"lint: {len(violations)} violation(s) and no baseline at "
+                f"{baseline_path} — fix them or record them with --update-baseline",
+                file=sys.stderr,
+            )
+            return 1
+        print("lint: clean (no baseline needed)")
+        return 0
+
+    try:
+        doc = bl.load(baseline_path)
+    except (ValueError, OSError, KeyError) as e:
+        print(f"lint: cannot read baseline: {e}", file=sys.stderr)
+        return 2
+    problems = bl.compare(current, doc["rules"], violations)
+    if problems:
+        for p in problems:
+            print(p, file=sys.stderr)
+        print(f"lint: FAILED ({len(problems)} baseline mismatch(es))", file=sys.stderr)
+        return 1
+    shown = bl.totals(current)
+    print(
+        "lint: OK — "
+        + ", ".join(f"{rule}: {shown[rule]} baselined" for rule in RULES)
+    )
+    return 0

@@ -1,0 +1,225 @@
+"""The four theseus-lint rules and their project-level exemptions.
+
+Every rule is a pure function over a [`ScannedFile`] returning
+[`Violation`]s. Scope and rationale (see the module docs of the Rust
+modules they police, and ISSUE 8):
+
+``panic``
+    `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` /
+    `unimplemented!` are banned in non-test library code: library paths
+    must propagate `Result` (the `SimError` pattern) so a campaign row
+    records an error instead of sinking the process. `assert!` family
+    stays allowed — contract assertions are loud by design. Exempt:
+    `main.rs` (the CLI's documented exit-1 paths), the frozen
+    `noc_sim/reference.rs` oracle (bit-identical contract — never edited),
+    and test code.
+
+``determinism``
+    Wall-clock (`Instant::now`, `SystemTime`, `UNIX_EPOCH`) and
+    nondeterministic RNG sources (`thread_rng`, `OsRng`, `from_entropy`,
+    `getrandom`, `rand::`, `RandomState`) are banned in library code —
+    campaign artifacts must be byte-identical across same-seed runs, and
+    every RNG stream must derive from an explicit `u64` seed through
+    `util/rng`. Additionally, `HashMap`/`HashSet` are banned in the
+    artifact-writing modules (`util/json.rs`, `coordinator/`, `figures/`):
+    their iteration order is nondeterministic across processes, and those
+    modules feed serialized output — use `BTreeMap`/sorted `Vec`s. Exempt:
+    `bench.rs` and `main.rs` (wall-clock progress reporting on stderr
+    never reaches an artifact).
+
+``loud-failure``
+    Raw `env::var` reads are banned outside `util/cli.rs`: the typed
+    helpers there (`env_usize`/`env_u64`/`env_f64`/`env_flag`) warn once
+    on set-but-malformed values instead of silently defaulting. Bare
+    `eprintln!` is banned in library code outside `util/warn.rs` /
+    `util/cli.rs` (the warn infrastructure itself) and the CLI surfaces
+    (`main.rs`, `bench.rs`): fallback reporting must ride
+    `util::warn::warn_once` so campaigns aren't flooded and the
+    first-occurrence contract holds.
+
+``stub-coverage``
+    The PJRT runtime (`runtime/pjrt.rs`, behind `--cfg theseus_pjrt`) and
+    its offline stand-in (`runtime/stub.rs`) must stay API-parallel: every
+    `pub fn` / `pub struct` of the real implementation needs a stub-side
+    counterpart, or the offline build rots the moment a caller uses the
+    new API under the cfg. Also, a positive `#[cfg(theseus_pjrt)]` gate in
+    any file requires a `#[cfg(not(theseus_pjrt))]` sibling in the same
+    file (a positive-only gate compiles to nothing offline — silently).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from .tokenizer import ScannedFile
+
+RULES = ("panic", "determinism", "loud-failure", "stub-coverage")
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# Per-rule path exemptions (path fragments relative to the repo root,
+# matched as suffixes of the scanned path).
+EXEMPT = {
+    "panic": (
+        "rust/src/main.rs",            # CLI: documented eprintln+exit(1) paths
+        "rust/src/noc_sim/reference.rs",  # frozen per-cycle oracle, never edited
+        "rust/src/noc_sim/tests.rs",   # #[cfg(test)] mod in its own file
+    ),
+    "determinism": (
+        "rust/src/bench.rs",           # bench harness: wall-clock timing is the point
+        "rust/src/main.rs",            # stderr elapsed reporting, never in artifacts
+        "rust/src/noc_sim/tests.rs",
+    ),
+    "loud-failure": (
+        "rust/src/util/cli.rs",        # owns env::var + the malformed-env warning
+        "rust/src/util/warn.rs",       # owns the warn-once eprintln
+        "rust/src/main.rs",            # CLI: user-facing stderr
+        "rust/src/bench.rs",
+        "rust/src/noc_sim/tests.rs",
+    ),
+    "stub-coverage": (),
+}
+
+# Modules whose output is serialized into campaign/bench artifacts: hash
+# iteration order must not exist there at all.
+ARTIFACT_MODULES = ("rust/src/util/json.rs", "rust/src/coordinator/", "rust/src/figures/")
+
+_PANIC_TOKENS = [
+    (re.compile(r"\.unwrap\(\)"), "`.unwrap()` in a library path — propagate Result (SimError pattern)"),
+    (re.compile(r"\.expect\s*\("), "`.expect(...)` in a library path — propagate Result (SimError pattern)"),
+    (re.compile(r"\bpanic!\s*\("), "`panic!` in a library path — return Err instead"),
+    (re.compile(r"\bunreachable!\s*\("), "`unreachable!` in a library path — restructure or suppress with a proof"),
+    (re.compile(r"\btodo!\s*\("), "`todo!` must not ship"),
+    (re.compile(r"\bunimplemented!\s*\("), "`unimplemented!` must not ship"),
+]
+
+_DETERMINISM_TOKENS = [
+    (re.compile(r"\bInstant::now\b"), "wall-clock (`Instant::now`) in library code — artifacts/seeds must not see time"),
+    (re.compile(r"\bSystemTime\b"), "wall-clock (`SystemTime`) in library code"),
+    (re.compile(r"\bUNIX_EPOCH\b"), "wall-clock (`UNIX_EPOCH`) in library code"),
+    (re.compile(r"\bthread_rng\b"), "nondeterministic RNG (`thread_rng`) — seed `util::rng::Rng` explicitly"),
+    (re.compile(r"\bOsRng\b"), "nondeterministic RNG (`OsRng`)"),
+    (re.compile(r"\bfrom_entropy\b"), "nondeterministic RNG seeding (`from_entropy`)"),
+    (re.compile(r"\bgetrandom\b"), "nondeterministic RNG source (`getrandom`)"),
+    (re.compile(r"\bRandomState\b"), "nondeterministic hasher (`RandomState`)"),
+]
+
+_HASH_TOKENS = [
+    (re.compile(r"\bHashMap\b"), "`HashMap` in an artifact-writing module — iteration order leaks; use BTreeMap"),
+    (re.compile(r"\bHashSet\b"), "`HashSet` in an artifact-writing module — iteration order leaks; use BTreeSet"),
+]
+
+_LOUD_TOKENS = [
+    (re.compile(r"\benv::var\b"), "raw `env::var` outside util/cli — use the typed env_* helpers (loud on malformed values)"),
+    (re.compile(r"\beprintln!\s*\("), "bare `eprintln!` in library code — report through util::warn::warn_once"),
+]
+
+_PUB_FN_RE = re.compile(r"^\s*pub(?:\s*\([^)]*\))?\s+fn\s+(\w+)", re.MULTILINE)
+_PUB_TYPE_RE = re.compile(r"^\s*pub(?:\s*\([^)]*\))?\s+(?:struct|enum)\s+(\w+)", re.MULTILINE)
+_CFG_PJRT_POS_RE = re.compile(r"#\s*\[\s*cfg\s*\(\s*theseus_pjrt\s*\)\s*\]")
+_CFG_PJRT_NEG_RE = re.compile(r"#\s*\[\s*cfg\s*\(\s*not\s*\(\s*theseus_pjrt\s*\)\s*\)\s*\]")
+
+
+def _exempt(rule: str, path: str) -> bool:
+    return any(path.endswith(frag) or frag in path for frag in EXEMPT[rule])
+
+
+def _scan_tokens(f: ScannedFile, rule: str, tokens) -> list[Violation]:
+    out: list[Violation] = []
+    if _exempt(rule, f.path):
+        return out
+    for lineno, text in enumerate(f.masked_lines, start=1):
+        if f.is_test_line(lineno) or f.is_suppressed(rule, lineno):
+            continue
+        for rx, msg in tokens:
+            for _ in rx.finditer(text):
+                out.append(Violation(rule, f.path, lineno, msg))
+    return out
+
+
+def check_panic(f: ScannedFile) -> list[Violation]:
+    return _scan_tokens(f, "panic", _PANIC_TOKENS)
+
+
+def check_determinism(f: ScannedFile) -> list[Violation]:
+    out = _scan_tokens(f, "determinism", _DETERMINISM_TOKENS)
+    if any(frag in f.path for frag in ARTIFACT_MODULES):
+        out.extend(_scan_tokens(f, "determinism", _HASH_TOKENS))
+    return out
+
+
+def check_loud_failure(f: ScannedFile) -> list[Violation]:
+    return _scan_tokens(f, "loud-failure", _LOUD_TOKENS)
+
+
+def check_stub_coverage(files: dict[str, ScannedFile]) -> list[Violation]:
+    """Cross-file rule: pjrt/stub API parity + cfg-gate pairing."""
+    out: list[Violation] = []
+    pjrt = next((f for p, f in files.items() if p.endswith("rust/src/runtime/pjrt.rs")), None)
+    stub = next((f for p, f in files.items() if p.endswith("rust/src/runtime/stub.rs")), None)
+    if pjrt is not None and stub is not None:
+        stub_fns = set(_PUB_FN_RE.findall(stub.masked))
+        stub_types = set(_PUB_TYPE_RE.findall(stub.masked))
+        for m in _PUB_FN_RE.finditer(pjrt.masked):
+            name = m.group(1)
+            if name not in stub_fns:
+                out.append(
+                    Violation(
+                        "stub-coverage",
+                        stub.path,
+                        1,
+                        f"`pub fn {name}` (pjrt.rs:{pjrt.masked.count(chr(10), 0, m.start()) + 1}) "
+                        "has no stub counterpart — the offline build rots",
+                    )
+                )
+        for m in _PUB_TYPE_RE.finditer(pjrt.masked):
+            name = m.group(1)
+            if name not in stub_types:
+                out.append(
+                    Violation(
+                        "stub-coverage",
+                        stub.path,
+                        1,
+                        f"`pub` type `{name}` (pjrt.rs:{pjrt.masked.count(chr(10), 0, m.start()) + 1}) "
+                        "has no stub counterpart — the offline build rots",
+                    )
+                )
+    for path, f in sorted(files.items()):
+        if path.endswith("rust/src/runtime/pjrt.rs"):
+            continue  # the gated module itself lives behind the gate in mod.rs
+        positives = list(_CFG_PJRT_POS_RE.finditer(f.masked))
+        if positives and not _CFG_PJRT_NEG_RE.search(f.masked):
+            line = f.masked.count("\n", 0, positives[0].start()) + 1
+            out.append(
+                Violation(
+                    "stub-coverage",
+                    path,
+                    line,
+                    "`#[cfg(theseus_pjrt)]` without a `#[cfg(not(theseus_pjrt))]` sibling — "
+                    "the offline build silently loses this item",
+                )
+            )
+    return out
+
+
+def check_all(files: dict[str, ScannedFile]) -> list[Violation]:
+    out: list[Violation] = []
+    for _, f in sorted(files.items()):
+        for lineno, msg in f.suppression_errors:
+            out.append(Violation("suppression", f.path, lineno, msg))
+        out.extend(check_panic(f))
+        out.extend(check_determinism(f))
+        out.extend(check_loud_failure(f))
+    out.extend(check_stub_coverage(files))
+    return out

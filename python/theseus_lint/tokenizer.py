@@ -1,0 +1,294 @@
+"""Rust-aware source scanner for theseus-lint.
+
+Not a parser — a character-level scanner that is exact about the three
+things a naive grep gets wrong:
+
+* **Literals and comments**: the contents of string literals (plain, raw
+  ``r"..."``/``r#"..."#`` with any hash depth, byte, byte-raw), char
+  literals (including escapes, and disambiguated from lifetimes), line
+  comments and (nested) block comments are *masked* — replaced by spaces,
+  preserving length and newlines — before any rule regex runs. A doc
+  string containing ``unwrap()`` can never trip the panic rule.
+* **Test regions**: brace-matched spans introduced by ``#[cfg(test)]``
+  (on a ``mod``/``fn``/``impl``/any item), bare ``mod tests { .. }``
+  blocks, and ``#[test]`` functions are marked so rules can exempt them.
+  Brace matching runs on the masked text, so braces inside strings don't
+  desynchronize it.
+* **Suppressions**: ``// lint: allow(<rule>) <reason>`` comments are
+  parsed from the *raw* text (they live inside comments, which the mask
+  erases). A suppression covers its own line and, when the comment is the
+  whole line, the next non-comment line. A missing reason is itself a
+  lint error — a bare allow tells the next reader nothing.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ScannedFile:
+    """One source file, scanned once and shared by every rule."""
+
+    path: str
+    raw: str
+    masked: str
+    # 1-based line -> masked text of that line.
+    masked_lines: list[str] = field(default_factory=list)
+    # 1-based line numbers inside test regions.
+    test_lines: set[int] = field(default_factory=set)
+    # rule name -> set of 1-based lines a suppression covers.
+    suppressed: dict[str, set[int]] = field(default_factory=dict)
+    # (line, message) pairs for malformed suppression comments.
+    suppression_errors: list[tuple[int, str]] = field(default_factory=list)
+
+    def is_test_line(self, line: int) -> bool:
+        return line in self.test_lines
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        return line in self.suppressed.get(rule, set())
+
+
+def mask_source(text: str) -> str:
+    """Return ``text`` with the contents of strings, chars and comments
+    replaced by spaces (newlines kept, same total length)."""
+    out = list(text)
+    i, n = 0, len(text)
+
+    def blank(a: int, b: int) -> None:
+        for j in range(a, b):
+            if out[j] != "\n":
+                out[j] = " "
+
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+
+        if c == "/" and nxt == "/":  # line comment
+            j = text.find("\n", i)
+            j = n if j == -1 else j
+            blank(i, j)
+            i = j
+        elif c == "/" and nxt == "*":  # block comment (Rust nests these)
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif text.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            blank(i, j)
+            i = j
+        elif c in "rb" and _raw_string_at(text, i):  # r"", r#""#, br#""#
+            j = _skip_raw_string(text, i)
+            blank(i, j)
+            i = j
+        elif c == "b" and nxt == '"':  # byte string
+            j = _skip_plain_string(text, i + 1)
+            blank(i, j)
+            i = j
+        elif c == '"':  # plain string
+            j = _skip_plain_string(text, i)
+            blank(i, j)
+            i = j
+        elif c == "'":  # char literal vs lifetime
+            j = _char_literal_end(text, i)
+            if j is not None:
+                blank(i, j)
+                i = j
+            else:
+                i += 1  # lifetime: leave untouched
+        else:
+            i += 1
+    return "".join(out)
+
+
+def _raw_string_at(text: str, i: int) -> bool:
+    """True when position ``i`` starts a raw (or byte-raw) string."""
+    j = i
+    if text[j] == "b":
+        j += 1
+    if j >= len(text) or text[j] != "r":
+        return False
+    j += 1
+    while j < len(text) and text[j] == "#":
+        j += 1
+    # Exclude identifiers like `radius` or the `r#keyword` raw idents.
+    if j < len(text) and text[j] == '"':
+        # `r#"` is a raw string; `r#ident` was excluded by the '"' check.
+        # Guard against matching inside identifiers, e.g. `var"` cannot
+        # occur, but `attr` / `br` prefixes of longer idents can:
+        if i > 0 and (text[i - 1].isalnum() or text[i - 1] == "_"):
+            return False
+        return True
+    return False
+
+
+def _skip_raw_string(text: str, i: int) -> int:
+    j = i
+    if text[j] == "b":
+        j += 1
+    j += 1  # the 'r'
+    hashes = 0
+    while text[j] == "#":
+        hashes += 1
+        j += 1
+    j += 1  # the opening quote
+    close = '"' + "#" * hashes
+    k = text.find(close, j)
+    return len(text) if k == -1 else k + len(close)
+
+
+def _skip_plain_string(text: str, quote: int) -> int:
+    j = quote + 1
+    n = len(text)
+    while j < n:
+        if text[j] == "\\":
+            j += 2
+        elif text[j] == '"':
+            return j + 1
+        else:
+            j += 1
+    return n
+
+
+def _char_literal_end(text: str, i: int) -> int | None:
+    """End index (exclusive) of a char literal starting at ``i``, or None
+    when the quote starts a lifetime (``'a``, ``'static``)."""
+    n = len(text)
+    if i + 1 >= n:
+        return None
+    if text[i + 1] == "\\":  # escaped char: '\n', '\u{1F600}', '\''
+        j = i + 2
+        if j < n and text[j] == "u":  # '\u{...}'
+            k = text.find("}", j)
+            if k != -1 and k + 1 < n and text[k + 1] == "'":
+                return k + 2
+        else:
+            j += 1  # the escaped character
+            if j < n and text[j] == "'":
+                return j + 1
+        return None
+    # Unescaped: exactly one character then a closing quote.
+    if i + 2 < n and text[i + 2] == "'" and text[i + 1] != "'":
+        return i + 3
+    return None
+
+
+_CFG_TEST_RE = re.compile(r"#\s*\[\s*cfg\s*\(\s*test\s*\)\s*\]")
+_TEST_ATTR_RE = re.compile(r"#\s*\[\s*test\s*\]")
+_MOD_TESTS_RE = re.compile(r"\bmod\s+tests\s*\{")
+_ATTR_RE = re.compile(r"\s*#\s*\[")
+
+
+def _line_of(text: str, pos: int) -> int:
+    return text.count("\n", 0, pos) + 1
+
+
+def _match_brace_span(masked: str, open_idx: int) -> int:
+    """Index just past the ``}`` matching the ``{`` at ``open_idx``."""
+    depth = 0
+    for j in range(open_idx, len(masked)):
+        if masked[j] == "{":
+            depth += 1
+        elif masked[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(masked)
+
+
+def _skip_attrs(masked: str, i: int) -> int:
+    """Skip whitespace and further ``#[...]`` attributes from ``i``."""
+    n = len(masked)
+    while i < n:
+        while i < n and masked[i].isspace():
+            i += 1
+        m = _ATTR_RE.match(masked, i)
+        if not m:
+            break
+        # Attributes can contain nested brackets: #[cfg(all(test, foo))].
+        depth = 0
+        j = masked.find("[", i)
+        for j in range(j, n):
+            if masked[j] == "[":
+                depth += 1
+            elif masked[j] == "]":
+                depth -= 1
+                if depth == 0:
+                    break
+        i = j + 1
+    return i
+
+
+def find_test_regions(masked: str) -> set[int]:
+    """1-based line numbers covered by test-only code."""
+    lines: set[int] = set()
+
+    def mark(a: int, b: int) -> None:
+        lines.update(range(_line_of(masked, a), _line_of(masked, min(b, len(masked) - 1)) + 1))
+
+    for m in list(_CFG_TEST_RE.finditer(masked)) + list(_TEST_ATTR_RE.finditer(masked)):
+        item = _skip_attrs(masked, m.end())
+        brace = masked.find("{", item)
+        semi = masked.find(";", item)
+        if semi != -1 and (brace == -1 or semi < brace):
+            # `#[cfg(test)] mod tests;` — out-of-line file, handled by the
+            # per-path allowlist; nothing to mark here.
+            continue
+        if brace == -1:
+            continue
+        mark(m.start(), _match_brace_span(masked, brace) - 1)
+
+    for m in _MOD_TESTS_RE.finditer(masked):
+        brace = masked.find("{", m.start())
+        mark(m.start(), _match_brace_span(masked, brace) - 1)
+    return lines
+
+
+# `// lint: allow(<rule>) <reason>`; reason is mandatory.
+_SUPPRESS_RE = re.compile(r"//\s*lint:\s*allow\(([a-z-]+)\)\s*(.*)$")
+
+
+def find_suppressions(
+    raw_lines: list[str], known_rules: set[str]
+) -> tuple[dict[str, set[int]], list[tuple[int, str]]]:
+    suppressed: dict[str, set[int]] = {}
+    errors: list[tuple[int, str]] = []
+    for idx, line in enumerate(raw_lines, start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rule, reason = m.group(1), m.group(2).strip()
+        if rule not in known_rules:
+            errors.append(
+                (idx, f"suppression names unknown rule '{rule}' (known: {', '.join(sorted(known_rules))})")
+            )
+            continue
+        if not reason:
+            errors.append((idx, f"suppression for '{rule}' has no reason — say why the site is safe"))
+            continue
+        covered = suppressed.setdefault(rule, set())
+        covered.add(idx)
+        if line.lstrip().startswith("//"):
+            covered.add(idx + 1)  # standalone comment covers the next line
+    return suppressed, errors
+
+
+def scan_file(path: str, text: str, known_rules: set[str]) -> ScannedFile:
+    masked = mask_source(text)
+    raw_lines = text.splitlines()
+    suppressed, errors = find_suppressions(raw_lines, known_rules)
+    return ScannedFile(
+        path=path,
+        raw=text,
+        masked=masked,
+        masked_lines=masked.splitlines(),
+        test_lines=find_test_regions(masked),
+        suppressed=suppressed,
+        suppression_errors=errors,
+    )

@@ -780,13 +780,14 @@ pub fn run_scenario(s: &Scenario, seed: u64) -> Result<Trace, String> {
     // defect rate (every sampled region disconnected / no viable
     // strategy), but an empty trace would silently digest to zero metrics
     // — record it as the loud error the resume contract retries.
-    if s.fault_defect.is_some() && trace.points.is_empty() {
-        return Err(format!(
-            "fault scenario '{}': no design evaluated successfully at defect multiplier \
-             {:?} — every sampled wafer region was disconnected or infeasible",
-            s.key(),
-            s.fault_defect.unwrap()
-        ));
+    if let Some(mult) = s.fault_defect {
+        if trace.points.is_empty() {
+            return Err(format!(
+                "fault scenario '{}': no design evaluated successfully at defect multiplier \
+                 {mult} — every sampled wafer region was disconnected or infeasible",
+                s.key(),
+            ));
+        }
     }
     Ok(trace)
 }
@@ -1089,6 +1090,7 @@ pub fn merge_campaign(
             // Stale spec or recorded failure: run fresh (incremental
             // re-run). Missing everywhere: run fresh too.
             Some((_, Probe::SpecChanged(_) | Probe::Retry)) | None => Plan::Fresh,
+            // lint: allow(panic) hits retains only non-Missing probes: filtered in the loop above
             Some((_, Probe::Missing)) => unreachable!("Missing is filtered above"),
         });
     }
@@ -1124,9 +1126,8 @@ pub fn sorted_front(trace: &Trace) -> Vec<&TracePoint> {
     front.sort_by(|a, b| {
         b.objective
             .throughput
-            .partial_cmp(&a.objective.throughput)
-            .unwrap()
-            .then(a.objective.power_w.partial_cmp(&b.objective.power_w).unwrap())
+            .total_cmp(&a.objective.throughput)
+            .then(a.objective.power_w.total_cmp(&b.objective.power_w))
             .then_with(|| a.point.wsc.summary().cmp(&b.point.wsc.summary()))
     });
     front
@@ -1245,6 +1246,7 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
             )
         }
         Outcome::Done(Err(_)) | Outcome::ResumeConflict(_) => {
+            // lint: allow(panic) both error arms early-return a row at the top of this function
             unreachable!("error rows returned above")
         }
     };
@@ -1293,6 +1295,7 @@ pub fn scenario_result_json(r: &ScenarioResult) -> Json {
             Json::Str(format!("{:016x}", r.scenario.spec_hash())),
         );
     match &r.outcome {
+        // lint: allow(panic) the Resumed arm early-returns the recorded doc before this match
         Outcome::Resumed(_) => unreachable!("returned above"),
         Outcome::Done(Ok(trace)) => {
             let mut pareto = Vec::new();

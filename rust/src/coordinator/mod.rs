@@ -159,6 +159,7 @@ pub fn explore(
         },
         Explorer::Mobo => explorer::mobo(&engine, cfg),
         Explorer::Mfmobo => {
+            // lint: allow(panic) Engine::new only errs for Fidelity::Gnn without a model; fidelity forced Analytical
             let low = Engine::new(spec.clone().with_fidelity(Fidelity::Analytical))
                 .expect("analytical backend is always available");
             explorer::mfmobo(
@@ -209,6 +210,7 @@ pub fn trace_to_json(trace: &Trace) -> Json {
 /// and an unwritable `--out` path exits 1 instead of panicking.
 pub fn run_from_cli(args: &Args) {
     fn usage_exit(e: String) -> ! {
+        // lint: allow(loud-failure) CLI usage error on the documented exit-1 path, not a library fallback
         eprintln!("dse: {e}");
         std::process::exit(1);
     }
@@ -262,6 +264,7 @@ pub fn run_from_cli(args: &Args) {
             None
         },
     };
+    // lint: allow(loud-failure) CLI progress banner on stderr, unconditional (not a fallback)
     eprintln!(
         "DSE: {} on {} {} at fidelity {} ({} iters, seed {})",
         explorer.name(),
@@ -272,6 +275,7 @@ pub fn run_from_cli(args: &Args) {
         dse.cfg.seed
     );
     if let Some(f) = &dse.faults {
+        // lint: allow(loud-failure) CLI progress banner on stderr, echoes explicit flags (not a fallback)
         eprintln!(
             "fault injection: defect multiplier {} / spares {} / seed {}",
             f.defect_multiplier,
@@ -279,8 +283,10 @@ pub fn run_from_cli(args: &Args) {
             f.seed
         );
     }
+    // lint: allow(determinism) elapsed-time reporting to stderr only — never written into a trace/artifact
     let t0 = std::time::Instant::now();
     let trace = run(&dse).unwrap_or_else(|e| usage_exit(e));
+    // lint: allow(loud-failure) CLI completion summary on stderr (elapsed + hypervolume), not a fallback
     eprintln!(
         "explored {} points in {:.1}s; final hypervolume {:.4e}",
         trace.points.len(),
@@ -293,7 +299,7 @@ pub fn run_from_cli(args: &Args) {
         &["tokens/s", "power(kW)", "fidelity", "config"],
     );
     let mut front = trace.pareto();
-    front.sort_by(|a, b| b.objective.throughput.partial_cmp(&a.objective.throughput).unwrap());
+    front.sort_by(|a, b| b.objective.throughput.total_cmp(&a.objective.throughput));
     for p in front {
         table.row(&[
             format!("{:.1}", p.objective.throughput),
@@ -308,8 +314,10 @@ pub fn run_from_cli(args: &Args) {
         // The loud-exit CLI contract: an unwritable --out is a user
         // error, not a panic.
         match std::fs::write(&out, trace_to_json(&trace).to_pretty()) {
+            // lint: allow(loud-failure) CLI confirmation of the user's --out path on stderr
             Ok(()) => eprintln!("trace written to {out}"),
             Err(e) => {
+                // lint: allow(loud-failure) CLI exit-1 path for an unwritable --out, per the doc comment
                 eprintln!("dse: cannot write trace to {out}: {e}");
                 std::process::exit(1);
             }

@@ -320,6 +320,7 @@ impl Engine {
     /// Infallible convenience: analytical training (the low fidelity of
     /// every `mfmobo` pair).
     pub fn analytical_training(model: LlmSpec) -> Engine {
+        // lint: allow(panic) Engine::new only errs for Fidelity::Gnn without a model; training() is analytical
         Engine::new(EvalSpec::training(model)).expect("analytical backend is always available")
     }
 
@@ -712,6 +713,7 @@ pub(crate) fn eval_training_batch_fused(
         u
     };
     let compiled: Vec<(u64, Arc<CachedChunk>)> = crate::util::pool::par_map(&unique, |&j| {
+        // lint: allow(panic) `unique` indexes come from first_of_sig, built only over Some(_) inputs
         let (graph, rh, rw, sig) = inputs[j].as_ref().expect("unique job is signatured");
         let core = &systems[jobs[j].0].validated.point.wsc.reticle.core;
         (*sig, compile_chunk_cached(graph, *rh, *rw, core))

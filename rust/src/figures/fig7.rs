@@ -45,7 +45,10 @@ pub fn fig7_eval_comparison(
     let est: Option<Box<dyn NocEstimator>> = high.and_then(|f| match f.per_chunk_estimator() {
         Ok(e) => Some(e),
         Err(e) => {
-            eprintln!("fig7: {e}; high-fidelity columns omitted");
+            crate::util::warn::warn_once(
+                "fig7-highfi",
+                &format!("fig7: {e}; high-fidelity columns omitted"),
+            );
             None
         }
     });

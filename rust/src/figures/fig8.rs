@@ -48,7 +48,10 @@ pub fn fig8_explorer_comparison(
         match crate::runtime::GnnModel::load_default() {
             Ok(m) => Some(std::sync::Arc::new(m)),
             Err(e) => {
-                eprintln!("fig8: fidelity 'gnn' unavailable: {e}; high fidelity = analytical");
+                crate::util::warn::warn_once(
+                    "fig8-gnn",
+                    &format!("fig8: fidelity 'gnn' unavailable: {e}; high fidelity = analytical"),
+                );
                 None
             }
         }
@@ -63,6 +66,7 @@ pub fn fig8_explorer_comparison(
         let high = match (&shared_gnn, fidelity) {
             (Some(m), _) => Engine::with_gnn_model(EvalSpec::training(spec.clone()), m.clone()),
             (None, Fidelity::Gnn) => Engine::analytical_training(spec.clone()),
+            // lint: allow(panic) Engine::new only errs for Fidelity::Gnn without a model; that arm matched above
             (None, f) => Engine::new(EvalSpec::training(spec.clone()).with_fidelity(f))
                 .expect("non-gnn backends are always available"),
         };

@@ -13,6 +13,11 @@
 //! via PJRT ([`runtime`]), and the multi-fidelity multi-objective Bayesian
 //! explorer ([`explorer`]) orchestrated by [`coordinator`].
 
+// The whole crate is safe Rust by construction (in-tree json/rng/pool
+// substrates instead of FFI-bearing deps); forbid — not deny — so no
+// module can opt back in with an allow.
+#![forbid(unsafe_code)]
+
 pub mod arch;
 pub mod baselines;
 pub mod bench;

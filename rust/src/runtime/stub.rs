@@ -58,6 +58,11 @@ impl GnnModel {
         Err(GnnUnavailable)
     }
 
+    /// Batched sibling of [`GnnModel::predict_padded`] (see the pjrt twin).
+    pub fn predict_padded_batch(&self, _batch: &GnnBatch) -> Result<Vec<f32>, GnnUnavailable> {
+        Err(GnnUnavailable)
+    }
+
     pub fn predict_link_waits(
         &self,
         _chunk: &CompiledChunk,

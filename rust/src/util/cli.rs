@@ -34,6 +34,7 @@ impl Args {
                         .map(|n| !n.starts_with("--"))
                         .unwrap_or(false);
                     let v = if takes_value {
+                        // lint: allow(panic) takes_value means peek() just saw the next token
                         it.next().unwrap()
                     } else {
                         "true".to_string()
@@ -131,7 +132,10 @@ where
         Some(raw) if !raw.is_empty() => match raw.parse() {
             Ok(v) => v,
             Err(_) => {
-                if warned_env_vars().lock().unwrap().insert(key.to_string()) {
+                let mut warned = warned_env_vars()
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner());
+                if warned.insert(key.to_string()) {
                     eprintln!(
                         "warning: ignoring malformed env {key}={raw:?} (using default {default})"
                     );

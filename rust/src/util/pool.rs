@@ -11,14 +11,10 @@ use std::sync::Mutex;
 /// Number of worker threads: `THESEUS_THREADS` env override, else
 /// available_parallelism, else 4.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("THESEUS_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism()
+    let default = std::thread::available_parallelism()
         .map(|n| n.get())
-        .unwrap_or(4)
+        .unwrap_or(4);
+    super::cli::env_usize("THESEUS_THREADS", default).max(1)
 }
 
 /// Parallel map over `items`, preserving order. `f` must be `Sync` and is
@@ -62,13 +58,17 @@ where
                     break;
                 }
                 let out = f(&items[i]);
-                *results[i].lock().unwrap() = Some(out);
+                // Each slot is claimed by exactly one worker via the
+                // cursor, so a poisoned slot only means that worker's `f`
+                // panicked mid-store — the value is still ours to write.
+                *results[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(out);
             });
         }
     });
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker completed"))
+        // lint: allow(panic) the scope joins all workers and the cursor covers 0..n: every slot was written
+        .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()).expect("worker completed"))
         .collect()
 }
 

@@ -11,17 +11,11 @@ use crate::util::rng::Rng;
 /// Number of cases per property: `THESEUS_PROP_CASES` override, default 64
 /// (fast enough that every module can afford several properties).
 pub fn cases() -> usize {
-    std::env::var("THESEUS_PROP_CASES")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(64)
+    super::cli::env_usize("THESEUS_PROP_CASES", 64)
 }
 
 fn seed() -> u64 {
-    std::env::var("THESEUS_PROP_SEED")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0xC0FFEE)
+    super::cli::env_u64("THESEUS_PROP_SEED", 0xC0FFEE)
 }
 
 /// Run `prop` against `cases()` random inputs produced by `gen`.
@@ -37,6 +31,7 @@ where
     for case in 0..cases() {
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
+            // lint: allow(panic) property-test substrate: panicking IS the failure report under #[test]
             panic!(
                 "property '{name}' failed at case {case} (seed {base}):\n  input: {input:?}\n  {msg}"
             );
@@ -77,6 +72,7 @@ where
                 }
                 break;
             }
+            // lint: allow(panic) property-test substrate: panicking IS the failure report under #[test]
             panic!(
                 "property '{name}' failed at case {case} (seed {base}):\n  minimal input: {best:?}\n  {best_msg}"
             );

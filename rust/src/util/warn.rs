@@ -23,7 +23,12 @@ fn warned_keys() -> &'static std::sync::Mutex<std::collections::BTreeSet<String>
 /// Returns whether this call was the one that printed (so callers can
 /// attach extra diagnostics to the first occurrence only).
 pub fn warn_once(key: &str, msg: &str) -> bool {
-    let first = warned_keys().lock().unwrap().insert(key.to_string());
+    // A panicked holder only leaves a fully-inserted set behind; keep
+    // warning rather than poisoning every later fallback report.
+    let first = warned_keys()
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .insert(key.to_string());
     if first {
         eprintln!("{msg} (further occurrences are silent)");
     }

@@ -3,7 +3,10 @@
 #
 #   scripts/ci_check.sh
 #
-# Always runs the Python test suite (pytest). When a Rust toolchain is
+# Always runs the Python test suite (pytest) and theseus-lint
+# (scripts/lint_theseus.py — the toolchain-free static gate on the
+# panic/determinism/loud-failure/stub-coverage contracts, against the
+# checked-in ratchet baseline). When a Rust toolchain is
 # present it additionally runs tier-1 (`THESEUS_TEST_FAST=1 cargo test -q`),
 # the perf gate (`scripts/bench_check.sh`), a 3-scenario `theseus campaign`
 # smoke leg (custom JSON through the fidelity registry, incl. a gnn-test
@@ -23,6 +26,9 @@ PY=python3
 command -v "$PY" >/dev/null 2>&1 || PY=python
 echo "== ci_check: python tests =="
 "$PY" -m pytest python/tests -q
+
+echo "== ci_check: theseus-lint (static contracts, ratchet baseline) =="
+"$PY" scripts/lint_theseus.py
 
 if command -v cargo >/dev/null 2>&1; then
     echo "== ci_check: rust tier-1 (THESEUS_TEST_FAST=${THESEUS_TEST_FAST:-1}) =="
@@ -98,9 +104,16 @@ EOF
     else
         echo "ci_check: *** SKIPPED cargo fmt --check — no rustfmt on this machine ***" >&2
     fi
+
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== ci_check: cargo clippy -D warnings =="
+        cargo clippy --all-targets -q -- -D warnings
+    else
+        echo "ci_check: *** SKIPPED cargo clippy — clippy not installed on this machine ***" >&2
+    fi
 else
-    echo "ci_check: *** SKIPPED rust tier-1 + perf gate + campaign smoke + fmt — no cargo toolchain on this machine ***" >&2
-    echo "ci_check: run 'cargo test -q', scripts/bench_check.sh and the campaign smoke on a toolchain-equipped host before merging" >&2
+    echo "ci_check: *** SKIPPED rust tier-1 + perf gate + campaign smoke + fmt + clippy — no cargo toolchain on this machine ***" >&2
+    echo "ci_check: run 'cargo test -q', scripts/bench_check.sh, the campaign smoke and 'cargo clippy -- -D warnings' on a toolchain-equipped host before merging" >&2
 fi
 
 echo "ci_check: done"

@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""theseus-lint: toolchain-free static analysis over rust/src.
+
+Theseus's value proposition is trustworthy DSE at scale — byte-identical
+campaign artifacts, bit-identical dispatch paths (serial == pooled ==
+batched), position-independent seeds behind --shard/--merge, and a loud
+error contract (no silent fallbacks, no panics in library paths). Those
+contracts are enforced here, statically, because this is the one
+correctness tool that runs in every build container (several ship no
+cargo/rustc — see CHANGES.md). ci_check.sh runs this unconditionally in
+its always-on Python leg.
+
+Rules (full detail in --help and python/theseus_lint/rules.py):
+
+  panic          no unwrap()/expect()/panic!/unreachable!/todo!/
+                 unimplemented! in non-test library code. Exempt: main.rs
+                 (CLI exit-1 paths), noc_sim/reference.rs (frozen oracle),
+                 test code.
+  determinism    no wall-clock (Instant::now/SystemTime/UNIX_EPOCH) or
+                 nondeterministic RNG sources in library code; no
+                 HashMap/HashSet in artifact-writing modules (util/json,
+                 coordinator/, figures/).
+  loud-failure   no raw env::var outside util/cli.rs; no bare eprintln!
+                 outside util/warn.rs — fallbacks report via warn_once.
+  stub-coverage  runtime/stub.rs mirrors every pub fn / pub type of
+                 runtime/pjrt.rs; positive #[cfg(theseus_pjrt)] gates need
+                 a not() sibling in the same file.
+
+Suppression syntax (reason mandatory, parsed by the linter):
+
+    // lint: allow(panic) ranked_strategies is non-empty here: guarded above
+
+Baseline-ratchet workflow (scripts/lint_baseline.json):
+
+  * The scan must match the committed baseline exactly. New violations
+    fail with a listing; counts *below* baseline fail too ("improvement
+    not locked in") so old headroom can never hide new debt.
+  * After fixing violations or adding justified suppressions, run
+    `scripts/lint_theseus.py --update-baseline` and commit the shrunken
+    baseline. The update refuses to grow any entry.
+  * `--list` prints every current violation including baselined ones —
+    the burn-down worklist.
+
+The scanner is string/char/comment/raw-string aware and skips
+#[cfg(test)] / mod tests / #[test] regions — not a naive grep; see
+python/theseus_lint/tokenizer.py.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "python"))
+
+from theseus_lint.cli import run  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(run())
