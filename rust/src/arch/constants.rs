@@ -59,6 +59,10 @@ pub const PHY_ENERGY_PJ_PER_BIT_RDL: f64 = 1.0;
 pub const INTER_WAFER_BW_PER_NIC: f64 = 100.0e9; // bytes/s per network interface
 pub const OFF_CHIP_BW_PER_CTRL: f64 = 160.0e9; // bytes/s per memory controller
 
+/// Per-hop latency of an inter-wafer link (serialization + switch/transit,
+/// NIC/SerDes-class — not paper-stated; used by [`crate::arch::interwafer`]).
+pub const INTER_WAFER_LINK_LATENCY_S: f64 = 1.0e-6;
+
 /// DRAM access energy (pJ/bit): stacked TSV DRAM ≈ HBM-class, off-chip
 /// DDR/edge access pricier (CACTI-3DD-class numbers).
 pub const DRAM_ENERGY_PJ_PER_BIT_STACKED: f64 = 4.0;

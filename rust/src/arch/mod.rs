@@ -7,8 +7,10 @@
 
 pub mod constants;
 pub mod hetero;
+pub mod interwafer;
 
 pub use hetero::{HeteroConfig, HeteroGranularity};
+pub use interwafer::{InterWaferNet, InterWaferTopology};
 
 /// Intra-core dataflow of the fixed-datapath MAC array (Table I).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -18,7 +18,10 @@
 //! × spare-row redundancy, digesting retained-throughput fraction and
 //! perf/W per good-wafer cost per row); [`hetero_suite`] runs the
 //! heterogeneous-wafer decode rows across every
-//! [`HeteroGranularity`]. [`run_campaign`] fans
+//! [`HeteroGranularity`]; [`wafer_sweep_suite`] sweeps fixed wafer
+//! counts through the inter-wafer network model
+//! ([`crate::arch::interwafer`]), digesting each row's scaling
+//! efficiency against the same design on one wafer. [`run_campaign`] fans
 //! scenarios over the thread pool while the compile-chunk
 //! ([`crate::compiler::cache`]) and tile ([`crate::eval::tile`]) memo
 //! caches — process-wide singletons — stay shared across scenarios.
@@ -85,7 +88,7 @@
 
 use std::panic::AssertUnwindSafe;
 
-use crate::arch::{HeteroConfig, HeteroGranularity};
+use crate::arch::{HeteroConfig, HeteroGranularity, InterWaferNet, InterWaferTopology};
 use crate::baselines::{h100_infer_eval, h100_train_eval};
 use crate::coordinator::{explore, ref_power_for, Explorer};
 use crate::design_space::validate;
@@ -164,6 +167,10 @@ pub struct Scenario {
     /// Prefill/decode heterogeneity override applied to every design
     /// point (§V-B); `None` keeps each point's own setting.
     pub hetero: Option<HeteroConfig>,
+    /// Inter-wafer network override ([`crate::arch::interwafer`]) applied
+    /// to every design point; `None` keeps each point's own net (the
+    /// searched axes / flat-NIC default). Inert at `wafers: 1`.
+    pub interwafer: Option<InterWaferNet>,
     /// Free-form disambiguator, appended to [`Scenario::key`] when
     /// non-empty. Budget-only variations (e.g. an iteration-count sweep)
     /// don't show up in the key, so give each variant a distinct tag —
@@ -216,6 +223,9 @@ impl Scenario {
         if let Some(h) = self.hetero {
             key.push_str(&format!("-h{}", h.granularity.name()));
         }
+        if let Some(n) = self.interwafer {
+            key.push_str(&format!("-iw{}", n.topology.name()));
+        }
         if !self.tag.is_empty() {
             key.push('-');
             key.push_str(&slugify(&self.tag));
@@ -257,6 +267,7 @@ impl Scenario {
                 seed,
             }),
             hetero: self.hetero,
+            interwafer: self.interwafer,
         }
     }
 
@@ -297,13 +308,19 @@ impl Scenario {
                 .set("hetero_ratio", Json::Num(h.prefill_ratio))
                 .set("hetero_decode_bw", Json::Num(h.decode_stack_bw));
         }
+        if let Some(n) = self.interwafer {
+            o.set("interwafer", Json::Str(n.topology.name().to_string()))
+                .set("interwafer_latency", Json::Num(n.link_latency))
+                .set("interwafer_link_bw", Json::Num(n.link_bandwidth))
+                .set("interwafer_links", Json::Num(n.links_per_wafer as f64));
+        }
         o
     }
 
     /// Every field [`Scenario::from_json`] accepts — anything else is
     /// rejected (a typo like `iter` silently falling back to the
     /// 40-iteration paper budget would burn hours across a matrix).
-    pub const FIELDS: [&'static str; 19] = [
+    pub const FIELDS: [&'static str; 23] = [
         "batch",
         "explorer",
         "fault_defect",
@@ -313,6 +330,10 @@ impl Scenario {
         "hetero_decode_bw",
         "hetero_ratio",
         "init",
+        "interwafer",
+        "interwafer_latency",
+        "interwafer_link_bw",
+        "interwafer_links",
         "iters",
         "k",
         "mc",
@@ -417,6 +438,40 @@ impl Scenario {
                 })
             }
         };
+        let interwafer = match j.get("interwafer") {
+            None | Some(Json::Null) => {
+                for k in ["interwafer_links", "interwafer_link_bw", "interwafer_latency"] {
+                    if !matches!(j.get(k), None | Some(Json::Null)) {
+                        return Err(format!(
+                            "scenario field '{k}' needs 'interwafer' (the topology name)"
+                        ));
+                    }
+                }
+                None
+            }
+            Some(_) => {
+                let name = str_field("interwafer")?;
+                let topology = InterWaferTopology::parse(&name).ok_or_else(|| {
+                    let names: Vec<&str> =
+                        InterWaferTopology::ALL.iter().map(|t| t.name()).collect();
+                    format!(
+                        "unknown inter-wafer topology '{name}' — valid: {}",
+                        names.join(", ")
+                    )
+                })?;
+                // Unspecified axes fall back to the flat-NIC default net
+                // (same aggregate bandwidth as the pre-topology model).
+                let default = InterWaferNet::default_for(crate::design_space::default_nic_count());
+                Some(InterWaferNet {
+                    topology,
+                    links_per_wafer: usize_field("interwafer_links", default.links_per_wafer)?,
+                    link_bandwidth: f64_field("interwafer_link_bw")?
+                        .unwrap_or(default.link_bandwidth),
+                    link_latency: f64_field("interwafer_latency")?
+                        .unwrap_or(default.link_latency),
+                })
+            }
+        };
         let mqa = match j.get("mqa") {
             None | Some(Json::Null) => false,
             Some(v) => v
@@ -438,7 +493,18 @@ impl Scenario {
             mqa,
             wafers: match j.get("wafers") {
                 None | Some(Json::Null) => None,
-                Some(_) => Some(usize_field("wafers", 1)?),
+                // 0 used to clamp silently to 1 in system sizing; a fixed
+                // wafer count of zero is a spec bug, not a sizing policy.
+                Some(_) => match usize_field("wafers", 1)? {
+                    0 => {
+                        return Err(
+                            "scenario field 'wafers' must be >= 1 (omit it or use null \
+                             for area-matched sizing)"
+                                .to_string(),
+                        )
+                    }
+                    n => Some(n),
+                },
             },
             explorer,
             fidelity,
@@ -453,6 +519,7 @@ impl Scenario {
             fault_defect,
             fault_spares,
             hetero,
+            interwafer,
             tag: match j.get("tag") {
                 None | Some(Json::Null) => String::new(),
                 Some(_) => str_field("tag")?,
@@ -515,6 +582,7 @@ pub fn paper_suite() -> Vec<Scenario> {
                     fault_defect: None,
                     fault_spares: None,
                     hetero: None,
+                    interwafer: None,
                     tag: String::new(),
                 });
             }
@@ -559,6 +627,7 @@ pub fn fault_suite() -> Vec<Scenario> {
                 fault_defect: Some(defect),
                 fault_spares: spares,
                 hetero: None,
+                interwafer: None,
                 tag: String::new(),
             });
         }
@@ -597,9 +666,53 @@ pub fn hetero_suite() -> Vec<Scenario> {
                 prefill_ratio: 0.5,
                 decode_stack_bw: 2.0,
             }),
+            interwafer: None,
             tag: String::new(),
         })
         .collect()
+}
+
+/// Wafer-count scaling sweep (`theseus campaign --suite wafer-sweep`):
+/// one representative model at fixed wafer counts 1, 2, 4, 8 × {training,
+/// decode serving}, exercising the inter-wafer network model
+/// ([`crate::arch::interwafer`]) end to end through the campaign path.
+/// Each fixed-wafer row's artifact carries the `scaling` digest
+/// ([`scaling_row_metrics`]): speedup of the row's best design over the
+/// same design on a single wafer, and the scaling efficiency
+/// (speedup / wafers) — the matrix reads out directly as the scale-out
+/// curve.
+pub fn wafer_sweep_suite() -> Vec<Scenario> {
+    // Random search at a reduced budget: the scaling curve compares wafer
+    // counts against each other, not against the paper's full BO budget.
+    let budget = Budget {
+        iters: 8,
+        init: 4,
+        pool: 48,
+        mc: 32,
+        n1: 0,
+        k: 0,
+    };
+    let mut out = Vec::new();
+    for wafers in [1usize, 2, 4, 8] {
+        for phase in [Phase::Training, Phase::Decode] {
+            out.push(Scenario {
+                model: "GPT-1.7B".to_string(),
+                phase,
+                batch: if phase.is_inference() { 32 } else { 0 },
+                mqa: false,
+                wafers: Some(wafers),
+                explorer: Explorer::Random,
+                fidelity: Fidelity::Analytical,
+                budget,
+                fault_defect: None,
+                fault_spares: None,
+                hetero: None,
+                interwafer: None,
+                tag: String::new(),
+            });
+        }
+    }
+    out
 }
 
 /// Derive a scenario's RNG seed from the campaign seed and the scenario
@@ -829,6 +942,37 @@ pub fn fault_row_metrics(s: &Scenario, seed: u64, trace: &Trace) -> Option<Json>
             "perf_per_watt_per_wafer",
             Json::Num(perf_per_watt / wafer_cost),
         );
+    Some(o)
+}
+
+/// Scale-out digest of a fixed-wafer-count row: re-evaluate the row's
+/// best Pareto design at **one** wafer (same spec/fidelity/seed) and
+/// report the speedup the extra wafers buy plus the scaling efficiency
+/// (`speedup / wafers` — the retained fraction of linear scaling).
+/// Deterministic in (scenario, seed), so resumed rows reading this digest
+/// back from their artifact match fresh rows byte for byte. `None` for
+/// area-matched rows and for rows whose best point cannot be
+/// re-validated; single-wafer rows digest to efficiency 1 by
+/// construction, anchoring the curve.
+pub fn scaling_row_metrics(s: &Scenario, seed: u64, trace: &Trace) -> Option<Json> {
+    let wafers = s.wafers?;
+    let spec = models::find(&s.model)?;
+    let best = sorted_front(trace).into_iter().next()?.clone();
+    let v = validate(&best.point).ok()?;
+    let single_spec = {
+        let mut e = s.eval_spec(&spec, seed);
+        e.wafers = Some(1);
+        e
+    };
+    let single = Engine::new(single_spec).ok()?.eval(&v)?;
+    if single.throughput <= 0.0 {
+        return None;
+    }
+    let speedup = best.objective.throughput / single.throughput;
+    let mut o = Json::obj();
+    o.set("scaling_efficiency", Json::Num(speedup / wafers.max(1) as f64))
+        .set("single_wafer_throughput", Json::Num(single.throughput))
+        .set("speedup_vs_single_wafer", Json::Num(speedup));
     Some(o)
 }
 
@@ -1171,6 +1315,9 @@ pub struct RowSummary {
     /// Fault-injection rows only: perf/W divided by the good-wafer cost
     /// (`n_wafers / wafer_yield`).
     pub perf_per_watt_per_wafer: Option<f64>,
+    /// Fixed-wafer-count rows only: speedup over the same best design on
+    /// a single wafer, divided by the wafer count.
+    pub scaling_efficiency: Option<f64>,
 }
 
 impl RowSummary {
@@ -1200,6 +1347,7 @@ fn error_summary(key: String, e: String, resumed: bool) -> RowSummary {
         speedup_vs_gpu: None,
         retained_fraction: None,
         perf_per_watt_per_wafer: None,
+        scaling_efficiency: None,
     }
 }
 
@@ -1212,7 +1360,7 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
     // scenario spec, so resumed rows digest to the same bytes as fresh
     // ones.
     let gpu = models::find(&r.scenario.model).and_then(|spec| gpu_reference(&r.scenario, &spec));
-    let (points, final_hv, best, fault) = match &r.outcome {
+    let (points, final_hv, best, fault, scaling) = match &r.outcome {
         Outcome::Done(Ok(trace)) => {
             let front = sorted_front(trace);
             let best = front
@@ -1223,6 +1371,7 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
                 trace.final_hv(),
                 best,
                 fault_row_metrics(&r.scenario, r.seed, trace),
+                scaling_row_metrics(&r.scenario, r.seed, trace),
             )
         }
         Outcome::Resumed(doc) => {
@@ -1243,6 +1392,7 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
                 doc.get("final_hv").and_then(Json::as_f64).unwrap_or(0.0),
                 best,
                 doc.get("fault").cloned(),
+                doc.get("scaling").cloned(),
             )
         }
         Outcome::Done(Err(_)) | Outcome::ResumeConflict(_) => {
@@ -1252,6 +1402,12 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
     };
     let fault_f64 = |field: &str| {
         fault
+            .as_ref()
+            .and_then(|f| f.get(field))
+            .and_then(Json::as_f64)
+    };
+    let scaling_f64 = |field: &str| {
+        scaling
             .as_ref()
             .and_then(|f| f.get(field))
             .and_then(Json::as_f64)
@@ -1272,6 +1428,7 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
         },
         retained_fraction: fault_f64("retained_fraction"),
         perf_per_watt_per_wafer: fault_f64("perf_per_watt_per_wafer"),
+        scaling_efficiency: scaling_f64("scaling_efficiency"),
     }
 }
 
@@ -1317,6 +1474,11 @@ pub fn scenario_result_json(r: &ScenarioResult) -> Json {
             if let Some(f) = fault_row_metrics(&r.scenario, r.seed, trace) {
                 doc.set("fault", f);
             }
+            // Fixed-wafer rows carry their scale-out digest for the same
+            // reason: resumed rows never re-run the engine.
+            if let Some(sc) = scaling_row_metrics(&r.scenario, r.seed, trace) {
+                doc.set("scaling", sc);
+            }
         }
         Outcome::Done(Err(e)) | Outcome::ResumeConflict(e) => {
             doc.set("status", Json::Str("error".to_string()))
@@ -1360,6 +1522,11 @@ pub fn summary_json(result: &CampaignResult) -> Json {
                 }
                 if let Some(p) = s.perf_per_watt_per_wafer {
                     o.set("perf_per_watt_per_wafer", Json::Num(p));
+                }
+                // Likewise fixed-wafer rows only: area-matched campaigns
+                // keep their exact pre-sweep summary bytes.
+                if let Some(se) = s.scaling_efficiency {
+                    o.set("scaling_efficiency", Json::Num(se));
                 }
             }
             Some(e) => {
@@ -1464,6 +1631,12 @@ mod tests {
                 fault_defect: None,
                 fault_spares: None,
                 hetero: None,
+                interwafer: Some(InterWaferNet {
+                    topology: InterWaferTopology::Ring,
+                    links_per_wafer: 8,
+                    link_bandwidth: 50.0e9,
+                    link_latency: 2.0e-6,
+                }),
                 tag: "Budget Sweep A".to_string(),
             },
             fault_suite()[3].clone(),
@@ -1611,6 +1784,7 @@ mod tests {
             fault_defect: None,
             fault_spares: None,
             hetero: None,
+            interwafer: None,
             tag: String::new(),
         };
         let e = run_scenario(&s, 1).unwrap_err();
@@ -1643,6 +1817,7 @@ mod tests {
             fault_defect: None,
             fault_spares: None,
             hetero: None,
+            interwafer: None,
             tag: String::new(),
         };
         let trace = run_scenario(&s, 11).expect("gnn-test decode scenario runs");
@@ -1672,6 +1847,131 @@ mod tests {
         assert!(faults[0].key().ends_with("-fd0-fs0"), "{}", faults[0].key());
         assert!(faults[1].key().ends_with("-fd0-fsauto"), "{}", faults[1].key());
         assert!(het[0].key().ends_with("-hnone"), "{}", het[0].key());
+    }
+
+    #[test]
+    fn wafer_sweep_suite_shape_and_scaling_digest() {
+        let suite = wafer_sweep_suite();
+        assert_eq!(suite.len(), 8); // wafers {1, 2, 4, 8} × {training, decode}
+        assert!(suite.iter().all(|s| s.wafers.is_some()));
+        let mut keys: Vec<String> = suite.iter().map(Scenario::key).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), suite.len(), "wafer-sweep keys must be unique");
+
+        // A small multi-wafer row end to end: the artifact carries the
+        // scale-out digest with efficiency == speedup / wafers.
+        let mut s = suite[2].clone();
+        assert_eq!(s.wafers, Some(2));
+        s.budget = Budget {
+            iters: 1,
+            init: 2,
+            pool: 8,
+            mc: 8,
+            n1: 0,
+            k: 0,
+        };
+        let seed = scenario_seed(2024, &s.key());
+        let trace = run_scenario(&s, seed).expect("wafer-sweep scenario runs");
+        assert!(!trace.points.is_empty());
+        let digest = scaling_row_metrics(&s, seed, &trace).expect("fixed-wafer rows digest");
+        let eff = digest
+            .get("scaling_efficiency")
+            .and_then(Json::as_f64)
+            .unwrap();
+        let speedup = digest
+            .get("speedup_vs_single_wafer")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(eff > 0.0, "scaling efficiency {eff} out of range");
+        assert_eq!(eff.to_bits(), (speedup / 2.0).to_bits());
+        assert!(
+            digest
+                .get("single_wafer_throughput")
+                .and_then(Json::as_f64)
+                .unwrap()
+                > 0.0
+        );
+        // Same seed → byte-identical digest (the determinism contract
+        // extends through the single-wafer re-evaluation).
+        let trace2 = run_scenario(&s, seed).expect("rerun");
+        assert_eq!(
+            scaling_row_metrics(&s, seed, &trace2).unwrap().to_string(),
+            digest.to_string()
+        );
+        // Area-matched rows never grow a digest.
+        assert!(scaling_row_metrics(&paper_suite()[0], seed, &trace).is_none());
+    }
+
+    #[test]
+    fn from_json_rejects_zero_wafers_and_orphan_interwafer_fields() {
+        // wafers: 0 used to clamp silently to 1 in system sizing — now a
+        // loud spec error (null/omitted means area-matched).
+        let zero = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "random", "wafers": 0}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&zero).unwrap_err();
+        assert!(e.contains("'wafers' must be >= 1"), "{e}");
+        // null still means area-matched, not an error.
+        let auto = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "random", "wafers": null}"#,
+        )
+        .unwrap();
+        assert_eq!(Scenario::from_json(&auto).unwrap().wafers, None);
+
+        let orphan = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "random",
+                "interwafer_links": 8}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&orphan).unwrap_err();
+        assert!(e.contains("'interwafer_links' needs 'interwafer'"), "{e}");
+
+        let bad_topo = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "random",
+                "interwafer": "torus"}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&bad_topo).unwrap_err();
+        assert!(e.contains("ring, mesh2d, switched"), "{e}");
+    }
+
+    #[test]
+    fn interwafer_axis_keys_and_defaults() {
+        let net = InterWaferNet {
+            topology: InterWaferTopology::Ring,
+            links_per_wafer: 8,
+            link_bandwidth: 50.0e9,
+            link_latency: 2.0e-6,
+        };
+        let mut s = wafer_sweep_suite()[2].clone();
+        let base = s.key();
+        assert!(!base.contains("-iw"));
+        s.interwafer = Some(net);
+        assert_eq!(s.key(), format!("{base}-iwring"));
+        assert_ne!(
+            scenario_seed(2024, &s.key()),
+            scenario_seed(2024, &base),
+            "interwafer rows get their own seed stream"
+        );
+        // JSON roundtrip preserves every net field.
+        assert_eq!(Scenario::from_json(&s.to_json()).unwrap(), s);
+        // Unspecified net axes default to the flat-NIC model.
+        let partial = Scenario::from_json(
+            &Json::parse(
+                r#"{"model": "1.7", "phase": "training", "explorer": "random",
+                    "wafers": 4, "interwafer": "mesh2d"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let d = InterWaferNet::default_for(crate::design_space::default_nic_count());
+        let n = partial.interwafer.unwrap();
+        assert_eq!(n.topology, InterWaferTopology::Mesh2d);
+        assert_eq!(n.links_per_wafer, d.links_per_wafer);
+        assert_eq!(n.link_bandwidth, d.link_bandwidth);
+        assert_eq!(n.link_latency, d.link_latency);
     }
 
     #[test]

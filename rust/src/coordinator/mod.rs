@@ -133,6 +133,7 @@ impl DseRun {
             fidelity: self.fidelity,
             faults: self.faults,
             hetero: None,
+            interwafer: None,
         }
     }
 }

@@ -5,13 +5,15 @@
 //! grid values, so the explorer can move in continuous space while only
 //! ever evaluating legal grid points.
 
+use crate::arch::constants::INTER_WAFER_LINK_LATENCY_S;
 use crate::arch::{
-    CoreConfig, Dataflow, IntegrationStyle, MemoryKind, ReticleConfig, WscConfig,
+    CoreConfig, Dataflow, IntegrationStyle, InterWaferNet, InterWaferTopology, MemoryKind,
+    ReticleConfig, WscConfig,
 };
 use crate::design_space::{candidates, default_mem_ctrl_count, default_nic_count, stack_capacity_gb, DesignPoint};
 
 /// Encoded dimensionality.
-pub const DIMS: usize = 12;
+pub const DIMS: usize = 15;
 
 fn log_unit(x: f64, lo: f64, hi: f64) -> f64 {
     ((x.ln() - lo.ln()) / (hi.ln() - lo.ln())).clamp(0.0, 1.0)
@@ -54,7 +56,8 @@ fn nearest_f64(grid: &[f64], target: f64) -> f64 {
 
 /// Encode into [0,1]^DIMS:
 /// [dataflow, log mac, log buf_kb, log buf_bw, log noc_bw, ir_ratio,
-///  mem_kind, log stack_bw, array_h, array_w, reticle_h, reticle_w]
+///  mem_kind, log stack_bw, array_h, array_w, reticle_h, reticle_w,
+///  iw_topology, log iw_link_bw, log iw_links]
 /// (integration style rides on `mem_kind`'s fractional band — see decode).
 pub fn encode(p: &DesignPoint) -> [f64; DIMS] {
     let c = &p.wsc.reticle.core;
@@ -76,6 +79,12 @@ pub fn encode(p: &DesignPoint) -> [f64; DIMS] {
         IntegrationStyle::DieStitching => -0.125,
         IntegrationStyle::InfoSoW => 0.125,
     };
+    let iw = &p.interwafer;
+    let iw_topo = match iw.topology {
+        InterWaferTopology::Ring => 0.0,
+        InterWaferTopology::Mesh2d => 0.5,
+        InterWaferTopology::Switched => 1.0,
+    };
     [
         df,
         log_unit(c.mac_num as f64, 8.0, 4096.0),
@@ -89,6 +98,9 @@ pub fn encode(p: &DesignPoint) -> [f64; DIMS] {
         lin_unit(r.array_w as f64, 1.0, candidates::MAX_ARRAY_DIM as f64),
         lin_unit(p.wsc.reticle_h as f64, 1.0, candidates::MAX_RETICLE_DIM as f64),
         lin_unit(p.wsc.reticle_w as f64, 1.0, candidates::MAX_RETICLE_DIM as f64),
+        iw_topo,
+        log_unit(iw.link_bandwidth, 25.0e9, 400.0e9),
+        log_unit(iw.links_per_wafer as f64, 4.0, 32.0),
     ]
 }
 
@@ -130,7 +142,7 @@ pub fn decode(x: &[f64; DIMS]) -> DesignPoint {
         (unit_lin(u, 1.0, max as f64).round() as usize).clamp(1, max)
     };
 
-    DesignPoint::homogeneous(WscConfig {
+    let mut p = DesignPoint::homogeneous(WscConfig {
         reticle: ReticleConfig {
             core: CoreConfig {
                 dataflow,
@@ -149,7 +161,20 @@ pub fn decode(x: &[f64; DIMS]) -> DesignPoint {
         integration,
         mem_ctrl_count: default_mem_ctrl_count(),
         nic_count: default_nic_count(),
-    })
+    });
+    p.interwafer = InterWaferNet {
+        topology: if x[12] < 1.0 / 3.0 {
+            InterWaferTopology::Ring
+        } else if x[12] < 2.0 / 3.0 {
+            InterWaferTopology::Mesh2d
+        } else {
+            InterWaferTopology::Switched
+        },
+        links_per_wafer: nearest_usize(&candidates::IW_LINKS, unit_log(x[14], 4.0, 32.0)),
+        link_bandwidth: nearest_f64(&candidates::IW_LINK_BW, unit_log(x[13], 25.0e9, 400.0e9)),
+        link_latency: INTER_WAFER_LINK_LATENCY_S,
+    };
+    p
 }
 
 /// Squared Euclidean distance in encoded space (used by the explorer for
@@ -170,6 +195,7 @@ mod tests {
         let x = encode(&p);
         let q = decode(&x);
         assert_eq!(p.wsc, q.wsc);
+        assert_eq!(p.interwafer, q.interwafer);
     }
 
     #[test]
@@ -184,11 +210,16 @@ mod tests {
             },
             |p| {
                 let q = decode(&encode(p));
-                if q.wsc == p.wsc {
-                    Ok(())
-                } else {
-                    Err(format!("decoded {:?}\n != {:?}", q.wsc, p.wsc))
+                if q.wsc != p.wsc {
+                    return Err(format!("decoded {:?}\n != {:?}", q.wsc, p.wsc));
                 }
+                if q.interwafer != p.interwafer {
+                    return Err(format!(
+                        "decoded net {:?}\n != {:?}",
+                        q.interwafer, p.interwafer
+                    ));
+                }
+                Ok(())
             },
         );
     }
@@ -216,6 +247,12 @@ mod tests {
                 }
                 if p.wsc.reticle.array_h == 0 || p.wsc.reticle_h == 0 {
                     return Err("zero dim".into());
+                }
+                if !candidates::IW_LINKS.contains(&p.interwafer.links_per_wafer) {
+                    return Err("iw links off grid".into());
+                }
+                if !candidates::IW_LINK_BW.contains(&p.interwafer.link_bandwidth) {
+                    return Err("iw link bw off grid".into());
                 }
                 Ok(())
             },

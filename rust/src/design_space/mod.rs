@@ -7,9 +7,10 @@
 pub mod encode;
 pub mod validator;
 
+use crate::arch::constants::INTER_WAFER_LINK_LATENCY_S;
 use crate::arch::{
-    CoreConfig, Dataflow, HeteroConfig, IntegrationStyle, MemoryKind,
-    ReticleConfig, WscConfig,
+    CoreConfig, Dataflow, HeteroConfig, IntegrationStyle, InterWaferNet, InterWaferTopology,
+    MemoryKind, ReticleConfig, WscConfig,
 };
 use crate::util::rng::Rng;
 
@@ -32,6 +33,10 @@ pub mod candidates {
     /// constraints; we cap enumeration at these bounds.
     pub const MAX_ARRAY_DIM: usize = 32;
     pub const MAX_RETICLE_DIM: usize = 16;
+    /// Inter-wafer scale-out axes (§VIII-A): external links per wafer and
+    /// a log grid of per-link bandwidth around the paper's 100 GB/s NIC.
+    pub const IW_LINKS: [usize; 4] = [4, 8, 16, 32];
+    pub const IW_LINK_BW: [f64; 5] = [25.0e9, 50.0e9, 100.0e9, 200.0e9, 400.0e9];
 }
 
 /// Stacked-DRAM capacity implied by bandwidth density (paper §VIII-A:
@@ -53,18 +58,23 @@ pub fn default_nic_count() -> usize {
 }
 
 /// A design point: the wafer config plus (for inference studies) the
-/// heterogeneity configuration.
+/// heterogeneity configuration and (for multi-wafer systems) the
+/// inter-wafer network. The net is inert at `wafers: 1` — single-wafer
+/// evaluations never consult it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DesignPoint {
     pub wsc: WscConfig,
     pub hetero: HeteroConfig,
+    pub interwafer: InterWaferNet,
 }
 
 impl DesignPoint {
     pub fn homogeneous(wsc: WscConfig) -> DesignPoint {
+        let interwafer = InterWaferNet::default_for(wsc.nic_count);
         DesignPoint {
             wsc,
             hetero: HeteroConfig::homogeneous(),
+            interwafer,
         }
     }
 }
@@ -86,7 +96,11 @@ pub fn cardinality() -> f64 {
         candidates::MAX_RETICLE_DIM as f64 * candidates::MAX_RETICLE_DIM as f64 * 2.0;
     // Heterogeneity: 4 granularities × prefill-ratio grid (20) × decode-bw grid.
     let hetero = 4.0 * 20.0 * candidates::STACK_BW.len() as f64;
-    core * reticle * wafer * hetero
+    // Inter-wafer network: topology × link count × link bandwidth.
+    let interwafer = 3.0
+        * candidates::IW_LINKS.len() as f64
+        * candidates::IW_LINK_BW.len() as f64;
+    core * reticle * wafer * hetero * interwafer
 }
 
 /// Sample a raw (unvalidated) design point uniformly over the grids.
@@ -122,7 +136,16 @@ pub fn sample_raw(rng: &mut Rng) -> DesignPoint {
         mem_ctrl_count: default_mem_ctrl_count(),
         nic_count: default_nic_count(),
     };
-    DesignPoint::homogeneous(wsc)
+    // Inter-wafer draws come *after* every on-wafer draw so the RNG stream
+    // for the existing axes is unchanged at a given seed.
+    let mut p = DesignPoint::homogeneous(wsc);
+    p.interwafer = InterWaferNet {
+        topology: *rng.choose(&InterWaferTopology::ALL),
+        links_per_wafer: *rng.choose(&candidates::IW_LINKS),
+        link_bandwidth: *rng.choose(&candidates::IW_LINK_BW),
+        link_latency: INTER_WAFER_LINK_LATENCY_S,
+    };
+    p
 }
 
 /// Rejection-sample a *validated* design point. Returns the point plus its
@@ -205,6 +228,7 @@ mod tests {
         let mut saw_offchip = false;
         let mut saw_stack = false;
         let mut saw_stitch = false;
+        let mut topologies = std::collections::BTreeSet::new();
         for _ in 0..200 {
             let p = sample_raw(&mut rng);
             match p.wsc.reticle.memory {
@@ -214,7 +238,11 @@ mod tests {
             if p.wsc.integration == IntegrationStyle::DieStitching {
                 saw_stitch = true;
             }
+            topologies.insert(p.interwafer.topology.name());
+            assert!(candidates::IW_LINKS.contains(&p.interwafer.links_per_wafer));
+            assert!(candidates::IW_LINK_BW.contains(&p.interwafer.link_bandwidth));
         }
         assert!(saw_offchip && saw_stack && saw_stitch);
+        assert_eq!(topologies.len(), InterWaferTopology::ALL.len());
     }
 }

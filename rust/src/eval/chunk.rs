@@ -332,11 +332,18 @@ pub(crate) fn eval_training_on_region(
     };
     let bw_pp_on = wsc.reticle.inter_reticle_bytes_per_sec()
         * (wsc.reticle_h.min(wsc.reticle_w) as f64).max(1.0);
-    let bw_pp_off = wsc.inter_wafer_bytes_per_sec();
+    // Cross-wafer stage boundaries go through the inter-wafer network's
+    // point-to-point model; everything stays on-wafer at wafers == 1
+    // (cross_wafer_frac is exactly 0 there, keeping the single-wafer
+    // result bit-identical to the pre-topology model).
+    let net = &sys.validated.point.interwafer;
     let t_pp = if s.pp == 1 {
         0.0
+    } else if wafers <= 1.0 {
+        pp_bytes * ((1.0 - cross_wafer_frac) / bw_pp_on)
     } else {
-        pp_bytes * ((1.0 - cross_wafer_frac) / bw_pp_on + cross_wafer_frac / bw_pp_off)
+        pp_bytes * ((1.0 - cross_wafer_frac) / bw_pp_on)
+            + net.p2p_s(pp_bytes * cross_wafer_frac, sys.n_wafers)
     };
 
     // DRAM: weight streaming when the chunk state exceeds its SRAM share.
@@ -353,18 +360,23 @@ pub(crate) fn eval_training_on_region(
         (stage_weights / chunk_dram_bw, stage_weights)
     };
 
-    // DP weight update: ring all-reduce of gradients once per step, plus
-    // optimizer state read+write from wherever it lives.
+    // DP weight update: gradient all-reduce once per step, plus optimizer
+    // state read+write from wherever it lives. Replicas co-resident on a
+    // single wafer ride the on-wafer fabric (the pre-PR-9 condition
+    // `dp_on_wafer && wafers <= 1.0` was unreachable — `dp <= wafers` with
+    // one wafer forces dp == 1 — so single-wafer DP was mischarged
+    // inter-wafer bandwidth); across wafers the inter-wafer network prices
+    // the collective. `allreduce_s` takes the *raw* sharded weight bytes —
+    // it applies its own ring-factor — where `grad_bytes` pre-bakes the
+    // `2(dp-1)/dp` volume for the flat on-wafer path and the energy ledger.
     let grad_bytes = 2.0 * (s.dp as f64 - 1.0) / s.dp as f64 * stage_weights;
-    let dp_on_wafer = (s.dp as f64) <= wafers.max(1.0);
-    let bw_dp = if s.dp == 1 {
-        f64::INFINITY
-    } else if dp_on_wafer && wafers <= 1.0 {
-        bw_pp_on
+    let t_dp = if s.dp == 1 {
+        0.0
+    } else if wafers <= 1.0 {
+        grad_bytes / bw_pp_on
     } else {
-        wsc.inter_wafer_bytes_per_sec()
+        net.allreduce_s(stage_weights, s.dp, sys.n_wafers, bw_pp_on)
     };
-    let t_dp = grad_bytes / bw_dp;
     let opt_bytes = if state_bytes <= sram_per_chunk {
         0.0
     } else {
@@ -393,8 +405,13 @@ pub(crate) fn eval_training_on_region(
             * (s.tp > 1) as u64 as f64
             + pp_bytes * (1.0 - cross_wafer_frac))
             * chunks
-            * per_chunk_runs,
-        inter_wafer_bytes: (pp_bytes * cross_wafer_frac * per_chunk_runs + grad_bytes)
+            * per_chunk_runs
+            + if wafers <= 1.0 { grad_bytes * chunks } else { 0.0 },
+        // Gradient traffic only leaves the wafer when replicas span wafers
+        // (the single-wafer share moves to the inter-reticle line above —
+        // the same mischarge the t_dp fix corrects).
+        inter_wafer_bytes: (pp_bytes * cross_wafer_frac * per_chunk_runs
+            + if wafers > 1.0 { grad_bytes } else { 0.0 })
             * chunks,
         dram_stacked_bytes: 0.0,
         dram_offchip_bytes: 0.0,
@@ -586,7 +603,19 @@ pub fn eval_inference(
         / (decode_cores * wsc.reticle.core.peak_flops() * 0.3); // GEMV ~30 % util
     let decode_mem_bytes = weights + spec.kv_cache_bytes_per_seq(mqa) * batch as f64;
     let decode_mem_s = decode_mem_bytes / mem_bw_total;
-    let decode_step_s = decode_compute_s.max(decode_mem_s) * split.sched_overhead;
+    // Multi-wafer decode: weights are sharded across wafers, so every
+    // step ends with a partial-sum all-reduce of the batch's activations
+    // over the inter-wafer network. Exactly zero at one wafer — the
+    // single-wafer path stays bit-identical to the pre-topology model.
+    let net = &sys.validated.point.interwafer;
+    let decode_act_bytes = batch as f64 * spec.hidden as f64 * k::BYTES_PER_ELEM;
+    let decode_net_s = if sys.n_wafers > 1 {
+        net.allreduce_s(decode_act_bytes, sys.n_wafers, sys.n_wafers, f64::INFINITY)
+    } else {
+        0.0
+    };
+    let decode_step_s =
+        (decode_compute_s.max(decode_mem_s) + decode_net_s) * split.sched_overhead;
 
     // --- prefill: compute-bound, refined by the op-level NoC model ---
     let prefill_cores = (sys.total_cores() as f64 * prefill_frac).max(1.0);
@@ -610,7 +639,17 @@ pub fn eval_inference(
     // One layer evaluated at batch min(4): scale to full batch × layers
     // (layers pipeline across the wafer, so latency ≈ layers × per-layer).
     let batch_scale = batch as f64 / batch.min(4) as f64;
-    let prefill_s = op.cycles * spec.layers as f64 * batch_scale / k::CLOCK_HZ;
+    // Multi-wafer prefill: the layer pipeline spans wafers, so the full
+    // batch's boundary activations cross the inter-wafer network once per
+    // wafer boundary. Zero at one wafer (bit-identical single-wafer path).
+    let prefill_net_s = if sys.n_wafers > 1 {
+        let boundary_bytes =
+            batch as f64 * spec.seq_len as f64 * spec.hidden as f64 * k::BYTES_PER_ELEM;
+        (sys.n_wafers as f64 - 1.0) * net.p2p_s(boundary_bytes, sys.n_wafers)
+    } else {
+        0.0
+    };
+    let prefill_s = op.cycles * spec.layers as f64 * batch_scale / k::CLOCK_HZ + prefill_net_s;
 
     // KV handoff between stages (hetero §IX-E).
     let kv_handoff_s = if split.shared {
@@ -637,10 +676,23 @@ pub fn eval_inference(
         sram_bytes: need * out_tokens * 0.5, // streaming reuse estimate
         noc_byte_hops: op.byte_hops * scale * spec.layers as f64 * batch_scale,
         inter_reticle_bytes: kv,
-        inter_wafer_bytes: if hetero.granularity == HeteroGranularity::Wafer {
-            kv
-        } else {
-            0.0
+        inter_wafer_bytes: {
+            let hetero_kv = if hetero.granularity == HeteroGranularity::Wafer {
+                kv
+            } else {
+                0.0
+            };
+            if sys.n_wafers > 1 {
+                hetero_kv
+                    + decode_act_bytes * out_tokens
+                    + batch as f64
+                        * spec.seq_len as f64
+                        * spec.hidden as f64
+                        * k::BYTES_PER_ELEM
+                        * (sys.n_wafers as f64 - 1.0)
+            } else {
+                hetero_kv
+            }
         },
         dram_stacked_bytes: if stacked { decode_mem_bytes * out_tokens } else { 0.0 },
         dram_offchip_bytes: if residency == "offchip" {
@@ -905,5 +957,98 @@ mod tests {
         // Prefill processes 2048x more tokens per invocation; decode step
         // must be far cheaper than prefill.
         assert!(r.decode_step_s < r.prefill_s);
+    }
+
+    #[test]
+    fn single_wafer_dp_uses_on_wafer_bandwidth() {
+        // Regression (PR 9 satellite): dp > 1 on a single wafer must price
+        // the gradient all-reduce on the on-wafer fabric — the pre-fix
+        // `dp_on_wafer && wafers <= 1.0` arm was unreachable, so these
+        // replicas were mischarged NIC bandwidth.
+        let spec = &benchmarks()[0];
+        let s1 = sys(1);
+        let strat = ParallelStrategy { tp: 1, pp: 1, dp: 2, microbatch: 1 };
+        let r = eval_training_with(spec, &s1, strat, &Analytical).expect("evaluates");
+        let wsc = &s1.validated.point.wsc;
+        let bw_on = wsc.reticle.inter_reticle_bytes_per_sec()
+            * (wsc.reticle_h.min(wsc.reticle_w) as f64).max(1.0);
+        let stage_weights = spec.param_bytes(); // tp * pp == 1
+        let grad_bytes = 2.0 * (2.0f64 - 1.0) / 2.0 * stage_weights;
+        assert_eq!(r.breakdown.dp_s.to_bits(), (grad_bytes / bw_on).to_bits());
+        // The two bandwidths differ, so the assertion discriminates the
+        // fixed path from the old mischarge.
+        assert!((bw_on - wsc.inter_wafer_bytes_per_sec()).abs() > 1.0);
+    }
+
+    #[test]
+    fn single_wafer_ignores_interwafer_net() {
+        // Bit-identity contract: at wafers == 1 the inter-wafer network is
+        // never consulted, so even an absurd net leaves every output bit
+        // unchanged.
+        use crate::arch::{InterWaferNet, InterWaferTopology};
+        let spec = &benchmarks()[0];
+        let base_t = eval_training(spec, &sys(1), &Analytical).expect("evaluates");
+        let base_i = eval_inference(spec, &sys(1), 32, false, &Analytical);
+        for topology in InterWaferTopology::ALL {
+            let mut s = sys(1);
+            s.validated.point.interwafer = InterWaferNet {
+                topology,
+                links_per_wafer: 1,
+                link_bandwidth: 1.0,
+                link_latency: 10.0,
+            };
+            let t = eval_training(spec, &s, &Analytical).expect("evaluates");
+            assert_eq!(t.strategy, base_t.strategy);
+            assert_eq!(t.tokens_per_sec.to_bits(), base_t.tokens_per_sec.to_bits());
+            assert_eq!(t.power_w.to_bits(), base_t.power_w.to_bits());
+            assert_eq!(
+                t.energy_per_token_j.to_bits(),
+                base_t.energy_per_token_j.to_bits()
+            );
+            if let Some(bi) = &base_i {
+                let i = eval_inference(spec, &s, 32, false, &Analytical).expect("evaluates");
+                assert_eq!(i.tokens_per_sec.to_bits(), bi.tokens_per_sec.to_bits());
+                assert_eq!(i.decode_step_s.to_bits(), bi.decode_step_s.to_bits());
+                assert_eq!(i.prefill_s.to_bits(), bi.prefill_s.to_bits());
+                assert_eq!(i.power_w.to_bits(), bi.power_w.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_monotone_in_interwafer_bandwidth() {
+        // Shrinking the per-link bandwidth can only slow multi-wafer
+        // training: per-strategy step time is monotone in the link rate
+        // (bandwidth appears only in denominators of the collective
+        // models), and the best-over-strategies inherits it.
+        let spec = &benchmarks()[3];
+        let tps = |bw: f64| {
+            let mut s = sys(4);
+            s.validated.point.interwafer.link_bandwidth = bw;
+            eval_training(spec, &s, &Analytical)
+                .expect("evaluates")
+                .tokens_per_sec
+        };
+        let lo = tps(1.0e9);
+        let mid = tps(25.0e9);
+        let hi = tps(400.0e9);
+        assert!(lo > 0.0);
+        assert!(mid >= lo, "mid {mid} < lo {lo}");
+        assert!(hi >= mid, "hi {hi} < mid {mid}");
+    }
+
+    #[test]
+    fn multiwafer_decode_pays_interwafer_cost() {
+        // At n_wafers > 1 the decode step carries the cross-wafer
+        // activation all-reduce: a slower net must not speed decode up.
+        let spec = &benchmarks()[7];
+        let step = |bw: f64| {
+            let mut s = sys(8);
+            s.validated.point.interwafer.link_bandwidth = bw;
+            eval_inference(spec, &s, 32, false, &Analytical)
+                .expect("evaluates")
+                .decode_step_s
+        };
+        assert!(step(1.0e9) >= step(100.0e9));
     }
 }

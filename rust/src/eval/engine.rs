@@ -59,7 +59,7 @@
 
 use std::sync::Arc;
 
-use crate::arch::HeteroConfig;
+use crate::arch::{HeteroConfig, InterWaferNet};
 use crate::compiler::cache::{chunk_signature, compile_chunk_cached, CachedChunk};
 use crate::design_space::Validated;
 use crate::eval::chunk::{
@@ -199,6 +199,10 @@ pub struct EvalSpec {
     /// Prefill/decode heterogeneity override (§V-B) applied to every
     /// design point; `None` keeps each point's own setting.
     pub hetero: Option<HeteroConfig>,
+    /// Inter-wafer network override ([`crate::arch::interwafer`]) applied
+    /// to every design point; `None` keeps each point's own net. Inert at
+    /// `wafers: 1` — single-wafer evaluations never consult the net.
+    pub interwafer: Option<InterWaferNet>,
 }
 
 impl EvalSpec {
@@ -214,6 +218,7 @@ impl EvalSpec {
             fidelity: Fidelity::Analytical,
             faults: None,
             hetero: None,
+            interwafer: None,
         }
     }
 
@@ -228,6 +233,7 @@ impl EvalSpec {
             fidelity: Fidelity::Analytical,
             faults: None,
             hetero: None,
+            interwafer: None,
         }
     }
 
@@ -256,14 +262,23 @@ impl EvalSpec {
         self
     }
 
+    pub fn with_interwafer(mut self, interwafer: Option<InterWaferNet>) -> EvalSpec {
+        self.interwafer = interwafer;
+        self
+    }
+
     /// Size and configure the system for one design point: the wafer
-    /// policy via [`system_for`], then the spec's fault-injection and
-    /// heterogeneity overrides (both no-ops when `None`).
+    /// policy via [`system_for`], then the spec's fault-injection,
+    /// heterogeneity and inter-wafer-network overrides (all no-ops when
+    /// `None`).
     pub(crate) fn system(&self, v: &Validated) -> SystemConfig {
         let mut sys = system_for(v, self.model.gpu_num, self.wafers);
         sys.faults = self.faults;
         if let Some(h) = self.hetero {
             sys.validated.point.hetero = h;
+        }
+        if let Some(n) = self.interwafer {
+            sys.validated.point.interwafer = n;
         }
         sys
     }
@@ -916,6 +931,7 @@ mod tests {
                     fidelity,
                     faults: None,
                     hetero: None,
+                    interwafer: None,
                 };
                 let engine = Engine::new(es).unwrap();
                 let sync = engine.to_sync().expect("Sync backend has a sync view");
@@ -1047,6 +1063,35 @@ mod tests {
     }
 
     #[test]
+    fn interwafer_override_reaches_multiwafer_eval() {
+        use crate::arch::{InterWaferNet, InterWaferTopology};
+        let spec = benchmarks()[0].clone();
+        let v = validate(&reference_point()).unwrap();
+        let slow = InterWaferNet {
+            topology: InterWaferTopology::Ring,
+            links_per_wafer: 2,
+            link_bandwidth: 1.0e9,
+            link_latency: 1.0e-6,
+        };
+        let base = Engine::new(EvalSpec::training(spec.clone()).with_wafers(Some(4))).unwrap();
+        let slowed = Engine::new(
+            EvalSpec::training(spec)
+                .with_wafers(Some(4))
+                .with_interwafer(Some(slow)),
+        )
+        .unwrap();
+        assert_eq!(slowed.system_for(&v).validated.point.interwafer, slow);
+        let ob = base.eval(&v).expect("base multi-wafer point evaluable");
+        let os = slowed.eval(&v).expect("slow-net point evaluable");
+        assert!(
+            os.throughput <= ob.throughput,
+            "crippling the inter-wafer net must not help ({} vs {})",
+            os.throughput,
+            ob.throughput
+        );
+    }
+
+    #[test]
     fn mfmobo_high_fidelity_rides_the_batched_gnn_sweep() {
         // Miniature MFMOBO with the pseudo-GNN as f0: the high-fidelity
         // stage must produce trace points tagged with the batched GNN
@@ -1144,6 +1189,7 @@ mod tests {
                     fidelity,
                     faults: None,
                     hetero: None,
+                    interwafer: None,
                 };
                 let engine = Engine::new(es).unwrap();
                 let batched = engine.eval_batch(&vs);

@@ -29,6 +29,7 @@ pub fn campaign_summary(result: &CampaignResult) -> Table {
             "power(kW)",
             "vs GPU",
             "retained",
+            "scaling",
         ],
     );
     let dash = || "-".to_string();
@@ -49,10 +50,14 @@ pub fn campaign_summary(result: &CampaignResult) -> Table {
                     // on the defective wafer vs the same design pristine.
                     s.retained_fraction
                         .map_or_else(dash, |x| format!("{:.1}%", 100.0 * x)),
+                    // Fixed-wafer rows: fraction of linear scaling the
+                    // extra wafers retain vs the same design on one wafer.
+                    s.scaling_efficiency
+                        .map_or_else(dash, |x| format!("{:.1}%", 100.0 * x)),
                 ]);
             }
             Some(e) => {
-                t.row(&[s.key, status, dash(), dash(), dash(), dash(), dash(), e]);
+                t.row(&[s.key, status, dash(), dash(), dash(), dash(), dash(), dash(), e]);
             }
         }
     }
@@ -92,6 +97,7 @@ mod tests {
                     fault_defect: None,
                     fault_spares: None,
                     hetero: None,
+                    interwafer: None,
                     tag: String::new(),
                 },
                 Scenario {
@@ -106,6 +112,7 @@ mod tests {
                     fault_defect: None,
                     fault_spares: None,
                     hetero: None,
+                    interwafer: None,
                     tag: String::new(),
                 },
             ],

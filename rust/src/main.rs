@@ -10,12 +10,14 @@
 //!                     fidelity (--fidelity analytical|ca|gnn|gnn-test);
 //!                     --fault-defect M evaluates candidates on defective
 //!                     wafers (--fault-spares N, --fault-seed S)
-//!   campaign          run a scenario matrix (--suite paper|fault|hetero
-//!                     | --scenarios f.json), resumable with --resume,
-//!                     shardable with --shard K/N and fusable with
-//!                     --merge DIR,DIR,...; the fault suite sweeps defect
-//!                     rate × spare rows and digests the degradation
-//!                     curve per row
+//!   campaign          run a scenario matrix (--suite
+//!                     paper|fault|hetero|wafer-sweep | --scenarios
+//!                     f.json), resumable with --resume, shardable with
+//!                     --shard K/N and fusable with --merge DIR,DIR,...;
+//!                     the fault suite sweeps defect rate × spare rows
+//!                     and digests the degradation curve per row; the
+//!                     wafer-sweep suite sweeps fixed wafer counts and
+//!                     digests scaling efficiency per row
 //!   baselines         characterize H100/WSE2/Dojo reference designs
 
 use theseus::util::cli::Args;
@@ -218,8 +220,11 @@ fn cmd_campaign(args: &Args) {
             "paper" => campaign::paper_suite(),
             "fault" => campaign::fault_suite(),
             "hetero" => campaign::hetero_suite(),
+            "wafer-sweep" => campaign::wafer_sweep_suite(),
             _ => {
-                eprintln!("campaign: unknown suite '{suite}' — valid: paper, fault, hetero");
+                eprintln!(
+                    "campaign: unknown suite '{suite}' — valid: paper, fault, hetero, wafer-sweep"
+                );
                 std::process::exit(1);
             }
         }

@@ -316,7 +316,8 @@ impl<'a> Parser<'a> {
                 break;
             }
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -363,7 +364,9 @@ impl<'a> Parser<'a> {
                     // Consume one UTF-8 codepoint.
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let Some(c) = rest.chars().next() else {
+                        return Err(self.err("unterminated string"));
+                    };
                     s.push(c);
                     self.pos += c.len_utf8();
                 }

@@ -64,13 +64,21 @@ impl<K: Eq + Hash, V: Clone> Memo<K, V> {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return f();
         }
-        if let Some(v) = self.map.lock().unwrap().get(&key) {
+        // A panicking compute closure never runs under the lock, so a
+        // poisoned mutex only means another thread died mid-insert on a
+        // pure-value map — recover the map rather than cascading.
+        if let Some(v) = self
+            .map
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(&key)
+        {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return v.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let v = f(); // compute outside the lock
-        let mut m = self.map.lock().unwrap();
+        let mut m = self.map.lock().unwrap_or_else(|p| p.into_inner());
         if m.len() >= self.capacity {
             m.clear(); // epoch eviction (see module docs)
         }
@@ -82,14 +90,14 @@ impl<K: Eq + Hash, V: Clone> Memo<K, V> {
         MemoStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            len: self.map.lock().unwrap().len(),
+            len: self.map.lock().unwrap_or_else(|p| p.into_inner()).len(),
             capacity: self.capacity,
         }
     }
 
     /// Drop all entries and zero the counters (test/bench isolation).
     pub fn clear(&self) {
-        self.map.lock().unwrap().clear();
+        self.map.lock().unwrap_or_else(|p| p.into_inner()).clear();
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
     }

@@ -10,7 +10,8 @@ use std::process::Command;
 
 use theseus::coordinator::campaign::{
     merge_campaign, paper_suite, run_campaign, scenario_result_json, scenarios_from_json,
-    suite_to_json, summary_json, write_artifacts, Budget, CampaignConfig, Fidelity, Scenario,
+    suite_to_json, summary_json, wafer_sweep_suite, write_artifacts, Budget, CampaignConfig,
+    Fidelity, Scenario,
 };
 use theseus::coordinator::Explorer;
 use theseus::util::cli::env_flag;
@@ -37,6 +38,7 @@ fn scenario(
         fault_defect: None,
         fault_spares: None,
         hetero: None,
+        interwafer: None,
         tag: String::new(),
     }
 }
@@ -679,6 +681,69 @@ fn paper_suite_schema_is_golden_pinned() {
     let scenarios = scenarios_from_json(&parsed).unwrap();
     assert_eq!(scenarios, paper_suite());
     assert_eq!(suite_to_json(&scenarios).to_pretty() + "\n", golden);
+}
+
+#[test]
+fn wafer_sweep_suite_schema_is_golden_pinned() {
+    let golden_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/golden/wafer_sweep_suite.json"
+    );
+    let golden = std::fs::read_to_string(golden_path).unwrap();
+    let emitted = suite_to_json(&wafer_sweep_suite()).to_pretty() + "\n";
+    assert_eq!(
+        emitted, golden,
+        "wafer_sweep_suite() JSON schema drifted from tests/golden/wafer_sweep_suite.json — \
+         if the change is intentional, regenerate the golden file so the drift is a reviewed diff"
+    );
+    // decode → encode round-trips byte-identically...
+    let parsed = Json::parse(&golden).unwrap();
+    assert_eq!(parsed.to_pretty() + "\n", golden);
+    // ...including through the typed Scenario layer.
+    let scenarios = scenarios_from_json(&parsed).unwrap();
+    assert_eq!(scenarios, wafer_sweep_suite());
+    assert_eq!(suite_to_json(&scenarios).to_pretty() + "\n", golden);
+}
+
+#[test]
+fn interwafer_scenario_is_a_first_class_campaign_row() {
+    // The inter-wafer network axis rides the campaign path end to end:
+    // its own key suffix (so its own artifact file and derived seed), a
+    // JSON roundtrip through the scenario schema, and a clean multi-wafer
+    // evaluation that digests scaling efficiency.
+    let b = Budget {
+        iters: 1,
+        init: 2,
+        pool: 8,
+        mc: 8,
+        n1: 0,
+        k: 0,
+    };
+    let mut s = scenario(Phase::Training, 0, Some(2), Explorer::Random, Fidelity::Analytical, b);
+    s.interwafer = Some(theseus::arch::InterWaferNet {
+        topology: theseus::arch::InterWaferTopology::Ring,
+        links_per_wafer: 8,
+        link_bandwidth: 100.0e9,
+        link_latency: 1.0e-6,
+    });
+    assert!(s.key().ends_with("-iwring"), "{}", s.key());
+    let back = Scenario::from_json(&s.to_json()).unwrap();
+    assert_eq!(back, s);
+    let result = run_campaign(&fresh_cfg(vec![s], 19, 1)).unwrap();
+    assert_eq!(result.n_errors(), 0);
+    let doc = scenario_result_json(&result.rows[0]);
+    assert!(doc.get("trace").is_some());
+    // Fixed-wafer rows carry the scaling digest; interwafer rows are not
+    // fault rows, so no degradation digest.
+    let scaling = doc.get("scaling").expect("fixed-wafer row must digest scaling");
+    assert!(
+        scaling
+            .get("scaling_efficiency")
+            .and_then(Json::as_f64)
+            .unwrap()
+            > 0.0
+    );
+    assert!(doc.get("fault").is_none());
 }
 
 #[test]

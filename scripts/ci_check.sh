@@ -13,8 +13,10 @@
 # decode scenario and a fault-injection row exercising the degradation
 # digest), a 2-shard campaign leg (--shard 1/2 + --shard 2/2 + --merge,
 # gated on the merged campaign.json matching the unsharded run's bytes
-# modulo resumed markers), and `cargo fmt --check` when rustfmt is
-# installed;
+# modulo resumed markers), a `--suite wafer-sweep` smoke leg (the
+# wafer-count scaling matrix, gated on the scaling-efficiency digest
+# appearing and the artifacts being byte-identical across a re-run), and
+# `cargo fmt --check` when rustfmt is installed;
 # otherwise those steps are skipped with a loud note — some build
 # containers ship no cargo/rustc (see CHANGES.md), and a silent skip would
 # read as a pass.
@@ -98,6 +100,37 @@ EOF
         fi
     done
 
+    echo "== ci_check: wafer-sweep suite smoke (--suite wafer-sweep, twice, byte-identity) =="
+    for d in sweep1 sweep2; do
+        THESEUS_TEST_FAST=1 cargo run -q --release --bin theseus -- campaign \
+            --suite wafer-sweep \
+            --out "$SMOKE_DIR/$d" --seed 1 --jobs 2
+    done
+    if grep -q '"status": "error"' "$SMOKE_DIR/sweep1/campaign.json"; then
+        echo "ci_check: wafer-sweep smoke recorded error rows:" >&2
+        cat "$SMOKE_DIR/sweep1/campaign.json" >&2
+        exit 1
+    fi
+    # Fixed-wafer rows must digest scaling efficiency into the summary —
+    # its absence means the sweep silently lost its scale-out readout.
+    if ! grep -q '"scaling_efficiency"' "$SMOKE_DIR/sweep1/campaign.json"; then
+        echo "ci_check: wafer-sweep smoke produced no scaling digest:" >&2
+        cat "$SMOKE_DIR/sweep1/campaign.json" >&2
+        exit 1
+    fi
+    # The determinism contract: a same-seed re-run writes the same bytes.
+    if ! cmp -s "$SMOKE_DIR/sweep1/campaign.json" "$SMOKE_DIR/sweep2/campaign.json"; then
+        echo "ci_check: wafer-sweep campaign.json diverged between same-seed runs" >&2
+        diff "$SMOKE_DIR/sweep1/campaign.json" "$SMOKE_DIR/sweep2/campaign.json" >&2 || true
+        exit 1
+    fi
+    for f in "$SMOKE_DIR"/sweep1/scenarios/*.json; do
+        if ! cmp -s "$f" "$SMOKE_DIR/sweep2/scenarios/$(basename "$f")"; then
+            echo "ci_check: wafer-sweep scenario artifact $(basename "$f") diverged between same-seed runs" >&2
+            exit 1
+        fi
+    done
+
     if command -v rustfmt >/dev/null 2>&1; then
         echo "== ci_check: cargo fmt --check =="
         cargo fmt --check
@@ -112,8 +145,8 @@ EOF
         echo "ci_check: *** SKIPPED cargo clippy — clippy not installed on this machine ***" >&2
     fi
 else
-    echo "ci_check: *** SKIPPED rust tier-1 + perf gate + campaign smoke + fmt + clippy — no cargo toolchain on this machine ***" >&2
-    echo "ci_check: run 'cargo test -q', scripts/bench_check.sh, the campaign smoke and 'cargo clippy -- -D warnings' on a toolchain-equipped host before merging" >&2
+    echo "ci_check: *** SKIPPED rust tier-1 + perf gate + campaign/wafer-sweep smoke + fmt + clippy — no cargo toolchain on this machine ***" >&2
+    echo "ci_check: run 'cargo test -q', scripts/bench_check.sh, the campaign + wafer-sweep smokes and 'cargo clippy -- -D warnings' on a toolchain-equipped host before merging" >&2
 fi
 
 echo "ci_check: done"
