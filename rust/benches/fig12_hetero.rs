@@ -3,11 +3,14 @@
 use theseus::bench;
 
 fn main() {
-    let (table, rows) = theseus::figures::fig12_hetero_speedup(42);
+    let (table, rows) = theseus::figures::fig12_hetero_speedup(42).unwrap_or_else(|e| {
+        eprintln!("fig12_hetero: {e}");
+        std::process::exit(1);
+    });
     table.print();
     if let Some(best) = rows
         .iter()
-        .max_by(|a, b| a.tokens_per_sec.partial_cmp(&b.tokens_per_sec).unwrap())
+        .max_by(|a, b| a.tokens_per_sec.total_cmp(&b.tokens_per_sec))
     {
         println!(
             "best heterogeneity level: {} (paper expects reticle)",

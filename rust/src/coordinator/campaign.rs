@@ -21,10 +21,18 @@
 //! [`HeteroGranularity`]; [`wafer_sweep_suite`] sweeps fixed wafer
 //! counts through the inter-wafer network model
 //! ([`crate::arch::interwafer`]), digesting each row's scaling
-//! efficiency against the same design on one wafer. [`run_campaign`] fans
+//! efficiency against the same design on one wafer; [`serving_suite`]
+//! evaluates serving traffic ([`crate::serving`]) — each row generates a
+//! deterministic request trace from its [`ServingSpec`] at the row's
+//! derived seed, replays it through the discrete-event simulator on the
+//! row's best searched design, and digests TTFT/latency percentiles,
+//! aggregate tok/s and goodput-under-SLO per row. [`run_campaign`] fans
 //! scenarios over the thread pool while the compile-chunk
 //! ([`crate::compiler::cache`]) and tile ([`crate::eval::tile`]) memo
-//! caches — process-wide singletons — stay shared across scenarios.
+//! caches — process-wide singletons — stay shared across scenarios;
+//! [`run_campaign_with_progress`] additionally reports completion ticks
+//! to a caller-supplied hook (the `--progress` stderr lines) without
+//! touching any artifact bytes.
 //!
 //! # Determinism contract
 //!
@@ -94,6 +102,7 @@ use crate::coordinator::{explore, ref_power_for, Explorer};
 use crate::design_space::validate;
 use crate::eval::engine::{Engine, EvalSpec};
 use crate::explorer::{BoConfig, DesignEval, Trace, TracePoint};
+use crate::serving::{ArrivalProcess, SchedulerKind, ServingSpec};
 use crate::util::json::Json;
 use crate::util::pool;
 use crate::workload::{models, LlmSpec, Phase};
@@ -171,6 +180,12 @@ pub struct Scenario {
     /// to every design point; `None` keeps each point's own net (the
     /// searched axes / flat-NIC default). Inert at `wafers: 1`.
     pub interwafer: Option<InterWaferNet>,
+    /// Serving-traffic workload ([`crate::serving`]): generate a request
+    /// trace at the row's derived seed and replay it on the row's best
+    /// searched design, digesting TTFT/latency/goodput. Inference phases
+    /// only — rejected on training scenarios. `None` keeps the static
+    /// single-point evaluation (and every pre-serving artifact byte).
+    pub serving: Option<ServingSpec>,
     /// Free-form disambiguator, appended to [`Scenario::key`] when
     /// non-empty. Budget-only variations (e.g. an iteration-count sweep)
     /// don't show up in the key, so give each variant a distinct tag —
@@ -225,6 +240,12 @@ impl Scenario {
         }
         if let Some(n) = self.interwafer {
             key.push_str(&format!("-iw{}", n.topology.name()));
+        }
+        if let Some(sv) = self.serving {
+            key.push_str(&format!("-sv{}-r{}", sv.arrival.name(), sv.rate_per_s));
+            if sv.scheduler != SchedulerKind::Fcfs {
+                key.push_str(&format!("-{}", sv.scheduler.name()));
+            }
         }
         if !self.tag.is_empty() {
             key.push('-');
@@ -314,13 +335,25 @@ impl Scenario {
                 .set("interwafer_link_bw", Json::Num(n.link_bandwidth))
                 .set("interwafer_links", Json::Num(n.links_per_wafer as f64));
         }
+        if let Some(sv) = self.serving {
+            o.set("serving", Json::Str(sv.arrival.name().to_string()))
+                .set("serving_output", Json::Num(sv.mean_output as f64))
+                .set("serving_prompt", Json::Num(sv.mean_prompt as f64))
+                .set("serving_rate", Json::Num(sv.rate_per_s))
+                .set("serving_requests", Json::Num(sv.requests as f64))
+                .set(
+                    "serving_scheduler",
+                    Json::Str(sv.scheduler.name().to_string()),
+                )
+                .set("serving_slo", Json::Num(sv.slo_s));
+        }
         o
     }
 
     /// Every field [`Scenario::from_json`] accepts — anything else is
     /// rejected (a typo like `iter` silently falling back to the
     /// 40-iteration paper budget would burn hours across a matrix).
-    pub const FIELDS: [&'static str; 23] = [
+    pub const FIELDS: [&'static str; 30] = [
         "batch",
         "explorer",
         "fault_defect",
@@ -342,6 +375,13 @@ impl Scenario {
         "n1",
         "phase",
         "pool",
+        "serving",
+        "serving_output",
+        "serving_prompt",
+        "serving_rate",
+        "serving_requests",
+        "serving_scheduler",
+        "serving_slo",
         "tag",
         "wafers",
     ];
@@ -472,6 +512,71 @@ impl Scenario {
                 })
             }
         };
+        let serving = match j.get("serving") {
+            None | Some(Json::Null) => {
+                for k in [
+                    "serving_output",
+                    "serving_prompt",
+                    "serving_rate",
+                    "serving_requests",
+                    "serving_scheduler",
+                    "serving_slo",
+                ] {
+                    if !matches!(j.get(k), None | Some(Json::Null)) {
+                        return Err(format!(
+                            "scenario field '{k}' needs 'serving' (the arrival-process name)"
+                        ));
+                    }
+                }
+                None
+            }
+            Some(_) => {
+                let arrival = ArrivalProcess::parse_or_usage(&str_field("serving")?)?;
+                let rate_per_s = f64_field("serving_rate")?.unwrap_or(4.0);
+                if rate_per_s <= 0.0 {
+                    return Err(
+                        "scenario field 'serving_rate' must be positive (requests/s)".to_string()
+                    );
+                }
+                let slo_s = f64_field("serving_slo")?.unwrap_or(1.0);
+                if slo_s <= 0.0 {
+                    return Err(
+                        "scenario field 'serving_slo' must be positive (TTFT SLO, seconds)"
+                            .to_string(),
+                    );
+                }
+                let scheduler = match j.get("serving_scheduler") {
+                    None | Some(Json::Null) => SchedulerKind::Fcfs,
+                    Some(_) => SchedulerKind::parse_or_usage(&str_field("serving_scheduler")?)?,
+                };
+                let requests = usize_field("serving_requests", 64)?;
+                let mean_prompt = usize_field("serving_prompt", 512)?;
+                let mean_output = usize_field("serving_output", 128)?;
+                if requests == 0 || mean_prompt == 0 || mean_output == 0 {
+                    return Err(
+                        "scenario fields 'serving_requests', 'serving_prompt' and \
+                         'serving_output' must be >= 1"
+                            .to_string(),
+                    );
+                }
+                Some(ServingSpec {
+                    arrival,
+                    rate_per_s,
+                    requests,
+                    mean_prompt,
+                    mean_output,
+                    slo_s,
+                    scheduler,
+                })
+            }
+        };
+        if serving.is_some() && !phase.is_inference() {
+            return Err(
+                "scenario field 'serving' needs an inference phase (a request stream is served \
+                 by prefill/decode steps, not by training)"
+                    .to_string(),
+            );
+        }
         let mqa = match j.get("mqa") {
             None | Some(Json::Null) => false,
             Some(v) => v
@@ -520,6 +625,7 @@ impl Scenario {
             fault_spares,
             hetero,
             interwafer,
+            serving,
             tag: match j.get("tag") {
                 None | Some(Json::Null) => String::new(),
                 Some(_) => str_field("tag")?,
@@ -583,6 +689,7 @@ pub fn paper_suite() -> Vec<Scenario> {
                     fault_spares: None,
                     hetero: None,
                     interwafer: None,
+                    serving: None,
                     tag: String::new(),
                 });
             }
@@ -628,6 +735,7 @@ pub fn fault_suite() -> Vec<Scenario> {
                 fault_spares: spares,
                 hetero: None,
                 interwafer: None,
+                serving: None,
                 tag: String::new(),
             });
         }
@@ -667,6 +775,7 @@ pub fn hetero_suite() -> Vec<Scenario> {
                 decode_stack_bw: 2.0,
             }),
             interwafer: None,
+            serving: None,
             tag: String::new(),
         })
         .collect()
@@ -708,8 +817,65 @@ pub fn wafer_sweep_suite() -> Vec<Scenario> {
                 fault_spares: None,
                 hetero: None,
                 interwafer: None,
+                serving: None,
                 tag: String::new(),
             });
+        }
+    }
+    out
+}
+
+/// Serving-traffic matrix (`theseus campaign --suite serving`): arrival
+/// process × arrival rate × {1, 4} wafers on one representative model,
+/// decode phase, exercising the [`crate::serving`] subsystem end to end
+/// through the campaign path. Each row generates its trace at the row's
+/// derived seed, replays it on the row's best searched design through
+/// the discrete-event simulator (multi-wafer rows route KV hand-offs
+/// through the inter-wafer network), and carries the `serving` digest
+/// ([`serving_row_metrics`]): aggregate tok/s, TTFT/latency P50/P99 and
+/// goodput under the SLO — the matrix reads out directly as the
+/// saturation curve of a design under load.
+pub fn serving_suite() -> Vec<Scenario> {
+    // Random search at a reduced budget: the serving curve compares
+    // traffic shapes against each other, not against the paper's full BO
+    // budget.
+    let budget = Budget {
+        iters: 8,
+        init: 4,
+        pool: 48,
+        mc: 32,
+        n1: 0,
+        k: 0,
+    };
+    let mut out = Vec::new();
+    for arrival in ArrivalProcess::ALL {
+        for rate in [4.0, 16.0] {
+            for wafers in [1usize, 4] {
+                out.push(Scenario {
+                    model: "GPT-1.7B".to_string(),
+                    phase: Phase::Decode,
+                    batch: 32,
+                    mqa: false,
+                    wafers: Some(wafers),
+                    explorer: Explorer::Random,
+                    fidelity: Fidelity::Analytical,
+                    budget,
+                    fault_defect: None,
+                    fault_spares: None,
+                    hetero: None,
+                    interwafer: None,
+                    serving: Some(ServingSpec {
+                        arrival,
+                        rate_per_s: rate,
+                        requests: 48,
+                        mean_prompt: 512,
+                        mean_output: 64,
+                        slo_s: 0.5,
+                        scheduler: SchedulerKind::Fcfs,
+                    }),
+                    tag: String::new(),
+                });
+            }
         }
     }
     out
@@ -902,6 +1068,12 @@ pub fn run_scenario(s: &Scenario, seed: u64) -> Result<Trace, String> {
             ));
         }
     }
+    // A serving row whose trace cannot be simulated (no surviving design,
+    // a design the simulator rejects, a wedged schedule) must be a loud
+    // error row, not a row that silently lacks its digest — run the digest
+    // once here for validation; the artifact/summary paths recompute it
+    // deterministically (fault/scaling digest precedent).
+    serving_row_digest(s, seed, &trace)?;
     Ok(trace)
 }
 
@@ -974,6 +1146,53 @@ pub fn scaling_row_metrics(s: &Scenario, seed: u64, trace: &Trace) -> Option<Jso
         .set("single_wafer_throughput", Json::Num(single.throughput))
         .set("speedup_vs_single_wafer", Json::Num(speedup));
     Some(o)
+}
+
+/// Serving digest of a serving row, with loud failures: generate the
+/// row's trace at its derived seed, replay it on the row's best Pareto
+/// design through the discrete-event simulator
+/// ([`crate::serving::simulate`]), and digest the outcomes
+/// ([`crate::serving::ServingMetrics`]). `Ok(None)` for non-serving rows;
+/// `Err` when a serving row cannot produce its digest (no surviving
+/// design, the simulator rejects the design, a wedged schedule) — the
+/// error [`run_scenario`] surfaces as the row's isolating error.
+/// Deterministic in (scenario, seed), so resumed rows reading the digest
+/// back from their artifact match fresh rows byte for byte.
+pub fn serving_row_digest(s: &Scenario, seed: u64, trace: &Trace) -> Result<Option<Json>, String> {
+    let Some(sv) = s.serving else {
+        return Ok(None);
+    };
+    let spec = models::find_or_usage(&s.model)?;
+    let best = match sorted_front(trace).into_iter().next() {
+        Some(p) => p.clone(),
+        None => {
+            return Err(format!(
+                "serving scenario '{}': no design evaluated successfully — nothing to replay \
+                 the request trace on",
+                s.key()
+            ))
+        }
+    };
+    let v = validate(&best.point).map_err(|e| {
+        format!(
+            "serving scenario '{}': best design failed re-validation: {e}",
+            s.key()
+        )
+    })?;
+    let engine = Engine::new(s.eval_spec(&spec, seed))?;
+    let sys = engine.system_for(&v);
+    let requests = sv.trace(seed);
+    let metrics = crate::serving::evaluate(&engine, &sys, &requests, sv.scheduler, sv.slo_s)
+        .map_err(|e| format!("serving scenario '{}': {e}", s.key()))?;
+    Ok(Some(metrics.to_json()))
+}
+
+/// [`serving_row_digest`] as the digest-shaped `Option` the artifact and
+/// summary writers consume ([`fault_row_metrics`] convention). Real
+/// failures were already surfaced loudly by [`run_scenario`]'s digest
+/// validation, so flattening them away here cannot hide one.
+pub fn serving_row_metrics(s: &Scenario, seed: u64, trace: &Trace) -> Option<Json> {
+    serving_row_digest(s, seed, trace).ok().flatten()
 }
 
 fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
@@ -1099,6 +1318,20 @@ fn probe_artifact(dir: &std::path::Path, s: &Scenario, seed: u64) -> Probe {
 /// overwrite each other's `scenarios/<key>.json` artifact. Give
 /// budget-only variants distinct `tag`s.
 pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignResult, String> {
+    run_campaign_with_progress(cfg, None)
+}
+
+/// [`run_campaign`] with a completion hook: `progress(done, total, key)`
+/// fires after each scenario finishes (evaluated, resumed or conflicted),
+/// from whichever pool worker finished it. The hook is side-channel only
+/// — it never touches rows or artifacts, so `--progress` runs stay
+/// byte-identical to silent ones (the ci smoke leg diffs them). Callers
+/// print from the hook (the campaign layer itself never writes stderr —
+/// loud-failure convention).
+pub fn run_campaign_with_progress(
+    cfg: &CampaignConfig,
+    progress: Option<&(dyn Fn(usize, usize, &str) + Sync)>,
+) -> Result<CampaignResult, String> {
     check_unique_keys(&cfg.scenarios)?;
     // The duplicate-key guard above runs on the FULL list — a collision is
     // a campaign-spec bug even when the colliding pair lands in different
@@ -1106,8 +1339,11 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignResult, String> {
     // position; derived seeds are position-independent, so the subset's
     // artifacts match the unsharded run's byte for byte.
     let selected = cfg.sharded_scenarios()?;
+    let total = selected.len();
+    let done = std::sync::atomic::AtomicUsize::new(0);
     let rows = pool::par_map_workers(&selected, cfg.jobs, |s| {
-        let seed = scenario_seed(cfg.seed, &s.key());
+        let key = s.key();
+        let seed = scenario_seed(cfg.seed, &key);
         let outcome = match cfg
             .resume_from
             .as_deref()
@@ -1120,6 +1356,10 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignResult, String> {
                     .unwrap_or_else(|p| Err(panic_message(p))),
             ),
         };
+        if let Some(cb) = progress {
+            let n = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+            cb(n, total, &key);
+        }
         ScenarioResult {
             scenario: s.clone(),
             seed,
@@ -1318,6 +1558,13 @@ pub struct RowSummary {
     /// Fixed-wafer-count rows only: speedup over the same best design on
     /// a single wafer, divided by the wafer count.
     pub scaling_efficiency: Option<f64>,
+    /// Serving rows only: aggregate output tokens/s over the simulated
+    /// trace's makespan.
+    pub serving_tokens_per_sec: Option<f64>,
+    /// Serving rows only: P99 time-to-first-token, seconds.
+    pub serving_ttft_p99: Option<f64>,
+    /// Serving rows only: requests/s whose TTFT met the SLO.
+    pub serving_goodput: Option<f64>,
 }
 
 impl RowSummary {
@@ -1348,6 +1595,9 @@ fn error_summary(key: String, e: String, resumed: bool) -> RowSummary {
         retained_fraction: None,
         perf_per_watt_per_wafer: None,
         scaling_efficiency: None,
+        serving_tokens_per_sec: None,
+        serving_ttft_p99: None,
+        serving_goodput: None,
     }
 }
 
@@ -1360,7 +1610,7 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
     // scenario spec, so resumed rows digest to the same bytes as fresh
     // ones.
     let gpu = models::find(&r.scenario.model).and_then(|spec| gpu_reference(&r.scenario, &spec));
-    let (points, final_hv, best, fault, scaling) = match &r.outcome {
+    let (points, final_hv, best, fault, scaling, serving) = match &r.outcome {
         Outcome::Done(Ok(trace)) => {
             let front = sorted_front(trace);
             let best = front
@@ -1372,6 +1622,7 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
                 best,
                 fault_row_metrics(&r.scenario, r.seed, trace),
                 scaling_row_metrics(&r.scenario, r.seed, trace),
+                serving_row_metrics(&r.scenario, r.seed, trace),
             )
         }
         Outcome::Resumed(doc) => {
@@ -1393,6 +1644,7 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
                 best,
                 doc.get("fault").cloned(),
                 doc.get("scaling").cloned(),
+                doc.get("serving").cloned(),
             )
         }
         Outcome::Done(Err(_)) | Outcome::ResumeConflict(_) => {
@@ -1408,6 +1660,12 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
     };
     let scaling_f64 = |field: &str| {
         scaling
+            .as_ref()
+            .and_then(|f| f.get(field))
+            .and_then(Json::as_f64)
+    };
+    let serving_f64 = |field: &str| {
+        serving
             .as_ref()
             .and_then(|f| f.get(field))
             .and_then(Json::as_f64)
@@ -1429,6 +1687,9 @@ pub fn summarize_row(r: &ScenarioResult) -> RowSummary {
         retained_fraction: fault_f64("retained_fraction"),
         perf_per_watt_per_wafer: fault_f64("perf_per_watt_per_wafer"),
         scaling_efficiency: scaling_f64("scaling_efficiency"),
+        serving_tokens_per_sec: serving_f64("tokens_per_sec"),
+        serving_ttft_p99: serving_f64("ttft_p99_s"),
+        serving_goodput: serving_f64("goodput_per_sec"),
     }
 }
 
@@ -1479,6 +1740,11 @@ pub fn scenario_result_json(r: &ScenarioResult) -> Json {
             if let Some(sc) = scaling_row_metrics(&r.scenario, r.seed, trace) {
                 doc.set("scaling", sc);
             }
+            // Serving rows carry their traffic digest for the same reason:
+            // resumed rows never re-run the simulator.
+            if let Some(sv) = serving_row_metrics(&r.scenario, r.seed, trace) {
+                doc.set("serving", sv);
+            }
         }
         Outcome::Done(Err(e)) | Outcome::ResumeConflict(e) => {
             doc.set("status", Json::Str("error".to_string()))
@@ -1527,6 +1793,17 @@ pub fn summary_json(result: &CampaignResult) -> Json {
                 // keep their exact pre-sweep summary bytes.
                 if let Some(se) = s.scaling_efficiency {
                     o.set("scaling_efficiency", Json::Num(se));
+                }
+                // Likewise serving rows only: static campaigns keep their
+                // exact pre-serving summary bytes.
+                if let Some(g) = s.serving_goodput {
+                    o.set("serving_goodput", Json::Num(g));
+                }
+                if let Some(tps) = s.serving_tokens_per_sec {
+                    o.set("serving_tokens_per_sec", Json::Num(tps));
+                }
+                if let Some(t) = s.serving_ttft_p99 {
+                    o.set("serving_ttft_p99", Json::Num(t));
                 }
             }
             Some(e) => {
@@ -1637,6 +1914,7 @@ mod tests {
                     link_bandwidth: 50.0e9,
                     link_latency: 2.0e-6,
                 }),
+                serving: None,
                 tag: "Budget Sweep A".to_string(),
             },
             fault_suite()[3].clone(),
@@ -1785,6 +2063,7 @@ mod tests {
             fault_spares: None,
             hetero: None,
             interwafer: None,
+            serving: None,
             tag: String::new(),
         };
         let e = run_scenario(&s, 1).unwrap_err();
@@ -1818,6 +2097,7 @@ mod tests {
             fault_spares: None,
             hetero: None,
             interwafer: None,
+            serving: None,
             tag: String::new(),
         };
         let trace = run_scenario(&s, 11).expect("gnn-test decode scenario runs");
@@ -2120,6 +2400,133 @@ mod tests {
         )
         .unwrap_err();
         assert!(e.contains("inference phase"), "{e}");
+    }
+
+    #[test]
+    fn serving_axis_keys_and_json_roundtrip() {
+        // The suffix sits after the interwafer suffix; pre-serving
+        // scenario keys keep their exact values.
+        let mut s = paper_suite()
+            .into_iter()
+            .find(|s| s.phase == Phase::Decode)
+            .unwrap();
+        let base = s.key();
+        assert!(!base.contains("-sv"));
+        s.serving = Some(ServingSpec {
+            arrival: ArrivalProcess::Poisson,
+            rate_per_s: 4.0,
+            requests: 48,
+            mean_prompt: 512,
+            mean_output: 64,
+            slo_s: 0.5,
+            scheduler: SchedulerKind::Fcfs,
+        });
+        assert_eq!(s.key(), format!("{base}-svpoisson-r4"));
+        // A non-default scheduler is part of the key (distinct artifacts).
+        let mut pp = s.clone();
+        pp.serving = Some(ServingSpec {
+            scheduler: SchedulerKind::PrefillPriority,
+            ..pp.serving.unwrap()
+        });
+        assert_eq!(pp.key(), format!("{base}-svpoisson-r4-prefill-priority"));
+        assert_ne!(
+            scenario_seed(2024, &s.key()),
+            scenario_seed(2024, &base),
+            "serving rows get their own seed stream"
+        );
+
+        // JSON roundtrip through the object and the text form.
+        for sc in [s.clone(), pp] {
+            let j = sc.to_json();
+            assert_eq!(Scenario::from_json(&j).unwrap(), sc);
+            let reparsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(Scenario::from_json(&reparsed).unwrap(), sc);
+        }
+    }
+
+    #[test]
+    fn serving_fields_parse_defaults_and_reject_loudly() {
+        // Defaults: only the arrival-process name is required.
+        let parsed = Scenario::from_json(
+            &Json::parse(
+                r#"{"model": "1.7", "phase": "decode", "explorer": "random",
+                    "serving": "poisson"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let sv = parsed.serving.unwrap();
+        assert_eq!(sv.arrival, ArrivalProcess::Poisson);
+        assert_eq!(sv.rate_per_s, 4.0);
+        assert_eq!(sv.requests, 64);
+        assert_eq!(sv.mean_prompt, 512);
+        assert_eq!(sv.mean_output, 128);
+        assert_eq!(sv.slo_s, 1.0);
+        assert_eq!(sv.scheduler, SchedulerKind::Fcfs);
+
+        // Orphan serving_* without the arrival process is a loud error.
+        let orphan = Json::parse(
+            r#"{"model": "1.7", "phase": "decode", "explorer": "random",
+                "serving_rate": 8}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&orphan).unwrap_err();
+        assert!(e.contains("needs 'serving'"), "{e}");
+
+        // Unknown arrival processes and schedulers list the registries.
+        let bad_arrival = Json::parse(
+            r#"{"model": "1.7", "phase": "decode", "explorer": "random",
+                "serving": "diurnal"}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&bad_arrival).unwrap_err();
+        assert!(e.contains("poisson, bursty"), "{e}");
+        let bad_sched = Json::parse(
+            r#"{"model": "1.7", "phase": "decode", "explorer": "random",
+                "serving": "poisson", "serving_scheduler": "lifo"}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&bad_sched).unwrap_err();
+        assert!(e.contains("fcfs, prefill-priority"), "{e}");
+
+        // Non-positive rate/SLO are spec errors, not silent clamps.
+        for (field, msg) in [
+            ("serving_rate", "'serving_rate' must be positive"),
+            ("serving_slo", "'serving_slo' must be positive"),
+        ] {
+            let bad = Json::parse(&format!(
+                r#"{{"model": "1.7", "phase": "decode", "explorer": "random",
+                    "serving": "poisson", "{field}": 0}}"#,
+            ))
+            .unwrap();
+            let e = Scenario::from_json(&bad).unwrap_err();
+            assert!(e.contains(msg), "{field}: {e}");
+        }
+
+        // Training rejects the serving axis loudly (a request stream is
+        // served by prefill/decode steps).
+        let training = Json::parse(
+            r#"{"model": "1.7", "phase": "training", "explorer": "random",
+                "serving": "poisson"}"#,
+        )
+        .unwrap();
+        let e = Scenario::from_json(&training).unwrap_err();
+        assert!(e.contains("inference phase"), "{e}");
+    }
+
+    #[test]
+    fn serving_suite_shape() {
+        let suite = serving_suite();
+        assert_eq!(suite.len(), 8); // 2 arrivals × 2 rates × {1, 4} wafers
+        assert!(suite.iter().all(|s| s.serving.is_some()));
+        assert!(suite.iter().all(|s| s.phase == Phase::Decode));
+        assert!(suite
+            .iter()
+            .all(|s| matches!(s.wafers, Some(1) | Some(4))));
+        let mut keys: Vec<String> = suite.iter().map(Scenario::key).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), suite.len(), "serving keys must be unique");
     }
 
     #[test]

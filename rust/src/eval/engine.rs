@@ -392,19 +392,25 @@ impl Engine {
     /// rides the backend's per-chunk estimator — any fidelity, including
     /// the CA simulator and the (pseudo-)GNN.
     pub fn eval_infer_system(&self, sys: &SystemConfig) -> Option<InferEval> {
+        self.eval_infer_system_at_batch(sys, self.spec.batch)
+    }
+
+    /// Inference evaluation at an explicit batch size, overriding the
+    /// spec's. The serving simulator ([`crate::serving`]) drives this with
+    /// the per-round in-flight count so continuous batching re-prices each
+    /// round at its actual occupancy instead of the spec's static batch.
+    pub fn eval_infer_system_at_batch(
+        &self,
+        sys: &SystemConfig,
+        batch: usize,
+    ) -> Option<InferEval> {
         let noc: &dyn NocEstimator = match &self.backend {
             Backend::Analytical(a) => a,
             Backend::CycleAccurate(ca) => ca,
             Backend::PseudoGnn(b) => b,
             Backend::Gnn(m) => m.as_ref(),
         };
-        eval_inference(
-            &self.spec.model,
-            sys,
-            self.spec.batch.max(1),
-            self.spec.mqa,
-            noc,
-        )
+        eval_inference(&self.spec.model, sys, batch.max(1), self.spec.mqa, noc)
     }
 }
 

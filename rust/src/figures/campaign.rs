@@ -30,6 +30,8 @@ pub fn campaign_summary(result: &CampaignResult) -> Table {
             "vs GPU",
             "retained",
             "scaling",
+            "ttft p99",
+            "goodput",
         ],
     );
     let dash = || "-".to_string();
@@ -54,10 +56,28 @@ pub fn campaign_summary(result: &CampaignResult) -> Table {
                     // extra wafers retain vs the same design on one wafer.
                     s.scaling_efficiency
                         .map_or_else(dash, |x| format!("{:.1}%", 100.0 * x)),
+                    // Serving rows: tail time-to-first-token and goodput
+                    // under the scenario's SLO.
+                    s.serving_ttft_p99
+                        .map_or_else(dash, |x| format!("{:.0}ms", 1e3 * x)),
+                    s.serving_goodput
+                        .map_or_else(dash, |x| format!("{x:.2}/s")),
                 ]);
             }
             Some(e) => {
-                t.row(&[s.key, status, dash(), dash(), dash(), dash(), dash(), dash(), e]);
+                t.row(&[
+                    s.key,
+                    status,
+                    dash(),
+                    dash(),
+                    dash(),
+                    dash(),
+                    dash(),
+                    dash(),
+                    dash(),
+                    dash(),
+                    e,
+                ]);
             }
         }
     }
@@ -98,6 +118,7 @@ mod tests {
                     fault_spares: None,
                     hetero: None,
                     interwafer: None,
+                    serving: None,
                     tag: String::new(),
                 },
                 Scenario {
@@ -113,6 +134,7 @@ mod tests {
                     fault_spares: None,
                     hetero: None,
                     interwafer: None,
+                    serving: None,
                     tag: String::new(),
                 },
             ],

@@ -18,16 +18,26 @@ pub struct Fig12Row {
     pub speedup_vs_homog: f64,
 }
 
-pub fn fig12_hetero_speedup(seed: u64) -> (Table, Vec<Fig12Row>) {
+/// Errors instead of panicking when no base design can be sampled or the
+/// homogeneous reference fails to evaluate — both mean the seed (or the
+/// design space) changed out from under the figure, which callers should
+/// report, not crash on.
+pub fn fig12_hetero_speedup(seed: u64) -> Result<(Table, Vec<Fig12Row>), String> {
     let spec = models::benchmarks()[7].clone(); // GPT-175B
     let batch = 32;
     let mut rng = Rng::new(seed);
 
     // Base stacked-memory design for the decode stage comparison.
-    let base = sample_stacked(&mut rng, 1.0).expect("base design");
+    let base = sample_stacked(&mut rng, 1.0).ok_or_else(|| {
+        format!("fig12: no valid stacked-memory base design in 400 samples at seed {seed}")
+    })?;
     let homog_sys = SystemConfig::area_matched(base.clone(), spec.gpu_num);
-    let homog = eval_inference(&spec, &homog_sys, batch, false, &Analytical)
-        .expect("homogeneous eval");
+    let homog = eval_inference(&spec, &homog_sys, batch, false, &Analytical).ok_or_else(|| {
+        format!(
+            "fig12: homogeneous base design infeasible for {} inference at seed {seed}",
+            spec.name
+        )
+    })?;
 
     let mut rows = Vec::new();
     for gran in [
@@ -92,7 +102,7 @@ pub fn fig12_hetero_speedup(seed: u64) -> (Table, Vec<Fig12Row>) {
             format!("{:.2}x", r.speedup_vs_homog),
         ]);
     }
-    (t, rows)
+    Ok((t, rows))
 }
 
 fn sample_stacked(rng: &mut Rng, bw: f64) -> Option<crate::design_space::Validated> {
@@ -115,7 +125,7 @@ mod tests {
 
     #[test]
     fn fig12_smoke() {
-        let (t, rows) = fig12_hetero_speedup(21);
+        let (t, rows) = fig12_hetero_speedup(21).expect("fig12 generates at seed 21");
         assert!(!rows.is_empty());
         assert!(t.render().contains("Fig. 12"));
         // All four granularities represented.

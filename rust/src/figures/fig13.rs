@@ -161,12 +161,7 @@ pub fn fig13_design_space(bi: usize, samples: usize, seed: u64) -> (Table, Fig13
         .into_iter()
         .map(|i| &points[i])
         .collect();
-    front_pts.sort_by(|a, b| {
-        b.objective
-            .throughput
-            .partial_cmp(&a.objective.throughput)
-            .unwrap()
-    });
+    front_pts.sort_by(|a, b| b.objective.throughput.total_cmp(&a.objective.throughput));
     for p in front_pts.iter().take(8) {
         t.row(&[
             if p.stacking { "pareto(stack)" } else { "pareto(offchip)" }.to_string(),

@@ -66,9 +66,22 @@ pub fn fig8_explorer_comparison(
         let high = match (&shared_gnn, fidelity) {
             (Some(m), _) => Engine::with_gnn_model(EvalSpec::training(spec.clone()), m.clone()),
             (None, Fidelity::Gnn) => Engine::analytical_training(spec.clone()),
-            // lint: allow(panic) Engine::new only errs for Fidelity::Gnn without a model; that arm matched above
-            (None, f) => Engine::new(EvalSpec::training(spec.clone()).with_fidelity(f))
-                .expect("non-gnn backends are always available"),
+            // Engine::new only errs for Fidelity::Gnn without a model (that
+            // arm matched above) — but if the invariant ever breaks, warn
+            // and degrade to analytical instead of panicking mid-figure.
+            (None, f) => match Engine::new(EvalSpec::training(spec.clone()).with_fidelity(f)) {
+                Ok(engine) => engine,
+                Err(e) => {
+                    crate::util::warn::warn_once(
+                        "fig8-backend",
+                        &format!(
+                            "fig8: fidelity '{}' unavailable: {e}; high fidelity = analytical",
+                            f.name()
+                        ),
+                    );
+                    Engine::analytical_training(spec.clone())
+                }
+            },
         };
         let ref_power = ref_power_for(&spec);
 

@@ -131,7 +131,7 @@ pub fn fig10_reticle_granularity(bi: usize, seed: u64) -> (Table, Vec<Fig10Row>)
             });
         }
     }
-    rows.sort_by(|a, b| a.reticle_tflops.partial_cmp(&b.reticle_tflops).unwrap());
+    rows.sort_by(|a, b| a.reticle_tflops.total_cmp(&b.reticle_tflops));
 
     let mut t = Table::new(
         &format!("Fig. 10 — reticle granularity ({}, training)", spec.name),

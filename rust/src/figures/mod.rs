@@ -10,8 +10,10 @@ pub mod fig9;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
+pub mod serving;
 
 pub use campaign::campaign_summary;
+pub use serving::serving_summary;
 pub use fig7::fig7_eval_comparison;
 pub use fig8::fig8_explorer_comparison;
 pub use fig9::{fig10_reticle_granularity, fig9_core_granularity};

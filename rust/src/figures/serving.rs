@@ -1,0 +1,81 @@
+//! Serving-digest table: the metric readout `theseus serve-sim` prints
+//! after replaying a request trace on a design. Rendered from the same
+//! [`ServingMetrics`] digest the campaign serializes per serving row
+//! ([`crate::coordinator::campaign::serving_row_metrics`]), so table and
+//! artifact cannot drift.
+
+use crate::serving::ServingMetrics;
+use crate::util::table::Table;
+
+/// Render one serving digest as a two-column metric table.
+pub fn serving_summary(m: &ServingMetrics) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Serving digest — {} requests over {:.2}s",
+            m.completed, m.makespan_s
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["completed requests".to_string(), m.completed.to_string()]);
+    t.row(&[
+        "output tokens/s".to_string(),
+        format!("{:.1}", m.tokens_per_sec),
+    ]);
+    t.row(&["TTFT p50".to_string(), format!("{:.1}ms", 1e3 * m.ttft_p50_s)]);
+    t.row(&["TTFT p99".to_string(), format!("{:.1}ms", 1e3 * m.ttft_p99_s)]);
+    t.row(&[
+        "latency p50".to_string(),
+        format!("{:.1}ms", 1e3 * m.latency_p50_s),
+    ]);
+    t.row(&[
+        "latency p99".to_string(),
+        format!("{:.1}ms", 1e3 * m.latency_p99_s),
+    ]);
+    t.row(&[
+        format!("goodput (TTFT <= {:.0}ms)", 1e3 * m.slo_s),
+        format!("{:.2} req/s", m.goodput_per_sec),
+    ]);
+    t.row(&["makespan".to_string(), format!("{:.2}s", m.makespan_s)]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::RequestOutcome;
+
+    #[test]
+    fn serving_summary_renders_every_digest_metric() {
+        let outcomes = vec![
+            RequestOutcome {
+                id: 0,
+                arrival_s: 0.0,
+                first_token_s: 0.2,
+                finish_s: 1.0,
+                output_tokens: 16,
+            },
+            RequestOutcome {
+                id: 1,
+                arrival_s: 0.5,
+                first_token_s: 1.5,
+                finish_s: 2.5,
+                output_tokens: 16,
+            },
+        ];
+        let m = ServingMetrics::digest(&outcomes, 1.0).unwrap();
+        let rendered = serving_summary(&m).render();
+        assert!(rendered.contains("Serving digest"), "{rendered}");
+        for label in [
+            "completed requests",
+            "output tokens/s",
+            "TTFT p50",
+            "TTFT p99",
+            "latency p50",
+            "latency p99",
+            "goodput",
+            "makespan",
+        ] {
+            assert!(rendered.contains(label), "missing {label}: {rendered}");
+        }
+    }
+}

@@ -10,7 +10,8 @@
 //! [`components`]), the workload compiler ([`workload`], [`compiler`]), the
 //! hierarchical evaluation engine ([`eval`]) backed by a cycle-accurate NoC
 //! simulator ([`noc_sim`]) and an AOT-compiled GNN congestion model executed
-//! via PJRT ([`runtime`]), and the multi-fidelity multi-objective Bayesian
+//! via PJRT ([`runtime`]), a discrete-event serving-traffic simulator atop
+//! the engine ([`serving`]), and the multi-fidelity multi-objective Bayesian
 //! explorer ([`explorer`]) orchestrated by [`coordinator`].
 
 // The whole crate is safe Rust by construction (in-tree json/rng/pool
@@ -30,6 +31,7 @@ pub mod explorer;
 pub mod figures;
 pub mod noc_sim;
 pub mod runtime;
+pub mod serving;
 pub mod util;
 pub mod workload;
 pub mod yield_model;

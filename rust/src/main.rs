@@ -11,13 +11,24 @@
 //!                     --fault-defect M evaluates candidates on defective
 //!                     wafers (--fault-spares N, --fault-seed S)
 //!   campaign          run a scenario matrix (--suite
-//!                     paper|fault|hetero|wafer-sweep | --scenarios
-//!                     f.json), resumable with --resume, shardable with
-//!                     --shard K/N and fusable with --merge DIR,DIR,...;
+//!                     paper|fault|hetero|wafer-sweep|serving |
+//!                     --scenarios f.json), resumable with --resume,
+//!                     shardable with --shard K/N and fusable with
+//!                     --merge DIR,DIR,...; --progress prints per-row
+//!                     completion ticks to stderr (artifacts unchanged);
 //!                     the fault suite sweeps defect rate × spare rows
 //!                     and digests the degradation curve per row; the
 //!                     wafer-sweep suite sweeps fixed wafer counts and
-//!                     digests scaling efficiency per row
+//!                     digests scaling efficiency per row; the serving
+//!                     suite replays request traces through the
+//!                     discrete-event serving simulator and digests
+//!                     TTFT/latency/goodput per row
+//!   serve-sim         replay one request stream on the reference design
+//!                     (--model, --batch, --wafers, --arrival, --rate,
+//!                     --requests, --prompt, --output, --slo,
+//!                     --scheduler, --seed, --mqa; --trace FILE replays a
+//!                     recorded JSON trace, --dump FILE writes the
+//!                     generated trace)
 //!   baselines         characterize H100/WSE2/Dojo reference designs
 
 use theseus::util::cli::Args;
@@ -31,10 +42,11 @@ fn main() {
         Some("eval") => cmd_eval(&args),
         Some("dse") => cmd_dse(&args),
         Some("campaign") => cmd_campaign(&args),
+        Some("serve-sim") => cmd_serve_sim(&args),
         Some("baselines") => cmd_baselines(),
         _ => {
             eprintln!(
-                "usage: theseus <gen-noc-dataset|models|space|eval|dse|campaign|baselines> [--flags]\n\
+                "usage: theseus <gen-noc-dataset|models|space|eval|dse|campaign|serve-sim|baselines> [--flags]\n\
                  see README.md for the full flag reference"
             );
             std::process::exit(2);
@@ -221,9 +233,11 @@ fn cmd_campaign(args: &Args) {
             "fault" => campaign::fault_suite(),
             "hetero" => campaign::hetero_suite(),
             "wafer-sweep" => campaign::wafer_sweep_suite(),
+            "serving" => campaign::serving_suite(),
             _ => {
                 eprintln!(
-                    "campaign: unknown suite '{suite}' — valid: paper, fault, hetero, wafer-sweep"
+                    "campaign: unknown suite '{suite}' — valid: paper, fault, hetero, \
+                     wafer-sweep, serving"
                 );
                 std::process::exit(1);
             }
@@ -286,9 +300,17 @@ fn cmd_campaign(args: &Args) {
         }
     );
     let t0 = std::time::Instant::now();
+    // --progress: per-row completion ticks on stderr. Side-channel only —
+    // the campaign layer guarantees progress runs write byte-identical
+    // artifacts to silent ones (the ci smoke leg diffs them).
+    let tick = |done: usize, total: usize, key: &str| {
+        eprintln!("campaign: [{done}/{total}] {key}");
+    };
+    let progress: Option<&(dyn Fn(usize, usize, &str) + Sync)> =
+        args.has("progress").then_some(&tick);
     let result = match &merge_dirs {
         Some(dirs) => campaign::merge_campaign(&cfg, dirs),
-        None => campaign::run_campaign(&cfg),
+        None => campaign::run_campaign_with_progress(&cfg, progress),
     }
     .unwrap_or_else(|e| {
         eprintln!("campaign: {e}");
@@ -311,6 +333,102 @@ fn cmd_campaign(args: &Args) {
         // Every scenario failed: surface it in the exit status.
         std::process::exit(1);
     }
+}
+
+/// `theseus serve-sim`: replay one request stream on the reference design
+/// through the discrete-event serving simulator and print the serving
+/// digest (the same [`theseus::serving::ServingMetrics`] the campaign
+/// serializes per serving row). The trace is either generated (`--arrival
+/// --rate --requests --prompt --output --seed`, deterministic per seed)
+/// or loaded from a recorded JSON file (`--trace FILE`); `--dump FILE`
+/// writes the generated trace for later replay.
+fn cmd_serve_sim(args: &Args) {
+    use theseus::serving;
+
+    let model = args.str("model", "1.7");
+    let spec = theseus::workload::models::find_or_usage(&model).unwrap_or_else(|e| {
+        eprintln!("serve-sim: {e}");
+        std::process::exit(1);
+    });
+    let v = theseus::design_space::validate(&theseus::design_space::reference_point())
+        .expect("reference point valid");
+    let sys = if args.has("wafers") {
+        theseus::eval::SystemConfig {
+            validated: v,
+            n_wafers: args.usize("wafers", 1).max(1),
+            faults: None,
+        }
+    } else {
+        theseus::eval::SystemConfig::area_matched(v, spec.gpu_num)
+    };
+    let batch = args.usize("batch", 32);
+    let mqa = args.has("mqa");
+    let slo_s = args.f64("slo", 1.0);
+    if slo_s <= 0.0 {
+        eprintln!("serve-sim: --slo must be positive (TTFT SLO, seconds)");
+        std::process::exit(1);
+    }
+    let scheduler = serving::SchedulerKind::parse_or_usage(&args.str("scheduler", "fcfs"))
+        .unwrap_or_else(|e| {
+            eprintln!("serve-sim: {e}");
+            std::process::exit(1);
+        });
+    let seed = args.u64("seed", 2024);
+
+    let trace = if let Some(file) = args.opt_str("trace") {
+        serving::trace::load(&file).unwrap_or_else(|e| {
+            eprintln!("serve-sim: {e}");
+            std::process::exit(1);
+        })
+    } else {
+        let arrival = serving::ArrivalProcess::parse_or_usage(&args.str("arrival", "poisson"))
+            .unwrap_or_else(|e| {
+                eprintln!("serve-sim: {e}");
+                std::process::exit(1);
+            });
+        let rate = args.f64("rate", 4.0);
+        if rate <= 0.0 {
+            eprintln!("serve-sim: --rate must be positive (requests/s)");
+            std::process::exit(1);
+        }
+        serving::trace::generate(
+            arrival,
+            rate,
+            args.usize("requests", 64).max(1),
+            args.usize("prompt", 512).max(1),
+            args.usize("output", 128).max(1),
+            seed,
+        )
+    };
+    if let Some(dump) = args.opt_str("dump") {
+        if let Err(e) = std::fs::write(&dump, serving::trace::to_json(&trace).to_pretty() + "\n") {
+            eprintln!("serve-sim: cannot write {dump}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("serve-sim: wrote {} requests to {dump}", trace.len());
+    }
+
+    let phase = theseus::workload::Phase::Decode;
+    let espec = theseus::eval::engine::EvalSpec::inference(spec.clone(), phase, batch)
+        .with_wafers(args.has("wafers").then(|| sys.n_wafers))
+        .with_mqa(mqa);
+    let engine = theseus::eval::engine::Engine::new(espec).unwrap_or_else(|e| {
+        eprintln!("serve-sim: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "system: {} wafers of {}; {} requests via {} scheduler",
+        sys.n_wafers,
+        sys.validated.point.wsc.summary(),
+        trace.len(),
+        scheduler.name()
+    );
+    let metrics = theseus::serving::evaluate(&engine, &sys, &trace, scheduler, slo_s)
+        .unwrap_or_else(|e| {
+            eprintln!("serve-sim: {e}");
+            std::process::exit(1);
+        });
+    theseus::figures::serving_summary(&metrics).print();
 }
 
 fn cmd_baselines() {

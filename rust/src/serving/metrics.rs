@@ -1,0 +1,183 @@
+//! Serving-level objectives digested from per-request outcomes.
+//!
+//! The simulator ([`super::sim`]) reports one [`RequestOutcome`] per
+//! completed request; [`ServingMetrics::digest`] folds them into the
+//! serving objectives the campaign serializes per row: aggregate output
+//! token throughput, time-to-first-token (TTFT) and end-to-end latency
+//! percentiles, and goodput — requests per second whose TTFT met the
+//! SLO. Percentiles use the nearest-rank method on `total_cmp`-sorted
+//! values (no interpolation), so digests are exact functions of the
+//! outcome set and byte-stable across platforms.
+
+use crate::util::json::Json;
+
+/// Per-request timing as observed by the simulator (all seconds on the
+/// simulated clock).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestOutcome {
+    pub id: usize,
+    pub arrival_s: f64,
+    /// When the request's first output token was produced.
+    pub first_token_s: f64,
+    /// When its last output token was produced.
+    pub finish_s: f64,
+    pub output_tokens: usize,
+}
+
+impl RequestOutcome {
+    /// Time to first token: queueing + prefill (+ hand-off).
+    pub fn ttft_s(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    /// End-to-end request latency.
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+/// Nearest-rank percentile of `sorted` (ascending): the value at rank
+/// `⌈p/100 · n⌉`, clamped to `[1, n]`.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    let rank = ((p / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+/// The serving digest: first-class campaign metrics for one simulated
+/// trace on one design.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingMetrics {
+    pub completed: usize,
+    /// Aggregate output tokens per second over the makespan.
+    pub tokens_per_sec: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    /// Requests per second whose TTFT met the SLO.
+    pub goodput_per_sec: f64,
+    /// The TTFT SLO the goodput was measured against.
+    pub slo_s: f64,
+    /// First arrival to last token.
+    pub makespan_s: f64,
+}
+
+impl ServingMetrics {
+    /// Fold outcomes into the digest. An empty outcome set is a loud
+    /// error — a simulation that completed nothing has no metrics, and
+    /// silently digesting zeros would read as a (terrible) real design.
+    pub fn digest(outcomes: &[RequestOutcome], slo_s: f64) -> Result<ServingMetrics, String> {
+        if outcomes.is_empty() {
+            return Err("serving digest: no completed requests to digest".to_string());
+        }
+        let mut ttfts: Vec<f64> = outcomes.iter().map(RequestOutcome::ttft_s).collect();
+        let mut lats: Vec<f64> = outcomes.iter().map(RequestOutcome::latency_s).collect();
+        ttfts.sort_by(f64::total_cmp);
+        lats.sort_by(f64::total_cmp);
+        let first_arrival = outcomes
+            .iter()
+            .map(|o| o.arrival_s)
+            .fold(f64::INFINITY, f64::min);
+        let last_finish = outcomes.iter().map(|o| o.finish_s).fold(0.0f64, f64::max);
+        // The makespan is positive for any non-degenerate trace; guard a
+        // single instantaneous request so the rates stay finite.
+        let makespan = (last_finish - first_arrival).max(1e-12);
+        let total_tokens: usize = outcomes.iter().map(|o| o.output_tokens).sum();
+        let met_slo = ttfts.iter().filter(|&&t| t <= slo_s).count();
+        Ok(ServingMetrics {
+            completed: outcomes.len(),
+            tokens_per_sec: total_tokens as f64 / makespan,
+            ttft_p50_s: percentile(&ttfts, 50.0),
+            ttft_p99_s: percentile(&ttfts, 99.0),
+            latency_p50_s: percentile(&lats, 50.0),
+            latency_p99_s: percentile(&lats, 99.0),
+            goodput_per_sec: met_slo as f64 / makespan,
+            slo_s,
+            makespan_s: makespan,
+        })
+    }
+
+    /// The artifact form (alphabetical keys, matching the campaign's
+    /// serialization convention).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("completed", Json::Num(self.completed as f64))
+            .set("goodput_per_sec", Json::Num(self.goodput_per_sec))
+            .set("latency_p50_s", Json::Num(self.latency_p50_s))
+            .set("latency_p99_s", Json::Num(self.latency_p99_s))
+            .set("makespan_s", Json::Num(self.makespan_s))
+            .set("slo_s", Json::Num(self.slo_s))
+            .set("tokens_per_sec", Json::Num(self.tokens_per_sec))
+            .set("ttft_p50_s", Json::Num(self.ttft_p50_s))
+            .set("ttft_p99_s", Json::Num(self.ttft_p99_s));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: usize, arrival: f64, first: f64, finish: f64, tokens: usize) -> RequestOutcome {
+        RequestOutcome {
+            id,
+            arrival_s: arrival,
+            first_token_s: first,
+            finish_s: finish,
+            output_tokens: tokens,
+        }
+    }
+
+    #[test]
+    fn empty_digest_is_a_loud_error() {
+        let e = ServingMetrics::digest(&[], 1.0).unwrap_err();
+        assert!(e.contains("no completed requests"), "{e}");
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        // 100 requests with TTFT = 0.01·(i+1): p50 is the 50th value
+        // (0.50), p99 the 99th (0.99).
+        let outcomes: Vec<RequestOutcome> = (0..100)
+            .map(|i| outcome(i, 0.0, 0.01 * (i + 1) as f64, 1.0 + i as f64, 1))
+            .collect();
+        let m = ServingMetrics::digest(&outcomes, 0.5).unwrap();
+        assert!((m.ttft_p50_s - 0.50).abs() < 1e-12);
+        assert!((m.ttft_p99_s - 0.99).abs() < 1e-12);
+        // Exactly 50 of 100 TTFTs are ≤ 0.5.
+        let expect_goodput = 50.0 / m.makespan_s;
+        assert!((m.goodput_per_sec - expect_goodput).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_is_tokens_over_makespan() {
+        let outcomes = vec![
+            outcome(0, 0.0, 0.5, 2.0, 10),
+            outcome(1, 1.0, 1.5, 4.0, 30),
+        ];
+        let m = ServingMetrics::digest(&outcomes, 1.0).unwrap();
+        assert!((m.makespan_s - 4.0).abs() < 1e-12);
+        assert!((m.tokens_per_sec - 10.0).abs() < 1e-12);
+        assert_eq!(m.completed, 2);
+    }
+
+    #[test]
+    fn json_has_all_digest_fields() {
+        let m = ServingMetrics::digest(&[outcome(0, 0.0, 0.5, 2.0, 8)], 1.0).unwrap();
+        let j = m.to_json();
+        for key in [
+            "completed",
+            "goodput_per_sec",
+            "latency_p50_s",
+            "latency_p99_s",
+            "makespan_s",
+            "slo_s",
+            "tokens_per_sec",
+            "ttft_p50_s",
+            "ttft_p99_s",
+        ] {
+            assert!(j.get(key).and_then(Json::as_f64).is_some(), "missing {key}");
+        }
+    }
+}

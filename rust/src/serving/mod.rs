@@ -1,0 +1,93 @@
+//! Serving-traffic simulation: from static design points to request
+//! streams (ROADMAP item 1).
+//!
+//! The [`crate::eval::Engine`] prices one `(model, phase, batch)` point;
+//! production inference is a *request stream* — continuous batching,
+//! prefill/decode interleaving, queueing, tail-latency SLOs. This module
+//! turns a design evaluation into a serving evaluation:
+//!
+//! - [`trace`] — deterministic request-trace generation (seeded
+//!   Poisson/bursty arrivals, exponential prompt/output lengths) and a
+//!   loudly-validating JSON trace-file loader.
+//! - [`sim`] — the discrete-event simulator: continuous batching under a
+//!   KV-cache capacity constraint, pluggable round schedulers (`fcfs`,
+//!   `prefill-priority`), and multi-wafer KV hand-off priced through the
+//!   design's [`crate::arch::InterWaferNet`]. Step costs are sourced
+//!   from [`crate::eval::Engine::eval_infer_system_at_batch`] at each
+//!   round's actual occupancy, memoized per batch size — the simulator
+//!   never re-derives hardware costs.
+//! - [`metrics`] — the serving digest (aggregate tok/s, TTFT and latency
+//!   P50/P99, goodput under an SLO) the campaign serializes per row.
+//!
+//! [`ServingSpec`] is the scenario-level knob set: it rides
+//! [`crate::coordinator::campaign::Scenario`] the way
+//! [`crate::arch::HeteroConfig`] and [`crate::arch::InterWaferNet`] do
+//! (emitted only when present, so pre-serving artifacts stay
+//! byte-identical), and [`evaluate`] is the one entry point the campaign,
+//! the `serve-sim` CLI and the figures all share.
+//!
+//! Everything here honors the determinism contract: no wall clock, seeded
+//! `SplitMix64` streams, and byte-identical outcomes for identical
+//! inputs.
+
+pub mod metrics;
+pub mod sim;
+pub mod trace;
+
+pub use metrics::{RequestOutcome, ServingMetrics};
+pub use sim::{simulate, SchedulerKind, StepCosts};
+pub use trace::{ArrivalProcess, Request};
+
+use crate::eval::chunk::SystemConfig;
+use crate::eval::engine::Engine;
+
+/// Scenario-level serving workload description: how the trace is
+/// generated and how the simulator schedules it. Rides the campaign
+/// [`Scenario`](crate::coordinator::campaign::Scenario) as an optional
+/// axis (inference phases only).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingSpec {
+    pub arrival: ArrivalProcess,
+    /// Long-run request arrival rate (requests/s); must be positive.
+    pub rate_per_s: f64,
+    /// Trace length in requests.
+    pub requests: usize,
+    /// Mean prompt length, tokens (exponential, clamped to 4× mean).
+    pub mean_prompt: usize,
+    /// Mean output length, tokens (exponential, clamped to 4× mean).
+    pub mean_output: usize,
+    /// TTFT SLO the goodput digest is measured against; must be positive.
+    pub slo_s: f64,
+    pub scheduler: SchedulerKind,
+}
+
+impl ServingSpec {
+    /// Generate this spec's trace at `seed` (pure function — the campaign
+    /// derives `seed` from the scenario key, so traces are
+    /// position-independent like every other scenario input).
+    pub fn trace(&self, seed: u64) -> Vec<Request> {
+        trace::generate(
+            self.arrival,
+            self.rate_per_s,
+            self.requests,
+            self.mean_prompt,
+            self.mean_output,
+            seed,
+        )
+    }
+}
+
+/// Evaluate one serving workload end to end: simulate `trace` on `sys`
+/// as priced by `engine`, then digest the outcomes against `slo_s`. The
+/// shared entry point for campaign rows, `theseus serve-sim` and the
+/// figures.
+pub fn evaluate(
+    engine: &Engine,
+    sys: &SystemConfig,
+    trace: &[Request],
+    scheduler: SchedulerKind,
+    slo_s: f64,
+) -> Result<ServingMetrics, String> {
+    let outcomes = simulate(engine, sys, trace, scheduler)?;
+    ServingMetrics::digest(&outcomes, slo_s)
+}

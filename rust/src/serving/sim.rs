@@ -1,0 +1,327 @@
+//! Discrete-event serving simulator: a request stream scheduled onto one
+//! evaluated wafer design.
+//!
+//! ## Model
+//!
+//! The simulator advances a virtual clock in *rounds* of continuous
+//! batching. Each round, the scheduler picks a set of waiting requests to
+//! prefill and a set of in-flight requests to decode one token each; the
+//! round's duration comes from the [`Engine`]'s inference evaluation at
+//! the round's actual occupancy ([`StepCosts`], below). Requests enter
+//! when their KV-cache footprint fits and the in-flight count is under
+//! the spec batch; they leave when their last output token decodes,
+//! freeing their KV bytes. Per the repo's convention, prefill emits no
+//! token — the first output token is the first *decode* step — so a
+//! single queue-free request's latency is exactly
+//! `prefill_s(1) + N·decode_step_s(1)` (pinned by a closed-form test).
+//!
+//! ## Step costs from the Engine
+//!
+//! Per-phase step costs are *not* re-derived here: [`StepCosts`] asks
+//! [`Engine::eval_infer_system_at_batch`] for `(prefill_s,
+//! decode_step_s)` at each occupancy the rounds actually reach, memoized
+//! via [`Memo`] (occupancies repeat heavily under continuous batching,
+//! so a handful of Engine evaluations price an entire trace at any
+//! fidelity). A design that cannot hold `batch` sequences at the model's
+//! full context is a loud error, not a silent skip.
+//!
+//! ## Scheduler contract
+//!
+//! A [`SchedulerKind`] decides, given non-empty admit and decode-ready
+//! sets, what runs this round:
+//!
+//! - `fcfs` — fused rounds: admitted prefills and ready decodes share
+//!   the round (duration = prefill cost + decode cost); nothing stalls.
+//! - `prefill-priority` — when any request is admissible the round is
+//!   prefill-only and decodes stall, minimizing time-to-first-token at
+//!   the cost of per-token latency for in-flight requests.
+//!
+//! Schedulers may only reorder *work within a round*; admission itself
+//! is always arrival-ordered (no starvation), and both schedulers are
+//! pure functions of the simulator state — no randomness, no wall clock.
+//!
+//! ## Multi-wafer placement
+//!
+//! On an `n_wafers > 1` system, request `id` is pinned round-robin to
+//! wafer `id % n`. A request whose prefill ran on a different wafer than
+//! its decode home (`(id / n) % n`, the round-robin prefill slot) pays a
+//! one-time KV hand-off — its prompt's KV bytes shipped point-to-point
+//! through the design's [`InterWaferNet`] — before its first decode.
+//! Single-wafer systems never consult the net (hand-off is exactly 0).
+
+use crate::eval::chunk::SystemConfig;
+use crate::eval::engine::Engine;
+use crate::serving::metrics::RequestOutcome;
+use crate::serving::trace::Request;
+use crate::util::memo::Memo;
+
+/// Round-scheduler registry: `ALL` / `name` / `parse` keep CLI flags,
+/// scenario JSON and error messages in sync.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Fused rounds: prefills and decodes share every round.
+    Fcfs,
+    /// Prefill-only rounds whenever a request is admissible.
+    PrefillPriority,
+}
+
+impl SchedulerKind {
+    pub const ALL: [SchedulerKind; 2] = [SchedulerKind::Fcfs, SchedulerKind::PrefillPriority];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Fcfs => "fcfs",
+            SchedulerKind::PrefillPriority => "prefill-priority",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        SchedulerKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// [`parse`](SchedulerKind::parse) with a usage error naming every
+    /// valid scheduler.
+    pub fn parse_or_usage(s: &str) -> Result<SchedulerKind, String> {
+        SchedulerKind::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = SchedulerKind::ALL.iter().map(|k| k.name()).collect();
+            format!("unknown scheduler '{s}' — valid: {}", names.join(", "))
+        })
+    }
+}
+
+/// Memoized `(prefill_s, decode_step_s)` lookup per round occupancy,
+/// priced by the Engine on the concrete system under evaluation.
+pub struct StepCosts<'a> {
+    engine: &'a Engine,
+    sys: &'a SystemConfig,
+    memo: Memo<usize, Option<(f64, f64)>>,
+}
+
+impl<'a> StepCosts<'a> {
+    pub fn new(engine: &'a Engine, sys: &'a SystemConfig) -> StepCosts<'a> {
+        StepCosts {
+            engine,
+            sys,
+            // Occupancies are bounded by the spec batch; 64 distinct
+            // entries covers every batch the built-in suites reach.
+            memo: Memo::new(64),
+        }
+    }
+
+    /// `(prefill_s, decode_step_s)` at `batch` sequences in flight. A
+    /// design the Engine rejects at this occupancy (weights + full-context
+    /// KV exceed device memory) is a loud error.
+    pub fn costs(&self, batch: usize) -> Result<(f64, f64), String> {
+        let b = batch.max(1);
+        self.memo
+            .get_or_insert_with(b, || {
+                self.engine
+                    .eval_infer_system_at_batch(self.sys, b)
+                    .map(|e| (e.prefill_s, e.decode_step_s))
+            })
+            .ok_or_else(|| {
+                format!(
+                    "design cannot serve a batch of {b}: weights + KV cache exceed device memory"
+                )
+            })
+    }
+}
+
+/// One in-flight request.
+struct Active {
+    id: usize,
+    arrival_s: f64,
+    /// Earliest time this request may decode (prefill end + any
+    /// cross-wafer KV hand-off).
+    ready_s: f64,
+    remaining: usize,
+    first_token_s: Option<f64>,
+    kv_bytes: f64,
+    output_tokens: usize,
+}
+
+/// Backstop against a wedged round loop (a healthy trace of `n` requests
+/// finishes in well under `n · (1 + max output length)` rounds).
+const MAX_ROUNDS: usize = 10_000_000;
+
+/// Simulate `trace` on `sys` as evaluated by `engine`, returning one
+/// outcome per request (sorted by request id). Pure function of its
+/// arguments — same inputs, byte-identical outcomes.
+pub fn simulate(
+    engine: &Engine,
+    sys: &SystemConfig,
+    trace: &[Request],
+    scheduler: SchedulerKind,
+) -> Result<Vec<RequestOutcome>, String> {
+    if trace.is_empty() {
+        return Err("serving simulator: empty trace — nothing to serve".to_string());
+    }
+    for w in trace.windows(2) {
+        if w[1].arrival_s < w[0].arrival_s {
+            return Err(format!(
+                "serving simulator: trace arrivals must be non-decreasing (request {} at {} after {})",
+                w[1].id, w[1].arrival_s, w[0].arrival_s
+            ));
+        }
+    }
+    let spec = engine.spec();
+    let model = &spec.model;
+    // Per-token KV footprint; a request holds KV for prompt + generated
+    // tokens for its whole residency.
+    let kv_per_token = model.kv_cache_bytes_per_seq(spec.mqa) / model.seq_len.max(1) as f64;
+    let capacity = (sys.memory().total_bytes() - model.param_bytes()).max(0.0);
+    let max_batch = spec.batch.max(1);
+    let n_wafers = sys.n_wafers;
+    let net = sys.validated.point.interwafer;
+
+    let costs = StepCosts::new(engine, sys);
+    let mut waiting: std::collections::VecDeque<Request> = std::collections::VecDeque::new();
+    let mut active: Vec<Active> = Vec::new();
+    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(trace.len());
+    let mut next_idx = 0usize;
+    let mut t = 0.0f64;
+    let mut rounds = 0usize;
+
+    while outcomes.len() < trace.len() {
+        rounds += 1;
+        if rounds > MAX_ROUNDS {
+            return Err(format!(
+                "serving simulator: exceeded {MAX_ROUNDS} rounds with {} of {} requests \
+                 completed — the schedule is wedged",
+                outcomes.len(),
+                trace.len()
+            ));
+        }
+        while next_idx < trace.len() && trace[next_idx].arrival_s <= t {
+            waiting.push_back(trace[next_idx]);
+            next_idx += 1;
+        }
+        // Arrival-ordered admission under the KV-capacity and in-flight
+        // limits. KV usage is recomputed from the in-flight set so
+        // floating-point residue from freed requests never blocks an
+        // admissible one.
+        let mut kv_used: f64 = active.iter().map(|a| a.kv_bytes).sum();
+        let mut admits: Vec<Request> = Vec::new();
+        while let Some(&r) = waiting.front() {
+            let kv = kv_per_token * (r.prompt_tokens + r.output_tokens) as f64;
+            if kv > capacity {
+                return Err(format!(
+                    "serving simulator: request {} needs {:.3e} B of KV cache but the design \
+                     has {:.3e} B free after weights — it can never be served",
+                    r.id, kv, capacity
+                ));
+            }
+            if active.len() + admits.len() >= max_batch || kv_used + kv > capacity {
+                break;
+            }
+            kv_used += kv;
+            admits.push(r);
+            waiting.pop_front();
+        }
+        let decode_ready: Vec<usize> = (0..active.len())
+            .filter(|&i| active[i].ready_s <= t)
+            .collect();
+
+        if admits.is_empty() && decode_ready.is_empty() {
+            // Idle: jump to the next event (an arrival or a hand-off
+            // completing). No event = a wedged schedule; fail loudly.
+            let next_arrival = trace.get(next_idx).map(|r| r.arrival_s);
+            let next_ready = active
+                .iter()
+                .map(|a| a.ready_s)
+                .fold(f64::INFINITY, f64::min);
+            let target = match next_arrival {
+                Some(a) => a.min(next_ready),
+                None => next_ready,
+            };
+            if !target.is_finite() || target <= t {
+                return Err(format!(
+                    "serving simulator: no schedulable work at t={t} with {} waiting and {} \
+                     in flight — the schedule is wedged",
+                    waiting.len(),
+                    active.len()
+                ));
+            }
+            t = target;
+            continue;
+        }
+
+        let (prefills, decodes) = match scheduler {
+            SchedulerKind::Fcfs => (admits, decode_ready),
+            SchedulerKind::PrefillPriority => {
+                if admits.is_empty() {
+                    (admits, decode_ready)
+                } else {
+                    (admits, Vec::new())
+                }
+            }
+        };
+        let mut round_s = 0.0;
+        if !prefills.is_empty() {
+            round_s += costs.costs(prefills.len())?.0;
+        }
+        if !decodes.is_empty() {
+            round_s += costs.costs(decodes.len())?.1;
+        }
+        let end = t + round_s;
+
+        let mut finished: Vec<usize> = Vec::new();
+        for &i in &decodes {
+            let a = &mut active[i];
+            if a.first_token_s.is_none() {
+                a.first_token_s = Some(end);
+            }
+            a.remaining -= 1;
+            if a.remaining == 0 {
+                finished.push(i);
+            }
+        }
+        // Descending order so each swap_remove leaves lower indices valid.
+        finished.sort_unstable_by(|x, y| y.cmp(x));
+        for i in finished {
+            let a = active.swap_remove(i);
+            outcomes.push(RequestOutcome {
+                id: a.id,
+                arrival_s: a.arrival_s,
+                first_token_s: a.first_token_s.unwrap_or(end),
+                finish_s: end,
+                output_tokens: a.output_tokens,
+            });
+        }
+        for r in prefills {
+            let decode_home = r.id % n_wafers.max(1);
+            let prefill_slot = (r.id / n_wafers.max(1)) % n_wafers.max(1);
+            let handoff = if n_wafers > 1 && decode_home != prefill_slot {
+                net.p2p_s(kv_per_token * r.prompt_tokens as f64, n_wafers)
+            } else {
+                0.0
+            };
+            active.push(Active {
+                id: r.id,
+                arrival_s: r.arrival_s,
+                ready_s: end + handoff,
+                remaining: r.output_tokens,
+                first_token_s: None,
+                kv_bytes: kv_per_token * (r.prompt_tokens + r.output_tokens) as f64,
+                output_tokens: r.output_tokens,
+            });
+        }
+        t = end;
+    }
+    outcomes.sort_unstable_by_key(|o| o.id);
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduler_registry_roundtrip() {
+        for k in SchedulerKind::ALL {
+            assert_eq!(SchedulerKind::parse(k.name()), Some(k));
+        }
+        let e = SchedulerKind::parse_or_usage("lifo").unwrap_err();
+        assert!(e.contains("fcfs, prefill-priority"), "{e}");
+    }
+}

@@ -1,0 +1,314 @@
+//! Deterministic request-trace generation and loading.
+//!
+//! A trace is the serving workload: a time-ordered list of [`Request`]s
+//! (arrival time, prompt length, output length). Two sources:
+//!
+//! - [`generate`] — a seeded synthetic generator. Arrivals follow a
+//!   registry [`ArrivalProcess`] (`poisson`: independent exponential
+//!   gaps; `bursty`: geometric-size bursts of simultaneous arrivals with
+//!   exponential gaps between bursts, scaled so the *long-run* rate
+//!   matches `rate_per_s` either way). Prompt/output lengths are
+//!   exponentially distributed around their configured means, rounded
+//!   and clamped to `[1, 4·mean]` so one pathological sample cannot
+//!   dominate a short trace.
+//! - [`load`] — a JSON trace-file loader for replaying recorded traffic.
+//!   Per the campaign contract it fails loudly: unknown request fields,
+//!   non-monotone arrivals, non-positive token counts and empty traces
+//!   are all typed errors naming the offending request, never silent
+//!   repairs.
+//!
+//! Determinism: generation is a pure function of `(spec-ish params,
+//! seed)` via forked [`Rng`] streams (stream 1 = arrivals, stream 2 =
+//! lengths), so the same seed yields a byte-identical trace regardless
+//! of call site or thread — the property the campaign's byte-identical
+//! artifact contract rests on.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One serving request: arrives at `arrival_s`, carries `prompt_tokens`
+/// to prefill, then wants `output_tokens` decoded.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    /// Position in the trace (also the placement key for multi-wafer
+    /// routing in the simulator).
+    pub id: usize,
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// Arrival process registry: `ALL` / `name` / `parse` keep CLI flags,
+/// scenario JSON and error messages in sync (same convention as
+/// [`crate::eval::Fidelity`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Independent arrivals: exponential inter-arrival gaps at
+    /// `rate_per_s`.
+    Poisson,
+    /// Bursts of simultaneous arrivals (mean size
+    /// [`BURST_MEAN`]) separated by exponential gaps stretched by the
+    /// burst size, so the long-run rate still equals `rate_per_s`.
+    Bursty,
+}
+
+/// Mean burst size for [`ArrivalProcess::Bursty`] (uniform on
+/// `1..=2·mean−1`).
+pub const BURST_MEAN: usize = 4;
+
+impl ArrivalProcess {
+    pub const ALL: [ArrivalProcess; 2] = [ArrivalProcess::Poisson, ArrivalProcess::Bursty];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty => "bursty",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArrivalProcess> {
+        ArrivalProcess::ALL.into_iter().find(|a| a.name() == s)
+    }
+
+    /// [`parse`](ArrivalProcess::parse) with a usage error naming every
+    /// valid process.
+    pub fn parse_or_usage(s: &str) -> Result<ArrivalProcess, String> {
+        ArrivalProcess::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = ArrivalProcess::ALL.iter().map(|a| a.name()).collect();
+            format!("unknown arrival process '{s}' — valid: {}", names.join(", "))
+        })
+    }
+}
+
+/// Draw an exponential token count around `mean`, rounded and clamped to
+/// `[1, 4·mean]`.
+fn sample_len(rng: &mut Rng, mean: usize) -> usize {
+    let mean = mean.max(1);
+    let x = rng.exponential(mean as f64).round() as usize;
+    x.clamp(1, 4 * mean)
+}
+
+/// Generate `n` requests at long-run rate `rate_per_s` with the given
+/// arrival process and mean prompt/output lengths. Pure function of its
+/// arguments (stream-forked RNG, no wall clock).
+pub fn generate(
+    arrival: ArrivalProcess,
+    rate_per_s: f64,
+    n: usize,
+    mean_prompt: usize,
+    mean_output: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut root = Rng::new(seed);
+    let mut arrivals = root.fork(1);
+    let mut lengths = root.fork(2);
+    let rate = rate_per_s.max(1e-12);
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    let mut id = 0usize;
+    while id < n {
+        let burst = match arrival {
+            ArrivalProcess::Poisson => 1,
+            ArrivalProcess::Bursty => arrivals.range(1, 2 * BURST_MEAN - 1),
+        };
+        // Gap scales with burst size so bursty traffic keeps the same
+        // long-run rate as poisson at the same `rate_per_s`.
+        t += arrivals.exponential(burst as f64 / rate);
+        for _ in 0..burst {
+            if id >= n {
+                break;
+            }
+            out.push(Request {
+                id,
+                arrival_s: t,
+                prompt_tokens: sample_len(&mut lengths, mean_prompt),
+                output_tokens: sample_len(&mut lengths, mean_output),
+            });
+            id += 1;
+        }
+    }
+    out
+}
+
+/// The fields a trace-file request may carry (alphabetical, quoted in
+/// unknown-field errors). `id` is optional but must equal the request's
+/// position when present.
+const REQUEST_FIELDS: [&str; 4] = ["arrival_s", "id", "output_tokens", "prompt_tokens"];
+
+fn req_usize(obj: &Json, i: usize, key: &str) -> Result<usize, String> {
+    obj.get(key)
+        .ok_or_else(|| format!("trace request {i}: missing required field '{key}'"))?
+        .as_usize()
+        .ok_or_else(|| format!("trace request {i}: '{key}' must be a non-negative integer"))
+}
+
+/// Parse a `{"requests": [...]}` trace document, validating loudly.
+pub fn from_json(doc: &Json) -> Result<Vec<Request>, String> {
+    let reqs = doc
+        .get("requests")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "trace file must be an object with a 'requests' array".to_string())?;
+    if reqs.is_empty() {
+        return Err("trace file has an empty 'requests' array — nothing to serve".to_string());
+    }
+    let mut out = Vec::with_capacity(reqs.len());
+    let mut prev_arrival = f64::NEG_INFINITY;
+    for (i, r) in reqs.iter().enumerate() {
+        let obj = r
+            .as_obj()
+            .ok_or_else(|| format!("trace request {i}: must be an object"))?;
+        for key in obj.keys() {
+            if !REQUEST_FIELDS.contains(&key.as_str()) {
+                return Err(format!(
+                    "trace request {i}: unknown field '{key}' — valid: {}",
+                    REQUEST_FIELDS.join(", ")
+                ));
+            }
+        }
+        let arrival_s = r
+            .get("arrival_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("trace request {i}: missing numeric 'arrival_s'"))?;
+        if !arrival_s.is_finite() || arrival_s < 0.0 {
+            return Err(format!(
+                "trace request {i}: 'arrival_s' must be finite and non-negative, got {arrival_s}"
+            ));
+        }
+        if arrival_s < prev_arrival {
+            return Err(format!(
+                "trace request {i}: arrivals must be non-decreasing ({arrival_s} after {prev_arrival})"
+            ));
+        }
+        prev_arrival = arrival_s;
+        let prompt_tokens = req_usize(r, i, "prompt_tokens")?;
+        let output_tokens = req_usize(r, i, "output_tokens")?;
+        if prompt_tokens == 0 || output_tokens == 0 {
+            return Err(format!(
+                "trace request {i}: prompt_tokens and output_tokens must be positive"
+            ));
+        }
+        if let Some(id) = r.get("id") {
+            let id = id
+                .as_usize()
+                .ok_or_else(|| format!("trace request {i}: 'id' must be a non-negative integer"))?;
+            if id != i {
+                return Err(format!(
+                    "trace request {i}: 'id' {id} must equal the request's position"
+                ));
+            }
+        }
+        out.push(Request {
+            id: i,
+            arrival_s,
+            prompt_tokens,
+            output_tokens,
+        });
+    }
+    Ok(out)
+}
+
+/// Load and validate a JSON trace file from disk.
+pub fn load(path: &str) -> Result<Vec<Request>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read trace file '{path}': {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("trace file '{path}': {e}"))?;
+    from_json(&doc).map_err(|e| format!("trace file '{path}': {e}"))
+}
+
+/// Serialize a trace as the `{"requests": [...]}` document [`from_json`]
+/// accepts (round-trip partner, used by tests and `serve-sim --dump`).
+pub fn to_json(trace: &[Request]) -> Json {
+    let mut reqs = Vec::with_capacity(trace.len());
+    for r in trace {
+        let mut obj = Json::obj();
+        obj.set("arrival_s", Json::Num(r.arrival_s))
+            .set("id", Json::Num(r.id as f64))
+            .set("output_tokens", Json::Num(r.output_tokens as f64))
+            .set("prompt_tokens", Json::Num(r.prompt_tokens as f64));
+        reqs.push(obj);
+    }
+    let mut doc = Json::obj();
+    doc.set("requests", Json::Arr(reqs));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_roundtrip() {
+        for a in ArrivalProcess::ALL {
+            assert_eq!(ArrivalProcess::parse(a.name()), Some(a));
+        }
+        let e = ArrivalProcess::parse_or_usage("nope").unwrap_err();
+        assert!(e.contains("poisson, bursty"), "{e}");
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let a = generate(ArrivalProcess::Bursty, 8.0, 64, 128, 32, 7);
+        let b = generate(ArrivalProcess::Bursty, 8.0, 64, 128, 32, 7);
+        assert_eq!(a, b);
+        let c = generate(ArrivalProcess::Bursty, 8.0, 64, 128, 32, 8);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn generated_traces_are_valid_and_rate_matched() {
+        for arrival in ArrivalProcess::ALL {
+            let n = 2000;
+            let rate = 10.0;
+            let trace = generate(arrival, rate, n, 256, 64, 3);
+            assert_eq!(trace.len(), n);
+            let mut prev = 0.0;
+            for (i, r) in trace.iter().enumerate() {
+                assert_eq!(r.id, i);
+                assert!(r.arrival_s >= prev);
+                assert!(r.prompt_tokens >= 1 && r.prompt_tokens <= 4 * 256);
+                assert!(r.output_tokens >= 1 && r.output_tokens <= 4 * 64);
+                prev = r.arrival_s;
+            }
+            // Long-run rate within 15% of nominal for both processes.
+            let span = trace.last().unwrap().arrival_s;
+            let empirical = n as f64 / span;
+            assert!(
+                (empirical / rate - 1.0).abs() < 0.15,
+                "{}: empirical rate {empirical} vs nominal {rate}",
+                arrival.name()
+            );
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let trace = generate(ArrivalProcess::Poisson, 4.0, 16, 64, 16, 11);
+        let back = from_json(&to_json(&trace)).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn loader_rejects_malformed_traces_loudly() {
+        let parse = |s: &str| from_json(&Json::parse(s).unwrap());
+        let e = parse(r#"{"requests": []}"#).unwrap_err();
+        assert!(e.contains("empty"), "{e}");
+        let e = parse(r#"{"requests": [{"arrival_s": 0, "prompt_tokens": 4, "output_tokens": 2, "bogus": 1}]}"#)
+            .unwrap_err();
+        assert!(e.contains("unknown field 'bogus'"), "{e}");
+        assert!(e.contains("arrival_s, id, output_tokens, prompt_tokens"), "{e}");
+        let e = parse(
+            r#"{"requests": [{"arrival_s": 1, "prompt_tokens": 4, "output_tokens": 2},
+                             {"arrival_s": 0.5, "prompt_tokens": 4, "output_tokens": 2}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("non-decreasing"), "{e}");
+        let e = parse(r#"{"requests": [{"arrival_s": 0, "prompt_tokens": 0, "output_tokens": 2}]}"#)
+            .unwrap_err();
+        assert!(e.contains("must be positive"), "{e}");
+        let e = parse(r#"{"requests": [{"arrival_s": 0, "prompt_tokens": 4, "output_tokens": 2, "id": 3}]}"#)
+            .unwrap_err();
+        assert!(e.contains("must equal the request's position"), "{e}");
+        let e = parse(r#"{"requests": [{"arrival_s": 0, "output_tokens": 2}]}"#).unwrap_err();
+        assert!(e.contains("prompt_tokens"), "{e}");
+    }
+}

@@ -10,8 +10,8 @@ use std::process::Command;
 
 use theseus::coordinator::campaign::{
     merge_campaign, paper_suite, run_campaign, scenario_result_json, scenarios_from_json,
-    suite_to_json, summary_json, wafer_sweep_suite, write_artifacts, Budget, CampaignConfig,
-    Fidelity, Scenario,
+    serving_suite, suite_to_json, summary_json, wafer_sweep_suite, write_artifacts, Budget,
+    CampaignConfig, Fidelity, Scenario,
 };
 use theseus::coordinator::Explorer;
 use theseus::util::cli::env_flag;
@@ -39,6 +39,7 @@ fn scenario(
         fault_spares: None,
         hetero: None,
         interwafer: None,
+        serving: None,
         tag: String::new(),
     }
 }
@@ -706,6 +707,28 @@ fn wafer_sweep_suite_schema_is_golden_pinned() {
 }
 
 #[test]
+fn serving_suite_schema_is_golden_pinned() {
+    let golden_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/golden/serving_suite.json"
+    );
+    let golden = std::fs::read_to_string(golden_path).unwrap();
+    let emitted = suite_to_json(&serving_suite()).to_pretty() + "\n";
+    assert_eq!(
+        emitted, golden,
+        "serving_suite() JSON schema drifted from tests/golden/serving_suite.json — \
+         if the change is intentional, regenerate the golden file so the drift is a reviewed diff"
+    );
+    // decode → encode round-trips byte-identically...
+    let parsed = Json::parse(&golden).unwrap();
+    assert_eq!(parsed.to_pretty() + "\n", golden);
+    // ...including through the typed Scenario layer.
+    let scenarios = scenarios_from_json(&parsed).unwrap();
+    assert_eq!(scenarios, serving_suite());
+    assert_eq!(suite_to_json(&scenarios).to_pretty() + "\n", golden);
+}
+
+#[test]
 fn interwafer_scenario_is_a_first_class_campaign_row() {
     // The inter-wafer network axis rides the campaign path end to end:
     // its own key suffix (so its own artifact file and derived seed), a
@@ -780,7 +803,9 @@ fn cli_unknown_keys_exit_1_listing_options() {
         .output()
         .unwrap();
     assert_eq!(out.status.code(), Some(1));
-    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown suite 'imaginary'"));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown suite 'imaginary'"), "{err}");
+    assert!(err.contains("serving"), "must list the serving suite: {err}");
 }
 
 #[test]

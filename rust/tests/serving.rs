@@ -1,0 +1,328 @@
+//! Serving-simulator integration suite: the closed-form single-request
+//! sanity check (latency = prefill + N·decode exactly), scheduler
+//! semantics on constructed traces, multi-wafer KV hand-off degradation
+//! under a slow inter-wafer network, and the campaign-level contracts —
+//! same-seed serving campaigns serialize byte-identical artifacts that
+//! carry the serving digest, and a killed-then-resumed serving row equals
+//! an uninterrupted one byte for byte.
+
+use theseus::arch::{InterWaferNet, InterWaferTopology};
+use theseus::coordinator::campaign::{
+    run_campaign, scenario_result_json, summary_json, write_artifacts, Budget, CampaignConfig,
+    Fidelity, Scenario,
+};
+use theseus::coordinator::Explorer;
+use theseus::design_space::{reference_point, validate};
+use theseus::eval::engine::{Engine, EvalSpec};
+use theseus::eval::SystemConfig;
+use theseus::serving::{simulate, ArrivalProcess, Request, SchedulerKind, ServingSpec};
+use theseus::util::json::Json;
+use theseus::workload::{models, Phase};
+
+fn reference_system(n_wafers: usize) -> SystemConfig {
+    let v = validate(&reference_point()).expect("reference point valid");
+    SystemConfig {
+        validated: v,
+        n_wafers,
+        faults: None,
+    }
+}
+
+fn decode_engine(batch: usize) -> Engine {
+    let model = models::find_or_usage("1.7").unwrap();
+    Engine::new(EvalSpec::inference(model, Phase::Decode, batch)).unwrap()
+}
+
+#[test]
+fn single_request_latency_is_prefill_plus_decodes() {
+    // The closed-form contract the simulator's docs pin: one request, no
+    // queueing, no contention — its latency is exactly prefill_s(1) +
+    // N·decode_step_s(1) from the Engine, and its TTFT is prefill plus
+    // one decode step (prefill emits no token).
+    let engine = decode_engine(8);
+    let sys = reference_system(1);
+    let costs = engine
+        .eval_infer_system_at_batch(&sys, 1)
+        .expect("reference design serves batch 1");
+    let n_out = 16usize;
+    let trace = vec![Request {
+        id: 0,
+        arrival_s: 0.0,
+        prompt_tokens: 256,
+        output_tokens: n_out,
+    }];
+    for scheduler in SchedulerKind::ALL {
+        let outcomes = simulate(&engine, &sys, &trace, scheduler).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        let o = &outcomes[0];
+        let expected_latency = costs.prefill_s + n_out as f64 * costs.decode_step_s;
+        let expected_ttft = costs.prefill_s + costs.decode_step_s;
+        assert!(
+            (o.latency_s() - expected_latency).abs() < 1e-9,
+            "{}: latency {} vs closed form {expected_latency}",
+            scheduler.name(),
+            o.latency_s()
+        );
+        assert!(
+            (o.ttft_s() - expected_ttft).abs() < 1e-9,
+            "{}: ttft {} vs closed form {expected_ttft}",
+            scheduler.name(),
+            o.ttft_s()
+        );
+    }
+}
+
+#[test]
+fn prefill_priority_gets_a_late_arrival_to_first_token_sooner() {
+    // One long request decoding when a second arrives. FCFS fuses the
+    // late prefill with an in-flight decode round (the prefill ends after
+    // prefill + decode time); prefill-priority runs a prefill-only round
+    // (prefill time alone), so the late request reaches its first token
+    // strictly sooner — the scheduler trade-off the module docs state.
+    let engine = decode_engine(8);
+    let sys = reference_system(1);
+    let trace = vec![
+        Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 256,
+            output_tokens: 64,
+        },
+        // Arrives mid-prefill of request 0 (any arrival in (0, prefill)
+        // lands in the same schedule).
+        Request {
+            id: 1,
+            arrival_s: 1e-9,
+            prompt_tokens: 256,
+            output_tokens: 4,
+        },
+    ];
+    let fcfs = simulate(&engine, &sys, &trace, SchedulerKind::Fcfs).unwrap();
+    let pp = simulate(&engine, &sys, &trace, SchedulerKind::PrefillPriority).unwrap();
+    assert!(
+        pp[1].ttft_s() < fcfs[1].ttft_s(),
+        "prefill-priority ttft {} must beat fcfs ttft {}",
+        pp[1].ttft_s(),
+        fcfs[1].ttft_s()
+    );
+    // Determinism: re-simulation is byte-identical.
+    assert_eq!(fcfs, simulate(&engine, &sys, &trace, SchedulerKind::Fcfs).unwrap());
+    assert_eq!(
+        pp,
+        simulate(&engine, &sys, &trace, SchedulerKind::PrefillPriority).unwrap()
+    );
+}
+
+#[test]
+fn slow_interwafer_handoff_degrades_saturating_load_vs_one_wafer() {
+    // The same per-wafer design serving the same saturating trace: on 4
+    // wafers with a crippled inter-wafer network, the cross-wafer KV
+    // hand-offs (3/4 of requests under round-robin placement) dominate
+    // TTFT — the serving digest must show measurable degradation vs the
+    // single wafer, where the net is never consulted.
+    let mut p = reference_point();
+    p.interwafer = InterWaferNet {
+        topology: InterWaferTopology::Ring,
+        links_per_wafer: 2,
+        link_bandwidth: 1e6, // ~seconds per multi-MB KV hand-off
+        link_latency: 0.5,
+    };
+    let v = validate(&p).expect("reference point with slow interwafer still validates");
+    let sys1 = SystemConfig {
+        validated: v.clone(),
+        n_wafers: 1,
+        faults: None,
+    };
+    let sys4 = SystemConfig {
+        validated: v,
+        n_wafers: 4,
+        faults: None,
+    };
+    let engine = decode_engine(16);
+    let trace = theseus::serving::trace::generate(ArrivalProcess::Poisson, 64.0, 32, 256, 8, 5);
+    let m1 = theseus::serving::evaluate(&engine, &sys1, &trace, SchedulerKind::Fcfs, 0.5).unwrap();
+    let m4 = theseus::serving::evaluate(&engine, &sys4, &trace, SchedulerKind::Fcfs, 0.5).unwrap();
+    assert_eq!(m1.completed, 32);
+    assert_eq!(m4.completed, 32);
+    assert!(
+        m4.ttft_p99_s > 2.0 * m1.ttft_p99_s,
+        "4-wafer ttft p99 {} must degrade vs 1-wafer {}",
+        m4.ttft_p99_s,
+        m1.ttft_p99_s
+    );
+    assert!(
+        m4.tokens_per_sec < m1.tokens_per_sec,
+        "4-wafer tok/s {} must degrade vs 1-wafer {}",
+        m4.tokens_per_sec,
+        m1.tokens_per_sec
+    );
+}
+
+fn serving_scenario(wafers: Option<usize>, rate: f64) -> Scenario {
+    Scenario {
+        model: "GPT-1.7B".to_string(),
+        phase: Phase::Decode,
+        batch: 8,
+        mqa: false,
+        wafers,
+        explorer: Explorer::Random,
+        fidelity: Fidelity::Analytical,
+        budget: Budget {
+            iters: 1,
+            init: 2,
+            pool: 8,
+            mc: 8,
+            n1: 0,
+            k: 0,
+        },
+        fault_defect: None,
+        fault_spares: None,
+        hetero: None,
+        interwafer: None,
+        serving: Some(ServingSpec {
+            arrival: ArrivalProcess::Poisson,
+            rate_per_s: rate,
+            requests: 12,
+            mean_prompt: 128,
+            mean_output: 8,
+            slo_s: 0.5,
+            scheduler: SchedulerKind::Fcfs,
+        }),
+        tag: String::new(),
+    }
+}
+
+fn fresh_cfg(scenarios: Vec<Scenario>, seed: u64, jobs: usize) -> CampaignConfig {
+    CampaignConfig {
+        scenarios,
+        seed,
+        jobs,
+        resume_from: None,
+        shard: None,
+    }
+}
+
+#[test]
+fn same_seed_serving_campaigns_are_byte_identical_and_carry_the_digest() {
+    // A serving row on a 2-wafer system rides the campaign end to end:
+    // artifact carries the full serving digest, the summary carries the
+    // serving columns, and two same-seed runs serialize byte-identically
+    // (the digest is computed from the scenario-derived trace, not from
+    // any ambient state).
+    let cfg = fresh_cfg(vec![serving_scenario(Some(2), 16.0)], 41, 1);
+    let r1 = run_campaign(&cfg).unwrap();
+    let r2 = run_campaign(&cfg).unwrap();
+    assert_eq!(r1.n_errors(), 0, "{:?}", r1.rows[0].outcome.error());
+
+    let doc = scenario_result_json(&r1.rows[0]);
+    let sv = doc.get("serving").expect("serving row must carry its digest");
+    for key in [
+        "completed",
+        "goodput_per_sec",
+        "latency_p50_s",
+        "latency_p99_s",
+        "makespan_s",
+        "slo_s",
+        "tokens_per_sec",
+        "ttft_p50_s",
+        "ttft_p99_s",
+    ] {
+        assert!(
+            sv.get(key).and_then(Json::as_f64).is_some(),
+            "serving digest missing {key}"
+        );
+    }
+    assert_eq!(sv.get("completed").and_then(Json::as_f64), Some(12.0));
+    // 2-wafer serving rows also digest scaling (the axes compose).
+    assert!(doc.get("scaling").is_some());
+
+    let summary = summary_json(&r1);
+    let row = &summary.get("scenarios").unwrap().as_arr().unwrap()[0];
+    for key in ["serving_goodput", "serving_tokens_per_sec", "serving_ttft_p99"] {
+        assert!(
+            row.get(key).and_then(Json::as_f64).is_some(),
+            "summary row missing {key}"
+        );
+    }
+
+    // Byte-identical across same-seed runs.
+    assert_eq!(summary.to_pretty(), summary_json(&r2).to_pretty());
+    assert_eq!(
+        doc.to_pretty(),
+        scenario_result_json(&r2.rows[0]).to_pretty()
+    );
+}
+
+#[test]
+fn non_serving_rows_never_grow_serving_fields() {
+    // Pre-serving campaigns keep their exact bytes: no "serving" object
+    // in the artifact, no serving_* keys in the summary row.
+    let mut s = serving_scenario(None, 4.0);
+    s.serving = None;
+    let r = run_campaign(&fresh_cfg(vec![s], 7, 1)).unwrap();
+    assert_eq!(r.n_errors(), 0);
+    let doc = scenario_result_json(&r.rows[0]);
+    assert!(doc.get("serving").is_none());
+    let summary = summary_json(&r);
+    let row = &summary.get("scenarios").unwrap().as_arr().unwrap()[0];
+    for key in ["serving_goodput", "serving_tokens_per_sec", "serving_ttft_p99"] {
+        assert!(row.get(key).is_none(), "non-serving row grew {key}");
+    }
+}
+
+#[test]
+fn killed_then_resumed_serving_campaign_is_byte_identical() {
+    // The resume contract extends to serving rows: the digest is stored
+    // in the artifact, so a resumed row re-serializes it byte-identically
+    // without re-running the simulator.
+    let seed = 53;
+    let scenarios = vec![serving_scenario(None, 4.0), serving_scenario(None, 16.0)];
+    let cfg = fresh_cfg(scenarios.clone(), seed, 1);
+
+    let full = run_campaign(&cfg).unwrap();
+    assert_eq!(full.n_errors(), 0);
+    let dir_full = std::env::temp_dir().join(format!(
+        "theseus-serving-uninterrupted-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir_full);
+    write_artifacts(&full, &dir_full).unwrap();
+
+    // "Killed" after the first scenario; resume the full matrix.
+    let partial = run_campaign(&fresh_cfg(vec![scenarios[0].clone()], seed, 1)).unwrap();
+    let dir_resumed = std::env::temp_dir().join(format!(
+        "theseus-serving-resumed-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir_resumed);
+    write_artifacts(&partial, &dir_resumed).unwrap();
+    let resumed = run_campaign(&CampaignConfig {
+        scenarios: scenarios.clone(),
+        seed,
+        jobs: 1,
+        resume_from: Some(dir_resumed.clone()),
+        shard: None,
+    })
+    .unwrap();
+    assert!(resumed.rows[0].outcome.is_resumed());
+    assert_eq!(resumed.n_resumed(), 1);
+    write_artifacts(&resumed, &dir_resumed).unwrap();
+
+    for s in &scenarios {
+        let name = format!("{}.json", s.key());
+        let a = std::fs::read_to_string(dir_full.join("scenarios").join(&name)).unwrap();
+        let b = std::fs::read_to_string(dir_resumed.join("scenarios").join(&name)).unwrap();
+        assert_eq!(a, b, "serving artifact {name} diverged after resume");
+        // Both carry the digest.
+        assert!(Json::parse(&a).unwrap().get("serving").is_some());
+    }
+    // campaign.json identical modulo the resumed marker — serving summary
+    // columns included.
+    let a = std::fs::read_to_string(dir_full.join("campaign.json")).unwrap();
+    let b = std::fs::read_to_string(dir_resumed.join("campaign.json")).unwrap();
+    assert!(a.contains("serving_ttft_p99"), "{a}");
+    assert_eq!(a, b.replace("\"status\": \"resumed\"", "\"status\": \"ok\""));
+
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_resumed);
+}

@@ -15,7 +15,11 @@
 # gated on the merged campaign.json matching the unsharded run's bytes
 # modulo resumed markers), a `--suite wafer-sweep` smoke leg (the
 # wafer-count scaling matrix, gated on the scaling-efficiency digest
-# appearing and the artifacts being byte-identical across a re-run), and
+# appearing and the artifacts being byte-identical across a re-run), a
+# `--suite serving` smoke leg (the request-traffic matrix run twice with
+# --progress, gated on the TTFT/goodput digests appearing and the
+# artifacts being byte-identical across the re-run — progress lines must
+# never leak into artifact bytes), and
 # `cargo fmt --check` when rustfmt is installed;
 # otherwise those steps are skipped with a loud note — some build
 # containers ship no cargo/rustc (see CHANGES.md), and a silent skip would
@@ -131,6 +135,40 @@ EOF
         fi
     done
 
+    echo "== ci_check: serving suite smoke (--suite serving --progress, twice, byte-identity) =="
+    for d in serve1 serve2; do
+        THESEUS_TEST_FAST=1 cargo run -q --release --bin theseus -- campaign \
+            --suite serving --progress \
+            --out "$SMOKE_DIR/$d" --seed 1 --jobs 2
+    done
+    if grep -q '"status": "error"' "$SMOKE_DIR/serve1/campaign.json"; then
+        echo "ci_check: serving smoke recorded error rows:" >&2
+        cat "$SMOKE_DIR/serve1/campaign.json" >&2
+        exit 1
+    fi
+    # Serving rows must digest tail latency and goodput into the summary —
+    # their absence means the traffic replay silently fell out of the row.
+    for key in '"serving_ttft_p99"' '"serving_goodput"'; do
+        if ! grep -q "$key" "$SMOKE_DIR/serve1/campaign.json"; then
+            echo "ci_check: serving smoke produced no $key digest:" >&2
+            cat "$SMOKE_DIR/serve1/campaign.json" >&2
+            exit 1
+        fi
+    done
+    # The determinism contract: a same-seed re-run (both with --progress)
+    # writes the same bytes — progress output is stderr-only.
+    if ! cmp -s "$SMOKE_DIR/serve1/campaign.json" "$SMOKE_DIR/serve2/campaign.json"; then
+        echo "ci_check: serving campaign.json diverged between same-seed runs" >&2
+        diff "$SMOKE_DIR/serve1/campaign.json" "$SMOKE_DIR/serve2/campaign.json" >&2 || true
+        exit 1
+    fi
+    for f in "$SMOKE_DIR"/serve1/scenarios/*.json; do
+        if ! cmp -s "$f" "$SMOKE_DIR/serve2/scenarios/$(basename "$f")"; then
+            echo "ci_check: serving scenario artifact $(basename "$f") diverged between same-seed runs" >&2
+            exit 1
+        fi
+    done
+
     if command -v rustfmt >/dev/null 2>&1; then
         echo "== ci_check: cargo fmt --check =="
         cargo fmt --check
@@ -145,8 +183,8 @@ EOF
         echo "ci_check: *** SKIPPED cargo clippy — clippy not installed on this machine ***" >&2
     fi
 else
-    echo "ci_check: *** SKIPPED rust tier-1 + perf gate + campaign/wafer-sweep smoke + fmt + clippy — no cargo toolchain on this machine ***" >&2
-    echo "ci_check: run 'cargo test -q', scripts/bench_check.sh, the campaign + wafer-sweep smokes and 'cargo clippy -- -D warnings' on a toolchain-equipped host before merging" >&2
+    echo "ci_check: *** SKIPPED rust tier-1 + perf gate + campaign/wafer-sweep/serving smoke + fmt + clippy — no cargo toolchain on this machine ***" >&2
+    echo "ci_check: run 'cargo test -q', scripts/bench_check.sh, the campaign + wafer-sweep + serving smokes and 'cargo clippy -- -D warnings' on a toolchain-equipped host before merging" >&2
 fi
 
 echo "ci_check: done"
